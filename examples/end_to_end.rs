@@ -1,0 +1,114 @@
+//! End-to-end full-system driver — all three layers composing.
+//!
+//! Part A (AOT / PJRT path): loads `artifacts/` produced by `make artifacts`
+//! (L1 Pallas kernels → L2 jax graph → HLO text), compiles them on the PJRT
+//! CPU client, and runs *subspace training entirely through the compiled
+//! executables* — python is not running anywhere in this process.
+//!
+//! Part B (native-simulator path): the full three-stage L2ight flow on a
+//! CNN: digital pretraining on a synthetic MNIST-shaped task, identity
+//! calibration, parallel mapping, multi-level sparse subspace learning —
+//! logging the loss curve, accuracy, and the Appendix-G cost profile.
+//!
+//!   make artifacts && cargo run --release --example end_to_end
+
+use l2ight::coordinator::{run_job, JobConfig, MetricSink, PjrtMlpTrainer, Protocol};
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::nn::ModelArch;
+use l2ight::photonics::NoiseModel;
+use l2ight::runtime::{default_artifact_dir, Runtime};
+use l2ight::util::{fmt_sig, Rng};
+
+fn main() {
+    // ---------------- Part A: training through the PJRT artifacts --------
+    println!("== Part A: subspace training through AOT/PJRT artifacts ==");
+    let dir = default_artifact_dir();
+    match Runtime::new(&dir) {
+        Err(e) => {
+            println!("  artifacts unavailable ({e:#}); run `make artifacts` first.\n");
+        }
+        Ok(rt) => {
+            println!("  PJRT platform: {}", rt.platform());
+            let mut trainer = PjrtMlpTrainer::new(rt, 11).expect("trainer");
+            println!("  trainable subspace params: {}", trainer.trainable_params());
+            let (train_set, test_set) = SynthSpec::quick(DatasetKind::VowelLike, 256, 128)
+                .with_difficulty(0.6)
+                .generate();
+            let mut rng = Rng::new(5);
+            let acc0 = trainer.evaluate(&test_set).expect("eval");
+            println!("  random-init accuracy: {acc0:.3}");
+            trainer.set_lr(5e-3);
+            for epoch in 0..12 {
+                let loss = trainer.train_epoch(&train_set, &mut rng).expect("epoch");
+                if epoch % 3 == 2 {
+                    let acc = trainer.evaluate(&test_set).expect("eval");
+                    println!("  epoch {epoch:2}  loss {loss:.4}  test acc {acc:.3}");
+                }
+            }
+            let acc1 = trainer.evaluate(&test_set).expect("eval");
+            println!("  PJRT-path subspace training: acc {acc0:.3} -> {acc1:.3}\n");
+            assert!(acc1 > acc0, "PJRT training must improve accuracy");
+        }
+    }
+
+    // ---------------- Part B: the full three-stage flow ------------------
+    println!("== Part B: full L2ight flow (native simulator, CNN-S / synthetic MNIST) ==");
+    let cfg = JobConfig {
+        arch: ModelArch::CnnS,
+        dataset: DatasetKind::MnistLike,
+        protocol: Protocol::L2ight,
+        k: 9,
+        noise: NoiseModel::PAPER,
+        width: 1.0,
+        n_train: 512,
+        n_test: 256,
+        pretrain_epochs: 8,
+        epochs: 6,
+        batch: 32,
+        alpha_w: 0.6,
+        alpha_c: 1.0,
+        alpha_d: 0.5,
+        zo_budget: 0.25,
+        seed: 42,
+    };
+    let mut sink = MetricSink::memory();
+    let t0 = std::time::Instant::now();
+    let s = run_job(&cfg, &mut sink);
+    println!("  completed in {:.1}s", t0.elapsed().as_secs_f64());
+    println!("  params         : {} trainable Σ / {} dense-equivalent", s.trainable_params, s.total_params);
+    println!("  pretrain acc   : {:.3}", s.pretrain_acc.unwrap_or(f32::NAN));
+    println!("  IC mean MSE    : {}", fmt_sig(s.ic_mse.unwrap_or(f64::NAN), 3));
+    println!("  PM rel error   : {}", fmt_sig(s.pm_err.unwrap_or(f64::NAN), 3));
+    println!("  mapped acc     : {:.3}", s.mapped_acc.unwrap_or(f32::NAN));
+    if let Some(sl) = &s.sl {
+        println!("  SL loss curve  :");
+        for e in &sl.epochs {
+            println!(
+                "    epoch {:2}  loss {:.4}  train acc {:.3}  test acc {}  (epoch energy {})",
+                e.epoch,
+                e.loss,
+                e.train_acc,
+                e.test_acc.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+                fmt_sig(e.cost.total_energy(), 3),
+            );
+        }
+    }
+    println!("  final acc      : {:.3}  (best {:.3})", s.final_acc, s.best_acc);
+    println!(
+        "  SL hardware    : {} PTC calls ({} fwd / {} σ-grad / {} feedback), {} steps",
+        fmt_sig(s.cost.total_energy(), 4),
+        fmt_sig(s.cost.fwd_energy, 4),
+        fmt_sig(s.cost.wgrad_energy, 4),
+        fmt_sig(s.cost.fbk_energy, 4),
+        fmt_sig(s.cost.total_steps(), 4)
+    );
+    println!("  IC+PM queries  : {}", s.zo_queries);
+    let mapped = s.mapped_acc.unwrap_or(0.0);
+    assert!(
+        s.final_acc >= mapped - 0.05,
+        "sparse SL should not degrade the mapped model: {mapped} -> {}",
+        s.final_acc
+    );
+    println!("\nEXPERIMENTS.md row: | end-to-end CNN-S | mapped {:.3} | final {:.3} | energy {} | steps {} |",
+        mapped, s.final_acc, fmt_sig(s.cost.total_energy(), 4), fmt_sig(s.cost.total_steps(), 4));
+}

@@ -1,0 +1,90 @@
+//! Quickstart: the three hardware-restricted primitives on one mesh.
+//!
+//! Builds an 18×18 photonic mesh of 9×9 PTCs under the paper's full noise
+//! model, then walks the L2ight stages on it:
+//!   1. identity calibration (ZOO to the sign-flip identity Ĩ),
+//!   2. parallel mapping of a random target matrix (ZCD + OSP),
+//!   3. a few first-order Σ-descent steps against a regression loss,
+//! printing fidelity after each. Runs in seconds.
+//!
+//!   cargo run --release --example quickstart
+
+use l2ight::linalg::{matmul, Mat};
+use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::stages::ic::{calibrate_mesh, IcConfig};
+use l2ight::stages::pm::{map_mesh, PmConfig};
+use l2ight::util::{fmt_sig, Rng};
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let (n, k) = (18usize, 9usize);
+    println!("== L2ight quickstart: {n}x{n} mesh of {k}x{k} PTCs, paper noise ==\n");
+    let mut mesh = PtcMesh::new(n, n, k, NoiseModel::PAPER, &mut rng);
+
+    // --- Stage 1: identity calibration -----------------------------------
+    let before: f64 = mesh
+        .ptcs
+        .iter_mut()
+        .map(|p| {
+            let (u, v) = p.identity_mse();
+            (u + v) / 2.0
+        })
+        .sum::<f64>()
+        / mesh.ptcs.len() as f64;
+    let ic = calibrate_mesh(&mut mesh, &IcConfig::default());
+    println!(
+        "IC : mean |U|-identity MSE {} -> {}  ({} ZO queries over {} blocks)",
+        fmt_sig(before, 3),
+        fmt_sig(ic.mean_mse(), 3),
+        ic.queries,
+        ic.blocks
+    );
+
+    // --- Stage 2: parallel mapping ----------------------------------------
+    let target = Mat::randn(n, n, 0.5, &mut rng);
+    let pm = map_mesh(&mut mesh, &target, &PmConfig::default());
+    println!(
+        "PM : normalized matrix distance init {} -> after ZO+OSP {}  ({} queries)",
+        fmt_sig(pm.err_init, 3),
+        fmt_sig(pm.err_osp, 3),
+        pm.queries
+    );
+
+    // --- Stage 3: subspace (Σ-only) descent -------------------------------
+    // Regress the mapped mesh onto a *different* matrix by moving only Σ —
+    // the restricted-subspace learnability the paper trades for efficiency.
+    let new_target = Mat::randn(n, n, 0.5, &mut rng);
+    let x = Mat::randn(n, 32, 1.0, &mut rng);
+    let y_want = matmul(&new_target, &x);
+    let lr = 0.02f32;
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for it in 0..60 {
+        let y = mesh.forward(&x);
+        let dy = y.sub(&y_want);
+        let loss = dy.fro_norm_sq() / y_want.fro_norm_sq();
+        if it == 0 {
+            first = loss;
+        }
+        last = loss;
+        let g = mesh.sigma_grad(&x, &dy, None, 1.0);
+        let mut sigma = mesh.sigma_flat();
+        for (s, gi) in sigma.iter_mut().zip(&g) {
+            *s -= lr * gi;
+        }
+        mesh.set_sigma_flat(&sigma);
+    }
+    println!(
+        "SL : Σ-only regression onto a fresh target, rel loss {} -> {} in 60 steps",
+        fmt_sig(first as f64, 3),
+        fmt_sig(last as f64, 3)
+    );
+
+    let stats = mesh.stats;
+    println!(
+        "\nhardware cost so far: {} PTC calls, {} accumulation steps",
+        stats.total_energy(),
+        stats.total_steps()
+    );
+    println!("done.");
+}

@@ -1,0 +1,128 @@
+//! Batched inference service over the PJRT artifacts: the runtime path
+//! alone, exercised the way a deployment would — concurrent clients submit
+//! single samples, the dispatch batcher coalesces them into fixed-size
+//! panels, and the compiled executable serves them. Reports latency and
+//! throughput percentiles.
+//!
+//!   make artifacts && cargo run --release --example serve_infer
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+
+use l2ight::coordinator::{Batcher, BatcherConfig};
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::photonics::unitary::ReckMesh;
+use l2ight::runtime::{default_artifact_dir, ArgValue, Runtime};
+use l2ight::util::Rng;
+
+const DIMS: [usize; 4] = [8, 16, 16, 4];
+const K: usize = 4;
+const BATCH: usize = 16;
+
+fn main() {
+    // Probe the artifacts up front for a friendly error; the serving
+    // Runtime itself is created on the batcher's worker thread (the PJRT
+    // client is thread-affine — not Send).
+    match Runtime::new(&default_artifact_dir()) {
+        Ok(rt) => {
+            println!("== batched inference service over vowel_mlp_fwd_b{BATCH} ==");
+            println!("PJRT platform: {}", rt.platform());
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e:#}); run `make artifacts` first.");
+            std::process::exit(1);
+        }
+    }
+
+    // Model parameters (random-unitary init — serving doesn't care).
+    let mut rng = Rng::new(21);
+    let mut params: Vec<Vec<f32>> = Vec::new();
+    for li in 0..DIMS.len() - 1 {
+        let p = DIMS[li + 1].div_ceil(K);
+        let q = DIMS[li].div_ceil(K);
+        let (mut u, mut v, mut s) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..p * q {
+            u.extend_from_slice(&ReckMesh::random(K, &mut rng).synthesize().data);
+            v.extend_from_slice(&ReckMesh::random(K, &mut rng).synthesize().data);
+            for _ in 0..K {
+                s.push(rng.uniform_range(-0.8, 0.8) as f32);
+            }
+        }
+        params.push(u);
+        params.push(s);
+        params.push(v);
+        params.push(vec![0.0; p * K]);
+    }
+
+    // The batch function: pack ≤BATCH requests into one artifact call. The
+    // Runtime is constructed on the worker thread via start_with_init.
+    let params = Arc::new(params);
+    let init = {
+        let params = Arc::clone(&params);
+        move || {
+            let mut rt = Runtime::new(&default_artifact_dir()).expect("runtime");
+            move |inputs: &[Vec<f32>]| -> Vec<Vec<f32>> {
+                let f = DIMS[0];
+                let classes = DIMS[DIMS.len() - 1];
+                let mut x = vec![0.0f32; f * BATCH];
+                for (col, inp) in inputs.iter().enumerate() {
+                    for (r, &v) in inp.iter().enumerate() {
+                        x[r * BATCH + col] = v;
+                    }
+                }
+                let mut args: Vec<ArgValue> = params.iter().map(|p| ArgValue::F32(p)).collect();
+                args.push(ArgValue::F32(&x));
+                let logits = rt
+                    .call1_f32(&format!("vowel_mlp_fwd_b{BATCH}"), &args)
+                    .expect("artifact call");
+                (0..inputs.len())
+                    .map(|col| (0..classes).map(|c| logits[c * BATCH + col]).collect())
+                    .collect()
+            }
+        }
+    };
+
+    let batcher = Batcher::start_with_init(
+        BatcherConfig { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+        init,
+    );
+
+    // Load: 8 client threads, 64 requests each.
+    let (ds, _) = SynthSpec::quick(DatasetKind::VowelLike, 512, 1).generate();
+    let ds = Arc::new(ds);
+    let latencies = Arc::new(Mutex::new(Vec::<Duration>::new()));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let batcher = &batcher;
+            let ds = Arc::clone(&ds);
+            let latencies = Arc::clone(&latencies);
+            scope.spawn(move || {
+                for i in 0..64usize {
+                    let sample = ds.sample((t * 64 + i) % ds.n).to_vec();
+                    let start = Instant::now();
+                    let logits = batcher.infer(sample);
+                    let dt = start.elapsed();
+                    assert_eq!(logits.len(), DIMS[DIMS.len() - 1]);
+                    latencies.lock().unwrap().push(dt);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let stats = batcher.shutdown();
+
+    let mut lats: Vec<f64> =
+        latencies.lock().unwrap().iter().map(|d| d.as_secs_f64() * 1e3).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
+    println!("\nserved {} requests in {:.1} ms", stats.requests, wall.as_secs_f64() * 1e3);
+    println!("throughput     : {:.0} req/s", stats.requests as f64 / wall.as_secs_f64());
+    println!("batches        : {} (mean size {:.1}, max {})", stats.batches, stats.mean_batch(), stats.max_observed_batch);
+    println!("latency p50    : {:.2} ms", pct(0.50));
+    println!("latency p90    : {:.2} ms", pct(0.90));
+    println!("latency p99    : {:.2} ms", pct(0.99));
+    assert!(stats.mean_batch() > 1.5, "batching never coalesced");
+    println!("done.");
+}

@@ -1,0 +1,155 @@
+"""AOT compiler: lower the L2 entry points to HLO **text** artifacts.
+
+HLO text — never ``lowered.compile()`` output or ``.serialize()`` protos —
+is the interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla`` crate
+links) rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per entry point plus ``manifest.json``
+describing argument shapes/dtypes and output arity, which
+``rust/src/runtime`` consumes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Export shape set. k=9 is the paper's block size; the standalone kernel
+# artifacts use a 2×2 block grid with B=18 (two k-wide WDM column groups).
+# The MLP artifacts are the Vowel subspace model (8-16-16-4, k=4) at B=16,
+# matching examples/end_to_end.rs.
+KERNEL_P, KERNEL_Q, KERNEL_K, KERNEL_B = 2, 2, 9, 18
+MLP_DIMS = (8, 16, 16, 4)
+MLP_K = 4
+MLP_B = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def kernel_entries():
+    p, q, k, b = KERNEL_P, KERNEL_Q, KERNEL_K, KERNEL_B
+    u, s, v = f32(p, q, k, k), f32(p, q, k), f32(p, q, k, k)
+    x, dy = f32(q, k, b), f32(p, k, b)
+    from .kernels import feedback, ptc_forward, sigma_grad
+
+    return [
+        (
+            f"ptc_forward_p{p}_q{q}_k{k}_b{b}",
+            lambda u, s, v, x: (ptc_forward(u, s, v, x),),
+            [u, s, v, x],
+            1,
+        ),
+        (
+            f"sigma_grad_p{p}_q{q}_k{k}_b{b}",
+            lambda u, v, x, dy: (sigma_grad(u, v, x, dy),),
+            [u, v, x, dy],
+            1,
+        ),
+        (
+            f"feedback_p{p}_q{q}_k{k}_b{b}",
+            lambda u, s, v, dy: (feedback(u, s, v, dy),),
+            [u, s, v, dy],
+            1,
+        ),
+    ]
+
+
+def mlp_arg_specs():
+    """Flat (u, s, v, bias) per layer then x [in, B] (and labels for step)."""
+    dims, k, b = MLP_DIMS, MLP_K, MLP_B
+    args = []
+    for li in range(len(dims) - 1):
+        p = -(-dims[li + 1] // k)
+        q = -(-dims[li] // k)
+        args += [f32(p, q, k, k), f32(p, q, k), f32(p, q, k, k), f32(p * k)]
+    args.append(f32(dims[0], b))
+    return args
+
+
+def unflatten_params(flat):
+    params = []
+    for i in range(0, len(flat), 4):
+        params.append(M.LayerParams(u=flat[i], s=flat[i + 1], v=flat[i + 2], bias=flat[i + 3]))
+    return params
+
+
+def mlp_fwd_entry():
+    def fn(*flat_args):
+        params = unflatten_params(flat_args[:-1])
+        return (M.mlp_forward(params, MLP_DIMS, flat_args[-1]),)
+
+    return (f"vowel_mlp_fwd_b{MLP_B}", fn, mlp_arg_specs(), 1)
+
+
+def mlp_step_entry():
+    n_layers = len(MLP_DIMS) - 1
+
+    def fn(*flat_args):
+        params = unflatten_params(flat_args[:-2])
+        x, labels = flat_args[-2], flat_args[-1]
+        loss, logits, sgrads, bgrads = M.train_step(params, MLP_DIMS, x, labels)
+        return (loss, logits, *sgrads, *bgrads)
+
+    args = mlp_arg_specs() + [i32(MLP_B)]
+    return (f"vowel_mlp_step_b{MLP_B}", fn, args, 2 + 2 * n_layers)
+
+
+def dtype_name(d):
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(d).name]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = kernel_entries() + [mlp_fwd_entry(), mlp_step_entry()]
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, specs, n_out in entries:
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "args": [
+                    {"shape": list(s.shape), "dtype": dtype_name(s.dtype)} for s in specs
+                ],
+                "outputs": n_out,
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars, {len(specs)} args, {n_out} outputs)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

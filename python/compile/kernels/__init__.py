@@ -1,0 +1,6 @@
+"""L1: Pallas photonic-tensor-core kernels + the pure-jnp oracle."""
+
+from .ptc import feedback, ptc_forward, sigma_grad
+from . import ref
+
+__all__ = ["ptc_forward", "sigma_grad", "feedback", "ref"]

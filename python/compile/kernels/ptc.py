@@ -1,0 +1,130 @@
+"""L1 Pallas kernels: the blocked photonic-tensor-core hot-spot.
+
+One grid step = one PTC (one k×k block): BlockSpec stages that block's U, Σ,
+V* plus the k-row input panel into VMEM and accumulates the k-row output
+panel — the HBM↔VMEM schedule standing in for the photonic system's
+WDM-parallel PTC array with local buffers (DESIGN.md §Hardware-Adaptation).
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and correctness (vs `ref.py`) is the property under test; real
+TPU performance is assessed structurally in DESIGN.md §Perf.
+
+Shapes match ref.py:
+  u [P,Q,k,k] · s [P,Q,k] · v [P,Q,k,k] · x [Q,k,B] → y [P,k,B]
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls.
+
+
+def _fwd_kernel(u_ref, s_ref, v_ref, x_ref, o_ref):
+    """y_p += U_pq @ (s_pq ⊙ (V*_pq @ x_q)); q is the fast grid axis."""
+    q = pl.program_id(1)
+    u = u_ref[0, 0]
+    s = s_ref[0, 0]
+    v = v_ref[0, 0]
+    x = x_ref[0]
+    vx = jnp.dot(v, x, preferred_element_type=jnp.float32)
+    y = jnp.dot(u, s[:, None] * vx, preferred_element_type=jnp.float32)
+
+    @pl.when(q == 0)
+    def _init():
+        o_ref[0] = y
+
+    @pl.when(q != 0)
+    def _acc():
+        o_ref[0] += y
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ptc_forward(u, s, v, x):
+    """Blocked projection y[P,k,B] = Σ_q U_pq diag(s_pq) V*_pq x_q."""
+    p, q, k, _ = u.shape
+    b = x.shape[-1]
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(p, q),
+        in_specs=[
+            pl.BlockSpec((1, 1, k, k), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, k, k), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, k, b), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, b), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, k, b), jnp.float32),
+        interpret=INTERPRET,
+    )(u, s, v, x)
+
+
+def _sigma_grad_kernel(u_ref, v_ref, x_ref, dy_ref, g_ref):
+    """Eq. 5: g_pq = Σ_b (U_pqᵀ dy_p) ⊙ (V*_pq x_q) — 2 reciprocal passes
+    plus one Hadamard-reduce, exactly the on-chip procedure of Fig. 6."""
+    u = u_ref[0, 0]
+    v = v_ref[0, 0]
+    x = x_ref[0]
+    dy = dy_ref[0]
+    ut_dy = jnp.dot(u.T, dy, preferred_element_type=jnp.float32)
+    vx = jnp.dot(v, x, preferred_element_type=jnp.float32)
+    g_ref[0, 0] = jnp.sum(ut_dy * vx, axis=-1)
+
+
+def sigma_grad(u, v, x, dy):
+    """In-situ subspace gradient g[P,Q,k] (Eq. 5)."""
+    p, q, k, _ = u.shape
+    b = x.shape[-1]
+    return pl.pallas_call(
+        _sigma_grad_kernel,
+        grid=(p, q),
+        in_specs=[
+            pl.BlockSpec((1, 1, k, k), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, k, k), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, k, b), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, k, b), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, k), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, q, k), jnp.float32),
+        interpret=INTERPRET,
+    )(u, v, x, dy)
+
+
+def _feedback_kernel(u_ref, s_ref, v_ref, dy_ref, o_ref):
+    """dx_q += V*ᵀ diag(s) Uᵀ dy_p; p is the fast grid axis."""
+    i = pl.program_id(1)  # p index (fast)
+    u = u_ref[0, 0]
+    s = s_ref[0, 0]
+    v = v_ref[0, 0]
+    dy = dy_ref[0]
+    ut_dy = jnp.dot(u.T, dy, preferred_element_type=jnp.float32)
+    dx = jnp.dot(v.T, s[:, None] * ut_dy, preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0] = dx
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[0] += dx
+
+
+def feedback(u, s, v, dy):
+    """Error feedback dx[Q,k,B] = Σ_p W_pqᵀ dy_p via the reciprocal mesh."""
+    p, q, k, _ = u.shape
+    b = dy.shape[-1]
+    return pl.pallas_call(
+        _feedback_kernel,
+        grid=(q, p),
+        in_specs=[
+            pl.BlockSpec((1, 1, k, k), lambda j, i: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, k), lambda j, i: (i, j, 0)),
+            pl.BlockSpec((1, 1, k, k), lambda j, i: (i, j, 0, 0)),
+            pl.BlockSpec((1, k, b), lambda j, i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k, b), lambda j, i: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, k, b), jnp.float32),
+        interpret=INTERPRET,
+    )(u, s, v, dy)

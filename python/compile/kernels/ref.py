@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Shapes (all float32 unless noted):
+  u : [P, Q, k, k]   per-block singular-vector matrix U
+  s : [P, Q, k]      per-block singular values Σ (signed)
+  v : [P, Q, k, k]   per-block V* matrix (stored as V*, applied directly)
+  x : [Q, k, B]      input column panels, one k-row panel per block column
+  dy: [P, k, B]      upstream gradient panels
+  y : [P, k, B]      output panels:  y_p = Σ_q U_pq diag(s_pq) V*_pq x_q
+  g : [P, Q, k]      σ-gradients (Eq. 5):
+                     g_pq = Σ_b (U_pqᵀ dy_p) ⊙ (V*_pq x_q)
+"""
+
+import jax.numpy as jnp
+
+
+def ptc_forward_ref(u, s, v, x):
+    """Blocked photonic projection: y[p] = sum_q U[p,q] @ (s[p,q] * (V*[p,q] @ x[q]))."""
+    # vx[p,q] = V*[p,q] @ x[q]   -> [P, Q, k, B]
+    vx = jnp.einsum("pqij,qjb->pqib", v, x)
+    sv = s[..., None] * vx
+    # y[p] = sum_q U[p,q] @ sv[p,q]
+    return jnp.einsum("pqij,pqjb->pib", u, sv)
+
+
+def sigma_grad_ref(u, v, x, dy):
+    """Eq. 5 reciprocity gradient: g[p,q,i] = sum_b (Uᵀ dy)[i,b] * (V* x)[i,b]."""
+    ut_dy = jnp.einsum("pqji,pjb->pqib", u, dy)  # U^T applied to dy panel
+    vx = jnp.einsum("pqij,qjb->pqib", v, x)
+    return jnp.sum(ut_dy * vx, axis=-1)
+
+
+def feedback_ref(u, s, v, dy):
+    """Error feedback dx[q] = sum_p W[p,q]ᵀ dy[p] = V*ᵀ diag(s) Uᵀ dy."""
+    ut_dy = jnp.einsum("pqji,pjb->pqib", u, dy)
+    s_ut = s[..., None] * ut_dy
+    # V*ᵀ = V; dx[q] = sum_p V[p,q]ᵀ… einsum with v transposed on (i,j).
+    return jnp.einsum("pqij,pqib->qjb", v, s_ut)
+
+
+def dense_equivalent(u, s, v):
+    """Realized dense weight for cross-checking: W_pq = U diag(s) V* per block."""
+    w_blocks = jnp.einsum("pqij,pqj,pqjl->pqil", u, s, v)
+    p, q, k, _ = w_blocks.shape
+    return w_blocks.transpose(0, 2, 1, 3).reshape(p * k, q * k)

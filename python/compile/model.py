@@ -1,0 +1,139 @@
+"""L2: the subspace-ONN compute graph in JAX, built on the L1 kernels.
+
+A model layer is the blocked SVD-operator projection of §3.1: the dense
+weight lives only as U[P,Q,k,k] · Σ[P,Q,k] · V*[P,Q,k,k]. U/V* are *trace
+constants passed as inputs* (mapped once by PM, frozen during SL), Σ and
+biases are the trainable subspace — so the exported train-step artifact
+returns exactly the reciprocity gradients of Eq. 5 and nothing else,
+matching what the hardware can measure.
+
+`train_step` writes the backward pass out explicitly with the kernels
+(sigma_grad + feedback), mirroring rust's `PtcMesh::{sigma_grad, feedback}`
+rather than relying on jax autodiff; tests check it against `jax.grad`.
+"""
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import feedback, ptc_forward, sigma_grad
+
+
+class LayerParams(NamedTuple):
+    """One blocked projection layer. Trainable: s, bias. Frozen: u, v."""
+
+    u: jax.Array  # [P, Q, k, k]
+    s: jax.Array  # [P, Q, k]
+    v: jax.Array  # [P, Q, k, k]
+    bias: jax.Array  # [P·k]
+
+
+def init_layer(key, out_features: int, in_features: int, k: int) -> LayerParams:
+    """Random-unitary init (what fab + IC gives you) with SVD-scaled Σ."""
+    p = -(-out_features // k)
+    q = -(-in_features // k)
+    ku, kv, ks = jax.random.split(key, 3)
+
+    def rand_unitaries(kk):
+        a = jax.random.normal(kk, (p, q, k, k), dtype=jnp.float32)
+        qm, _ = jnp.linalg.qr(a)
+        return qm.astype(jnp.float32)
+
+    bound = (6.0 / in_features) ** 0.5
+    s = jax.random.uniform(ks, (p, q, k), jnp.float32, -bound, bound)
+    return LayerParams(
+        u=rand_unitaries(ku), s=s, v=rand_unitaries(kv), bias=jnp.zeros((p * k,), jnp.float32)
+    )
+
+
+def to_panels(x, q: int, k: int):
+    """[in, B] → [Q, k, B], zero-padding the feature dim to Q·k."""
+    n, b = x.shape
+    pad = q * k - n
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, b), x.dtype)], axis=0)
+    return x.reshape(q, k, b)
+
+
+def from_panels(y, out_features: int):
+    """[P, k, B] → [out, B], cropping padding rows."""
+    p, k, b = y.shape
+    return y.reshape(p * k, b)[:out_features]
+
+
+def layer_forward(lp: LayerParams, x, out_features: int):
+    """One projection layer: panels → PTC kernel → bias. Returns (y, vx_panels_input)."""
+    q, k = lp.u.shape[1], lp.u.shape[2]
+    xp = to_panels(x, q, k)
+    y = ptc_forward(lp.u, lp.s, lp.v, xp)
+    y = from_panels(y, out_features) + lp.bias[:out_features, None]
+    return y, xp
+
+
+def mlp_forward(params: Sequence[LayerParams], dims: Sequence[int], x):
+    """Subspace MLP forward: ReLU between layers, raw logits at the end.
+
+    `x` is [dims[0], B]; returns logits [dims[-1], B].
+    """
+    h = x
+    for li, lp in enumerate(params):
+        h, _ = layer_forward(lp, h, dims[li + 1])
+        if li + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def softmax_xent(logits, labels):
+    """Mean cross-entropy; logits [C, B], labels int32 [B]."""
+    logp = jax.nn.log_softmax(logits, axis=0)
+    b = labels.shape[0]
+    picked = logp[labels, jnp.arange(b)]
+    return -jnp.mean(picked)
+
+
+def train_step(params: Sequence[LayerParams], dims: Sequence[int], x, labels):
+    """Forward + explicit reciprocity backward (Eq. 5).
+
+    Returns (loss, logits, [σ-grad per layer], [bias-grad per layer]) — the
+    full per-iteration gradient packet the rust coordinator consumes.
+    """
+    # Forward, caching input panels and pre-activations.
+    h = x
+    panels = []
+    preacts = []
+    for li, lp in enumerate(params):
+        y, xp = layer_forward(lp, h, dims[li + 1])
+        panels.append(xp)
+        preacts.append(y)
+        h = jax.nn.relu(y) if li + 1 < len(params) else y
+
+    logits = h
+    loss = softmax_xent(logits, labels)
+    b = labels.shape[0]
+    # dL/dlogits of mean CE: (softmax − onehot)/B.
+    probs = jax.nn.softmax(logits, axis=0)
+    onehot = jax.nn.one_hot(labels, logits.shape[0], axis=0, dtype=jnp.float32)
+    dy = (probs - onehot) / b
+
+    sigma_grads = []
+    bias_grads = []
+    for li in reversed(range(len(params))):
+        lp = params[li]
+        p, q, k = lp.s.shape
+        out_f = dims[li + 1]
+        bias_grads.append(jnp.sum(dy, axis=1))
+        # Pad dy rows to P·k panels.
+        pad = p * k - dy.shape[0]
+        dyp = jnp.concatenate([dy, jnp.zeros((pad, dy.shape[1]), dy.dtype)], axis=0) if pad else dy
+        dyp = dyp.reshape(p, k, -1)
+        sigma_grads.append(sigma_grad(lp.u, lp.v, panels[li], dyp))
+        if li > 0:
+            dxp = feedback(lp.u, lp.s, lp.v, dyp)
+            dx = dxp.reshape(q * k, -1)[: dims[li]]
+            # Backprop through the ReLU between layer li-1 and li.
+            dy = dx * (preacts[li - 1][: dims[li]] > 0)
+        del out_f
+    sigma_grads.reverse()
+    bias_grads.reverse()
+    return loss, logits, sigma_grads, bias_grads

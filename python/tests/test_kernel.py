@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps block-grid shapes (P, Q, k, B); allclose is the core
+signal — if these fail, nothing downstream (AOT artifacts, rust runtime
+agreement) can be trusted.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import feedback, ptc_forward, sigma_grad
+from compile.kernels.ref import (
+    dense_equivalent,
+    feedback_ref,
+    ptc_forward_ref,
+    sigma_grad_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_blocks(seed, p, q, k, b, unitary=True):
+    rng = np.random.default_rng(seed)
+    if unitary:
+        a = rng.normal(size=(p, q, k, k)).astype(np.float32)
+        u = np.linalg.qr(a)[0].astype(np.float32)
+        a2 = rng.normal(size=(p, q, k, k)).astype(np.float32)
+        v = np.linalg.qr(a2)[0].astype(np.float32)
+    else:
+        u = rng.normal(size=(p, q, k, k)).astype(np.float32)
+        v = rng.normal(size=(p, q, k, k)).astype(np.float32)
+    s = rng.normal(size=(p, q, k)).astype(np.float32)
+    x = rng.normal(size=(q, k, b)).astype(np.float32)
+    dy = rng.normal(size=(p, k, b)).astype(np.float32)
+    return map(jnp.asarray, (u, s, v, x, dy))
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 3),  # P
+    st.integers(1, 3),  # Q
+    st.sampled_from([2, 4, 9]),  # k
+    st.integers(1, 20),  # B
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(0, 2**31 - 1))
+def test_ptc_forward_matches_ref(shape, seed):
+    p, q, k, b = shape
+    u, s, v, x, _ = rand_blocks(seed, p, q, k, b)
+    got = ptc_forward(u, s, v, x)
+    want = ptc_forward_ref(u, s, v, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(0, 2**31 - 1))
+def test_sigma_grad_matches_ref(shape, seed):
+    p, q, k, b = shape
+    u, s, v, x, dy = rand_blocks(seed, p, q, k, b)
+    got = sigma_grad(u, v, x, dy)
+    want = sigma_grad_ref(u, v, x, dy)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    del s
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_strategy, st.integers(0, 2**31 - 1))
+def test_feedback_matches_ref(shape, seed):
+    p, q, k, b = shape
+    u, s, v, x, dy = rand_blocks(seed, p, q, k, b)
+    got = feedback(u, s, v, dy)
+    want = feedback_ref(u, s, v, dy)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    del x
+
+
+def test_forward_equals_dense_matmul():
+    """The blocked kernel realizes exactly W·x for W = blocks of U diag(s) V*."""
+    p, q, k, b = 2, 3, 4, 7
+    u, s, v, x, _ = rand_blocks(0, p, q, k, b)
+    w = dense_equivalent(u, s, v)
+    xd = np.asarray(x).reshape(q * k, b)
+    want = np.asarray(w) @ xd
+    got = np.asarray(ptc_forward(u, s, v, x)).reshape(p * k, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_sigma_grad_matches_autodiff():
+    """Eq. 5 equals jax.grad of ||forward||-style losses w.r.t. s."""
+    p, q, k, b = 2, 2, 4, 5
+    u, s, v, x, dy = rand_blocks(1, p, q, k, b)
+
+    def loss(s_):
+        y = ptc_forward_ref(u, s_, v, x)
+        return jnp.sum(y * dy)  # linear probe so dL/dy = dy
+
+    want = jax.grad(loss)(s)
+    got = sigma_grad(u, v, x, dy)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_feedback_is_dense_wt_dy():
+    p, q, k, b = 3, 2, 4, 6
+    u, s, v, _, dy = rand_blocks(2, p, q, k, b)
+    w = dense_equivalent(u, s, v)
+    want = np.asarray(w).T @ np.asarray(dy).reshape(p * k, b)
+    got = np.asarray(feedback(u, s, v, dy)).reshape(q * k, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_sign_flip_cancels_in_sigma_grad():
+    """The Ĩ invariance (§3.4.1): flipping matched signs of U columns and V*
+    rows leaves the Eq. 5 gradient unchanged."""
+    p, q, k, b = 1, 1, 4, 5
+    u, s, v, x, dy = rand_blocks(3, p, q, k, b)
+    flips = jnp.asarray([1.0, -1.0, -1.0, 1.0], dtype=jnp.float32)
+    u2 = u * flips[None, None, None, :]  # flip columns of U
+    v2 = v * flips[None, None, :, None]  # flip matching rows of V*
+    g1 = sigma_grad(u, v, x, dy)
+    g2 = sigma_grad(u2, v2, x, dy)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+    del s
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_dtype_passthrough(dtype):
+    p, q, k, b = 1, 2, 2, 3
+    u, s, v, x, _ = rand_blocks(4, p, q, k, b)
+    y = ptc_forward(u.astype(dtype), s.astype(dtype), v.astype(dtype), x.astype(dtype))
+    assert y.dtype == jnp.float32
+    assert y.shape == (p, k, b)

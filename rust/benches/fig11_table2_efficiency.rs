@@ -1,0 +1,215 @@
+//! Fig. 11 + Table 2: accuracy and hardware-efficiency comparison of the
+//! sampling strategies on VGG-8 and ResNet-18 (width-scaled, synthetic
+//! CIFAR-10 at side 16 — DESIGN.md §4 substitutions; the compared
+//! quantities are *ratios and orderings*, which are shape- not
+//! capacity-dependent).
+//!
+//! Rows (paper Table 2):
+//!   L2ight-SL (Baseline)          — subspace learning from scratch, dense
+//!   + Feedback Sampling (α_W)     — btopk + exp
+//!   + Column Sampling (α_C)       — CS added
+//!   + Data Sampling (α_D)         — SMD added
+//!   + RAD [36]                    — spatial sampling baseline
+//!   + SWAT-U [38]                 — sparse weight+activation baseline
+//!   L2ight (IC→PM→SL)             — the full flow with pretrained weights
+
+use l2ight::baselines;
+use l2ight::coordinator::{JobConfig, MetricSink, Protocol};
+use l2ight::data::DatasetKind;
+use l2ight::nn::{build_model, EngineKind, ModelArch};
+use l2ight::photonics::NoiseModel;
+use l2ight::profiler::{print_cost_table, CostBreakdown};
+use l2ight::stages::sl::{train, SlConfig};
+use l2ight::util::Rng;
+
+struct Row {
+    label: String,
+    acc: f32,
+    act_red: f32,
+    cost: CostBreakdown,
+    steps_total: f64,
+}
+
+fn scratch_run(
+    arch: ModelArch,
+    sl_cfg: &SlConfig,
+    label: &str,
+    swat_alpha_w: Option<f32>,
+    datasets: &(l2ight::data::Dataset, l2ight::data::Dataset),
+) -> Row {
+    let mut rng = Rng::new(0xbead);
+    let kind = EngineKind::Photonic { k: 9, noise: NoiseModel::quant_only(8) };
+    let mut model = build_model(arch, kind, 10, WIDTH, &mut rng);
+    if let Some(aw) = swat_alpha_w {
+        baselines::apply_swat_forward_masks(&mut model, aw);
+    }
+    let r = train(&mut model, &datasets.0, &datasets.1, sl_cfg);
+    let acc = if swat_alpha_w.is_some() {
+        baselines::clear_forward_masks(&mut model);
+        datasets.1.evaluate(&mut model, sl_cfg.batch)
+    } else {
+        r.best_test_acc
+    };
+    Row {
+        label: label.to_string(),
+        acc,
+        act_red: sl_cfg.feature.act_reduction(),
+        cost: r.cost,
+        steps_total: r.cost.total_steps(),
+    }
+}
+
+const WIDTH: f32 = 0.25;
+
+fn bench_model(arch: ModelArch) {
+    println!("\n==== {} (width {WIDTH}, synthetic CIFAR-10 @16x16) ====", arch.name());
+    let spec = l2ight::data::SynthSpec::new(DatasetKind::Cifar10Like, 256, 128).with_side(16);
+    let datasets = spec.generate();
+    let base = SlConfig {
+        epochs: 6,
+        batch: 32,
+        eval_every: 0,
+        seed: 0x7ab2,
+        ..SlConfig::default()
+    };
+    // Paper Table-2 sparsities (VGG-8 row set).
+    let (aw, ac, ad) = (0.6f32, 0.6f32, 0.5f32);
+
+    let mut rows: Vec<Row> = Vec::new();
+    rows.push(scratch_run(arch, &base, "L2ight-SL (BS)", None, &datasets));
+    rows.push(scratch_run(
+        arch,
+        &baselines::l2ight_sl_config(aw, 1.0, 0.0, &base),
+        &format!("+FS (aW={aw})"),
+        None,
+        &datasets,
+    ));
+    rows.push(scratch_run(
+        arch,
+        &baselines::l2ight_sl_config(aw, ac, 0.0, &base),
+        &format!("+CS (aC={ac})"),
+        None,
+        &datasets,
+    ));
+    rows.push(scratch_run(
+        arch,
+        &baselines::l2ight_sl_config(aw, ac, ad, &base),
+        &format!("+DS (aD={ad})"),
+        None,
+        &datasets,
+    ));
+    rows.push(scratch_run(
+        arch,
+        &baselines::rad_config(0.85, &base), // α_S = keep 0.85 (Act↓ ≈ 15%)
+        "RAD (aS=0.85)",
+        None,
+        &datasets,
+    ));
+    rows.push(scratch_run(
+        arch,
+        &baselines::swat_config(0.3, 0.6, &base),
+        "SWAT-U (aW=0.3,aS=0.6)",
+        Some(0.3),
+        &datasets,
+    ));
+
+    // Full flow through the driver (pretrain → IC → PM → sparse SL).
+    let cfg = JobConfig {
+        arch,
+        dataset: DatasetKind::Cifar10Like,
+        protocol: Protocol::L2ight,
+        k: 9,
+        noise: NoiseModel::quant_only(8),
+        width: WIDTH,
+        n_train: 256,
+        n_test: 128,
+        pretrain_epochs: 4,
+        epochs: 1,
+        batch: 32,
+        alpha_w: aw,
+        alpha_c: ac,
+        alpha_d: ad,
+        zo_budget: 0.05,
+        seed: 0x7ab2,
+    };
+    // Same 16x16 side for the driver-built datasets: rebuild by hand.
+    let mut sink = MetricSink::memory();
+    let s = {
+        // run_job builds full-side datasets; emulate with the same flow at
+        // side 16 by training directly: pretrain → map → SL.
+        use l2ight::stages::pm::{copy_aux_params, map_model, PmConfig};
+        use l2ight::stages::sl::OptKind;
+        use l2ight::zoo::ZoConfig;
+        let mut rng = Rng::new(cfg.seed);
+        let mut digital = build_model(arch, EngineKind::Digital, 10, WIDTH, &mut rng);
+        let pre_cfg = SlConfig {
+            epochs: cfg.pretrain_epochs,
+            opt: OptKind::Sgd { lr: 0.05, momentum: 0.9, weight_decay: 1e-4 },
+            ..base.clone()
+        };
+        let pre = train(&mut digital, &datasets.0, &datasets.1, &pre_cfg);
+        let kind = EngineKind::Photonic { k: 9, noise: cfg.noise };
+        let mut chip = build_model(arch, kind, 10, WIDTH, &mut rng);
+        let pm_cfg = PmConfig {
+            zo: ZoConfig { iters: 6, ..PmConfig::default().zo },
+            alternations: 1,
+            ..PmConfig::default()
+        };
+        map_model(&mut chip, &mut digital, &pm_cfg);
+        copy_aux_params(&mut chip, &mut digital);
+        chip.reset_mesh_stats();
+        let sl_cfg = baselines::l2ight_sl_config(
+            aw,
+            ac,
+            ad,
+            &SlConfig { epochs: 1, opt: OptKind::AdamW { lr: 2e-4, weight_decay: 1e-2 }, ..base.clone() },
+        );
+        let r = train(&mut chip, &datasets.0, &datasets.1, &sl_cfg);
+        let _ = (&mut sink, pre);
+        Row {
+            label: "L2ight (IC->PM->SL)".into(),
+            acc: r.best_test_acc,
+            act_red: sl_cfg.feature.act_reduction(),
+            cost: r.cost,
+            steps_total: r.cost.total_steps(),
+        }
+    };
+    let _ = cfg;
+    rows.push(s);
+
+    // Print the Table-2 layout.
+    let mut acc_table = l2ight::util::bench::Table::new(&["config", "acc", "Act down (%)"]);
+    for r in &rows {
+        acc_table.row(&[
+            r.label.clone(),
+            format!("{:.3}", r.acc),
+            format!("{:.1}", r.act_red * 100.0),
+        ]);
+    }
+    acc_table.print(&format!("Table 2 ({}) — accuracy", arch.name()));
+    let cost_rows: Vec<(String, CostBreakdown)> =
+        rows.iter().map(|r| (r.label.clone(), r.cost)).collect();
+    print_cost_table(
+        &format!("Table 2 ({}) — PTC energy & steps (unit 1e6; ratio vs BS)", arch.name()),
+        &cost_rows,
+        1e6,
+    );
+    // Shape check: the full flow trains 1 epoch on a mapped model — its
+    // energy/steps must be far below BS (the 30x claim's mechanism).
+    let bs = rows[0].cost.total_energy();
+    let full = rows.last().unwrap().cost.total_energy();
+    println!(
+        "\nfull-flow energy ratio vs BS: {:.1}x (paper: 32-36x; driven by fewer epochs after mapping + sparsity)",
+        bs / full.max(1.0)
+    );
+    let _ = rows.iter().map(|r| r.steps_total).sum::<f64>();
+}
+
+fn main() {
+    println!("== Fig. 11 / Table 2: sampling-strategy efficiency comparison ==");
+    bench_model(ModelArch::Vgg8);
+    bench_model(ModelArch::ResNet18);
+    println!("\n(paper shape: FS+CS+DS ≈ 3.2-3.6x cheaper than BS with ~2% acc cost;");
+    println!(" RAD saves nothing on PTC energy; SWAT-U loses accuracy to forward sparsity;");
+    println!(" the full flow is ~30x+ cheaper because mapping leaves SL only light work)");
+}

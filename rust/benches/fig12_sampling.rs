@@ -1,0 +1,92 @@
+//! Fig. 12: ablations of the three sampling levels on CNN-L / synthetic
+//! FashionMNIST (the paper's ablation model).
+//!
+//!   (a) feedback strategies: uniform vs topk vs btopk — accuracy vs
+//!       cumulative weight-gradient/feedback steps;
+//!   (b) feature sampling: spatial (SS) vs column (CS) — accuracy vs steps
+//!       (SS shows *no* step reduction, CS does);
+//!   (c) data sparsity α_D sweep — accuracy vs training time reduction.
+
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::nn::{build_model, EngineKind, ModelArch};
+use l2ight::photonics::NoiseModel;
+use l2ight::sampling::{ColumnSampler, DataSampler, FeedbackSampler, FeedbackStrategy, Normalization};
+use l2ight::stages::sl::{train, SlConfig, SlReport};
+use l2ight::util::bench::Table;
+use l2ight::util::{fmt_sig, Rng};
+
+const WIDTH: f32 = 0.35;
+
+fn run(cfg: &SlConfig, datasets: &(l2ight::data::Dataset, l2ight::data::Dataset)) -> SlReport {
+    let mut rng = Rng::new(0x12a);
+    let kind = EngineKind::Photonic { k: 9, noise: NoiseModel::quant_only(8) };
+    let mut model = build_model(ModelArch::CnnL, kind, 10, WIDTH, &mut rng);
+    train(&mut model, &datasets.0, &datasets.1, cfg)
+}
+
+fn main() {
+    println!("== Fig. 12: multi-level sampling ablations (CNN-L, synthetic Fashion) ==");
+    let datasets = SynthSpec::new(DatasetKind::FashionLike, 256, 128).generate();
+    let base = SlConfig { epochs: 6, batch: 32, eval_every: 1, seed: 0xf12, ..SlConfig::default() };
+
+    // (a) feedback strategies at matched keep 0.5.
+    let mut ta = Table::new(&["strategy", "best acc", "fbk energy", "fbk steps", "critical-path balance"]);
+    for (name, strat) in [
+        ("dense", None),
+        ("uniform", Some(FeedbackStrategy::Uniform)),
+        ("topk", Some(FeedbackStrategy::TopK)),
+        ("btopk", Some(FeedbackStrategy::BTopK)),
+    ] {
+        let cfg = SlConfig {
+            feedback: strat
+                .map(|s| FeedbackSampler::new(s, 0.5, Normalization::Exp)),
+            ..base.clone()
+        };
+        let r = run(&cfg, &datasets);
+        ta.row(&[
+            name.to_string(),
+            format!("{:.3}", r.best_test_acc),
+            fmt_sig(r.cost.fbk_energy, 3),
+            fmt_sig(r.cost.fbk_steps, 3),
+            if name == "topk" { "greedy (imbalanced)".into() } else { "-".to_string() },
+        ]);
+    }
+    ta.print("Fig 12(a) — feedback sampling strategies (keep 0.5)");
+
+    // (b) SS vs CS at matched keep 0.5 — the step-reduction contrast.
+    let mut tb = Table::new(&["feature sampling", "best acc", "wgrad energy", "wgrad steps"]);
+    for (name, feat) in [
+        ("none", ColumnSampler::OFF),
+        ("spatial (SS)", ColumnSampler::spatial(0.5, true)),
+        ("column (CS)", ColumnSampler::column(0.5)),
+    ] {
+        let cfg = SlConfig { feature: feat, ..base.clone() };
+        let r = run(&cfg, &datasets);
+        tb.row(&[
+            name.to_string(),
+            format!("{:.3}", r.best_test_acc),
+            fmt_sig(r.cost.wgrad_energy, 3),
+            fmt_sig(r.cost.wgrad_steps, 3),
+        ]);
+    }
+    tb.print("Fig 12(b) — SS vs CS (keep 0.5)");
+    println!("(paper shape: SS cuts storage but NOT PTC steps; CS cuts both)");
+
+    // (c) data sparsity sweep.
+    let mut tc = Table::new(&["alpha_D", "best acc", "total energy", "total steps", "iters run"]);
+    for ad in [0.0f32, 0.2, 0.5, 0.8] {
+        let cfg = SlConfig { data: DataSampler::new(ad), ..base.clone() };
+        let r = run(&cfg, &datasets);
+        let iters: usize = r.epochs.iter().map(|e| e.iters_run).sum();
+        tc.row(&[
+            format!("{ad:.1}"),
+            format!("{:.3}", r.best_test_acc),
+            fmt_sig(r.cost.total_energy(), 3),
+            fmt_sig(r.cost.total_steps(), 3),
+            iters.to_string(),
+        ]);
+    }
+    tc.print("Fig 12(c) — SMD data sparsity sweep");
+    println!("(paper shape: medium α_D trades little accuracy for proportional time cuts;");
+    println!(" aggressive α_D works on easy tasks)");
+}

@@ -1,0 +1,127 @@
+//! Fig. 1(b): ONN accuracy degradation under non-ideality combinations
+//! (Q = 8-bit phase quantization, CT = crosstalk, DV = device γ-variation,
+//! PB = unknown phase bias), evaluated by programming a pretrained model
+//! onto meshes with each noise combo (no calibration/mapping — this is the
+//! motivation figure showing why IC+PM are needed).
+//!
+//! Fig. 1(c): runtime of noise-free matrix multiplication vs. noise-modeled
+//! simulation (the paper's motivation for *in-situ* rather than simulated
+//! training).
+
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::linalg::{matmul, Mat};
+use l2ight::nn::{build_model, EngineKind, ModelArch, ProjEngine};
+use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::stages::pm::copy_aux_params;
+use l2ight::stages::sl::{train, OptKind, SlConfig};
+use l2ight::util::bench::{black_box, Bencher, Table};
+use l2ight::util::Rng;
+
+fn noise_combo(q: bool, ct: bool, dv: bool, pb: bool) -> NoiseModel {
+    NoiseModel {
+        phase_bits: if q { Some(8) } else { None },
+        sigma_bits: if q { Some(16) } else { None },
+        crosstalk: if ct { 0.005 } else { 0.0 },
+        gamma_std: if dv { 0.002 } else { 0.0 },
+        phase_bias: pb,
+    }
+}
+
+/// Program the digital model's weights onto photonic meshes (ideal SVD
+/// programming, exactly what naive deployment would do) and evaluate.
+fn deploy_and_eval(
+    digital: &mut l2ight::nn::Model,
+    noise: NoiseModel,
+    classes: usize,
+    width: f32,
+    test: &l2ight::data::Dataset,
+    seed: u64,
+) -> f32 {
+    let mut rng = Rng::new(seed);
+    let kind = EngineKind::Photonic { k: 9, noise };
+    let mut chip = build_model(ModelArch::CnnS, kind, classes, width, &mut rng);
+    // Naive deployment: per-engine program_from_dense (no IC/PM).
+    let mut weights: Vec<Mat> = Vec::new();
+    digital.for_each_layer(|l| {
+        if let Some(e) = l.engine_mut() {
+            weights.push(e.dense_weight());
+        }
+    });
+    let mut wi = 0;
+    chip.for_each_layer(|l| {
+        if let Some(e) = l.engine_mut() {
+            if let ProjEngine::Photonic { mesh, .. } = e {
+                mesh.program_from_dense(&weights[wi]);
+            }
+            wi += 1;
+        }
+    });
+    copy_aux_params(&mut chip, digital);
+    test.evaluate(&mut chip, 32)
+}
+
+fn main() {
+    println!("== Fig. 1(b): accuracy under non-ideality combos (naive deployment, CNN-S) ==");
+    let width = 1.0f32;
+    let (train_set, test_set) = SynthSpec::new(DatasetKind::MnistLike, 512, 256).generate();
+    let mut rng = Rng::new(1);
+    let mut digital = build_model(ModelArch::CnnS, EngineKind::Digital, 10, width, &mut rng);
+    let cfg = SlConfig {
+        epochs: 8,
+        batch: 32,
+        opt: OptKind::Sgd { lr: 0.05, momentum: 0.9, weight_decay: 1e-4 },
+        eval_every: 0,
+        ..SlConfig::default()
+    };
+    let pre = train(&mut digital, &train_set, &test_set, &cfg);
+    println!("digital (noise-free) accuracy: {:.3}", pre.final_test_acc);
+
+    let combos: &[(&str, NoiseModel)] = &[
+        ("ideal", noise_combo(false, false, false, false)),
+        ("Q", noise_combo(true, false, false, false)),
+        ("Q+CT", noise_combo(true, true, false, false)),
+        ("Q+CT+DV", noise_combo(true, true, true, false)),
+        ("Q+CT+DV+PB", noise_combo(true, true, true, true)),
+    ];
+    let mut t = Table::new(&["noise", "acc (mean of 3 chips)", "acc drop vs digital"]);
+    for (name, nm) in combos {
+        let mut accs = Vec::new();
+        for seed in 0..3u64 {
+            accs.push(deploy_and_eval(&mut digital, *nm, 10, width, &test_set, 100 + seed) as f64);
+        }
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        t.row(&[
+            name.to_string(),
+            format!("{mean:.3}"),
+            format!("{:+.3}", mean - pre.final_test_acc as f64),
+        ]);
+    }
+    t.print("Fig 1(b) — accuracy vs noise combination");
+    println!("(paper shape: accuracy degrades as CT/DV stack on Q; PB alone is fatal)");
+
+    println!("\n== Fig. 1(c): noise-free matmul vs noise-simulated matmul runtime ==");
+    let mut bench = Bencher::new(300, 15);
+    let mut t2 = Table::new(&["size", "noise-free (dense)", "noise-sim (mesh)", "slowdown"]);
+    for &n in &[36usize, 72, 144] {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(n, n, 1.0, &mut rng);
+        let x = Mat::randn(n, 64, 1.0, &mut rng);
+        let dense_ns = bench.bench(&format!("dense {n}"), || {
+            black_box(matmul(&a, &x));
+        });
+        let mut mesh = PtcMesh::new(n, n, 9, NoiseModel::PAPER, &mut rng);
+        mesh.program_from_dense(&a);
+        let mesh_ns = bench.bench(&format!("mesh {n}"), || {
+            mesh.invalidate(); // force noise re-realization: the Fig 1(c) cost
+            black_box(mesh.forward(&x));
+        });
+        t2.row(&[
+            format!("{n}x{n}"),
+            l2ight::util::bench::fmt_ns(dense_ns),
+            l2ight::util::bench::fmt_ns(mesh_ns),
+            format!("{:.0}x", mesh_ns / dense_ns),
+        ]);
+    }
+    t2.print("Fig 1(c) — noise simulation overhead");
+    println!("(paper shape: noise-modeled simulation is far slower than the plain matmul,\n motivating in-situ learning instead of simulated training)");
+}

@@ -1,0 +1,91 @@
+//! Fig. 5: ZO optimizers on parallel mapping, and the effect of the final
+//! optimal singular-value projection (OSP).
+//!
+//! Paper shape: ZTP and ZCD-B perform best; OSP gives a significant
+//! normalized-matrix-distance drop and a 2-5% accuracy jump "for free".
+
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::nn::{build_model, EngineKind, ModelArch};
+use l2ight::photonics::NoiseModel;
+use l2ight::stages::pm::{copy_aux_params, map_model, PmConfig};
+use l2ight::stages::sl::{train, OptKind, SlConfig};
+use l2ight::util::bench::Table;
+use l2ight::util::{fmt_sig, Rng};
+use l2ight::zoo::{ZoConfig, ZoKind};
+
+fn main() {
+    println!("== Fig. 5: parallel mapping — ZO optimizer comparison + OSP ==");
+    // Pretrain a digital MLP on the vowel task (the mapping target).
+    let (train_set, test_set) =
+        SynthSpec::new(DatasetKind::VowelLike, 512, 256).with_difficulty(0.8).generate();
+    let mut rng = Rng::new(5);
+    let mut digital = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 1.0, &mut rng);
+    let pre_cfg = SlConfig {
+        epochs: 15,
+        batch: 32,
+        opt: OptKind::Sgd { lr: 0.1, momentum: 0.9, weight_decay: 1e-4 },
+        eval_every: 0,
+        ..SlConfig::default()
+    };
+    let pre = train(&mut digital, &train_set, &test_set, &pre_cfg);
+    println!("pretrained digital accuracy: {:.3}", pre.final_test_acc);
+
+    let noise = NoiseModel::PAPER;
+    let mut t = Table::new(&[
+        "optimizer",
+        "rel err init",
+        "rel err ZO",
+        "rel err +OSP",
+        "acc no-OSP",
+        "acc +OSP",
+        "queries",
+    ]);
+    let mut osp_gains = Vec::new();
+    for kind in [ZoKind::Zgd, ZoKind::Zcd, ZoKind::Ztp] {
+        let mut accs = [0.0f32; 2];
+        let mut errs = [0.0f64; 3];
+        let mut queries = 0u64;
+        for (oi, osp) in [false, true].into_iter().enumerate() {
+            let mut chip_rng = Rng::new(77);
+            let chip_kind = EngineKind::Photonic { k: 4, noise };
+            let mut chip = build_model(ModelArch::MlpVowel, chip_kind, 4, 1.0, &mut chip_rng);
+            let cfg = PmConfig {
+                optimizer: kind,
+                zo: ZoConfig {
+                    iters: 60,
+                    step: 0.1,
+                    decay: 0.99,
+                    step_floor: 2e-3,
+                    best_recording: true,
+                },
+                alternations: 3,
+                osp,
+                ..PmConfig::default()
+            };
+            let r = map_model(&mut chip, &mut digital, &cfg);
+            copy_aux_params(&mut chip, &mut digital);
+            accs[oi] = test_set.evaluate(&mut chip, 32);
+            if osp {
+                errs = [r.err_init, r.err_zo, r.err_osp];
+                queries = r.queries;
+            }
+        }
+        osp_gains.push((accs[1] - accs[0]) as f64);
+        t.row(&[
+            kind.name().to_string(),
+            fmt_sig(errs[0], 3),
+            fmt_sig(errs[1], 3),
+            fmt_sig(errs[2], 3),
+            format!("{:.3}", accs[0]),
+            format!("{:.3}", accs[1]),
+            queries.to_string(),
+        ]);
+    }
+    t.print("Fig 5 — mapping fidelity and accuracy per ZO optimizer (MLP, paper noise)");
+    let mean_gain = osp_gains.iter().sum::<f64>() / osp_gains.len() as f64;
+    println!(
+        "\nmean OSP accuracy jump: {:+.3} (paper: +2-5% almost for free)",
+        mean_gain
+    );
+    println!("(paper shape: coordinate-wise ZCD/ZTP reach lower mapping error than ZGD;\n OSP drops the normalized matrix distance further at 3 PTC passes/block)");
+}

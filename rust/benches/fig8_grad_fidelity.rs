@@ -1,0 +1,83 @@
+//! Fig. 8: σ-gradient approximation fidelity (average angular similarity
+//! and normalized distance) —
+//!   (a) feedback sampling: btopk across sparsity levels,
+//!   (b) normalization variants (none / exp / var) at fixed sparsity,
+//!   (c) spatial sampling (SS) vs column sampling (CS) across sparsity,
+//!   (d) normalization under feature sampling.
+//!
+//! Paper shape: similarity degrades gracefully with sparsity; exp
+//! normalization gives the best-aligned feedback gradients; CS preserves
+//! more information than SS at matched sparsity.
+
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::nn::{build_model, EngineKind, ModelArch};
+use l2ight::photonics::NoiseModel;
+use l2ight::sampling::{
+    grad_fidelity, ColumnSampler, FeedbackSampler, FeedbackStrategy, Normalization,
+};
+use l2ight::util::bench::Table;
+use l2ight::util::Rng;
+
+fn main() {
+    println!("== Fig. 8: gradient approximation fidelity (CNN-L-style, photonic) ==");
+    let mut rng = Rng::new(8);
+    let kind = EngineKind::Photonic { k: 9, noise: NoiseModel::IDEAL };
+    // CNN-L on a Fashion-shaped task (the paper's Fig. 8 model), slim width.
+    let mut model = build_model(ModelArch::CnnL, kind, 10, 0.5, &mut rng);
+    let (ds, _) = SynthSpec::new(DatasetKind::FashionLike, 64, 8).generate();
+    let idx: Vec<usize> = (0..16).collect();
+    let draws = 5;
+
+    // (a) feedback sparsity sweep with btopk + exp.
+    let mut ta = Table::new(&["keep α_W", "angular sim", "norm dist"]);
+    for keep in [0.9f32, 0.7, 0.5, 0.3] {
+        let fs = FeedbackSampler::new(FeedbackStrategy::BTopK, 1.0 - keep, Normalization::Exp);
+        let (sim, dist) =
+            grad_fidelity(&mut model, &ds, &idx, Some(fs), ColumnSampler::OFF, draws, 42);
+        ta.row(&[format!("{keep:.1}"), format!("{sim:.4}"), format!("{dist:.4}")]);
+    }
+    ta.print("Fig 8(a) — feedback sparsity (btopk, exp norm)");
+
+    // (b) normalization comparison at α_W = 0.5.
+    let mut tb = Table::new(&["normalization", "angular sim", "norm dist"]);
+    for (name, norm) in [
+        ("none", Normalization::None),
+        ("exp", Normalization::Exp),
+        ("var", Normalization::Var),
+    ] {
+        let fs = FeedbackSampler::new(FeedbackStrategy::BTopK, 0.5, norm);
+        let (sim, dist) =
+            grad_fidelity(&mut model, &ds, &idx, Some(fs), ColumnSampler::OFF, draws, 43);
+        tb.row(&[name.to_string(), format!("{sim:.4}"), format!("{dist:.4}")]);
+    }
+    tb.print("Fig 8(b) — normalization (btopk, keep 0.5)");
+
+    // (c) SS vs CS sweep.
+    let mut tc = Table::new(&["keep α_C", "CS angular sim", "SS angular sim", "CS dist", "SS dist"]);
+    for keep in [0.9f32, 0.7, 0.5, 0.3] {
+        let cs = ColumnSampler::column(1.0 - keep);
+        let ss = ColumnSampler::spatial(1.0 - keep, true);
+        let (sim_cs, dist_cs) = grad_fidelity(&mut model, &ds, &idx, None, cs, draws, 44);
+        let (sim_ss, dist_ss) = grad_fidelity(&mut model, &ds, &idx, None, ss, draws, 44);
+        tc.row(&[
+            format!("{keep:.1}"),
+            format!("{sim_cs:.4}"),
+            format!("{sim_ss:.4}"),
+            format!("{dist_cs:.4}"),
+            format!("{dist_ss:.4}"),
+        ]);
+    }
+    tc.print("Fig 8(c) — column (CS) vs spatial (SS) feature sampling");
+
+    // (d) normalization under CS at keep 0.5.
+    let mut td = Table::new(&["normalization", "angular sim", "norm dist"]);
+    for (name, rescale) in [("none", false), ("exp", true)] {
+        let cs = ColumnSampler { rescale, ..ColumnSampler::column(0.5) };
+        let (sim, dist) = grad_fidelity(&mut model, &ds, &idx, None, cs, draws, 45);
+        td.row(&[name.to_string(), format!("{sim:.4}"), format!("{dist:.4}")]);
+    }
+    td.print("Fig 8(d) — normalization under column sampling (keep 0.5)");
+
+    println!("\n(paper shape: similarity falls smoothly with sparsity; exp is unbiased and");
+    println!(" best-aligned; CS ≥ SS at matched sparsity because pixels survive in other columns)");
+}

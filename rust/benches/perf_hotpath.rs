@@ -1,0 +1,129 @@
+//! §Perf hot-path microbenchmarks (the before/after log lives in
+//! EXPERIMENTS.md §Perf). Covers the L3 bottlenecks DESIGN.md §8 names:
+//!
+//!   1. blocked mesh forward vs raw dense GEMM (the simulator floor),
+//!   2. σ-gradient acquisition (Eq. 5 reciprocal passes),
+//!   3. masked feedback,
+//!   4. realization: phases → noisy unitaries (the ZOO inner-loop cost),
+//!   5. feedback-mask generation (btopk heap-select),
+//!   6. PJRT artifact call overhead (when artifacts are built).
+
+use l2ight::linalg::{matmul, Mat};
+use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::runtime::{default_artifact_dir, ArgValue, Runtime};
+use l2ight::sampling::{FeedbackSampler, FeedbackStrategy, Normalization};
+use l2ight::util::bench::{black_box, fmt_ns, Bencher, Table};
+use l2ight::util::Rng;
+
+fn main() {
+    println!("== perf: L3 hot paths (native simulator + PJRT overhead) ==");
+    let mut bench = Bencher::new(400, 20);
+    let mut t = Table::new(&["hot path", "median", "p10", "p90", "notes"]);
+
+    let (n, k, b) = (72usize, 9usize, 64usize);
+    let mut rng = Rng::new(0x9e4f);
+    let w = Mat::randn(n, n, 0.5, &mut rng);
+    let x = Mat::randn(n, b, 1.0, &mut rng);
+    let dy = Mat::randn(n, b, 1.0, &mut rng);
+
+    // 1. dense GEMM floor.
+    let g = bench.bench("dense gemm 72x72x64", || {
+        black_box(matmul(&w, &x));
+    });
+    let last = |bench: &Bencher| {
+        let m = bench.results().last().unwrap();
+        (m.median_ns(), m.p10_ns(), m.p90_ns())
+    };
+    let (med, p10, p90) = last(&bench);
+    t.row(&["dense gemm 72x72x64".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "simulator floor".into()]);
+    let gemm_ns = g;
+
+    // 2. mesh forward (realization cached — the SL steady state).
+    let mut mesh = PtcMesh::new(n, n, k, NoiseModel::PAPER, &mut rng);
+    mesh.program_from_dense(&w);
+    mesh.forward(&x); // warm the cache
+    let f = bench.bench("mesh forward (cached)", || {
+        black_box(mesh.forward(&x));
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&[
+        "mesh forward (cached)".into(),
+        fmt_ns(med),
+        fmt_ns(p10),
+        fmt_ns(p90),
+        format!("{:.1}x gemm", f / gemm_ns),
+    ]);
+
+    // 3. mesh forward with realization (the ZOO-eval / noise-sim cost).
+    let fr = bench.bench("mesh forward (realize)", || {
+        mesh.invalidate();
+        black_box(mesh.forward(&x));
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&[
+        "mesh forward (realize)".into(),
+        fmt_ns(med),
+        fmt_ns(p10),
+        fmt_ns(p90),
+        format!("{:.1}x cached", fr / f),
+    ]);
+
+    // 4. σ-gradient.
+    mesh.forward(&x); // re-warm
+    bench.bench("sigma_grad", || {
+        black_box(mesh.sigma_grad(&x, &dy, None, 1.0));
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&["sigma_grad (Eq.5)".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), String::new()]);
+
+    // 5. feedback, dense and masked.
+    bench.bench("feedback dense", || {
+        black_box(mesh.feedback(&dy, None, 1.0));
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&["feedback dense".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), String::new()]);
+    let sampler = FeedbackSampler::new(FeedbackStrategy::BTopK, 0.5, Normalization::Exp);
+    let norms = mesh.block_norms_sq();
+    let mask = sampler.draw(mesh.p, mesh.q, &norms, &mut rng);
+    bench.bench("feedback masked 0.5", || {
+        black_box(mesh.feedback(&dy, Some(&mask.keep), mask.scale));
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&["feedback masked 0.5".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "~2x fewer products".into()]);
+
+    // 6. mask generation (btopk select per layer per iteration).
+    bench.bench("btopk mask draw 8x8", || {
+        black_box(sampler.draw(8, 8, &vec![1.0; 64], &mut rng));
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&["btopk mask draw 8x8".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "per layer per iter".into()]);
+
+    // 7. single-PTC realization (the ZOO inner-loop unit cost).
+    let mut ptc = l2ight::photonics::ptc::Ptc::new(9, NoiseModel::PAPER, &mut rng);
+    bench.bench("ptc realize 9x9", || {
+        ptc.set_phase(l2ight::photonics::ptc::Which::U, 0, black_box(0.1));
+        black_box(ptc.realized_u());
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&["ptc realize 9x9 (1 phase poke)".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "ZOO eval unit".into()]);
+
+    // 8. PJRT call overhead (artifact path).
+    if default_artifact_dir().join("manifest.json").exists() {
+        let mut rt = Runtime::new(&default_artifact_dir()).expect("runtime");
+        let name = "ptc_forward_p2_q2_k9_b18";
+        let spec = rt.manifest().find(name).unwrap().clone();
+        let args_data: Vec<Vec<f32>> =
+            spec.args.iter().map(|a| vec![0.1f32; a.numel()]).collect();
+        rt.ensure_compiled(name).unwrap();
+        bench.bench("pjrt ptc_forward call", || {
+            let args: Vec<ArgValue> = args_data.iter().map(|d| ArgValue::F32(d)).collect();
+            black_box(rt.call1_f32(name, &args).unwrap());
+        });
+        let (med, p10, p90) = last(&bench);
+        t.row(&["pjrt ptc_forward call".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "2x2 blocks k=9 b=18".into()]);
+    } else {
+        t.row(&["pjrt call".into(), "-".into(), "-".into(), "-".into(), "run `make artifacts`".into()]);
+    }
+
+    t.print("perf — hot-path medians");
+}

@@ -1,0 +1,66 @@
+//! Table 1: scalability comparison with prior ONN on-chip training
+//! protocols — the static comparison grid plus a measured query-cost probe
+//! that shows *why* the #Params columns are what they are: ZO query count
+//! per update scales with the phase-space dimension, first-order subspace
+//! cost does not.
+
+use l2ight::baselines::{flops_train, mixedtrn_train, ZoTrainConfig};
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::nn::{build_model, EngineKind, ModelArch};
+use l2ight::photonics::NoiseModel;
+use l2ight::stages::sl::{train, SlConfig};
+use l2ight::util::bench::Table;
+use l2ight::util::{fmt_sig, Rng};
+
+fn main() {
+    // The grid of Table 1 (documented characteristics of each protocol).
+    let mut t = Table::new(&["", "BFT[41]", "PSO[56]", "AVM[24]", "FLOPS[20]", "MixedTrn[17]", "L2ight"]);
+    t.row(&["#Params".into(), "~100".into(), "~100".into(), "~100".into(), "~1000".into(), "~2500".into(), "~10M".into()]);
+    t.row(&["Algorithm".into(), "ZO".into(), "ZO".into(), "FO".into(), "ZO".into(), "ZO".into(), "ZO+FO".into()]);
+    t.row(&["Resolution req.".into(), "Medium".into(), "High".into(), "Medium".into(), "High".into(), "Med".into(), "Medium".into()]);
+    t.row(&["Observability".into(), "Coh. I/O".into(), "Coh. I/O".into(), "Coh. I/O + per-device".into(), "Coh. I/O".into(), "Coh. I/O".into(), "Coh. I/O".into()]);
+    t.print("Table 1 — protocol comparison grid (paper values)");
+
+    println!("\n== measured: hardware queries per effective update vs phase dimension ==");
+    let (train_set, test_set) =
+        SynthSpec::new(DatasetKind::VowelLike, 128, 64).with_difficulty(0.5).generate();
+    let mut t2 = Table::new(&[
+        "width",
+        "#phases",
+        "FLOPS queries/iter",
+        "MixedTrn queries/iter",
+        "L2ight PTC-calls/iter",
+    ]);
+    for width in [0.5f32, 1.0, 2.0] {
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::PAPER };
+        let mut m_flops = build_model(ModelArch::MlpVowel, kind, 4, width, &mut Rng::new(1));
+        let mut m_mixed = m_flops.clone();
+        let mut m_ours = m_flops.clone();
+        let phases: usize = {
+            let mut n = 0;
+            m_flops.for_each_layer(|l| {
+                if let Some(l2ight::nn::ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+                    n += mesh.ptcs.iter().map(|p| p.n_phases()).sum::<usize>();
+                }
+            });
+            n
+        };
+        let iters = train_set.n.div_ceil(32);
+        let zo_cfg = ZoTrainConfig { epochs: 1, batch: 32, grad_samples: 5, ..Default::default() };
+        let rf = flops_train(&mut m_flops, &train_set, &test_set, &zo_cfg);
+        let rm = mixedtrn_train(&mut m_mixed, &train_set, &test_set, &zo_cfg);
+        m_ours.reset_mesh_stats();
+        let rs = train(&mut m_ours, &train_set, &test_set, &SlConfig::quick(1, 32));
+        t2.row(&[
+            format!("{width:.1}"),
+            phases.to_string(),
+            fmt_sig(rf.queries as f64 / iters as f64, 3),
+            fmt_sig(rm.queries as f64 / iters as f64, 3),
+            fmt_sig(rs.cost.total_energy() / iters as f64, 3),
+        ]);
+    }
+    t2.print("Table 1 (measured) — per-iteration hardware cost scaling");
+    println!("\n(paper shape: MixedTrn's query count grows with the phase count — the");
+    println!(" scalability wall; L2ight's first-order cost grows only with the model's");
+    println!(" forward cost, independent of the number of *trainable* phases)");
+}

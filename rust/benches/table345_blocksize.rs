@@ -1,0 +1,118 @@
+//! Appendix F, Tables 3/4/5: why k = 9.
+//!
+//! T3 — noise-induced relative matrix error vs block size on a 256×256
+//!      weight (paper: 20 runs; we use 5 — std is tiny).
+//! T4 — identity-calibration solution quality (MSEᵁ+MSEⱽ)/2 vs block size
+//!      (ZO curse of dimensionality).
+//! T5 — subspace-learning accuracy vs block size (parameter-space shrinks
+//!      as N²/k — too-big blocks lose trainability).
+
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::linalg::Mat;
+use l2ight::nn::{build_model, EngineKind, ModelArch};
+use l2ight::photonics::ptc::Ptc;
+use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::stages::ic::{calibrate_ptc, IcConfig};
+use l2ight::stages::sl::{train, SlConfig};
+use l2ight::util::bench::Table;
+use l2ight::util::{fmt_sig, mean, std as stdev, Rng};
+use l2ight::zoo::ZoConfig;
+
+const SIZES: [usize; 6] = [8, 9, 12, 16, 24, 32];
+
+fn table3() {
+    println!("== Table 3: noise-induced relative matrix error vs block size (256x256) ==");
+    let n = 256;
+    let runs = 5;
+    let mut t = Table::new(&["blk size", "rel err", "std", "paper rel err"]);
+    let paper = [0.025, 0.032, 0.043, 0.061, 0.094, 0.126];
+    for (i, &k) in SIZES.iter().enumerate() {
+        let mut errs = Vec::new();
+        for run in 0..runs {
+            let mut rng = Rng::with_stream(0x7333, (k * 100 + run) as u64);
+            let w = Mat::randn(n, n, 0.5, &mut rng);
+            let mut mesh = PtcMesh::new(n, n, k, NoiseModel::PAPER_NO_BIAS, &mut rng);
+            mesh.program_from_dense(&w);
+            errs.push(mesh.rel_error(&w) as f64);
+        }
+        t.row(&[
+            k.to_string(),
+            fmt_sig(mean(&errs), 3),
+            fmt_sig(stdev(&errs), 2),
+            format!("{}", paper[i]),
+        ]);
+    }
+    t.print("Table 3 — error accumulation grows with block size");
+}
+
+fn table4() {
+    println!("\n== Table 4: IC solution quality vs block size ==");
+    // Our MSE is per-entry (‖|U|−I‖²/k²), whose *uncalibrated* baseline
+    // already shrinks like 1/k — so raw values are not comparable across k.
+    // The dimensionality effect the paper's table demonstrates shows up in
+    // the RESIDUAL FRACTION (final MSE / initial MSE): under a fixed query
+    // budget, big blocks converge a much smaller fraction of the way.
+    let mut t = Table::new(&["blk size", "init MSE", "final MSE", "residual frac", "paper MSE"]);
+    let paper = [0.0135, 0.013, 0.03, 0.039, 0.04, 0.045];
+    for (i, &k) in SIZES.iter().enumerate() {
+        // Fixed total hardware-query budget across block sizes (the paper
+        // fixes the calibration epochs).
+        let dim = 2 * k * (k - 1) / 2;
+        let iters = (60_000 / (2 * dim)).clamp(6, 600);
+        let cfg = IcConfig {
+            zo: ZoConfig { iters, step: 0.15, decay: 0.995, step_floor: 2e-3, best_recording: true },
+            ..IcConfig::default()
+        };
+        let mut inits = Vec::new();
+        let mut finals = Vec::new();
+        for run in 0..2u64 {
+            let mut rng = Rng::with_stream(0x7444, k as u64 * 10 + run);
+            let mut ptc = Ptc::new(k, NoiseModel::PAPER, &mut rng);
+            let (iu, iv) = ptc.identity_mse();
+            inits.push((iu + iv) / 2.0);
+            let mut zo_rng = Rng::with_stream(0x7445, k as u64 * 10 + run);
+            let (_, (mu, mv)) = calibrate_ptc(&mut ptc, &cfg, &mut zo_rng);
+            finals.push((mu + mv) / 2.0);
+        }
+        t.row(&[
+            k.to_string(),
+            fmt_sig(mean(&inits), 3),
+            fmt_sig(mean(&finals), 3),
+            format!("{:.2}", mean(&finals) / mean(&inits)),
+            format!("{}", paper[i]),
+        ]);
+    }
+    t.print("Table 4 — ZO calibration under a fixed query budget");
+    println!("(paper shape: quality degrades with block size; here visible in the residual");
+    println!(" fraction — our per-entry MSE normalization shrinks ~1/k, masking it in raw values)");
+}
+
+fn table5() {
+    println!("\n== Table 5: subspace-learning accuracy vs block size (CNN on synthetic) ==");
+    // The paper uses VGG8/CIFAR; we use CNN-L/synthetic-Fashion at reduced
+    // width (same N²/k parameter-space scaling).
+    let datasets = SynthSpec::new(DatasetKind::FashionLike, 256, 128).generate();
+    let mut t = Table::new(&["blk size", "trainable Σ", "best acc", "paper acc"]);
+    let paper = [84.26, 84.45, 83.36, 81.27, 80.68, 78.40];
+    for (i, &k) in SIZES.iter().enumerate() {
+        let kind = EngineKind::Photonic { k, noise: NoiseModel::quant_only(8) };
+        let mut model = build_model(ModelArch::CnnL, kind, 10, 0.35, &mut Rng::new(55));
+        let (trainable, _) = model.param_counts();
+        let cfg = SlConfig { epochs: 5, batch: 32, eval_every: 0, seed: 0x7555, ..SlConfig::default() };
+        let r = train(&mut model, &datasets.0, &datasets.1, &cfg);
+        t.row(&[
+            k.to_string(),
+            trainable.to_string(),
+            format!("{:.3}", r.best_test_acc),
+            format!("{}", paper[i]),
+        ]);
+    }
+    t.print("Table 5 — trainability shrinks with block size (fewer Σ per weight)");
+    println!("(paper shape: k≈8-9 best; k≥16 loses accuracy to the smaller subspace)");
+}
+
+fn main() {
+    table3();
+    table4();
+    table5();
+}

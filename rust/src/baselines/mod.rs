@@ -1,0 +1,470 @@
+//! Baselines the paper compares against.
+//!
+//! * **On-chip training protocols** (Fig. 10 / Table 1):
+//!   [`flops_train`] — FLOPS [20], stochastic zeroth-order optimization of
+//!   *all* MZI phases with multi-sample RGE; [`mixedtrn_train`] — MixedTrn
+//!   [17], sparse mixed ZO training (a sparse subset of phases gets ZO
+//!   updates each step). Both operate on the full phase space and therefore
+//!   hit the curse of dimensionality exactly as the paper reports.
+//! * **Sparse training methods** (Fig. 11 / Table 2), realized as `SlConfig`
+//!   presets over the same subspace-learning loop: [`rad_config`] — RAD
+//!   [36], spatial sampling of activations (saves memory, not PTC calls);
+//!   [`swat_config`] — SWAT-U [38], shared forward/feedback weight
+//!   sparsification plus spatial feature sampling; [`l2ight_sl_config`] —
+//!   the proposed multi-level sampling (btopk feedback + column + data).
+
+use crate::data::Dataset;
+use crate::nn::{softmax_cross_entropy, Model, ProjEngine};
+use crate::profiler::{forward_cost, CostBreakdown, LayerCost};
+use crate::sampling::{
+    ColumnSampler, DataSampler, FeedbackSampler, FeedbackStrategy, Normalization,
+};
+use crate::stages::sl::SlConfig;
+use crate::util::Rng;
+
+/// Result of a ZO protocol run (FLOPS / MixedTrn).
+#[derive(Clone, Debug, Default)]
+pub struct ZoTrainReport {
+    pub final_test_acc: f32,
+    pub best_test_acc: f32,
+    /// Loss after each epoch.
+    pub loss_trace: Vec<f32>,
+    /// Total forward queries issued (each is one full-model inference).
+    pub queries: u64,
+    /// Hardware cost: queries × per-batch forward cost.
+    pub cost: CostBreakdown,
+}
+
+/// Shared configuration for the ZO training protocols.
+#[derive(Clone, Copy, Debug)]
+pub struct ZoTrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f64,
+    /// RGE gradient samples per step (FLOPS; paper setting 5).
+    pub grad_samples: usize,
+    /// Smoothing radius for RGE.
+    pub mu: f64,
+    /// MixedTrn: fraction of phases updated per step (mixed-training
+    /// sparsity 0.4 × parameter sparsity 0.1 in the paper's setting).
+    pub phase_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for ZoTrainConfig {
+    fn default() -> Self {
+        // Paper Appendix E settings for FLOPS (lr 2 is in *phase* units of
+        // the author implementation; our loss scale wants smaller).
+        ZoTrainConfig {
+            epochs: 50,
+            batch: 32,
+            lr: 0.05,
+            grad_samples: 5,
+            mu: 0.02,
+            phase_fraction: 0.04,
+            seed: 0xf10b5,
+        }
+    }
+}
+
+/// Flattened view of every programmable phase in a model's photonic meshes.
+struct PhaseSpace {
+    /// (layer engine index, ptc index, which, phase index) per coordinate.
+    coords: Vec<(usize, usize, crate::photonics::ptc::Which, usize)>,
+}
+
+impl PhaseSpace {
+    fn build(model: &mut Model) -> PhaseSpace {
+        use crate::photonics::ptc::Which;
+        let mut coords = Vec::new();
+        let mut ei = 0usize;
+        model.for_each_layer(|l| {
+            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+                for (pi, ptc) in mesh.ptcs.iter().enumerate() {
+                    let m = ptc.u_mesh.phases.len();
+                    for which in [Which::U, Which::V] {
+                        for i in 0..m {
+                            coords.push((ei, pi, which, i));
+                        }
+                    }
+                }
+                ei += 1;
+            }
+        });
+        PhaseSpace { coords }
+    }
+
+    fn len(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Write a sparse set of coordinate deltas.
+    fn nudge(&self, model: &mut Model, idx: &[usize], delta: &[f64]) {
+        use crate::photonics::ptc::Which;
+        // Group by engine to minimize invalidations.
+        let mut ei = 0usize;
+        model.for_each_layer(|l| {
+            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+                let mut touched = false;
+                for (&ix, &d) in idx.iter().zip(delta) {
+                    let (e, pi, which, i) = self.coords[ix];
+                    if e != ei {
+                        continue;
+                    }
+                    let ptc = &mut mesh.ptcs[pi];
+                    let cur = ptc.phase(which, i);
+                    ptc.set_phase(which, i, cur + d);
+                    touched = true;
+                    let _ = matches!(which, Which::U);
+                }
+                if touched {
+                    mesh.invalidate();
+                }
+                ei += 1;
+            }
+        });
+    }
+}
+
+/// Mini-batch loss of the model on `idx` (one hardware query).
+fn batch_loss(model: &mut Model, ds: &Dataset, idx: &[usize]) -> f32 {
+    let (x, labels) = ds.gather(idx, None);
+    let logits = model.forward(&x, true);
+    let (loss, _) = softmax_cross_entropy(&logits.mat, &labels);
+    model.clear_caches();
+    loss
+}
+
+/// Per-query forward cost of the model (ZO protocols pay this per eval).
+fn model_forward_cost(model: &mut Model, batch: usize) -> CostBreakdown {
+    let mut layers: Vec<LayerCost> = Vec::new();
+    model.for_each_layer(|l| {
+        if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+            layers.push(LayerCost {
+                p: mesh.p,
+                q: mesh.q,
+                k: mesh.k,
+                out_cols: 1,
+                in_cols: 1,
+            });
+        }
+    });
+    forward_cost(&layers, batch)
+}
+
+/// FLOPS [20]: full-space stochastic zeroth-order training. Every step
+/// estimates the phase gradient with `grad_samples` two-point RGE queries
+/// and applies SGD on *all* phases.
+pub fn flops_train(
+    model: &mut Model,
+    train_set: &Dataset,
+    test_set: &Dataset,
+    cfg: &ZoTrainConfig,
+) -> ZoTrainReport {
+    let space = PhaseSpace::build(model);
+    let n = space.len();
+    let per_query = model_forward_cost(model, cfg.batch);
+    let mut rng = Rng::with_stream(cfg.seed, 0);
+    let mut report = ZoTrainReport::default();
+    let all: Vec<usize> = (0..n).collect();
+    let mut lr = cfg.lr;
+    for _epoch in 0..cfg.epochs {
+        let loader = crate::data::Loader::new(train_set.n, cfg.batch, &mut rng);
+        let mut epoch_loss = 0.0f32;
+        let mut batches = 0;
+        for idx in loader {
+            let f0 = batch_loss(model, train_set, &idx);
+            report.queries += 1;
+            // Averaged RGE over grad_samples random directions.
+            let mut g = vec![0.0f64; n];
+            for _ in 0..cfg.grad_samples {
+                let u: Vec<f64> = (0..n).map(|_| rng.normal() * cfg.mu).collect();
+                space.nudge(model, &all, &u);
+                let fp = batch_loss(model, train_set, &idx);
+                report.queries += 1;
+                let neg: Vec<f64> = u.iter().map(|v| -v).collect();
+                space.nudge(model, &all, &neg);
+                let scale = (fp - f0) as f64 / (cfg.mu * cfg.mu * cfg.grad_samples as f64);
+                for (gi, ui) in g.iter_mut().zip(&u) {
+                    *gi += scale * ui;
+                }
+            }
+            let step: Vec<f64> = g.iter().map(|gi| -lr * gi).collect();
+            space.nudge(model, &all, &step);
+            epoch_loss += f0;
+            batches += 1;
+        }
+        lr *= 0.98;
+        report.loss_trace.push(epoch_loss / batches.max(1) as f32);
+        let acc = test_set.evaluate(model, cfg.batch);
+        report.best_test_acc = report.best_test_acc.max(acc);
+        report.final_test_acc = acc;
+    }
+    report.cost = per_query.scale(report.queries as f64);
+    report
+}
+
+/// MixedTrn [17]: sparse mixed-training — per step, ZO coordinate updates on
+/// a small random subset of phases (importance-weighted toward high-|σ|
+/// blocks), leaving the rest frozen.
+pub fn mixedtrn_train(
+    model: &mut Model,
+    train_set: &Dataset,
+    test_set: &Dataset,
+    cfg: &ZoTrainConfig,
+) -> ZoTrainReport {
+    let space = PhaseSpace::build(model);
+    let n = space.len();
+    let per_query = model_forward_cost(model, cfg.batch);
+    let mut rng = Rng::with_stream(cfg.seed, 1);
+    let mut report = ZoTrainReport::default();
+    let subset = ((n as f64 * cfg.phase_fraction).ceil() as usize).clamp(1, n);
+    let mut step = cfg.lr;
+    for _epoch in 0..cfg.epochs {
+        let loader = crate::data::Loader::new(train_set.n, cfg.batch, &mut rng);
+        let mut epoch_loss = 0.0f32;
+        let mut batches = 0;
+        for idx in loader {
+            let mut f0 = batch_loss(model, train_set, &idx);
+            report.queries += 1;
+            epoch_loss += f0;
+            batches += 1;
+            // Coordinate-descent sweep over the sparse active set.
+            let active = rng.choose_k(n, subset);
+            for &c in &active {
+                space.nudge(model, &[c], &[step]);
+                let fp = batch_loss(model, train_set, &idx);
+                report.queries += 1;
+                if fp < f0 {
+                    f0 = fp;
+                    continue;
+                }
+                space.nudge(model, &[c], &[-2.0 * step]);
+                let fm = batch_loss(model, train_set, &idx);
+                report.queries += 1;
+                if fm < f0 {
+                    f0 = fm;
+                } else {
+                    space.nudge(model, &[c], &[step]);
+                }
+            }
+        }
+        step = (step * 0.95).max(1e-3);
+        report.loss_trace.push(epoch_loss / batches.max(1) as f32);
+        let acc = test_set.evaluate(model, cfg.batch);
+        report.best_test_acc = report.best_test_acc.max(acc);
+        report.final_test_acc = acc;
+    }
+    report.cost = per_query.scale(report.queries as f64);
+    report
+}
+
+/// Convert a *keep* fraction α (the paper's Table-2 convention — App. D's
+/// c_W = 1/α_W means α_W is the kept share) into the samplers' internal
+/// *dropped* fraction. α ≥ 1 means dense/off.
+fn drop_frac(alpha: f32) -> Option<f32> {
+    if alpha >= 1.0 {
+        None
+    } else {
+        Some((1.0 - alpha).clamp(0.0, 0.999))
+    }
+}
+
+/// RAD [36] preset: uniform spatial activation sampling with
+/// expectation-maintained normalization; dense feedback (the backward pass
+/// stays unoptimized — the paper's criticism). `alpha_s` = keep fraction.
+pub fn rad_config(alpha_s: f32, base: &SlConfig) -> SlConfig {
+    let feature = match drop_frac(alpha_s) {
+        Some(d) => ColumnSampler::spatial(d, true),
+        None => ColumnSampler::OFF,
+    };
+    SlConfig { feature, feedback: None, ..base.clone() }
+}
+
+/// SWAT-U [38] preset: uniform weight-matrix sampling shared between forward
+/// and feedback (set via [`apply_swat_forward_masks`] each epoch) plus
+/// unnormalized spatial feature sampling. α values are keep fractions.
+pub fn swat_config(alpha_w: f32, alpha_s: f32, base: &SlConfig) -> SlConfig {
+    let feature = match drop_frac(alpha_s) {
+        Some(d) => ColumnSampler::spatial(d, false),
+        None => ColumnSampler::OFF,
+    };
+    SlConfig {
+        feature,
+        feedback: drop_frac(alpha_w).map(|d| {
+            FeedbackSampler::new(FeedbackStrategy::Uniform, d, Normalization::Exp)
+        }),
+        ..base.clone()
+    }
+}
+
+/// The proposed multi-level sampling preset (§3.4.2): btopk feedback with
+/// exp normalization, column sampling (α_C scaling off per the paper), SMD.
+/// `alpha_w`/`alpha_c` are keep fractions; `alpha_d` is the SMD skip
+/// probability.
+pub fn l2ight_sl_config(alpha_w: f32, alpha_c: f32, alpha_d: f32, base: &SlConfig) -> SlConfig {
+    SlConfig {
+        feedback: drop_frac(alpha_w).map(|d| {
+            FeedbackSampler::new(FeedbackStrategy::BTopK, d, Normalization::Exp)
+        }),
+        feature: match drop_frac(alpha_c) {
+            Some(d) => ColumnSampler::column(d),
+            None => ColumnSampler::OFF,
+        },
+        data: DataSampler::new(alpha_d),
+        ..base.clone()
+    }
+}
+
+/// SWAT-U's forward sparsification: mask the lowest-magnitude weights (or
+/// lowest-norm blocks) in every projection engine's *forward* path, keeping
+/// fraction `alpha_w`. Call once per epoch (SWAT re-draws masks slowly).
+pub fn apply_swat_forward_masks(model: &mut Model, alpha_w: f32) {
+    model.for_each_layer(|l| {
+        if let Some(e) = l.engine_mut() {
+            match e {
+                ProjEngine::Digital { w, fwd_mask, .. } => {
+                    let n = w.data.len();
+                    let keep = ((n as f32 * alpha_w).ceil() as usize).clamp(1, n);
+                    let mut order: Vec<usize> = (0..n).collect();
+                    order.sort_by(|&a, &b| {
+                        w.data[b].abs().partial_cmp(&w.data[a].abs()).unwrap()
+                    });
+                    let mut mask = vec![false; n];
+                    for &i in order.iter().take(keep) {
+                        mask[i] = true;
+                    }
+                    *fwd_mask = Some(mask);
+                }
+                ProjEngine::Photonic { mesh, fwd_mask, .. } => {
+                    let norms = mesh.block_norms_sq();
+                    let n = norms.len();
+                    let keep = ((n as f32 * alpha_w).ceil() as usize).clamp(1, n);
+                    let mut order: Vec<usize> = (0..n).collect();
+                    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+                    let mut mask = vec![false; n];
+                    for &i in order.iter().take(keep) {
+                        mask[i] = true;
+                    }
+                    *fwd_mask = Some((mask, 1.0 / alpha_w));
+                }
+            }
+        }
+    });
+}
+
+/// Clear SWAT forward masks (inference runs dense — Appendix E).
+pub fn clear_forward_masks(model: &mut Model) {
+    model.for_each_layer(|l| {
+        if let Some(e) = l.engine_mut() {
+            match e {
+                ProjEngine::Digital { fwd_mask, .. } => *fwd_mask = None,
+                ProjEngine::Photonic { fwd_mask, .. } => *fwd_mask = None,
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, SynthSpec};
+    use crate::nn::{build_model, EngineKind, ModelArch};
+    use crate::photonics::NoiseModel;
+
+    fn tiny_setup() -> (Model, Dataset, Dataset) {
+        let mut rng = Rng::new(41);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::IDEAL };
+        let model = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut rng);
+        let (tr, te) =
+            SynthSpec::quick(DatasetKind::VowelLike, 48, 24).with_difficulty(0.3).generate();
+        (model, tr, te)
+    }
+
+    #[test]
+    fn flops_improves_tiny_model() {
+        let (mut model, tr, te) = tiny_setup();
+        let before = te.evaluate(&mut model, 16);
+        let cfg = ZoTrainConfig { epochs: 6, batch: 16, ..Default::default() };
+        let r = flops_train(&mut model, &tr, &te, &cfg);
+        assert!(r.queries > 0);
+        assert!(r.cost.total_energy() > 0.0);
+        assert!(
+            r.best_test_acc >= before || r.loss_trace.last() < r.loss_trace.first(),
+            "FLOPS made no progress: acc {} -> {}, loss {:?}",
+            before,
+            r.best_test_acc,
+            r.loss_trace
+        );
+    }
+
+    #[test]
+    fn mixedtrn_improves_tiny_model() {
+        let (mut model, tr, te) = tiny_setup();
+        let cfg = ZoTrainConfig { epochs: 4, batch: 16, lr: 0.1, ..Default::default() };
+        let r = mixedtrn_train(&mut model, &tr, &te, &cfg);
+        assert!(r.queries > 0);
+        assert!(
+            r.loss_trace.last().unwrap() < r.loss_trace.first().unwrap(),
+            "MixedTrn loss did not drop: {:?}",
+            r.loss_trace
+        );
+    }
+
+    #[test]
+    fn zo_protocol_queries_price_forward_cost() {
+        let (mut model, tr, te) = tiny_setup();
+        let cfg = ZoTrainConfig { epochs: 1, batch: 16, grad_samples: 2, ..Default::default() };
+        let r = flops_train(&mut model, &tr, &te, &cfg);
+        let per_query = model_forward_cost(&mut model, cfg.batch);
+        assert!(
+            (r.cost.total_energy() - per_query.total_energy() * r.queries as f64).abs() < 1e-6
+        );
+    }
+
+    #[test]
+    fn swat_masks_sparsify_forward() {
+        let (mut model, _, _) = tiny_setup();
+        apply_swat_forward_masks(&mut model, 0.5);
+        let mut found = false;
+        model.for_each_layer(|l| {
+            if let Some(ProjEngine::Photonic { fwd_mask, .. }) = l.engine_mut() {
+                let (mask, scale) = fwd_mask.as_ref().expect("mask applied");
+                let kept = mask.iter().filter(|&&k| k).count();
+                assert!(kept < mask.len() || mask.len() == 1);
+                assert!((*scale - 2.0).abs() < 1e-6);
+                found = true;
+            }
+        });
+        assert!(found);
+        clear_forward_masks(&mut model);
+        model.for_each_layer(|l| {
+            if let Some(ProjEngine::Photonic { fwd_mask, .. }) = l.engine_mut() {
+                assert!(fwd_mask.is_none());
+            }
+        });
+    }
+
+    #[test]
+    fn presets_wire_expected_samplers() {
+        let base = SlConfig::quick(1, 8);
+        let rad = rad_config(0.85, &base);
+        assert!(rad.feedback.is_none());
+        let swat = swat_config(0.3, 0.6, &base);
+        assert!(matches!(
+            swat.feedback.as_ref().map(|f| f.strategy),
+            Some(FeedbackStrategy::Uniform)
+        ));
+        let ours = l2ight_sl_config(0.6, 0.6, 0.5, &base);
+        assert!(matches!(
+            ours.feedback.as_ref().map(|f| f.strategy),
+            Some(FeedbackStrategy::BTopK)
+        ));
+        // Keep fraction 0.6 -> drop fraction 0.4 inside the sampler.
+        assert!((ours.feedback.unwrap().sparsity - 0.4).abs() < 1e-6);
+        assert!(ours.data.sparsity > 0.0);
+        // α = 1.0 means dense/off everywhere.
+        let dense = l2ight_sl_config(1.0, 1.0, 0.0, &base);
+        assert!(dense.feedback.is_none());
+    }
+}

@@ -1,0 +1,256 @@
+//! Inference dispatch batcher: the serving-side coordination primitive.
+//!
+//! Photonic meshes amortize programming cost over WDM column groups, so the
+//! runtime wants requests batched. `Batcher` owns a worker thread draining a
+//! channel: requests accumulate until `max_batch` or `max_wait` and are
+//! executed together by the user-supplied batch function; each caller gets
+//! its own column back. FIFO order within the queue is preserved (a
+//! coordinator invariant property-tested below).
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// …or when the oldest queued request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub max_observed_batch: usize,
+    /// Sum of per-request queue+execute latency, for mean computation.
+    pub total_latency: Duration,
+}
+
+impl BatcherStats {
+    pub fn mean_batch(&self) -> f64 {
+        self.requests as f64 / self.batches.max(1) as f64
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        if self.requests == 0 {
+            Duration::ZERO
+        } else {
+            self.total_latency / self.requests as u32
+        }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    resp: Sender<Vec<f32>>,
+}
+
+/// A batched-inference front door over any `Fn(batch of inputs) -> outputs`.
+pub struct Batcher {
+    tx: Option<Sender<Request>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<BatcherStats>>,
+}
+
+impl Batcher {
+    /// Start a batcher around `run_batch`: given `&[Vec<f32>]` inputs it
+    /// must return one output `Vec<f32>` per input, in order.
+    pub fn start<F>(cfg: BatcherConfig, run_batch: F) -> Batcher
+    where
+        F: FnMut(&[Vec<f32>]) -> Vec<Vec<f32>> + Send + 'static,
+    {
+        Self::start_with_init(cfg, move || run_batch)
+    }
+
+    /// Like [`Batcher::start`], but the batch function is *constructed on
+    /// the worker thread* by `init`. Use when the executor holds non-`Send`
+    /// state — e.g. a PJRT `Runtime`, whose client is thread-affine.
+    pub fn start_with_init<I, F>(cfg: BatcherConfig, init: I) -> Batcher
+    where
+        I: FnOnce() -> F + Send + 'static,
+        F: FnMut(&[Vec<f32>]) -> Vec<Vec<f32>>,
+    {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let wstats = Arc::clone(&stats);
+        let worker = std::thread::spawn(move || {
+            let mut run_batch = init();
+            let mut pending: Vec<Request> = Vec::new();
+            loop {
+                // Wait for the first request (or shutdown).
+                if pending.is_empty() {
+                    match rx.recv() {
+                        Ok(r) => pending.push(r),
+                        Err(_) => break, // all senders gone
+                    }
+                }
+                // Accumulate until full or the deadline passes.
+                let deadline = pending[0].enqueued + cfg.max_wait;
+                while pending.len() < cfg.max_batch {
+                    let now = Instant::now();
+                    let left = deadline.saturating_duration_since(now);
+                    if left.is_zero() {
+                        break;
+                    }
+                    match rx.recv_timeout(left) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let batch: Vec<Request> = std::mem::take(&mut pending);
+                let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+                let outputs = run_batch(&inputs);
+                assert_eq!(outputs.len(), batch.len(), "run_batch arity");
+                let now = Instant::now();
+                {
+                    let mut s = wstats.lock().unwrap();
+                    s.requests += batch.len() as u64;
+                    s.batches += 1;
+                    s.max_observed_batch = s.max_observed_batch.max(batch.len());
+                    for r in &batch {
+                        s.total_latency += now.duration_since(r.enqueued);
+                    }
+                }
+                for (r, out) in batch.into_iter().zip(outputs) {
+                    // Receiver may have hung up; that's the caller's choice.
+                    let _ = r.resp.send(out);
+                }
+            }
+        });
+        Batcher { tx: Some(tx), worker: Some(worker), stats }
+    }
+
+    /// Submit one request and block for its result.
+    pub fn infer(&self, input: Vec<f32>) -> Vec<f32> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("batcher running")
+            .send(Request { input, enqueued: Instant::now(), resp: resp_tx })
+            .expect("batcher worker alive");
+        resp_rx.recv().expect("batcher response")
+    }
+
+    /// Async-style submit: returns the response receiver immediately.
+    pub fn submit(&self, input: Vec<f32>) -> Receiver<Vec<f32>> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("batcher running")
+            .send(Request { input, enqueued: Instant::now(), resp: resp_tx })
+            .expect("batcher worker alive");
+        resp_rx
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Stop the worker and return final stats.
+    pub fn shutdown(mut self) -> BatcherStats {
+        self.tx.take(); // close the channel; worker drains and exits
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_batcher(cfg: BatcherConfig) -> Batcher {
+        // Identity with a batch-size marker appended.
+        Batcher::start(cfg, |inputs| {
+            let n = inputs.len() as f32;
+            inputs.iter().map(|x| {
+                let mut o = x.clone();
+                o.push(n);
+                o
+            }).collect()
+        })
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let b = echo_batcher(BatcherConfig::default());
+        let out = b.infer(vec![1.0, 2.0]);
+        assert_eq!(&out[..2], &[1.0, 2.0]);
+        let s = b.shutdown();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.batches, 1);
+    }
+
+    #[test]
+    fn requests_batch_together() {
+        let cfg = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(50) };
+        let b = echo_batcher(cfg);
+        // Submit 8 concurrently; they should coalesce into few batches.
+        let rxs: Vec<_> = (0..8).map(|i| b.submit(vec![i as f32])).collect();
+        let outs: Vec<Vec<f32>> = rxs.into_iter().map(|r| r.recv().unwrap()).collect();
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o[0], i as f32, "FIFO order broken");
+        }
+        let s = b.shutdown();
+        assert_eq!(s.requests, 8);
+        assert!(s.batches <= 2, "expected coalescing, got {} batches", s.batches);
+        assert!(s.max_observed_batch >= 4);
+    }
+
+    #[test]
+    fn max_batch_caps_flush_size() {
+        let cfg = BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(100) };
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = Arc::clone(&seen);
+        let b = Batcher::start(cfg, move |inputs| {
+            seen2.lock().unwrap().push(inputs.len());
+            inputs.to_vec()
+        });
+        let rxs: Vec<_> = (0..7).map(|i| b.submit(vec![i as f32])).collect();
+        for r in rxs {
+            r.recv().unwrap();
+        }
+        b.shutdown();
+        let sizes = seen.lock().unwrap().clone();
+        assert!(sizes.iter().all(|&s| s <= 3), "batch exceeded cap: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 7);
+    }
+
+    #[test]
+    fn fifo_order_is_preserved_under_load() {
+        // Property: outputs arrive for each request in submission order even
+        // across many flushes.
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_micros(200) };
+        let b = echo_batcher(cfg);
+        let rxs: Vec<_> = (0..64).map(|i| b.submit(vec![i as f32])).collect();
+        for (i, r) in rxs.into_iter().enumerate() {
+            let o = r.recv().unwrap();
+            assert_eq!(o[0], i as f32);
+        }
+        let s = b.shutdown();
+        assert_eq!(s.requests, 64);
+        assert!(s.mean_batch() >= 1.0);
+    }
+}

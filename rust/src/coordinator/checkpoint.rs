@@ -1,0 +1,345 @@
+//! Chip-state checkpoints: serialize every programmed degree of freedom of
+//! a model — MZI phases, Σ values and scales, dense weights, biases, BN
+//! affine + running stats — and restore them bit-exactly.
+//!
+//! Format: a compact binary container (magic + versioned sections of
+//! little-endian f32/f64 runs). Binary rather than JSON because a VGG-8
+//! mesh holds ~10⁶ phases and float round-trip via decimal text is both
+//! slow and lossy.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Result as IoResult, Write};
+use std::path::Path;
+
+use crate::nn::{Layer, Model, ProjEngine};
+use crate::photonics::ptc::Which;
+
+const MAGIC: &[u8; 8] = b"L2IGHTv1";
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> IoResult<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> IoResult<Vec<f32>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let n = u64::from_le_bytes(len8) as usize;
+    let mut out = vec![0f32; n];
+    let mut buf = [0u8; 4];
+    for o in &mut out {
+        r.read_exact(&mut buf)?;
+        *o = f32::from_le_bytes(buf);
+    }
+    Ok(out)
+}
+
+fn write_f64s(w: &mut impl Write, xs: &[f64]) -> IoResult<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f64s(r: &mut impl Read) -> IoResult<Vec<f64>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let n = u64::from_le_bytes(len8) as usize;
+    let mut out = vec![0f64; n];
+    let mut buf = [0u8; 8];
+    for o in &mut out {
+        r.read_exact(&mut buf)?;
+        *o = f64::from_le_bytes(buf);
+    }
+    Ok(out)
+}
+
+/// Collect the full mutable state of a model in traversal order.
+fn collect_state(model: &mut Model) -> (Vec<Vec<f64>>, Vec<Vec<f32>>) {
+    let mut phases: Vec<Vec<f64>> = Vec::new();
+    let mut floats: Vec<Vec<f32>> = Vec::new();
+    model.for_each_layer(|l| {
+        if let Some(e) = l.engine_mut() {
+            match e {
+                ProjEngine::Digital { w, .. } => floats.push(w.data.clone()),
+                ProjEngine::Photonic { mesh, .. } => {
+                    for ptc in &mesh.ptcs {
+                        phases.push(ptc.u_mesh.phases.clone());
+                        phases.push(ptc.v_mesh.phases.clone());
+                        // The Reck D sign diagonals (Eq. 8) are programmed
+                        // state too — extra output-side π shifters.
+                        phases.push(ptc.u_mesh.d.iter().map(|&v| v as f64).collect());
+                        phases.push(ptc.v_mesh.d.iter().map(|&v| v as f64).collect());
+                        floats.push(ptc.sigma.clone());
+                        floats.push(vec![ptc.sigma_scale]);
+                    }
+                }
+            }
+        }
+        match l {
+            Layer::Linear(lin) => floats.push(lin.bias.clone()),
+            Layer::Conv2d(c) => floats.push(c.bias.clone()),
+            Layer::BatchNorm(bn) => {
+                floats.push(bn.gamma.clone());
+                floats.push(bn.beta.clone());
+                floats.push(bn.running_mean.clone());
+                floats.push(bn.running_var.clone());
+            }
+            _ => {}
+        }
+    });
+    (phases, floats)
+}
+
+/// Save the complete chip + electronic state of `model` to `path`.
+pub fn save_model_state(model: &mut Model, path: &Path) -> IoResult<()> {
+    let (phases, floats) = collect_state(model);
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(phases.len() as u64).to_le_bytes())?;
+    for p in &phases {
+        write_f64s(&mut w, p)?;
+    }
+    w.write_all(&(floats.len() as u64).to_le_bytes())?;
+    for f in &floats {
+        write_f32s(&mut w, f)?;
+    }
+    w.flush()
+}
+
+/// Restore state saved by [`save_model_state`] into a model of identical
+/// topology. Errors if section counts or lengths disagree.
+pub fn load_model_state(model: &mut Model, path: &Path) -> IoResult<()> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "not an L2ight checkpoint",
+        ));
+    }
+    let mut cnt = [0u8; 8];
+    r.read_exact(&mut cnt)?;
+    let n_phases = u64::from_le_bytes(cnt) as usize;
+    let mut phases = Vec::with_capacity(n_phases);
+    for _ in 0..n_phases {
+        phases.push(read_f64s(&mut r)?);
+    }
+    r.read_exact(&mut cnt)?;
+    let n_floats = u64::from_le_bytes(cnt) as usize;
+    let mut floats = Vec::with_capacity(n_floats);
+    for _ in 0..n_floats {
+        floats.push(read_f32s(&mut r)?);
+    }
+
+    // Walk the model in the same order, consuming sections.
+    let mut pi = 0usize;
+    let mut fi = 0usize;
+    let mut err: Option<String> = None;
+    model.for_each_layer(|l| {
+        if err.is_some() {
+            return;
+        }
+        let mut take_f32 = |expect: usize, what: &str| -> Option<Vec<f32>> {
+            let v = floats.get(fi).cloned();
+            fi += 1;
+            match v {
+                Some(v) if v.len() == expect => Some(v),
+                Some(v) => {
+                    err = Some(format!("{what}: expected {expect} values, got {}", v.len()));
+                    None
+                }
+                None => {
+                    err = Some(format!("{what}: checkpoint too short"));
+                    None
+                }
+            }
+        };
+        if let Some(e) = l.engine_mut() {
+            match e {
+                ProjEngine::Digital { w, .. } => {
+                    if let Some(v) = take_f32(w.data.len(), "dense weight") {
+                        w.data.copy_from_slice(&v);
+                    }
+                }
+                ProjEngine::Photonic { mesh, .. } => {
+                    for ptc in &mut mesh.ptcs {
+                        let (u, v) = (phases.get(pi).cloned(), phases.get(pi + 1).cloned());
+                        let (du, dv) = (phases.get(pi + 2).cloned(), phases.get(pi + 3).cloned());
+                        pi += 4;
+                        match (u, v, du, dv) {
+                            (Some(u), Some(v), Some(du), Some(dv))
+                                if u.len() == ptc.u_mesh.phases.len()
+                                    && v.len() == ptc.v_mesh.phases.len()
+                                    && du.len() == ptc.u_mesh.d.len()
+                                    && dv.len() == ptc.v_mesh.d.len() =>
+                            {
+                                ptc.set_phases(Which::U, &u);
+                                ptc.set_phases(Which::V, &v);
+                                for (dst, &sv) in ptc.u_mesh.d.iter_mut().zip(&du) {
+                                    *dst = sv as f32;
+                                }
+                                for (dst, &sv) in ptc.v_mesh.d.iter_mut().zip(&dv) {
+                                    *dst = sv as f32;
+                                }
+                            }
+                            _ => {
+                                err = Some("phase section mismatch".into());
+                                return;
+                            }
+                        }
+                        if let Some(s) = take_f32(ptc.sigma.len(), "sigma") {
+                            ptc.sigma.copy_from_slice(&s);
+                        }
+                        if let Some(sc) = take_f32(1, "sigma scale") {
+                            ptc.set_sigma_scale(sc[0]);
+                        }
+                    }
+                    mesh.invalidate();
+                }
+            }
+        }
+        match l {
+            Layer::Linear(lin) => {
+                if let Some(v) = take_f32(lin.bias.len(), "linear bias") {
+                    lin.bias.copy_from_slice(&v);
+                }
+            }
+            Layer::Conv2d(c) => {
+                if let Some(v) = take_f32(c.bias.len(), "conv bias") {
+                    c.bias.copy_from_slice(&v);
+                }
+            }
+            Layer::BatchNorm(bn) => {
+                for (dst, what) in [
+                    (&mut bn.gamma, "bn gamma"),
+                    (&mut bn.beta, "bn beta"),
+                    (&mut bn.running_mean, "bn mean"),
+                    (&mut bn.running_var, "bn var"),
+                ] {
+                    if let Some(v) = take_f32(dst.len(), what) {
+                        dst.copy_from_slice(&v);
+                    }
+                }
+            }
+            _ => {}
+        }
+    });
+    if let Some(e) = err {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e));
+    }
+    if pi != phases.len() || fi != floats.len() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("checkpoint/model mismatch: used {pi}/{} phase and {fi}/{} float sections",
+                phases.len(), floats.len()),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::nn::{build_model, Act, EngineKind, ModelArch};
+    use crate::photonics::NoiseModel;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("l2ight_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn photonic_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(51);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::PAPER };
+        let mut m1 = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut rng);
+        let path = tmp("photonic");
+        save_model_state(&mut m1, &path).unwrap();
+        // Fresh model with different device instances + params.
+        let mut rng2 = Rng::new(99);
+        let mut m2 = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut rng2);
+        load_model_state(&mut m2, &path).unwrap();
+        // Programmed state must match exactly…
+        let mut phases1 = Vec::new();
+        m1.for_each_layer(|l| {
+            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+                for ptc in &mesh.ptcs {
+                    phases1.push((ptc.u_mesh.phases.clone(), ptc.sigma.clone()));
+                }
+            }
+        });
+        let mut i = 0;
+        m2.for_each_layer(|l| {
+            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+                for ptc in &mesh.ptcs {
+                    assert_eq!(ptc.u_mesh.phases, phases1[i].0);
+                    assert_eq!(ptc.sigma, phases1[i].1);
+                    i += 1;
+                }
+            }
+        });
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn digital_roundtrip_preserves_forward() {
+        let mut rng = Rng::new(52);
+        let mut m1 = build_model(ModelArch::CnnS, EngineKind::Digital, 10, 0.5, &mut rng);
+        let path = tmp("digital");
+        save_model_state(&mut m1, &path).unwrap();
+        let mut rng2 = Rng::new(77);
+        let mut m2 = build_model(ModelArch::CnnS, EngineKind::Digital, 10, 0.5, &mut rng2);
+        load_model_state(&mut m2, &path).unwrap();
+        let x = Act::from_nchw(&vec![0.3f32; 2 * 28 * 28], 2, 1, 28, 28);
+        let y1 = m1.forward(&x, false);
+        let y2 = m2.forward(&x, false);
+        assert_eq!(y1.mat.data, y2.mat.data);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn topology_mismatch_is_rejected() {
+        let mut rng = Rng::new(53);
+        let mut m1 = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 0.5, &mut rng);
+        let path = tmp("mismatch");
+        save_model_state(&mut m1, &path).unwrap();
+        let mut m2 = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 1.0, &mut rng);
+        assert!(load_model_state(&mut m2, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"NOTACKPT").unwrap();
+        let mut rng = Rng::new(54);
+        let mut m = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 0.5, &mut rng);
+        assert!(load_model_state(&mut m, &path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checkpoint_restores_behaviour_of_mapped_mesh() {
+        // Save after programming a specific matrix; restore into a fresh
+        // mesh model and verify the realized weight matches.
+        let mut rng = Rng::new(55);
+        let kind = EngineKind::Photonic { k: 3, noise: NoiseModel::IDEAL };
+        let mut m1 = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut rng);
+        let x = Act::from_features(Mat::randn(8, 4, 1.0, &mut rng), 4);
+        let y1 = m1.forward(&x, false);
+        let path = tmp("behaviour");
+        save_model_state(&mut m1, &path).unwrap();
+        let mut m2 = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut Rng::new(1234));
+        load_model_state(&mut m2, &path).unwrap();
+        let y2 = m2.forward(&x, false);
+        crate::util::prop::assert_close(&y1.mat.data, &y2.mat.data, 1e-6, 1e-6).unwrap();
+        std::fs::remove_file(path).ok();
+    }
+}

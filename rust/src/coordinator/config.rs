@@ -1,0 +1,255 @@
+//! Declarative job configuration with JSON round-trip.
+//!
+//! A `JobConfig` fully determines an experiment: architecture, dataset,
+//! photonic block size + noise, the three stage schedules, sampling
+//! sparsities, and the training protocol (L2ight or a baseline). The CLI
+//! builds one from flags; benches build them programmatically; both can be
+//! saved alongside results for reproducibility.
+
+use crate::data::DatasetKind;
+use crate::nn::ModelArch;
+use crate::photonics::NoiseModel;
+use crate::util::json::Json;
+
+/// Which training protocol to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Protocol {
+    /// Full three-stage flow: pretrain → IC → PM → sparse SL.
+    L2ight,
+    /// Subspace learning from scratch (no pretraining/mapping).
+    L2ightSlScratch,
+    /// FLOPS [20] full-space stochastic ZO.
+    Flops,
+    /// MixedTrn [17] sparse mixed ZO.
+    MixedTrn,
+    /// RAD [36] spatial-sampling first-order baseline.
+    Rad,
+    /// SWAT-U [38] sparse weight+activation baseline.
+    SwatU,
+}
+
+impl Protocol {
+    pub fn parse(s: &str) -> Option<Protocol> {
+        Some(match s {
+            "l2ight" => Protocol::L2ight,
+            "l2ight-sl" | "sl-scratch" => Protocol::L2ightSlScratch,
+            "flops" => Protocol::Flops,
+            "mixedtrn" | "mixed-trn" => Protocol::MixedTrn,
+            "rad" => Protocol::Rad,
+            "swat" | "swat-u" => Protocol::SwatU,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Protocol::L2ight => "l2ight",
+            Protocol::L2ightSlScratch => "l2ight-sl",
+            Protocol::Flops => "flops",
+            Protocol::MixedTrn => "mixedtrn",
+            Protocol::Rad => "rad",
+            Protocol::SwatU => "swat-u",
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub arch: ModelArch,
+    pub dataset: DatasetKind,
+    pub protocol: Protocol,
+    /// Photonic block size (paper default 9).
+    pub k: usize,
+    pub noise: NoiseModel,
+    /// Channel-width multiplier for the model zoo.
+    pub width: f32,
+    /// Train/test split sizes for the synthetic datasets.
+    pub n_train: usize,
+    pub n_test: usize,
+    /// Pretraining epochs (digital; 0 = skip even for L2ight).
+    pub pretrain_epochs: usize,
+    /// SL epochs.
+    pub epochs: usize,
+    pub batch: usize,
+    /// Sampling sparsities (keep fractions; 1.0 = dense / off).
+    pub alpha_w: f32,
+    pub alpha_c: f32,
+    /// SMD skip probability (0 = off).
+    pub alpha_d: f32,
+    /// IC/PM ZO iteration budget multiplier (1.0 = paper-like default).
+    pub zo_budget: f32,
+    pub seed: u64,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            arch: ModelArch::MlpVowel,
+            dataset: DatasetKind::VowelLike,
+            protocol: Protocol::L2ight,
+            k: 9,
+            noise: NoiseModel::PAPER,
+            width: 1.0,
+            n_train: 512,
+            n_test: 256,
+            pretrain_epochs: 10,
+            epochs: 10,
+            batch: 32,
+            alpha_w: 1.0,
+            alpha_c: 1.0,
+            alpha_d: 0.0,
+            zo_budget: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+impl JobConfig {
+    /// Serialize to JSON (noise model flattened inline).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("arch", Json::Str(self.arch.name().into()))
+            .set("dataset", Json::Str(self.dataset.name().into()))
+            .set("protocol", Json::Str(self.protocol.name().into()))
+            .set("k", Json::Num(self.k as f64))
+            .set("width", Json::Num(self.width as f64))
+            .set("n_train", Json::Num(self.n_train as f64))
+            .set("n_test", Json::Num(self.n_test as f64))
+            .set("pretrain_epochs", Json::Num(self.pretrain_epochs as f64))
+            .set("epochs", Json::Num(self.epochs as f64))
+            .set("batch", Json::Num(self.batch as f64))
+            .set("alpha_w", Json::Num(self.alpha_w as f64))
+            .set("alpha_c", Json::Num(self.alpha_c as f64))
+            .set("alpha_d", Json::Num(self.alpha_d as f64))
+            .set("zo_budget", Json::Num(self.zo_budget as f64))
+            .set("seed", Json::Num(self.seed as f64));
+        let mut n = Json::obj();
+        n.set(
+            "phase_bits",
+            match self.noise.phase_bits {
+                Some(b) => Json::Num(b as f64),
+                None => Json::Null,
+            },
+        )
+        .set(
+            "sigma_bits",
+            match self.noise.sigma_bits {
+                Some(b) => Json::Num(b as f64),
+                None => Json::Null,
+            },
+        )
+        .set("gamma_std", Json::Num(self.noise.gamma_std))
+        .set("crosstalk", Json::Num(self.noise.crosstalk))
+        .set("phase_bias", Json::Bool(self.noise.phase_bias));
+        o.set("noise", n);
+        o
+    }
+
+    /// Parse from JSON (inverse of `to_json`; missing keys fall back to
+    /// `Default`).
+    pub fn from_json(j: &Json) -> Result<JobConfig, String> {
+        let d = JobConfig::default();
+        let arch = match j.get("arch").and_then(|v| v.as_str()) {
+            Some(s) => ModelArch::parse(s).ok_or_else(|| format!("unknown arch {s}"))?,
+            None => d.arch,
+        };
+        let dataset = match j.get("dataset").and_then(|v| v.as_str()) {
+            Some(s) => DatasetKind::parse(s).ok_or_else(|| format!("unknown dataset {s}"))?,
+            None => d.dataset,
+        };
+        let protocol = match j.get("protocol").and_then(|v| v.as_str()) {
+            Some(s) => Protocol::parse(s).ok_or_else(|| format!("unknown protocol {s}"))?,
+            None => d.protocol,
+        };
+        let num = |key: &str, dv: f64| j.get(key).and_then(|v| v.as_f64()).unwrap_or(dv);
+        let noise = match j.get("noise") {
+            None => d.noise,
+            Some(n) => NoiseModel {
+                phase_bits: n.get("phase_bits").and_then(|v| v.as_f64()).map(|b| b as u32),
+                sigma_bits: n.get("sigma_bits").and_then(|v| v.as_f64()).map(|b| b as u32),
+                gamma_std: n.get("gamma_std").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                crosstalk: n.get("crosstalk").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                phase_bias: n.get("phase_bias").and_then(|v| v.as_bool()).unwrap_or(false),
+            },
+        };
+        Ok(JobConfig {
+            arch,
+            dataset,
+            protocol,
+            noise,
+            k: num("k", d.k as f64) as usize,
+            width: num("width", d.width as f64) as f32,
+            n_train: num("n_train", d.n_train as f64) as usize,
+            n_test: num("n_test", d.n_test as f64) as usize,
+            pretrain_epochs: num("pretrain_epochs", d.pretrain_epochs as f64) as usize,
+            epochs: num("epochs", d.epochs as f64) as usize,
+            batch: num("batch", d.batch as f64) as usize,
+            alpha_w: num("alpha_w", d.alpha_w as f64) as f32,
+            alpha_c: num("alpha_c", d.alpha_c as f64) as f32,
+            alpha_d: num("alpha_d", d.alpha_d as f64) as f32,
+            zo_budget: num("zo_budget", d.zo_budget as f64) as f32,
+            seed: num("seed", d.seed as f64) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let cfg = JobConfig {
+            arch: ModelArch::Vgg8,
+            dataset: DatasetKind::Cifar10Like,
+            protocol: Protocol::SwatU,
+            k: 8,
+            noise: NoiseModel::quant_only(6),
+            width: 0.25,
+            n_train: 100,
+            n_test: 50,
+            pretrain_epochs: 3,
+            epochs: 7,
+            batch: 16,
+            alpha_w: 0.6,
+            alpha_c: 0.5,
+            alpha_d: 0.5,
+            zo_budget: 0.2,
+            seed: 7,
+        };
+        let j = cfg.to_json();
+        let back = JobConfig::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(back.arch, cfg.arch);
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.protocol, cfg.protocol);
+        assert_eq!(back.k, cfg.k);
+        assert_eq!(back.noise, cfg.noise);
+        assert_eq!(back.width, cfg.width);
+        assert_eq!(back.alpha_d, cfg.alpha_d);
+        assert_eq!(back.seed, cfg.seed);
+    }
+
+    #[test]
+    fn missing_keys_fall_back_to_default() {
+        let cfg = JobConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        let d = JobConfig::default();
+        assert_eq!(cfg.k, d.k);
+        assert_eq!(cfg.protocol, d.protocol);
+    }
+
+    #[test]
+    fn protocol_parse_names() {
+        for p in [
+            Protocol::L2ight,
+            Protocol::L2ightSlScratch,
+            Protocol::Flops,
+            Protocol::MixedTrn,
+            Protocol::Rad,
+            Protocol::SwatU,
+        ] {
+            assert_eq!(Protocol::parse(p.name()), Some(p));
+        }
+        assert_eq!(Protocol::parse("nope"), None);
+    }
+}

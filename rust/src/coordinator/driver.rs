@@ -1,0 +1,319 @@
+//! Stage scheduler: turns a `JobConfig` into a full experiment run.
+//!
+//! For the L2ight protocol this is the paper's Figure-2 flow: digital
+//! pretraining (standing in for "an offline-trained model"), identity
+//! calibration, parallel mapping (+ aux-parameter transfer), then sparse
+//! subspace learning. Baseline protocols reuse the same substrate with
+//! their own update rules / samplers, so every row of Fig. 10/11/Table 2
+//! is produced by the same code path with one enum flipped.
+
+use crate::baselines;
+use crate::coordinator::config::{JobConfig, Protocol};
+use crate::coordinator::metrics::MetricSink;
+use crate::data::{Augment, Dataset, DatasetKind, SynthSpec};
+use crate::nn::{build_model, EngineKind};
+use crate::profiler::CostBreakdown;
+use crate::stages::ic::{calibrate_model, IcConfig};
+use crate::stages::pm::{copy_aux_params, map_model, PmConfig};
+use crate::stages::sl::{train, OptKind, SlConfig, SlReport};
+use crate::util::json::Json;
+use crate::util::Rng;
+use crate::zoo::ZoConfig;
+
+/// Outcome of one job.
+#[derive(Clone, Debug)]
+pub struct JobSummary {
+    pub protocol: Protocol,
+    /// Trainable (subspace) and total (dense-equivalent) parameter counts.
+    pub trainable_params: usize,
+    pub total_params: usize,
+    pub final_acc: f32,
+    pub best_acc: f32,
+    /// Digital pretraining accuracy (L2ight only).
+    pub pretrain_acc: Option<f32>,
+    /// Accuracy right after mapping, before any SL (L2ight only).
+    pub mapped_acc: Option<f32>,
+    /// IC quality (mean (MSEᵁ+MSEⱽ)/2) if IC ran.
+    pub ic_mse: Option<f64>,
+    /// PM normalized matrix distance after OSP if PM ran.
+    pub pm_err: Option<f64>,
+    /// SL hardware cost (PTC calls / steps).
+    pub cost: CostBreakdown,
+    /// ZO hardware queries (IC+PM, or the whole run for ZO protocols).
+    pub zo_queries: u64,
+    /// Per-epoch record of the (final) training phase.
+    pub sl: Option<SlReport>,
+}
+
+/// Build the (train, test) datasets a config asks for.
+pub fn build_datasets(cfg: &JobConfig) -> (Dataset, Dataset) {
+    let mut spec = SynthSpec::new(cfg.dataset, cfg.n_train, cfg.n_test);
+    spec.sample_seed = cfg.seed;
+    spec.generate()
+}
+
+/// Augmentation policy per dataset (paper §4.1: crop/flip/jitter on CIFAR
+/// and Tiny).
+pub fn augment_for(kind: DatasetKind) -> Augment {
+    match kind {
+        DatasetKind::Cifar10Like | DatasetKind::Cifar100Like | DatasetKind::TinyLike => {
+            Augment::CIFAR
+        }
+        _ => Augment::NONE,
+    }
+}
+
+fn classes_of(ds: &Dataset) -> usize {
+    ds.classes
+}
+
+fn scaled_zo(iters: usize, budget: f32) -> usize {
+    ((iters as f32 * budget).round() as usize).max(4)
+}
+
+fn ic_config(cfg: &JobConfig) -> IcConfig {
+    let d = IcConfig::default();
+    IcConfig {
+        zo: ZoConfig { iters: scaled_zo(d.zo.iters, cfg.zo_budget), ..d.zo },
+        seed: cfg.seed ^ 0x1c,
+        ..d
+    }
+}
+
+fn pm_config(cfg: &JobConfig) -> PmConfig {
+    let d = PmConfig::default();
+    PmConfig {
+        zo: ZoConfig { iters: scaled_zo(d.zo.iters, cfg.zo_budget), ..d.zo },
+        seed: cfg.seed ^ 0x97,
+        ..d
+    }
+}
+
+fn base_sl(cfg: &JobConfig, mapped: bool) -> SlConfig {
+    SlConfig {
+        epochs: cfg.epochs,
+        batch: cfg.batch,
+        opt: if mapped {
+            OptKind::AdamW { lr: 2e-4, weight_decay: 1e-2 }
+        } else {
+            OptKind::AdamW { lr: 2e-3, weight_decay: 1e-2 }
+        },
+        augment: augment_for(cfg.dataset),
+        seed: cfg.seed ^ 0x51,
+        eval_every: 1,
+        ..SlConfig::default()
+    }
+}
+
+/// Run one experiment end to end, emitting progress into `sink`.
+pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
+    let (train_set, test_set) = build_datasets(cfg);
+    let classes = classes_of(&train_set);
+    let mut rng = Rng::with_stream(cfg.seed, 0x10b);
+    let kind = EngineKind::Photonic { k: cfg.k, noise: cfg.noise };
+    let mut model = build_model(cfg.arch, kind, classes, cfg.width, &mut rng);
+    let (trainable, total) = model.param_counts();
+    sink.emit(
+        "job_start",
+        &[
+            ("config", cfg.to_json()),
+            ("trainable_params", Json::Num(trainable as f64)),
+            ("total_params", Json::Num(total as f64)),
+        ],
+    );
+
+    let mut summary = JobSummary {
+        protocol: cfg.protocol,
+        trainable_params: trainable,
+        total_params: total,
+        final_acc: 0.0,
+        best_acc: 0.0,
+        pretrain_acc: None,
+        mapped_acc: None,
+        ic_mse: None,
+        pm_err: None,
+        cost: CostBreakdown::default(),
+        zo_queries: 0,
+        sl: None,
+    };
+
+    match cfg.protocol {
+        Protocol::L2ight => {
+            // Stage 0: digital pretraining (the paper's offline model).
+            let mut digital = build_model(cfg.arch, EngineKind::Digital, classes, cfg.width, &mut rng);
+            if cfg.pretrain_epochs > 0 {
+                let pre_cfg = SlConfig {
+                    epochs: cfg.pretrain_epochs,
+                    opt: OptKind::Sgd { lr: 0.05, momentum: 0.9, weight_decay: 1e-4 },
+                    eval_every: 0,
+                    ..base_sl(cfg, false)
+                };
+                let pre = train(&mut digital, &train_set, &test_set, &pre_cfg);
+                summary.pretrain_acc = Some(pre.final_test_acc);
+                sink.emit_nums("pretrain_done", &[("acc", pre.final_test_acc as f64)]);
+            }
+            // Stage 1: identity calibration.
+            let ic = calibrate_model(&mut model, &ic_config(cfg));
+            summary.ic_mse = Some(ic.mean_mse());
+            summary.zo_queries += ic.queries;
+            sink.emit_nums(
+                "ic_done",
+                &[("mse", ic.mean_mse()), ("queries", ic.queries as f64)],
+            );
+            // Stage 2: parallel mapping + aux transfer.
+            let pm = map_model(&mut model, &mut digital, &pm_config(cfg));
+            copy_aux_params(&mut model, &mut digital);
+            summary.pm_err = Some(pm.err_osp);
+            summary.zo_queries += pm.queries;
+            let mapped_acc = test_set.evaluate(&mut model, cfg.batch);
+            summary.mapped_acc = Some(mapped_acc);
+            sink.emit_nums(
+                "pm_done",
+                &[
+                    ("err_init", pm.err_init),
+                    ("err_osp", pm.err_osp),
+                    ("queries", pm.queries as f64),
+                    ("mapped_acc", mapped_acc as f64),
+                ],
+            );
+            // Stage 3: sparse subspace learning (fine-tune).
+            let sl_cfg = baselines::l2ight_sl_config(
+                cfg.alpha_w,
+                cfg.alpha_c,
+                cfg.alpha_d,
+                &base_sl(cfg, true),
+            );
+            model.reset_mesh_stats();
+            let r = train(&mut model, &train_set, &test_set, &sl_cfg);
+            summary.final_acc = r.final_test_acc;
+            summary.best_acc = r.best_test_acc.max(mapped_acc);
+            summary.cost = r.cost;
+            summary.sl = Some(r);
+        }
+        Protocol::L2ightSlScratch | Protocol::Rad | Protocol::SwatU => {
+            let base = base_sl(cfg, false);
+            let sl_cfg = match cfg.protocol {
+                Protocol::L2ightSlScratch => {
+                    baselines::l2ight_sl_config(cfg.alpha_w, cfg.alpha_c, cfg.alpha_d, &base)
+                }
+                Protocol::Rad => baselines::rad_config(cfg.alpha_c, &base),
+                Protocol::SwatU => {
+                    baselines::apply_swat_forward_masks(&mut model, cfg.alpha_w);
+                    baselines::swat_config(cfg.alpha_w, cfg.alpha_c, &base)
+                }
+                _ => unreachable!(),
+            };
+            let r = train(&mut model, &train_set, &test_set, &sl_cfg);
+            if cfg.protocol == Protocol::SwatU {
+                baselines::clear_forward_masks(&mut model);
+                summary.final_acc = test_set.evaluate(&mut model, cfg.batch);
+            } else {
+                summary.final_acc = r.final_test_acc;
+            }
+            summary.best_acc = r.best_test_acc.max(summary.final_acc);
+            summary.cost = r.cost;
+            summary.sl = Some(r);
+        }
+        Protocol::Flops | Protocol::MixedTrn => {
+            let zo_cfg = baselines::ZoTrainConfig {
+                epochs: cfg.epochs,
+                batch: cfg.batch,
+                seed: cfg.seed ^ 0x20,
+                ..Default::default()
+            };
+            let r = if cfg.protocol == Protocol::Flops {
+                baselines::flops_train(&mut model, &train_set, &test_set, &zo_cfg)
+            } else {
+                baselines::mixedtrn_train(&mut model, &train_set, &test_set, &zo_cfg)
+            };
+            summary.final_acc = r.final_test_acc;
+            summary.best_acc = r.best_test_acc;
+            summary.cost = r.cost;
+            summary.zo_queries = r.queries;
+        }
+    }
+
+    sink.emit_nums(
+        "job_done",
+        &[
+            ("final_acc", summary.final_acc as f64),
+            ("best_acc", summary.best_acc as f64),
+            ("energy", summary.cost.total_energy()),
+            ("steps", summary.cost.total_steps()),
+            ("zo_queries", summary.zo_queries as f64),
+        ],
+    );
+    summary
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ModelArch;
+    use crate::photonics::NoiseModel;
+
+    fn tiny_cfg(protocol: Protocol) -> JobConfig {
+        JobConfig {
+            arch: ModelArch::MlpVowel,
+            dataset: DatasetKind::VowelLike,
+            protocol,
+            k: 4,
+            noise: NoiseModel::quant_only(8),
+            width: 0.5,
+            n_train: 96,
+            n_test: 48,
+            pretrain_epochs: 6,
+            epochs: 4,
+            batch: 16,
+            alpha_w: 0.6,
+            alpha_c: 1.0,
+            alpha_d: 0.0,
+            zo_budget: 0.15,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn full_l2ight_flow_runs_and_reports() {
+        let mut sink = MetricSink::memory();
+        let s = run_job(&tiny_cfg(Protocol::L2ight), &mut sink);
+        assert!(s.pretrain_acc.is_some());
+        assert!(s.ic_mse.is_some());
+        assert!(s.pm_err.is_some());
+        assert!(s.mapped_acc.is_some());
+        assert!(s.final_acc > 0.25, "acc {}", s.final_acc);
+        assert!(s.cost.total_energy() > 0.0);
+        assert!(s.zo_queries > 0);
+        // Mapping should land close to the pretrained model: mapped acc is
+        // within reach of pretrain acc.
+        let (pre, mapped) = (s.pretrain_acc.unwrap(), s.mapped_acc.unwrap());
+        assert!(mapped > pre - 0.25, "mapping destroyed the model: {pre} -> {mapped}");
+        assert!(sink.last("job_done").is_some());
+        assert!(sink.last("ic_done").is_some());
+    }
+
+    #[test]
+    fn scratch_and_baseline_protocols_run() {
+        for p in [Protocol::L2ightSlScratch, Protocol::Rad, Protocol::SwatU] {
+            let mut sink = MetricSink::memory();
+            let mut cfg = tiny_cfg(p);
+            cfg.epochs = 2;
+            let s = run_job(&cfg, &mut sink);
+            assert!(s.final_acc.is_finite());
+            assert!(s.cost.total_energy() > 0.0, "{p:?} measured no cost");
+            assert!(s.ic_mse.is_none());
+        }
+    }
+
+    #[test]
+    fn zo_protocols_count_queries() {
+        let mut sink = MetricSink::memory();
+        let mut cfg = tiny_cfg(Protocol::MixedTrn);
+        cfg.epochs = 1;
+        cfg.n_train = 32;
+        let s = run_job(&cfg, &mut sink);
+        assert!(s.zo_queries > 0);
+        assert!(s.cost.total_energy() > 0.0);
+        assert!(s.sl.is_none());
+    }
+}

@@ -1,0 +1,115 @@
+//! Metric sink: append-only JSONL event stream plus an in-memory tail, so
+//! long runs can be watched with `tail -f` and benches can post-process
+//! without re-parsing stdout.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// An append-only metrics writer. `None` path = in-memory only.
+pub struct MetricSink {
+    file: Option<BufWriter<File>>,
+    /// Most recent events (bounded ring, newest last).
+    tail: Vec<Json>,
+    cap: usize,
+}
+
+impl MetricSink {
+    /// Sink writing to `path` (appends if it exists).
+    pub fn to_file(path: &Path) -> std::io::Result<MetricSink> {
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(MetricSink { file: Some(BufWriter::new(f)), tail: Vec::new(), cap: 1024 })
+    }
+
+    /// In-memory sink (tests, benches).
+    pub fn memory() -> MetricSink {
+        MetricSink { file: None, tail: Vec::new(), cap: 4096 }
+    }
+
+    /// Emit one event. `fields` are (key, value) pairs; an `event` tag and
+    /// a monotonic sequence number are added automatically.
+    pub fn emit(&mut self, event: &str, fields: &[(&str, Json)]) {
+        let mut o = Json::obj();
+        o.set("event", Json::Str(event.into()));
+        o.set("seq", Json::Num(self.tail.len() as f64));
+        for (k, v) in fields {
+            o.set(k, v.clone());
+        }
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{}", o.dump());
+            let _ = f.flush();
+        }
+        if self.tail.len() == self.cap {
+            self.tail.remove(0);
+        }
+        self.tail.push(o);
+    }
+
+    /// Shorthand for numeric fields.
+    pub fn emit_nums(&mut self, event: &str, fields: &[(&str, f64)]) {
+        let owned: Vec<(&str, Json)> =
+            fields.iter().map(|(k, v)| (*k, Json::Num(*v))).collect();
+        self.emit(event, &owned);
+    }
+
+    /// In-memory tail of events (newest last).
+    pub fn tail(&self) -> &[Json] {
+        &self.tail
+    }
+
+    /// Last event with the given tag.
+    pub fn last(&self, event: &str) -> Option<&Json> {
+        self.tail
+            .iter()
+            .rev()
+            .find(|e| e.get("event").and_then(|v| v.as_str()) == Some(event))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_sink_records_events() {
+        let mut s = MetricSink::memory();
+        s.emit_nums("epoch", &[("loss", 1.5), ("acc", 0.5)]);
+        s.emit_nums("epoch", &[("loss", 1.0), ("acc", 0.7)]);
+        s.emit("done", &[("ok", Json::Bool(true))]);
+        assert_eq!(s.tail().len(), 3);
+        let last_epoch = s.last("epoch").unwrap();
+        assert_eq!(last_epoch.get("acc").unwrap().as_f64(), Some(0.7));
+        assert!(s.last("nope").is_none());
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl() {
+        let path = std::env::temp_dir()
+            .join(format!("l2ight_metrics_{}.jsonl", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        {
+            let mut s = MetricSink::to_file(&path).unwrap();
+            s.emit_nums("a", &[("x", 1.0)]);
+            s.emit_nums("b", &[("y", 2.0)]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let parsed = Json::parse(lines[1]).unwrap();
+        assert_eq!(parsed.get("event").unwrap().as_str(), Some("b"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn tail_is_bounded() {
+        let mut s = MetricSink::memory();
+        s.cap = 4;
+        for i in 0..10 {
+            s.emit_nums("e", &[("i", i as f64)]);
+        }
+        assert_eq!(s.tail().len(), 4);
+        assert_eq!(s.tail()[3].get("i").unwrap().as_f64(), Some(9.0));
+    }
+}

@@ -1,0 +1,31 @@
+//! Layer-3 coordinator: the chip controller + training orchestrator.
+//!
+//! The paper's contribution is a *training protocol for an accelerator*, so
+//! L3 owns everything around the photonic substrate:
+//!
+//! * [`config`]  — declarative job configs (JSON round-trip) naming the
+//!   model, dataset, noise, stage schedules, and sampling sparsities;
+//! * [`checkpoint`] — chip-state store: every programmed phase, Σ, and
+//!   electronic parameter, serialized and restored bit-exactly;
+//! * [`metrics`] — JSONL metric sink + run summaries;
+//! * [`batcher`] — the inference dispatch batcher (request queue → batched
+//!   PTC execution) used by the serving example;
+//! * [`driver`] — the stage scheduler: pretrain → IC → PM → SL (or the
+//!   requested baseline protocol), producing a `JobSummary`;
+//! * [`pjrt_trainer`] — subspace training of the exported MLP entirely
+//!   through the PJRT artifacts: the SL hot path with python nowhere in
+//!   sight (build-time only), per the three-layer architecture.
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod config;
+pub mod driver;
+pub mod metrics;
+pub mod pjrt_trainer;
+
+pub use batcher::{Batcher, BatcherConfig, BatcherStats};
+pub use checkpoint::{load_model_state, save_model_state};
+pub use config::{JobConfig, Protocol};
+pub use driver::{run_job, JobSummary};
+pub use metrics::MetricSink;
+pub use pjrt_trainer::PjrtMlpTrainer;

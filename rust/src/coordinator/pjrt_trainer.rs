@@ -1,0 +1,187 @@
+//! Subspace training driven entirely through the PJRT artifacts — the
+//! demonstration that the SL hot path needs no python at runtime.
+//!
+//! The `vowel_mlp_step_b16` artifact (lowered once by `make artifacts` from
+//! the L2 jax graph, which itself calls the L1 Pallas kernels) computes one
+//! full training step: forward, loss, and the Eq. 5 reciprocity gradients
+//! for Σ and biases. This trainer owns the parameter buffers, streams
+//! batches through the compiled executable, and applies AdamW in rust —
+//! exactly the division of labor of the paper's chip (PTC array computes,
+//! electronic control updates).
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{Dataset, Loader};
+use crate::optim::{AdamW, Optimizer};
+use crate::photonics::unitary::ReckMesh;
+use crate::runtime::{ArgValue, Runtime};
+use crate::util::Rng;
+
+/// MLP topology baked into the artifacts (see python/compile/aot.py).
+pub const DIMS: [usize; 4] = [8, 16, 16, 4];
+pub const K: usize = 4;
+pub const BATCH: usize = 16;
+
+/// One layer's parameter buffers in artifact layout.
+#[derive(Clone, Debug)]
+struct LayerBuf {
+    u: Vec<f32>,    // [p,q,k,k]
+    s: Vec<f32>,    // [p,q,k]
+    v: Vec<f32>,    // [p,q,k,k]
+    bias: Vec<f32>, // [p·k]
+}
+
+/// Trainer state.
+pub struct PjrtMlpTrainer {
+    rt: Runtime,
+    layers: Vec<LayerBuf>,
+    opt: AdamW,
+    step_name: String,
+    fwd_name: String,
+}
+
+impl PjrtMlpTrainer {
+    /// Random-unitary initialization (fab + IC state) with Kaiming-scaled Σ.
+    pub fn new(rt: Runtime, seed: u64) -> Result<PjrtMlpTrainer> {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for li in 0..DIMS.len() - 1 {
+            let p = DIMS[li + 1].div_ceil(K);
+            let q = DIMS[li].div_ceil(K);
+            let mut u = Vec::with_capacity(p * q * K * K);
+            let mut v = Vec::with_capacity(p * q * K * K);
+            let mut s = Vec::with_capacity(p * q * K);
+            let bound = (6.0 / DIMS[li] as f32).sqrt();
+            for _ in 0..p * q {
+                u.extend_from_slice(&ReckMesh::random(K, &mut rng).synthesize().data);
+                v.extend_from_slice(&ReckMesh::random(K, &mut rng).synthesize().data);
+                for _ in 0..K {
+                    s.push(rng.uniform_range(-bound as f64, bound as f64) as f32);
+                }
+            }
+            let _ = q;
+            layers.push(LayerBuf { u, s, v, bias: vec![0.0; p * K] });
+        }
+        let step_name = format!("vowel_mlp_step_b{BATCH}");
+        let fwd_name = format!("vowel_mlp_fwd_b{BATCH}");
+        for name in [&step_name, &fwd_name] {
+            if rt.manifest().find(name).is_none() {
+                return Err(anyhow!("artifact {name} missing — run `make artifacts`"));
+            }
+        }
+        Ok(PjrtMlpTrainer { rt, layers, opt: AdamW::paper_scratch(), step_name, fwd_name })
+    }
+
+    pub fn set_lr(&mut self, lr: f32) {
+        self.opt.set_lr(lr);
+    }
+
+    /// Number of trainable subspace parameters (Σ + biases).
+    pub fn trainable_params(&self) -> usize {
+        self.layers.iter().map(|l| l.s.len() + l.bias.len()).sum()
+    }
+
+    /// Assemble one fixed-size batch in [features, BATCH] layout.
+    fn batch_input(ds: &Dataset, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        assert!(idx.len() <= BATCH);
+        let f = ds.sample_len();
+        assert_eq!(f, DIMS[0], "dataset feature count must match artifact");
+        let mut x = vec![0.0f32; f * BATCH];
+        let mut labels = vec![0i32; BATCH];
+        for (col, &i) in idx.iter().enumerate() {
+            for (r, &v) in ds.sample(i).iter().enumerate() {
+                x[r * BATCH + col] = v;
+            }
+            labels[col] = ds.labels[i] as i32;
+        }
+        // Pad by repeating the first sample (its gradient contribution is a
+        // small bias for the final ragged batch only).
+        for col in idx.len()..BATCH {
+            for r in 0..f {
+                x[r * BATCH + col] = x[r * BATCH];
+            }
+            labels[col] = labels[0];
+        }
+        (x, labels)
+    }
+
+    /// One training step on a full batch; returns the loss.
+    pub fn step(&mut self, ds: &Dataset, idx: &[usize]) -> Result<f32> {
+        let (x, labels) = Self::batch_input(ds, idx);
+        let mut args = flat_args(&self.layers, &x);
+        args.push(ArgValue::I32(&labels));
+        let out = self.rt.call(&self.step_name, &args)?;
+        let n = self.layers.len();
+        // Outputs: loss, logits, σ-grads ×n, bias-grads ×n.
+        let loss = out[0].as_f32()?[0];
+        let mut key = 0usize;
+        for (li, l) in self.layers.iter_mut().enumerate() {
+            let sg = out[2 + li].as_f32()?;
+            self.opt.step(key, &mut l.s, sg, true);
+            key += 1;
+            let bg = out[2 + n + li].as_f32()?;
+            // Bias grads come back over the un-padded features; pad zeros.
+            let mut full = vec![0.0f32; l.bias.len()];
+            full[..bg.len()].copy_from_slice(bg);
+            self.opt.step(key, &mut l.bias, &full, false);
+            key += 1;
+        }
+        Ok(loss)
+    }
+
+    /// One epoch over the dataset; returns the mean loss.
+    pub fn train_epoch(&mut self, ds: &Dataset, rng: &mut Rng) -> Result<f32> {
+        let loader = Loader::new(ds.n, BATCH, rng);
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for idx in loader {
+            total += self.step(ds, &idx)? as f64;
+            n += 1;
+        }
+        Ok((total / n.max(1) as f64) as f32)
+    }
+
+    /// Classification accuracy through the forward artifact.
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<f32> {
+        let classes = DIMS[DIMS.len() - 1];
+        let mut correct = 0usize;
+        let mut i = 0usize;
+        while i < ds.n {
+            let hi = (i + BATCH).min(ds.n);
+            let idx: Vec<usize> = (i..hi).collect();
+            let (x, _) = Self::batch_input(ds, &idx);
+            let args = flat_args(&self.layers, &x);
+            let logits = self.rt.call1_f32(&self.fwd_name, &args)?;
+            // logits layout [classes, BATCH].
+            for (col, &gi) in idx.iter().enumerate() {
+                let mut best = 0usize;
+                let mut bv = f32::NEG_INFINITY;
+                for c in 0..classes {
+                    let v = logits[c * BATCH + col];
+                    if v > bv {
+                        bv = v;
+                        best = c;
+                    }
+                }
+                if best == ds.labels[gi] {
+                    correct += 1;
+                }
+            }
+            i = hi;
+        }
+        Ok(correct as f32 / ds.n.max(1) as f32)
+    }
+}
+
+/// Artifact argument list: (u, s, v, bias) per layer then the input panel.
+fn flat_args<'a>(layers: &'a [LayerBuf], x: &'a [f32]) -> Vec<ArgValue<'a>> {
+    let mut args: Vec<ArgValue> = Vec::with_capacity(4 * layers.len() + 2);
+    for l in layers {
+        args.push(ArgValue::F32(&l.u));
+        args.push(ArgValue::F32(&l.s));
+        args.push(ArgValue::F32(&l.v));
+        args.push(ArgValue::F32(&l.bias));
+    }
+    args.push(ArgValue::F32(x));
+    args
+}

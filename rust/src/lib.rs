@@ -1,0 +1,29 @@
+//! # L2ight — on-chip learning for optical neural networks
+//!
+//! Rust reproduction of *"L2ight: Enabling On-Chip Learning for Optical Neural
+//! Networks via Efficient in-situ Subspace Optimization"* (NeurIPS 2021).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas photonic-tensor-core kernels (`python/compile/kernels/`),
+//! * **L2** — JAX compute graphs AOT-lowered to HLO text (`python/compile/`),
+//! * **L3** — this crate: the photonic-chip simulator substrate, the three-stage
+//!   L2ight training protocol (identity calibration → parallel mapping →
+//!   multi-level sparse subspace learning), the baselines, the Appendix-G cost
+//!   profiler, and a PJRT runtime that executes the AOT artifacts.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod util;
+pub mod linalg;
+pub mod photonics;
+pub mod nn;
+pub mod optim;
+pub mod zoo;
+pub mod sampling;
+pub mod stages;
+pub mod baselines;
+pub mod profiler;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;

@@ -1,0 +1,234 @@
+//! im2col / col2im lowering for the convolution layers. The ONN executes
+//! convolutions as blocked matrix multiplications over flattened patches
+//! (paper §3.4.2 Figure 9), so the sampling machinery (column sampling CS vs
+//! spatial sampling SS) operates directly on the im2col layout produced here.
+
+use super::mat::Mat;
+
+/// Static shape of a conv2d: NCHW input, OIHW kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dShape {
+    pub batch: usize,
+    pub in_ch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_ch: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Conv2dShape {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+    /// Rows of the im2col patch matrix: Cin·K².
+    pub fn patch_rows(&self) -> usize {
+        self.in_ch * self.kernel * self.kernel
+    }
+    /// Columns of the im2col patch matrix: B·H'·W'.
+    pub fn patch_cols(&self) -> usize {
+        self.batch * self.out_h() * self.out_w()
+    }
+}
+
+/// Unfold an NCHW input (flattened) into the patch matrix X of shape
+/// [Cin·K², B·H'·W']; column index is b·(H'·W') + oh·W' + ow.
+pub fn im2col(input: &[f32], sh: &Conv2dShape) -> Mat {
+    assert_eq!(input.len(), sh.batch * sh.in_ch * sh.in_h * sh.in_w, "im2col input size");
+    let (oh, ow) = (sh.out_h(), sh.out_w());
+    let mut x = Mat::zeros(sh.patch_rows(), sh.patch_cols());
+    let hw = sh.in_h * sh.in_w;
+    for b in 0..sh.batch {
+        for c in 0..sh.in_ch {
+            let plane = &input[(b * sh.in_ch + c) * hw..(b * sh.in_ch + c + 1) * hw];
+            for kr in 0..sh.kernel {
+                for kc in 0..sh.kernel {
+                    let row = (c * sh.kernel + kr) * sh.kernel + kc;
+                    for o_r in 0..oh {
+                        let ir = (o_r * sh.stride + kr) as isize - sh.padding as isize;
+                        for o_c in 0..ow {
+                            let ic = (o_c * sh.stride + kc) as isize - sh.padding as isize;
+                            let col = b * (oh * ow) + o_r * ow + o_c;
+                            let v = if ir >= 0
+                                && (ir as usize) < sh.in_h
+                                && ic >= 0
+                                && (ic as usize) < sh.in_w
+                            {
+                                plane[ir as usize * sh.in_w + ic as usize]
+                            } else {
+                                0.0
+                            };
+                            x[(row, col)] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    x
+}
+
+/// Fold the patch-matrix gradient back to the NCHW input gradient
+/// (adjoint of `im2col`: overlapping patches accumulate).
+pub fn col2im(cols: &Mat, sh: &Conv2dShape) -> Vec<f32> {
+    assert_eq!(cols.rows, sh.patch_rows(), "col2im rows");
+    assert_eq!(cols.cols, sh.patch_cols(), "col2im cols");
+    let (oh, ow) = (sh.out_h(), sh.out_w());
+    let hw = sh.in_h * sh.in_w;
+    let mut out = vec![0.0f32; sh.batch * sh.in_ch * hw];
+    for b in 0..sh.batch {
+        for c in 0..sh.in_ch {
+            let base = (b * sh.in_ch + c) * hw;
+            for kr in 0..sh.kernel {
+                for kc in 0..sh.kernel {
+                    let row = (c * sh.kernel + kr) * sh.kernel + kc;
+                    for o_r in 0..oh {
+                        let ir = (o_r * sh.stride + kr) as isize - sh.padding as isize;
+                        if ir < 0 || ir as usize >= sh.in_h {
+                            continue;
+                        }
+                        for o_c in 0..ow {
+                            let ic = (o_c * sh.stride + kc) as isize - sh.padding as isize;
+                            if ic < 0 || ic as usize >= sh.in_w {
+                                continue;
+                            }
+                            let col = b * (oh * ow) + o_r * ow + o_c;
+                            out[base + ir as usize * sh.in_w + ic as usize] += cols[(row, col)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quickcheck;
+    use crate::util::Rng;
+
+    fn shape(b: usize, c: usize, h: usize, k: usize, s: usize, p: usize) -> Conv2dShape {
+        Conv2dShape { batch: b, in_ch: c, in_h: h, in_w: h, out_ch: 1, kernel: k, stride: s, padding: p }
+    }
+
+    #[test]
+    fn identity_1x1() {
+        // 1x1 kernel stride 1: im2col is a reshape.
+        let sh = shape(1, 2, 3, 1, 1, 0);
+        let input: Vec<f32> = (0..18).map(|i| i as f32).collect();
+        let x = im2col(&input, &sh);
+        assert_eq!(x.rows, 2);
+        assert_eq!(x.cols, 9);
+        assert_eq!(x.row(0), &input[0..9]);
+        assert_eq!(x.row(1), &input[9..18]);
+    }
+
+    #[test]
+    fn known_3x3() {
+        // Single 3x3 plane, 2x2 kernel, stride 1, no padding -> 4 patches.
+        let sh = shape(1, 1, 3, 2, 1, 0);
+        let input: Vec<f32> = (1..=9).map(|i| i as f32).collect();
+        let x = im2col(&input, &sh);
+        assert_eq!((x.rows, x.cols), (4, 4));
+        // Patch at (0,0) is [1,2,4,5] read down the column.
+        let col0: Vec<f32> = (0..4).map(|r| x[(r, 0)]).collect();
+        assert_eq!(col0, vec![1.0, 2.0, 4.0, 5.0]);
+        let col3: Vec<f32> = (0..4).map(|r| x[(r, 3)]).collect();
+        assert_eq!(col3, vec![5.0, 6.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn padding_zeroes_border() {
+        let sh = shape(1, 1, 2, 3, 1, 1);
+        let input = vec![1.0, 2.0, 3.0, 4.0];
+        let x = im2col(&input, &sh);
+        assert_eq!((x.rows, x.cols), (9, 4));
+        // Top-left patch centered at (0,0): first row/col of the 3x3 window
+        // falls outside -> zeros.
+        assert_eq!(x[(0, 0)], 0.0);
+        assert_eq!(x[(4, 0)], 1.0); // center
+    }
+
+    #[test]
+    fn conv_as_gemm_matches_direct() {
+        // conv(input, kern) via im2col+GEMM == direct nested-loop conv.
+        let mut rng = Rng::new(7);
+        let sh = Conv2dShape {
+            batch: 2, in_ch: 3, in_h: 5, in_w: 5, out_ch: 4, kernel: 3, stride: 2, padding: 1,
+        };
+        let input: Vec<f32> = (0..sh.batch * sh.in_ch * 25).map(|_| rng.normal() as f32).collect();
+        let kern: Vec<f32> =
+            (0..sh.out_ch * sh.in_ch * 9).map(|_| rng.normal() as f32).collect();
+        let x = im2col(&input, &sh);
+        let w = Mat::from_slice(sh.out_ch, sh.patch_rows(), &kern);
+        let y = crate::linalg::matmul(&w, &x);
+        // Direct conv.
+        let (oh, ow) = (sh.out_h(), sh.out_w());
+        for b in 0..sh.batch {
+            for oc in 0..sh.out_ch {
+                for o_r in 0..oh {
+                    for o_c in 0..ow {
+                        let mut s = 0.0f32;
+                        for ic in 0..sh.in_ch {
+                            for kr in 0..3 {
+                                for kc in 0..3 {
+                                    let ir = (o_r * 2 + kr) as isize - 1;
+                                    let icol = (o_c * 2 + kc) as isize - 1;
+                                    if ir >= 0 && ir < 5 && icol >= 0 && icol < 5 {
+                                        s += input[((b * sh.in_ch + ic) * 5 + ir as usize) * 5
+                                            + icol as usize]
+                                            * kern[((oc * sh.in_ch + ic) * 3 + kr) * 3 + kc];
+                                    }
+                                }
+                            }
+                        }
+                        let col = b * (oh * ow) + o_r * ow + o_c;
+                        assert!((y[(oc, col)] - s).abs() < 1e-4, "mismatch at {b},{oc},{o_r},{o_c}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_col2im_is_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> — the defining adjoint property.
+        quickcheck(
+            "col2im adjoint of im2col",
+            |rng, size| {
+                let h = 3 + size % 5;
+                let k = 1 + size % 3;
+                let sh = Conv2dShape {
+                    batch: 1 + size % 2,
+                    in_ch: 1 + size % 3,
+                    in_h: h,
+                    in_w: h,
+                    out_ch: 1,
+                    kernel: k.min(h),
+                    stride: 1 + size % 2,
+                    padding: size % 2,
+                };
+                let n_in = sh.batch * sh.in_ch * h * h;
+                let x: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32).collect();
+                let y = Mat::randn(sh.patch_rows(), sh.patch_cols(), 1.0, rng);
+                (sh, x, y)
+            },
+            |(sh, x, y)| {
+                let xi = im2col(x, sh);
+                let lhs: f32 = xi.data.iter().zip(&y.data).map(|(a, b)| a * b).sum();
+                let back = col2im(y, sh);
+                let rhs: f32 = x.iter().zip(&back).map(|(a, b)| a * b).sum();
+                if (lhs - rhs).abs() > 1e-3 * (1.0 + lhs.abs()) {
+                    return Err(format!("adjoint mismatch {lhs} vs {rhs}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

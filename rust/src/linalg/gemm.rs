@@ -1,0 +1,256 @@
+//! GEMM micro-kernels. `matmul` is the native simulator's hot path: it uses a
+//! cache-blocked loop order (i-k-j) with the inner j-loop auto-vectorizable,
+//! which is the standard roofline-friendly layout for row-major operands.
+//! Variants for Aᵀ·B and A·Bᵀ avoid materializing transposes on the
+//! backward pass.
+
+use super::mat::Mat;
+
+/// C = A · B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner dim: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C += A · B into preallocated storage (C must be zeroed by the caller if a
+/// fresh product is wanted).
+pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "matmul_acc inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_acc out shape");
+    let n = b.cols;
+    for i in 0..a.rows {
+        let a_row = a.row(i);
+        let c_row = c.row_mut(i);
+        for (kk, &aik) in a_row.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // structured sparsity fast path (masked feedback)
+            }
+            let b_row = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                c_row[j] += aik * b_row[j];
+            }
+        }
+    }
+}
+
+/// C = A · B into preallocated storage.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    c.data.fill(0.0);
+    matmul_acc(a, b, c);
+}
+
+/// C = Aᵀ · B without forming Aᵀ.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.cols, b.cols);
+    matmul_at_b_into(a, b, &mut c);
+    c
+}
+
+/// C = Aᵀ · B into preallocated storage (hot path of Eq. 5 — avoids one
+/// allocation per PTC block per iteration).
+pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.rows, b.rows, "matmul_at_b inner dim");
+    assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_at_b out shape");
+    c.data.fill(0.0);
+    let n = b.cols;
+    for kk in 0..a.rows {
+        let a_row = a.row(kk);
+        let b_row = b.row(kk);
+        for (i, &aki) in a_row.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let c_row = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                c_row[j] += aki * b_row[j];
+            }
+        }
+    }
+}
+
+/// C = A · Bᵀ without forming Bᵀ.
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt inner dim");
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let a_row = a.row(i);
+        for j in 0..b.rows {
+            let b_row = b.row(j);
+            let mut s = 0.0f32;
+            for (x, y) in a_row.iter().zip(b_row) {
+                s += x * y;
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+/// Hot-path helper for Eq. 5: acc[i] += scale · Σ_b (Aᵀ·Y)[i,b] ⊙ (V·X)[i,b]
+/// computed with preallocated scratch (`ut_y`, `vx`).
+pub fn sigma_grad_block(
+    u: &Mat,
+    v: &Mat,
+    y: &Mat,
+    x: &Mat,
+    scale: f32,
+    ut_y: &mut Mat,
+    vx: &mut Mat,
+    acc: &mut [f32],
+) {
+    matmul_at_b_into(u, y, ut_y);
+    matmul_into(v, x, vx);
+    let b = y.cols;
+    for (i, g) in acc.iter_mut().enumerate() {
+        let ar = &ut_y.data[i * b..(i + 1) * b];
+        let cr = &vx.data[i * b..(i + 1) * b];
+        let mut s = 0.0f32;
+        for (p, q) in ar.iter().zip(cr) {
+            s += p * q;
+        }
+        *g += s * scale;
+    }
+}
+
+/// y = A · x for a dense vector.
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len(), "matvec dim");
+    let mut y = vec![0.0f32; a.rows];
+    for i in 0..a.rows {
+        let row = a.row(i);
+        let mut s = 0.0f32;
+        for (r, v) in row.iter().zip(x) {
+            s += r * v;
+        }
+        y[i] = s;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, quickcheck};
+    use crate::util::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn small_exact() {
+        let a = Mat::from_slice(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_slice(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(6, 6, 1.0, &mut rng);
+        let c = matmul(&a, &Mat::eye(6));
+        assert_close(&c.data, &a.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn prop_matches_naive() {
+        quickcheck(
+            "matmul == naive",
+            |rng, size| {
+                let m = 1 + size % 12;
+                let k = 1 + (size / 2) % 9;
+                let n = 1 + (size / 3) % 14;
+                (Mat::randn(m, k, 1.0, rng), Mat::randn(k, n, 1.0, rng))
+            },
+            |(a, b)| {
+                assert_close(&matmul(a, b).data, &naive(a, b).data, 1e-4, 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_transposed_variants() {
+        quickcheck(
+            "at_b and a_bt match explicit transpose",
+            |rng, size| {
+                let m = 1 + size % 10;
+                let k = 1 + (size / 2) % 10;
+                let n = 1 + (size / 3) % 10;
+                (Mat::randn(k, m, 1.0, rng), Mat::randn(k, n, 1.0, rng), Mat::randn(m, n, 1.0, rng))
+            },
+            |(a, b, d)| {
+                assert_close(&matmul_at_b(a, b).data, &matmul(&a.t(), b).data, 1e-4, 1e-4)?;
+                assert_close(&matmul_a_bt(d, b).data, &matmul(d, &b.t()).data, 1e-4, 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(7, 5, 1.0, &mut rng);
+        let x: Vec<f32> = (0..5).map(|i| i as f32 - 2.0).collect();
+        let xm = Mat::from_slice(5, 1, &x);
+        let y = matvec(&a, &x);
+        assert_close(&y, &matmul(&a, &xm).data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn acc_accumulates() {
+        let a = Mat::eye(3);
+        let b = Mat::eye(3);
+        let mut c = Mat::eye(3);
+        matmul_acc(&a, &b, &mut c);
+        assert_eq!(c.diagonal(), vec![2.0; 3]);
+    }
+
+    #[test]
+    fn at_b_into_matches_fresh() {
+        let mut rng = Rng::new(31);
+        let a = Mat::randn(5, 4, 1.0, &mut rng);
+        let b = Mat::randn(5, 3, 1.0, &mut rng);
+        let fresh = matmul_at_b(&a, &b);
+        let mut c = Mat::zeros(4, 3);
+        c.data.fill(7.0);
+        matmul_at_b_into(&a, &b, &mut c);
+        assert_close(&fresh.data, &c.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn sigma_grad_block_matches_naive() {
+        let mut rng = Rng::new(32);
+        let (k, b) = (4, 6);
+        let u = Mat::randn(k, k, 1.0, &mut rng);
+        let v = Mat::randn(k, k, 1.0, &mut rng);
+        let y = Mat::randn(k, b, 1.0, &mut rng);
+        let x = Mat::randn(k, b, 1.0, &mut rng);
+        let ut_y_ref = matmul_at_b(&u, &y);
+        let vx_ref = matmul(&v, &x);
+        let mut want = vec![0.5f32; k];
+        for i in 0..k {
+            let mut s = 0.0;
+            for bb in 0..b {
+                s += ut_y_ref[(i, bb)] * vx_ref[(i, bb)];
+            }
+            want[i] += 2.0 * s;
+        }
+        let mut got = vec![0.5f32; k];
+        let mut s1 = Mat::zeros(k, b);
+        let mut s2 = Mat::zeros(k, b);
+        sigma_grad_block(&u, &v, &y, &x, 2.0, &mut s1, &mut s2, &mut got);
+        assert_close(&want, &got, 1e-5, 1e-5).unwrap();
+    }
+}

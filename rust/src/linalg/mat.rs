@@ -1,0 +1,261 @@
+//! Row-major f32 matrix. Deliberately minimal: the simulator needs exactly
+//! owned storage, views by row, transpose, Frobenius norms, and elementwise
+//! combinators. Shapes are checked with assertions (debug + release) because
+//! a silent shape slip invalidates an entire experiment.
+
+use crate::util::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_slice size");
+        Mat { rows, cols, data: data.to_vec() }
+    }
+
+    /// From an owned row-major vec.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_vec size");
+        Mat { rows, cols, data }
+    }
+
+    /// Matrix with i.i.d. N(0, std²) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.0, std);
+        m
+    }
+
+    /// Matrix with i.i.d. U[lo, hi) entries.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f32]) -> Mat {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    /// The diagonal as a vector (min(rows, cols) long).
+    pub fn diagonal(&self) -> Vec<f32> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>()
+    }
+
+    /// Elementwise a - b.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "sub shape");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Elementwise a + b.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "add shape");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Elementwise Hadamard product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "hadamard shape");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Copy a k×k block out of a larger matrix, zero-padded at the edges.
+    pub fn block(&self, r0: usize, c0: usize, k: usize) -> Mat {
+        let mut b = Mat::zeros(k, k);
+        for r in 0..k.min(self.rows.saturating_sub(r0)) {
+            for c in 0..k.min(self.cols.saturating_sub(c0)) {
+                b[(r, c)] = self[(r0 + r, c0 + c)];
+            }
+        }
+        b
+    }
+
+    /// Write a k×k block into a larger matrix (clipped at the edges).
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat) {
+        for r in 0..b.rows.min(self.rows.saturating_sub(r0)) {
+            for c in 0..b.cols.min(self.cols.saturating_sub(c0)) {
+                self[(r0 + r, c0 + c)] = b[(r, c)];
+            }
+        }
+    }
+
+    /// Relative squared distance ‖A−B‖²/‖B‖² — the paper's "normalized matrix
+    /// distance" fidelity metric (Fig. 5, Fig. 8).
+    pub fn rel_dist_sq(&self, target: &Mat) -> f32 {
+        let denom = target.fro_norm_sq().max(1e-20);
+        self.sub(target).fro_norm_sq() / denom
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Cosine (angular) similarity between two flattened tensors — the paper's
+/// gradient-fidelity metric (Fig. 8, "average gradient angular similarity").
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if na < 1e-20 || nb < 1e-20 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Mat::zeros(3, 4);
+        m[(2, 3)] = 5.0;
+        assert_eq!(m[(2, 3)], 5.0);
+        assert_eq!(m.row(2)[3], 5.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.t().t(), m);
+        assert_eq!(m.t()[(3, 2)], m[(2, 3)]);
+    }
+
+    #[test]
+    fn eye_diag() {
+        let i = Mat::eye(4);
+        assert_eq!(i.diagonal(), vec![1.0; 4]);
+        assert_eq!(i.fro_norm_sq(), 4.0);
+    }
+
+    #[test]
+    fn block_get_set_roundtrip() {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn(9, 9, 1.0, &mut rng);
+        let b = m.block(3, 3, 4);
+        let mut m2 = Mat::zeros(9, 9);
+        m2.set_block(3, 3, &b);
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(m2[(3 + r, 3 + c)], m[(3 + r, 3 + c)]);
+            }
+        }
+    }
+
+    #[test]
+    fn block_zero_pads() {
+        let m = Mat::eye(3);
+        let b = m.block(2, 2, 4);
+        assert_eq!(b[(0, 0)], 1.0);
+        assert_eq!(b[(1, 1)], 0.0);
+        assert_eq!(b[(3, 3)], 0.0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::from_slice(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_slice(2, 2, &[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(a.add(&b).data, vec![5.0; 4]);
+        assert_eq!(a.sub(&b).data, vec![-3.0, -1.0, 1.0, 3.0]);
+        assert_eq!(a.hadamard(&b).data, vec![4.0, 6.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn cosine_extremes() {
+        assert!((cosine_similarity(&[1.0, 0.0], &[2.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!((cosine_similarity(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-6);
+        assert!((cosine_similarity(&[1.0, 0.0], &[-3.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine_similarity(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn rel_dist_zero_for_equal() {
+        let mut rng = Rng::new(3);
+        let m = Mat::randn(4, 4, 1.0, &mut rng);
+        assert!(m.rel_dist_sq(&m) < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense linear algebra substrate: a row-major f32 matrix type, a blocked
+//! GEMM micro-kernel (the native-simulator hot path — see DESIGN.md §8),
+//! one-sided Jacobi SVD for the k×k photonic blocks, and im2col/col2im for
+//! the convolution layers.
+
+pub mod mat;
+pub mod gemm;
+pub mod svd;
+pub mod conv;
+
+pub use conv::{col2im, im2col, Conv2dShape};
+pub use gemm::{matmul, matmul_a_bt, matmul_acc, matmul_at_b, matmul_at_b_into, matmul_into, matvec, sigma_grad_block};
+pub use mat::Mat;
+pub use svd::{svd_kxk, Svd};

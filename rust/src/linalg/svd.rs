@@ -1,0 +1,255 @@
+//! One-sided Jacobi SVD for the small k×k photonic blocks (k ≤ 32 in all
+//! experiments — Appendix F block-size study). One-sided Jacobi is the right
+//! tool here: simple, branch-light, and accurate to ~1e-6 for tiny
+//! well-scaled matrices, with no external LAPACK available offline.
+//!
+//! Returns W = U · diag(s) · Vᵀ with U, V orthogonal (real unitary) and
+//! s ≥ 0 sorted descending — the convention the PTC parametrization expects.
+
+use super::gemm::matmul;
+use super::mat::Mat;
+
+/// SVD factors.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub vt: Mat,
+}
+
+impl Svd {
+    /// Reconstruct U · diag(s) · Vᵀ.
+    pub fn reconstruct(&self) -> Mat {
+        let mut us = self.u.clone();
+        for r in 0..us.rows {
+            for c in 0..us.cols {
+                us[(r, c)] *= self.s[c];
+            }
+        }
+        matmul(&us, &self.vt)
+    }
+}
+
+/// One-sided Jacobi SVD of a square matrix.
+///
+/// Works on A's columns: rotates column pairs until all pairs are orthogonal;
+/// then column norms are the singular values, normalized columns are U, and
+/// the accumulated rotations are V.
+pub fn svd_kxk(a: &Mat) -> Svd {
+    assert_eq!(a.rows, a.cols, "svd_kxk expects square blocks");
+    let n = a.rows;
+    // Work in f64 for the rotations: the k×k blocks can be ill-conditioned
+    // after noise injection and f32 Jacobi stalls near convergence.
+    let mut w: Vec<f64> = a.data.iter().map(|&x| x as f64).collect(); // row-major
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram entries for columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for r in 0..n {
+                    let wp = w[r * n + p];
+                    let wq = w[r * n + q];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation that annihilates the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for r in 0..n {
+                    let wp = w[r * n + p];
+                    let wq = w[r * n + q];
+                    w[r * n + p] = c * wp - s * wq;
+                    w[r * n + q] = s * wp + c * wq;
+                    let vp = v[r * n + p];
+                    let vq = v[r * n + q];
+                    v[r * n + p] = c * vp - s * vq;
+                    v[r * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-13 {
+            break;
+        }
+    }
+
+    // Column norms -> singular values; normalize columns -> U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigma = vec![0.0f64; n];
+    for (j, sj) in sigma.iter_mut().enumerate() {
+        *sj = (0..n).map(|r| w[r * n + j] * w[r * n + j]).sum::<f64>().sqrt();
+    }
+    order.sort_by(|&i, &j| sigma[j].partial_cmp(&sigma[i]).unwrap());
+
+    let mut u = Mat::zeros(n, n);
+    let mut vt = Mat::zeros(n, n);
+    let mut s = vec![0.0f32; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sj = sigma[old_j];
+        s[new_j] = sj as f32;
+        if sj > 1e-100 {
+            for r in 0..n {
+                u[(r, new_j)] = (w[r * n + old_j] / sj) as f32;
+            }
+        } else {
+            // Null column: complete to an orthonormal basis below.
+            u[(new_j.min(n - 1), new_j)] = 1.0;
+        }
+        for r in 0..n {
+            vt[(new_j, r)] = v[r * n + old_j] as f32;
+        }
+    }
+    // Re-orthonormalize U against earlier columns in the rank-deficient case
+    // (modified Gram-Schmidt; a no-op for full-rank inputs).
+    gram_schmidt_columns(&mut u);
+    Svd { u, s, vt }
+}
+
+fn gram_schmidt_columns(m: &mut Mat) {
+    let n = m.rows;
+    for j in 0..n {
+        for i in 0..j {
+            let dot: f32 = (0..n).map(|r| m[(r, i)] * m[(r, j)]).sum();
+            if dot.abs() > 1e-6 {
+                for r in 0..n {
+                    let mi = m[(r, i)];
+                    m[(r, j)] -= dot * mi;
+                }
+            }
+        }
+        let norm: f32 = (0..n).map(|r| m[(r, j)] * m[(r, j)]).sum::<f32>().sqrt();
+        if norm > 1e-12 {
+            for r in 0..n {
+                m[(r, j)] /= norm;
+            }
+        } else {
+            // Choose any vector orthogonal to the previous columns.
+            for cand in 0..n {
+                for r in 0..n {
+                    m[(r, j)] = if r == cand { 1.0 } else { 0.0 };
+                }
+                for i in 0..j {
+                    let dot: f32 = (0..n).map(|r| m[(r, i)] * m[(r, j)]).sum();
+                    for r in 0..n {
+                        let mi = m[(r, i)];
+                        m[(r, j)] -= dot * mi;
+                    }
+                }
+                let nn: f32 = (0..n).map(|r| m[(r, j)] * m[(r, j)]).sum::<f32>().sqrt();
+                if nn > 1e-6 {
+                    for r in 0..n {
+                        m[(r, j)] /= nn;
+                    }
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Check a square matrix for orthogonality: ‖MᵀM − I‖∞.
+pub fn orthogonality_error(m: &Mat) -> f32 {
+    let g = super::gemm::matmul_at_b(m, m);
+    let mut err = 0.0f32;
+    for r in 0..g.rows {
+        for c in 0..g.cols {
+            let target = if r == c { 1.0 } else { 0.0 };
+            err = err.max((g[(r, c)] - target).abs());
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, quickcheck};
+    use crate::util::Rng;
+
+    #[test]
+    fn svd_identity() {
+        let svd = svd_kxk(&Mat::eye(5));
+        assert_close(&svd.s, &[1.0; 5], 1e-6, 1e-6).unwrap();
+        assert_close(&svd.reconstruct().data, &Mat::eye(5).data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn svd_diagonal_sorted() {
+        let a = Mat::diag(&[2.0, 5.0, 1.0]);
+        let svd = svd_kxk(&a);
+        assert_close(&svd.s, &[5.0, 2.0, 1.0], 1e-5, 1e-5).unwrap();
+        assert_close(&svd.reconstruct().data, &a.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn prop_reconstruction_and_orthogonality() {
+        quickcheck(
+            "svd reconstructs and factors are orthogonal",
+            |rng, size| {
+                let n = 2 + size % 15; // up to 16, covers the paper's 9
+                Mat::randn(n, n, 1.0, rng)
+            },
+            |a| {
+                let svd = svd_kxk(a);
+                assert_close(&svd.reconstruct().data, &a.data, 2e-4, 2e-4)?;
+                if orthogonality_error(&svd.u) > 1e-4 {
+                    return Err(format!("U not orthogonal: {}", orthogonality_error(&svd.u)));
+                }
+                if orthogonality_error(&svd.vt) > 1e-4 {
+                    return Err(format!("Vt not orthogonal: {}", orthogonality_error(&svd.vt)));
+                }
+                for w in svd.s.windows(2) {
+                    if w[0] < w[1] - 1e-6 {
+                        return Err(format!("singular values not sorted: {:?}", svd.s));
+                    }
+                }
+                if svd.s.iter().any(|&s| s < -1e-7) {
+                    return Err("negative singular value".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // Rank-1 matrix: one nonzero singular value, U still orthogonal.
+        let mut a = Mat::zeros(4, 4);
+        for r in 0..4 {
+            for c in 0..4 {
+                a[(r, c)] = ((r + 1) * (c + 1)) as f32;
+            }
+        }
+        let svd = svd_kxk(&a);
+        assert!(svd.s[0] > 1.0);
+        assert!(svd.s[1].abs() < 1e-4, "s = {:?}", svd.s);
+        assert!(orthogonality_error(&svd.u) < 1e-4);
+        assert_close(&svd.reconstruct().data, &a.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn k9_block_accuracy() {
+        // The exact configuration used everywhere in the paper.
+        let mut rng = Rng::new(99);
+        for _ in 0..20 {
+            let a = Mat::randn(9, 9, 0.3, &mut rng);
+            let svd = svd_kxk(&a);
+            let err = svd.reconstruct().sub(&a).fro_norm() / a.fro_norm();
+            assert!(err < 1e-5, "relative error {err}");
+        }
+    }
+}

@@ -1,0 +1,380 @@
+//! `l2ight` — leader entrypoint / CLI for the on-chip-learning coordinator.
+//!
+//! Subcommands:
+//!   run        run an experiment from flags or a JSON config
+//!   calibrate  identity-calibrate a mesh and report MSE
+//!   map        parallel-map a random target matrix and report fidelity
+//!   infer      batched-inference smoke over the PJRT artifacts
+//!   artifacts  list the AOT artifacts the runtime can see
+//!   info       print build + environment info
+
+use std::path::{Path, PathBuf};
+
+use l2ight::coordinator::{run_job, JobConfig, MetricSink, Protocol};
+use l2ight::data::DatasetKind;
+use l2ight::linalg::Mat;
+use l2ight::nn::ModelArch;
+use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::runtime::{default_artifact_dir, Runtime};
+use l2ight::stages::ic::{calibrate_mesh, IcConfig};
+use l2ight::stages::pm::{map_mesh, PmConfig};
+use l2ight::util::cli::ArgSpec;
+use l2ight::util::json::Json;
+use l2ight::util::{fmt_sig, Rng};
+use l2ight::zoo::ZoKind;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("calibrate") => cmd_calibrate(&args[1..]),
+        Some("map") => cmd_map(&args[1..]),
+        Some("infer") => cmd_infer(&args[1..]),
+        Some("artifacts") => cmd_artifacts(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "l2ight — scalable ONN on-chip learning (NeurIPS 2021 reproduction)\n\n\
+         USAGE:\n  l2ight <SUBCOMMAND> [OPTIONS]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 run        run a training protocol (l2ight / l2ight-sl / flops / mixedtrn / rad / swat-u)\n\
+         \x20 calibrate  identity-calibrate a PTC mesh (stage 1)\n\
+         \x20 map        parallel-map a target matrix (stage 2)\n\
+         \x20 infer      batched inference through the PJRT artifacts\n\
+         \x20 artifacts  list AOT artifacts\n\
+         \x20 info       build + environment info\n\n\
+         Run `l2ight <SUBCOMMAND> --help` for options."
+    );
+}
+
+fn parse_or_exit(spec: &ArgSpec, args: &[String]) -> l2ight::util::cli::Args {
+    match spec.parse(args) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn noise_by_name(name: &str) -> NoiseModel {
+    match name {
+        "ideal" => NoiseModel::IDEAL,
+        "paper" => NoiseModel::PAPER,
+        "quant" => NoiseModel::quant_only(8),
+        "bias" => NoiseModel::bias_only(),
+        other => {
+            eprintln!("unknown noise model {other:?} (ideal|paper|quant|bias)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let spec = ArgSpec::new("l2ight run", "run a training protocol end to end")
+        .opt("config", "", "JSON config file (flags below override it)")
+        .opt("protocol", "l2ight", "l2ight|l2ight-sl|flops|mixedtrn|rad|swat-u")
+        .opt("arch", "mlp", "mlp|cnn-s|cnn-l|vgg8|resnet18")
+        .opt("dataset", "vowel", "vowel|mnist|fashion|cifar10|cifar100|tiny")
+        .opt("k", "9", "photonic block size")
+        .opt("noise", "paper", "ideal|paper|quant|bias")
+        .opt("width", "1.0", "channel width multiplier")
+        .opt("n-train", "512", "synthetic train-set size")
+        .opt("n-test", "256", "synthetic test-set size")
+        .opt("pretrain-epochs", "10", "digital pretraining epochs (l2ight)")
+        .opt("epochs", "10", "on-chip training epochs")
+        .opt("batch", "32", "batch size")
+        .opt("alpha-w", "0.6", "feedback keep fraction α_W")
+        .opt("alpha-c", "1.0", "column keep fraction α_C")
+        .opt("alpha-d", "0.0", "SMD skip probability α_D")
+        .opt("zo-budget", "1.0", "IC/PM ZO iteration budget multiplier")
+        .opt("seed", "42", "PRNG seed")
+        .opt("metrics", "", "JSONL metrics output path")
+        .flag("verbose", "per-epoch progress");
+    let a = parse_or_exit(&spec, args);
+
+    let mut cfg = if a.str("config").is_empty() {
+        JobConfig::default()
+    } else {
+        let text = match std::fs::read_to_string(a.str("config")) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read config: {e}");
+                return 2;
+            }
+        };
+        match Json::parse(&text).map_err(|e| format!("{e:?}")).and_then(|j| JobConfig::from_json(&j)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("bad config: {e}");
+                return 2;
+            }
+        }
+    };
+    // Flags override.
+    cfg.protocol = match Protocol::parse(&a.str("protocol")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown protocol");
+            return 2;
+        }
+    };
+    cfg.arch = match ModelArch::parse(&a.str("arch")) {
+        Some(m) => m,
+        None => {
+            eprintln!("unknown arch");
+            return 2;
+        }
+    };
+    cfg.dataset = match DatasetKind::parse(&a.str("dataset")) {
+        Some(d) => d,
+        None => {
+            eprintln!("unknown dataset");
+            return 2;
+        }
+    };
+    cfg.k = a.usize("k");
+    cfg.noise = noise_by_name(&a.str("noise"));
+    cfg.width = a.f64("width") as f32;
+    cfg.n_train = a.usize("n-train");
+    cfg.n_test = a.usize("n-test");
+    cfg.pretrain_epochs = a.usize("pretrain-epochs");
+    cfg.epochs = a.usize("epochs");
+    cfg.batch = a.usize("batch");
+    cfg.alpha_w = a.f64("alpha-w") as f32;
+    cfg.alpha_c = a.f64("alpha-c") as f32;
+    cfg.alpha_d = a.f64("alpha-d") as f32;
+    cfg.zo_budget = a.f64("zo-budget") as f32;
+    cfg.seed = a.usize("seed") as u64;
+    if a.bool("verbose") {
+        l2ight::util::set_log_level(l2ight::util::Level::Debug);
+    }
+
+    let mut sink = if a.str("metrics").is_empty() {
+        MetricSink::memory()
+    } else {
+        match MetricSink::to_file(Path::new(&a.str("metrics"))) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot open metrics file: {e}");
+                return 2;
+            }
+        }
+    };
+
+    println!(
+        "running {} on {}/{} (k={}, noise={}, width={})",
+        cfg.protocol.name(),
+        cfg.arch.name(),
+        cfg.dataset.name(),
+        cfg.k,
+        a.str("noise"),
+        cfg.width
+    );
+    let t0 = std::time::Instant::now();
+    let s = run_job(&cfg, &mut sink);
+    println!("\n== summary ({:.1}s) ==", t0.elapsed().as_secs_f64());
+    println!("protocol          {}", s.protocol.name());
+    println!("params            {} trainable / {} total", s.trainable_params, s.total_params);
+    if let Some(p) = s.pretrain_acc {
+        println!("pretrain acc      {p:.4}");
+    }
+    if let Some(m) = s.ic_mse {
+        println!("IC mean MSE       {}", fmt_sig(m, 3));
+    }
+    if let Some(e) = s.pm_err {
+        println!("PM rel error      {}", fmt_sig(e, 3));
+    }
+    if let Some(m) = s.mapped_acc {
+        println!("mapped acc        {m:.4}");
+    }
+    println!("final acc         {:.4}", s.final_acc);
+    println!("best acc          {:.4}", s.best_acc);
+    println!(
+        "PTC energy        {} calls (fwd {}, σ-grad {}, feedback {})",
+        fmt_sig(s.cost.total_energy(), 4),
+        fmt_sig(s.cost.fwd_energy, 4),
+        fmt_sig(s.cost.wgrad_energy, 4),
+        fmt_sig(s.cost.fbk_energy, 4)
+    );
+    println!("steps             {}", fmt_sig(s.cost.total_steps(), 4));
+    println!("ZO queries        {}", s.zo_queries);
+    0
+}
+
+fn cmd_calibrate(args: &[String]) -> i32 {
+    let spec = ArgSpec::new("l2ight calibrate", "identity-calibrate a PTC mesh (stage 1)")
+        .opt("rows", "18", "mesh rows")
+        .opt("cols", "18", "mesh cols")
+        .opt("k", "9", "block size")
+        .opt("noise", "paper", "ideal|paper|quant|bias")
+        .opt("optimizer", "zcd", "zgd|zcd|ztp")
+        .opt("iters", "400", "ZO iterations")
+        .opt("seed", "1", "PRNG seed");
+    let a = parse_or_exit(&spec, args);
+    let mut rng = Rng::new(a.usize("seed") as u64);
+    let mut mesh = PtcMesh::new(
+        a.usize("rows"),
+        a.usize("cols"),
+        a.usize("k"),
+        noise_by_name(&a.str("noise")),
+        &mut rng,
+    );
+    let before: f64 = {
+        let mut s = 0.0;
+        for ptc in mesh.ptcs.iter_mut() {
+            let (u, v) = ptc.identity_mse();
+            s += (u + v) / 2.0;
+        }
+        s / mesh.ptcs.len() as f64
+    };
+    let optimizer = match &*a.str("optimizer") {
+        "zgd" => ZoKind::Zgd,
+        "zcd" => ZoKind::Zcd,
+        "ztp" => ZoKind::Ztp,
+        _ => {
+            eprintln!("unknown optimizer");
+            return 2;
+        }
+    };
+    let mut cfg = IcConfig { optimizer, ..IcConfig::default() };
+    cfg.zo.iters = a.usize("iters");
+    let t0 = std::time::Instant::now();
+    let r = calibrate_mesh(&mut mesh, &cfg);
+    println!(
+        "calibrated {} blocks in {:.1}s: mean MSE {} -> {} ({} queries)",
+        r.blocks,
+        t0.elapsed().as_secs_f64(),
+        fmt_sig(before, 3),
+        fmt_sig(r.mean_mse(), 3),
+        r.queries
+    );
+    0
+}
+
+fn cmd_map(args: &[String]) -> i32 {
+    let spec = ArgSpec::new("l2ight map", "parallel-map a random target matrix (stage 2)")
+        .opt("rows", "18", "target rows")
+        .opt("cols", "18", "target cols")
+        .opt("k", "9", "block size")
+        .opt("noise", "paper", "ideal|paper|quant|bias")
+        .opt("iters", "75", "ZO iterations per alternation")
+        .opt("alternations", "4", "U/V alternations")
+        .flag("no-osp", "skip the optimal singular-value projection")
+        .opt("seed", "1", "PRNG seed");
+    let a = parse_or_exit(&spec, args);
+    let mut rng = Rng::new(a.usize("seed") as u64);
+    let mut mesh = PtcMesh::new(
+        a.usize("rows"),
+        a.usize("cols"),
+        a.usize("k"),
+        noise_by_name(&a.str("noise")),
+        &mut rng,
+    );
+    let target = Mat::randn(a.usize("rows"), a.usize("cols"), 0.5, &mut rng);
+    let mut cfg = PmConfig { alternations: a.usize("alternations"), osp: !a.bool("no-osp"), ..PmConfig::default() };
+    cfg.zo.iters = a.usize("iters");
+    let t0 = std::time::Instant::now();
+    let r = map_mesh(&mut mesh, &target, &cfg);
+    println!(
+        "mapped {} blocks in {:.1}s: rel err init {} -> final {} ({} queries{})",
+        r.blocks,
+        t0.elapsed().as_secs_f64(),
+        fmt_sig(r.err_init, 3),
+        fmt_sig(r.err_osp, 3),
+        r.queries,
+        if cfg.osp { ", with OSP" } else { "" }
+    );
+    0
+}
+
+fn cmd_infer(args: &[String]) -> i32 {
+    let spec = ArgSpec::new("l2ight infer", "batched inference through the PJRT artifacts")
+        .opt("artifacts", "", "artifact dir (default $L2IGHT_ARTIFACTS or ./artifacts)")
+        .opt("requests", "64", "number of random requests")
+        .opt("seed", "1", "PRNG seed");
+    let a = parse_or_exit(&spec, args);
+    let dir = if a.str("artifacts").is_empty() {
+        default_artifact_dir()
+    } else {
+        PathBuf::from(a.str("artifacts"))
+    };
+    let rt = match Runtime::new(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("runtime: {e:#}");
+            return 1;
+        }
+    };
+    let mut trainer =
+        match l2ight::coordinator::PjrtMlpTrainer::new(rt, a.usize("seed") as u64) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 1;
+            }
+        };
+    let spec_ds = l2ight::data::SynthSpec::quick(DatasetKind::VowelLike, a.usize("requests"), 1);
+    let (ds, _) = spec_ds.generate();
+    let t0 = std::time::Instant::now();
+    let acc = trainer.evaluate(&ds).expect("evaluate");
+    let dt = t0.elapsed();
+    println!(
+        "served {} requests in {:.1} ms ({:.1} req/s), random-init acc {:.3}",
+        ds.n,
+        dt.as_secs_f64() * 1e3,
+        ds.n as f64 / dt.as_secs_f64(),
+        acc
+    );
+    0
+}
+
+fn cmd_artifacts(args: &[String]) -> i32 {
+    let spec = ArgSpec::new("l2ight artifacts", "list AOT artifacts")
+        .opt("artifacts", "", "artifact dir (default $L2IGHT_ARTIFACTS or ./artifacts)");
+    let a = parse_or_exit(&spec, args);
+    let dir = if a.str("artifacts").is_empty() {
+        default_artifact_dir()
+    } else {
+        PathBuf::from(a.str("artifacts"))
+    };
+    match l2ight::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("{} artifacts in {}:", m.artifacts.len(), dir.display());
+            for art in &m.artifacts {
+                let shapes: Vec<String> =
+                    art.args.iter().map(|s| format!("{:?}", s.shape)).collect();
+                println!("  {:32} {} -> {} outputs", art.name, shapes.join(" "), art.outputs);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("l2ight {} — L2ight (NeurIPS 2021) reproduction", env!("CARGO_PKG_VERSION"));
+    println!("block size default: 9 (Appendix F)");
+    println!("artifact dir: {}", default_artifact_dir().display());
+    match Runtime::new(&default_artifact_dir()) {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT runtime unavailable: {e:#}"),
+    }
+    0
+}

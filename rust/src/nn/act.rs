@@ -1,0 +1,163 @@
+//! Feature-major activation tensor: a [C, B·H·W] matrix with NCHW metadata.
+//! Column index is `b·(H·W) + h·W + w`. Linear activations use H=W=1.
+
+use crate::linalg::Mat;
+
+/// Activation tensor.
+#[derive(Clone, Debug)]
+pub struct Act {
+    /// [channels, batch · h · w]
+    pub mat: Mat,
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Act {
+    /// Feature-vector activations [features, batch].
+    pub fn from_features(mat: Mat, batch: usize) -> Act {
+        assert_eq!(mat.cols, batch, "feature act cols == batch");
+        Act { mat, batch, h: 1, w: 1 }
+    }
+
+    /// Image activations [C, B·H·W].
+    pub fn from_image(mat: Mat, batch: usize, h: usize, w: usize) -> Act {
+        assert_eq!(mat.cols, batch * h * w, "image act cols");
+        Act { mat, batch, h, w }
+    }
+
+    pub fn channels(&self) -> usize {
+        self.mat.rows
+    }
+
+    pub fn spatial(&self) -> usize {
+        self.h * self.w
+    }
+
+    /// Same-shape zero tensor.
+    pub fn zeros_like(&self) -> Act {
+        Act { mat: Mat::zeros(self.mat.rows, self.mat.cols), ..*self }
+    }
+
+    /// Convert to flat NCHW layout (for im2col and dataset interop).
+    pub fn to_nchw(&self) -> Vec<f32> {
+        let (c, s) = (self.channels(), self.spatial());
+        let mut out = vec![0.0f32; self.batch * c * s];
+        for ch in 0..c {
+            let row = self.mat.row(ch);
+            for b in 0..self.batch {
+                let src = &row[b * s..(b + 1) * s];
+                out[(b * c + ch) * s..(b * c + ch + 1) * s].copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    /// Build from flat NCHW.
+    pub fn from_nchw(data: &[f32], batch: usize, c: usize, h: usize, w: usize) -> Act {
+        assert_eq!(data.len(), batch * c * h * w, "from_nchw size");
+        let s = h * w;
+        let mut mat = Mat::zeros(c, batch * s);
+        for ch in 0..c {
+            let row = mat.row_mut(ch);
+            for b in 0..batch {
+                row[b * s..(b + 1) * s]
+                    .copy_from_slice(&data[(b * c + ch) * s..(b * c + ch + 1) * s]);
+            }
+        }
+        Act { mat, batch, h, w }
+    }
+
+    /// Flatten an image activation [C, B·S] into a feature activation
+    /// [C·S, B] (channel-major features, matching PyTorch's flatten order).
+    pub fn flatten(&self) -> Act {
+        let (c, s, b) = (self.channels(), self.spatial(), self.batch);
+        let mut mat = Mat::zeros(c * s, b);
+        for ch in 0..c {
+            let src = self.mat.row(ch);
+            for sp in 0..s {
+                let dst = mat.row_mut(ch * s + sp);
+                for bi in 0..b {
+                    dst[bi] = src[bi * s + sp];
+                }
+            }
+        }
+        Act::from_features(mat, b)
+    }
+
+    /// Inverse of `flatten` (for the backward pass).
+    pub fn unflatten(&self, c: usize, h: usize, w: usize) -> Act {
+        let s = h * w;
+        assert_eq!(self.mat.rows, c * s, "unflatten rows");
+        assert_eq!(self.h * self.w, 1, "unflatten expects feature act");
+        let b = self.batch;
+        let mut mat = Mat::zeros(c, b * s);
+        for ch in 0..c {
+            let dst = mat.row_mut(ch);
+            for sp in 0..s {
+                let src = self.mat.row(ch * s + sp);
+                for bi in 0..b {
+                    dst[bi * s + sp] = src[bi];
+                }
+            }
+        }
+        Act::from_image(mat, b, h, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, quickcheck};
+
+    #[test]
+    fn nchw_roundtrip() {
+        quickcheck(
+            "act nchw roundtrip",
+            |rng, size| {
+                let b = 1 + size % 3;
+                let c = 1 + size % 5;
+                let h = 1 + size % 4;
+                let w = 1 + size % 4;
+                let data: Vec<f32> = (0..b * c * h * w).map(|_| rng.normal() as f32).collect();
+                (data, b, c, h, w)
+            },
+            |(data, b, c, h, w)| {
+                let act = Act::from_nchw(data, *b, *c, *h, *w);
+                assert_close(&act.to_nchw(), data, 0.0, 0.0)
+            },
+        );
+    }
+
+    #[test]
+    fn flatten_matches_pytorch_order() {
+        // B=1, C=2, H=W=2: NCHW flat = [c0s0 c0s1 c0s2 c0s3 c1s0 ...];
+        // flatten -> features in the same order.
+        let data: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let act = Act::from_nchw(&data, 1, 2, 2, 2);
+        let flat = act.flatten();
+        assert_eq!(flat.mat.rows, 8);
+        assert_eq!(flat.batch, 1);
+        let col: Vec<f32> = (0..8).map(|r| flat.mat[(r, 0)]).collect();
+        assert_eq!(col, data);
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        quickcheck(
+            "flatten/unflatten roundtrip",
+            |rng, size| {
+                let b = 1 + size % 3;
+                let c = 1 + size % 4;
+                let h = 1 + size % 3;
+                let data: Vec<f32> = (0..b * c * h * h).map(|_| rng.normal() as f32).collect();
+                (data, b, c, h)
+            },
+            |(data, b, c, h)| {
+                let act = Act::from_nchw(data, *b, *c, *h, *h);
+                let rt = act.flatten().unflatten(*c, *h, *h);
+                assert_close(&rt.mat.data, &act.mat.data, 0.0, 0.0)
+            },
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! Projection engines: the matrix-multiply workhorse behind Linear/Conv2d.
+//!
+//! * `Digital` — a dense f32 weight with full-space gradients. Used for
+//!   software pretraining (the model that PM maps onto the chip) and for
+//!   the noise-free reference curves in Fig. 1(b).
+//! * `Photonic` — a `PtcMesh`. Forward runs through the realized (noisy)
+//!   blocked mesh; backward produces the Σ subspace gradient via the Eq. 5
+//!   reciprocity rule and the masked feedback product of §3.4.2. Full-space
+//!   weight gradients simply do not exist here, matching the hardware.
+
+use crate::linalg::{matmul, matmul_a_bt, matmul_at_b, Mat};
+use crate::photonics::{NoiseModel, PtcMesh};
+use crate::sampling::feedback::FeedbackMask;
+use crate::util::Rng;
+
+/// How to instantiate projection engines when building a model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EngineKind {
+    Digital,
+    /// Photonic with block size k and a noise model.
+    Photonic { k: usize, noise: NoiseModel },
+}
+
+/// A projection engine computing y = W·x with engine-specific training.
+#[derive(Clone, Debug)]
+pub enum ProjEngine {
+    Digital {
+        w: Mat,
+        grad_w: Mat,
+        /// Optional forward-weight keep-mask (SWAT-U baseline sparsifies the
+        /// forward weights too); None = dense forward.
+        fwd_mask: Option<Vec<bool>>,
+    },
+    Photonic {
+        mesh: PtcMesh,
+        grad_sigma: Vec<f32>,
+        /// Optional forward block keep-mask [p][q] + scale (SWAT-U baseline
+        /// shares one mask between forward and feedback).
+        fwd_mask: Option<(Vec<bool>, f32)>,
+    },
+}
+
+impl ProjEngine {
+    /// Kaiming-uniform initialized engine for an `out`×`inp` projection.
+    pub fn new(kind: EngineKind, out: usize, inp: usize, rng: &mut Rng) -> ProjEngine {
+        let bound = (6.0 / inp as f32).sqrt();
+        let w = Mat::rand_uniform(out, inp, -bound, bound, rng);
+        match kind {
+            EngineKind::Digital => ProjEngine::Digital {
+                grad_w: Mat::zeros(out, inp),
+                w,
+                fwd_mask: None,
+            },
+            EngineKind::Photonic { k, noise } => {
+                let mut mesh = PtcMesh::new(out, inp, k, noise, rng);
+                // Subspace-from-scratch initialization: random unitaries are
+                // whatever the fab + IC produced; Σ starts from the SVD of a
+                // Kaiming init so training-from-scratch is well-scaled.
+                mesh.program_from_dense(&w);
+                ProjEngine::Photonic {
+                    grad_sigma: vec![0.0; mesh.n_sigma()],
+                    mesh,
+                    fwd_mask: None,
+                }
+            }
+        }
+    }
+
+    pub fn out_features(&self) -> usize {
+        match self {
+            ProjEngine::Digital { w, .. } => w.rows,
+            ProjEngine::Photonic { mesh, .. } => mesh.rows,
+        }
+    }
+
+    pub fn in_features(&self) -> usize {
+        match self {
+            ProjEngine::Digital { w, .. } => w.cols,
+            ProjEngine::Photonic { mesh, .. } => mesh.cols,
+        }
+    }
+
+    /// y = W x (x: [in, cols]).
+    pub fn forward(&mut self, x: &Mat) -> Mat {
+        match self {
+            ProjEngine::Digital { w, fwd_mask, .. } => match fwd_mask {
+                None => matmul(w, x),
+                Some(mask) => {
+                    // SWAT-U style: zero masked weights on the forward path.
+                    let mut wm = w.clone();
+                    for (v, &keep) in wm.data.iter_mut().zip(mask.iter()) {
+                        if !keep {
+                            *v = 0.0;
+                        }
+                    }
+                    matmul(&wm, x)
+                }
+            },
+            ProjEngine::Photonic { mesh, fwd_mask, .. } => match fwd_mask {
+                None => mesh.forward(x),
+                Some((keep, scale)) => mesh.forward_masked(x, Some(keep), *scale),
+            },
+        }
+    }
+
+    /// Backward: given cached input x and upstream dy, accumulate weight/Σ
+    /// gradients and return dx. `fb` optionally masks the feedback matrix;
+    /// `col_keep` optionally masks gradient-evaluation columns (CS).
+    pub fn backward(
+        &mut self,
+        x: &Mat,
+        dy: &Mat,
+        fb: Option<&FeedbackMask>,
+        col_keep: Option<&[bool]>,
+        col_scale: f32,
+    ) -> Mat {
+        match self {
+            ProjEngine::Digital { w, grad_w, .. } => {
+                // Full-space: dW += dy·xᵀ (with optional column masking to
+                // let the RAD/SWAT baselines reuse this engine), dx = Wᵀ dy.
+                let (dys, xs) = match col_keep {
+                    None => (dy.clone(), x.clone()),
+                    Some(mask) => (mask_cols(dy, mask), mask_cols(x, mask)),
+                };
+                let mut gw = matmul_a_bt(&dys, &xs);
+                if col_scale != 1.0 {
+                    gw.scale(col_scale);
+                }
+                *grad_w = grad_w.add(&gw);
+                match fb {
+                    None => matmul_at_b(w, dy),
+                    Some(m) => {
+                        // Blockwise-masked Wᵀ for baseline parity.
+                        let wm = m.apply_dense(w);
+                        matmul_at_b(&wm, dy)
+                    }
+                }
+            }
+            ProjEngine::Photonic { mesh, grad_sigma, .. } => {
+                let g = mesh.sigma_grad(x, dy, col_keep, col_scale);
+                for (acc, gi) in grad_sigma.iter_mut().zip(&g) {
+                    *acc += gi;
+                }
+                match fb {
+                    None => mesh.feedback(dy, None, 1.0),
+                    Some(m) => mesh.feedback(dy, Some(&m.keep), m.scale),
+                }
+            }
+        }
+    }
+
+    /// Zero accumulated gradients.
+    pub fn zero_grad(&mut self) {
+        match self {
+            ProjEngine::Digital { grad_w, .. } => grad_w.data.fill(0.0),
+            ProjEngine::Photonic { grad_sigma, .. } => grad_sigma.fill(0.0),
+        }
+    }
+
+    /// The realized dense weight (digital: exact; photonic: noisy W̃).
+    pub fn dense_weight(&mut self) -> Mat {
+        match self {
+            ProjEngine::Digital { w, .. } => w.clone(),
+            ProjEngine::Photonic { mesh, .. } => mesh.to_dense(),
+        }
+    }
+
+    /// Per-block squared Frobenius norms for the btopk sampler; block grid
+    /// (p, q) is (1,1) for digital engines (no blocking).
+    pub fn block_norms(&self) -> (usize, usize, Vec<f32>) {
+        match self {
+            ProjEngine::Digital { w, .. } => (1, 1, vec![w.fro_norm_sq()]),
+            ProjEngine::Photonic { mesh, .. } => (mesh.p, mesh.q, mesh.block_norms_sq()),
+        }
+    }
+}
+
+fn mask_cols(x: &Mat, keep: &[bool]) -> Mat {
+    assert_eq!(keep.len(), x.cols);
+    let kept: Vec<usize> = (0..x.cols).filter(|&c| keep[c]).collect();
+    let mut out = Mat::zeros(x.rows, kept.len());
+    for r in 0..x.rows {
+        let src = x.row(r);
+        let dst = out.row_mut(r);
+        for (j, &c) in kept.iter().enumerate() {
+            dst[j] = src[c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn digital_forward_backward_shapes() {
+        let mut rng = Rng::new(1);
+        let mut eng = ProjEngine::new(EngineKind::Digital, 6, 4, &mut rng);
+        let x = Mat::randn(4, 3, 1.0, &mut rng);
+        let y = eng.forward(&x);
+        assert_eq!((y.rows, y.cols), (6, 3));
+        let dy = Mat::randn(6, 3, 1.0, &mut rng);
+        let dx = eng.backward(&x, &dy, None, None, 1.0);
+        assert_eq!((dx.rows, dx.cols), (4, 3));
+        if let ProjEngine::Digital { grad_w, .. } = &eng {
+            assert_close(&grad_w.data, &matmul_a_bt(&dy, &x).data, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn photonic_ideal_matches_digital_forward() {
+        let mut rng = Rng::new(2);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::IDEAL };
+        let mut eng = ProjEngine::new(kind, 8, 8, &mut rng);
+        let w = eng.dense_weight();
+        let x = Mat::randn(8, 5, 1.0, &mut rng);
+        let y = eng.forward(&x);
+        assert_close(&y.data, &matmul(&w, &x).data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn photonic_grad_is_subspace_only() {
+        let mut rng = Rng::new(3);
+        let kind = EngineKind::Photonic { k: 3, noise: NoiseModel::IDEAL };
+        let mut eng = ProjEngine::new(kind, 6, 6, &mut rng);
+        let x = Mat::randn(6, 4, 1.0, &mut rng);
+        let dy = Mat::randn(6, 4, 1.0, &mut rng);
+        eng.backward(&x, &dy, None, None, 1.0);
+        if let ProjEngine::Photonic { grad_sigma, mesh, .. } = &eng {
+            assert_eq!(grad_sigma.len(), mesh.n_sigma());
+            assert!(grad_sigma.iter().any(|&g| g != 0.0));
+        } else {
+            panic!("expected photonic")
+        }
+        eng.zero_grad();
+        if let ProjEngine::Photonic { grad_sigma, .. } = &eng {
+            assert!(grad_sigma.iter().all(|&g| g == 0.0));
+        }
+    }
+
+    #[test]
+    fn digital_column_masking_scales() {
+        // With all columns kept and scale 1, masked == unmasked.
+        let mut rng = Rng::new(4);
+        let mut e1 = ProjEngine::new(EngineKind::Digital, 5, 5, &mut rng);
+        let mut e2 = e1.clone();
+        let x = Mat::randn(5, 6, 1.0, &mut rng);
+        let dy = Mat::randn(5, 6, 1.0, &mut rng);
+        e1.backward(&x, &dy, None, None, 1.0);
+        e2.backward(&x, &dy, None, Some(&vec![true; 6]), 1.0);
+        match (&e1, &e2) {
+            (ProjEngine::Digital { grad_w: g1, .. }, ProjEngine::Digital { grad_w: g2, .. }) => {
+                assert_close(&g1.data, &g2.data, 1e-6, 1e-6).unwrap();
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,748 @@
+//! Layer implementations with explicit forward/backward. Projection layers
+//! (Linear, Conv2d) delegate the matrix product to a `ProjEngine` and thread
+//! the §3.4.2 sampling machinery through `BackwardCtx`.
+
+use super::act::Act;
+use super::engine::ProjEngine;
+use super::model::BackwardCtx;
+use crate::linalg::{col2im, im2col, Conv2dShape, Mat};
+
+/// A single layer.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    Linear(Linear),
+    Conv2d(Conv2d),
+    Relu(Relu),
+    BatchNorm(BatchNorm),
+    AvgPool(AvgPool),
+    MaxPool(MaxPool),
+    GlobalAvgPool(GlobalAvgPool),
+    Flatten(Flatten),
+}
+
+impl Layer {
+    pub fn forward(&mut self, x: &Act, train: bool) -> Act {
+        match self {
+            Layer::Linear(l) => l.forward(x, train),
+            Layer::Conv2d(l) => l.forward(x, train),
+            Layer::Relu(l) => l.forward(x, train),
+            Layer::BatchNorm(l) => l.forward(x, train),
+            Layer::AvgPool(l) => l.forward(x, train),
+            Layer::MaxPool(l) => l.forward(x, train),
+            Layer::GlobalAvgPool(l) => l.forward(x, train),
+            Layer::Flatten(l) => l.forward(x, train),
+        }
+    }
+
+    pub fn backward(&mut self, dy: &Act, ctx: &mut BackwardCtx) -> Act {
+        match self {
+            Layer::Linear(l) => l.backward(dy, ctx),
+            Layer::Conv2d(l) => l.backward(dy, ctx),
+            Layer::Relu(l) => l.backward(dy),
+            Layer::BatchNorm(l) => l.backward(dy),
+            Layer::AvgPool(l) => l.backward(dy),
+            Layer::MaxPool(l) => l.backward(dy),
+            Layer::GlobalAvgPool(l) => l.backward(dy),
+            Layer::Flatten(l) => l.backward(dy),
+        }
+    }
+
+    /// Projection engine if this layer has one.
+    pub fn engine_mut(&mut self) -> Option<&mut ProjEngine> {
+        match self {
+            Layer::Linear(l) => Some(&mut l.engine),
+            Layer::Conv2d(l) => Some(&mut l.engine),
+            _ => None,
+        }
+    }
+
+    pub fn engine(&self) -> Option<&ProjEngine> {
+        match self {
+            Layer::Linear(l) => Some(&l.engine),
+            Layer::Conv2d(l) => Some(&l.engine),
+            _ => None,
+        }
+    }
+
+    /// Drop cached forward state (frees memory between epochs / for eval).
+    pub fn clear_cache(&mut self) {
+        match self {
+            Layer::Linear(l) => l.cache = None,
+            Layer::Conv2d(l) => {
+                l.cache_x = None;
+                l.cache_shape = None;
+            }
+            Layer::Relu(l) => l.mask = None,
+            Layer::BatchNorm(l) => l.cache = None,
+            Layer::AvgPool(l) => l.cache = None,
+            Layer::MaxPool(l) => l.cache = None,
+            Layer::GlobalAvgPool(l) => l.cache = None,
+            Layer::Flatten(l) => l.cache = None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linear
+// ---------------------------------------------------------------------------
+
+/// Fully-connected layer y = W x + b over feature activations [F, B].
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub engine: ProjEngine,
+    pub bias: Vec<f32>,
+    pub grad_bias: Vec<f32>,
+    cache: Option<Mat>,
+}
+
+impl Linear {
+    pub fn new(engine: ProjEngine) -> Linear {
+        let out = engine.out_features();
+        Linear { engine, bias: vec![0.0; out], grad_bias: vec![0.0; out], cache: None }
+    }
+
+    pub fn forward(&mut self, x: &Act, train: bool) -> Act {
+        assert_eq!(x.spatial(), 1, "Linear expects feature activations");
+        let mut y = self.engine.forward(&x.mat);
+        for (r, &b) in self.bias.iter().enumerate() {
+            for v in y.row_mut(r) {
+                *v += b;
+            }
+        }
+        if train {
+            self.cache = Some(x.mat.clone());
+        }
+        Act::from_features(y, x.batch)
+    }
+
+    pub fn backward(&mut self, dy: &Act, ctx: &mut BackwardCtx) -> Act {
+        let x = self.cache.as_ref().expect("Linear backward without forward").clone();
+        for (r, g) in self.grad_bias.iter_mut().enumerate() {
+            *g += dy.mat.row(r).iter().sum::<f32>();
+        }
+        let fb = ctx.draw_feedback(&self.engine);
+        // CS degenerates to batch sampling for FC layers; the paper applies
+        // it to CONV layers only, so no column mask here.
+        let dx = self.engine.backward(&x, &dy.mat, fb.as_ref(), None, 1.0);
+        Act::from_features(dx, dy.batch)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conv2d
+// ---------------------------------------------------------------------------
+
+/// 2-D convolution lowered to im2col + blocked projection.
+#[derive(Clone, Debug)]
+pub struct Conv2d {
+    pub engine: ProjEngine,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub bias: Vec<f32>,
+    pub grad_bias: Vec<f32>,
+    /// Cached im2col patch matrix (recomputed under SS).
+    cache_x: Option<Mat>,
+    cache_shape: Option<Conv2dShape>,
+    /// Cached raw input (needed only when spatial sampling re-unfolds).
+    cache_input: Option<Act>,
+}
+
+impl Conv2d {
+    pub fn new(
+        engine: ProjEngine,
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    ) -> Conv2d {
+        assert_eq!(engine.out_features(), out_ch);
+        assert_eq!(engine.in_features(), in_ch * kernel * kernel);
+        Conv2d {
+            engine,
+            in_ch,
+            out_ch,
+            kernel,
+            stride,
+            padding,
+            bias: vec![0.0; out_ch],
+            grad_bias: vec![0.0; out_ch],
+            cache_x: None,
+            cache_shape: None,
+            cache_input: None,
+        }
+    }
+
+    fn shape_for(&self, x: &Act) -> Conv2dShape {
+        Conv2dShape {
+            batch: x.batch,
+            in_ch: self.in_ch,
+            in_h: x.h,
+            in_w: x.w,
+            out_ch: self.out_ch,
+            kernel: self.kernel,
+            stride: self.stride,
+            padding: self.padding,
+        }
+    }
+
+    pub fn forward(&mut self, x: &Act, train: bool) -> Act {
+        assert_eq!(x.channels(), self.in_ch, "Conv2d input channels");
+        let sh = self.shape_for(x);
+        let patches = im2col(&x.to_nchw(), &sh);
+        let mut y = self.engine.forward(&patches);
+        for (r, &b) in self.bias.iter().enumerate() {
+            for v in y.row_mut(r) {
+                *v += b;
+            }
+        }
+        if train {
+            self.cache_x = Some(patches);
+            self.cache_shape = Some(sh);
+            self.cache_input = Some(x.clone());
+        }
+        Act::from_image(y, x.batch, sh.out_h(), sh.out_w())
+    }
+
+    pub fn backward(&mut self, dy: &Act, ctx: &mut BackwardCtx) -> Act {
+        let sh = *self.cache_shape.as_ref().expect("Conv2d backward without forward");
+        for (r, g) in self.grad_bias.iter_mut().enumerate() {
+            *g += dy.mat.row(r).iter().sum::<f32>();
+        }
+        // Feature sampling: CS masks patch columns; SS re-unfolds a
+        // pixel-sparsified input (no structured savings — the point of Fig 9).
+        let col_mask = ctx.feature.draw_column_mask(sh.batch, sh.out_h() * sh.out_w(), &mut ctx.rng);
+        let x_for_grad = match ctx
+            .feature
+            .apply_spatial(self.cache_input.as_ref().unwrap(), &mut ctx.rng)
+        {
+            Some(sparse_in) => im2col(&sparse_in.to_nchw(), &sh),
+            None => self.cache_x.as_ref().unwrap().clone(),
+        };
+        let fb = ctx.draw_feedback(&self.engine);
+        let dx_cols = self.engine.backward(
+            &x_for_grad,
+            &dy.mat,
+            fb.as_ref(),
+            col_mask.as_deref(),
+            ctx.feature.scale(),
+        );
+        let dx_nchw = col2im(&dx_cols, &sh);
+        Act::from_nchw(&dx_nchw, sh.batch, sh.in_ch, sh.in_h, sh.in_w)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReLU
+// ---------------------------------------------------------------------------
+
+/// Rectified linear unit.
+#[derive(Clone, Debug, Default)]
+pub struct Relu {
+    mask: Option<Vec<bool>>,
+}
+
+impl Relu {
+    pub fn new() -> Relu {
+        Relu { mask: None }
+    }
+
+    pub fn forward(&mut self, x: &Act, train: bool) -> Act {
+        let mut y = x.clone();
+        if train {
+            let mask: Vec<bool> = y.mat.data.iter().map(|&v| v > 0.0).collect();
+            self.mask = Some(mask);
+        }
+        for v in &mut y.mat.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        y
+    }
+
+    pub fn backward(&mut self, dy: &Act) -> Act {
+        let mask = self.mask.as_ref().expect("Relu backward without forward");
+        let mut dx = dy.clone();
+        for (v, &m) in dx.mat.data.iter_mut().zip(mask) {
+            if !m {
+                *v = 0.0;
+            }
+        }
+        dx
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BatchNorm (2d — per channel over batch × spatial)
+// ---------------------------------------------------------------------------
+
+/// Batch normalization with affine parameters (digital-domain, trainable in
+/// both pretraining and on-chip subspace learning — the BN arithmetic lives
+/// in the electrical control plane).
+#[derive(Clone, Debug)]
+pub struct BatchNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub grad_gamma: Vec<f32>,
+    pub grad_beta: Vec<f32>,
+    pub running_mean: Vec<f32>,
+    pub running_var: Vec<f32>,
+    pub momentum: f32,
+    pub eps: f32,
+    cache: Option<BnCache>,
+}
+
+#[derive(Clone, Debug)]
+struct BnCache {
+    x_hat: Mat,
+    inv_std: Vec<f32>,
+}
+
+impl BatchNorm {
+    pub fn new(channels: usize) -> BatchNorm {
+        BatchNorm {
+            gamma: vec![1.0; channels],
+            beta: vec![0.0; channels],
+            grad_gamma: vec![0.0; channels],
+            grad_beta: vec![0.0; channels],
+            running_mean: vec![0.0; channels],
+            running_var: vec![1.0; channels],
+            momentum: 0.1,
+            eps: 1e-5,
+            cache: None,
+        }
+    }
+
+    pub fn forward(&mut self, x: &Act, train: bool) -> Act {
+        let c = x.channels();
+        assert_eq!(c, self.gamma.len(), "BatchNorm channels");
+        let n = x.mat.cols as f32;
+        let mut y = x.clone();
+        if train {
+            let mut x_hat = Mat::zeros(c, x.mat.cols);
+            let mut inv_std = vec![0.0f32; c];
+            for ch in 0..c {
+                let row = x.mat.row(ch);
+                let mean = row.iter().sum::<f32>() / n;
+                let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+                let istd = 1.0 / (var + self.eps).sqrt();
+                inv_std[ch] = istd;
+                self.running_mean[ch] =
+                    (1.0 - self.momentum) * self.running_mean[ch] + self.momentum * mean;
+                self.running_var[ch] =
+                    (1.0 - self.momentum) * self.running_var[ch] + self.momentum * var;
+                let xh = x_hat.row_mut(ch);
+                let yr = y.mat.row_mut(ch);
+                for (i, &v) in row.iter().enumerate() {
+                    let h = (v - mean) * istd;
+                    xh[i] = h;
+                    yr[i] = self.gamma[ch] * h + self.beta[ch];
+                }
+            }
+            self.cache = Some(BnCache { x_hat, inv_std });
+        } else {
+            for ch in 0..c {
+                let mean = self.running_mean[ch];
+                let istd = 1.0 / (self.running_var[ch] + self.eps).sqrt();
+                let (g, b) = (self.gamma[ch], self.beta[ch]);
+                for v in y.mat.row_mut(ch) {
+                    *v = g * (*v - mean) * istd + b;
+                }
+            }
+        }
+        y
+    }
+
+    pub fn backward(&mut self, dy: &Act) -> Act {
+        let cache = self.cache.as_ref().expect("BatchNorm backward without forward");
+        let c = dy.channels();
+        let n = dy.mat.cols as f32;
+        let mut dx = dy.zeros_like();
+        for ch in 0..c {
+            let dyr = dy.mat.row(ch);
+            let xh = cache.x_hat.row(ch);
+            let sum_dy: f32 = dyr.iter().sum();
+            let sum_dy_xh: f32 = dyr.iter().zip(xh).map(|(a, b)| a * b).sum();
+            self.grad_beta[ch] += sum_dy;
+            self.grad_gamma[ch] += sum_dy_xh;
+            let g_istd_n = self.gamma[ch] * cache.inv_std[ch] / n;
+            let dxr = dx.mat.row_mut(ch);
+            for i in 0..dyr.len() {
+                dxr[i] = g_istd_n * (n * dyr[i] - sum_dy - xh[i] * sum_dy_xh);
+            }
+        }
+        dx
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pooling
+// ---------------------------------------------------------------------------
+
+/// Average pooling with stride == kernel.
+#[derive(Clone, Debug)]
+pub struct AvgPool {
+    pub kernel: usize,
+    cache: Option<(usize, usize, usize)>, // (h, w, batch)
+}
+
+impl AvgPool {
+    pub fn new(kernel: usize) -> AvgPool {
+        AvgPool { kernel, cache: None }
+    }
+
+    pub fn forward(&mut self, x: &Act, _train: bool) -> Act {
+        let k = self.kernel;
+        assert!(x.h >= k && x.w >= k, "AvgPool input smaller than kernel");
+        let (oh, ow) = (x.h / k, x.w / k);
+        let mut y = Mat::zeros(x.channels(), x.batch * oh * ow);
+        let inv = 1.0 / (k * k) as f32;
+        for ch in 0..x.channels() {
+            let src = x.mat.row(ch);
+            let dst = y.row_mut(ch);
+            for b in 0..x.batch {
+                for orow in 0..oh {
+                    for ocol in 0..ow {
+                        let mut s = 0.0f32;
+                        for dr in 0..k {
+                            for dc in 0..k {
+                                s += src[b * x.h * x.w + (orow * k + dr) * x.w + ocol * k + dc];
+                            }
+                        }
+                        dst[b * oh * ow + orow * ow + ocol] = s * inv;
+                    }
+                }
+            }
+        }
+        self.cache = Some((x.h, x.w, x.batch));
+        Act::from_image(y, x.batch, oh, ow)
+    }
+
+    pub fn backward(&mut self, dy: &Act) -> Act {
+        let (h, w, batch) = self.cache.expect("AvgPool backward without forward");
+        let k = self.kernel;
+        let (oh, ow) = (dy.h, dy.w);
+        let inv = 1.0 / (k * k) as f32;
+        let mut dx = Mat::zeros(dy.channels(), batch * h * w);
+        for ch in 0..dy.channels() {
+            let src = dy.mat.row(ch);
+            let dst = dx.row_mut(ch);
+            for b in 0..batch {
+                for orow in 0..oh {
+                    for ocol in 0..ow {
+                        let g = src[b * oh * ow + orow * ow + ocol] * inv;
+                        for dr in 0..k {
+                            for dc in 0..k {
+                                dst[b * h * w + (orow * k + dr) * w + ocol * k + dc] += g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Act::from_image(dx, batch, h, w)
+    }
+}
+
+/// Max pooling with stride == kernel.
+#[derive(Clone, Debug)]
+pub struct MaxPool {
+    pub kernel: usize,
+    cache: Option<(Vec<usize>, usize, usize, usize)>, // (argmax per out, h, w, batch)
+}
+
+impl MaxPool {
+    pub fn new(kernel: usize) -> MaxPool {
+        MaxPool { kernel, cache: None }
+    }
+
+    pub fn forward(&mut self, x: &Act, _train: bool) -> Act {
+        let k = self.kernel;
+        assert!(x.h >= k && x.w >= k, "MaxPool input smaller than kernel");
+        let (oh, ow) = (x.h / k, x.w / k);
+        let c = x.channels();
+        let mut y = Mat::zeros(c, x.batch * oh * ow);
+        let mut argmax = vec![0usize; c * x.batch * oh * ow];
+        for ch in 0..c {
+            let src = x.mat.row(ch);
+            let dst = y.row_mut(ch);
+            for b in 0..x.batch {
+                for orow in 0..oh {
+                    for ocol in 0..ow {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut best_idx = 0usize;
+                        for dr in 0..k {
+                            for dc in 0..k {
+                                let idx = b * x.h * x.w + (orow * k + dr) * x.w + ocol * k + dc;
+                                if src[idx] > best {
+                                    best = src[idx];
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        let o = b * oh * ow + orow * ow + ocol;
+                        dst[o] = best;
+                        argmax[ch * x.batch * oh * ow + o] = best_idx;
+                    }
+                }
+            }
+        }
+        self.cache = Some((argmax, x.h, x.w, x.batch));
+        Act::from_image(y, x.batch, oh, ow)
+    }
+
+    pub fn backward(&mut self, dy: &Act) -> Act {
+        let (argmax, h, w, batch) = self.cache.as_ref().expect("MaxPool backward");
+        let c = dy.channels();
+        let os = dy.h * dy.w;
+        let mut dx = Mat::zeros(c, batch * h * w);
+        for ch in 0..c {
+            let src = dy.mat.row(ch);
+            for o in 0..batch * os {
+                dx.row_mut(ch)[argmax[ch * batch * os + o]] += src[o];
+            }
+        }
+        Act::from_image(dx, *batch, *h, *w)
+    }
+}
+
+/// Global average pooling to 1×1.
+#[derive(Clone, Debug, Default)]
+pub struct GlobalAvgPool {
+    cache: Option<(usize, usize, usize)>,
+}
+
+impl GlobalAvgPool {
+    pub fn new() -> GlobalAvgPool {
+        GlobalAvgPool { cache: None }
+    }
+
+    pub fn forward(&mut self, x: &Act, _train: bool) -> Act {
+        let s = x.spatial();
+        let mut y = Mat::zeros(x.channels(), x.batch);
+        for ch in 0..x.channels() {
+            let src = x.mat.row(ch);
+            let dst = y.row_mut(ch);
+            for b in 0..x.batch {
+                dst[b] = src[b * s..(b + 1) * s].iter().sum::<f32>() / s as f32;
+            }
+        }
+        self.cache = Some((x.h, x.w, x.batch));
+        Act::from_image(y, x.batch, 1, 1)
+    }
+
+    pub fn backward(&mut self, dy: &Act) -> Act {
+        let (h, w, batch) = self.cache.expect("GlobalAvgPool backward");
+        let s = h * w;
+        let inv = 1.0 / s as f32;
+        let mut dx = Mat::zeros(dy.channels(), batch * s);
+        for ch in 0..dy.channels() {
+            let src = dy.mat.row(ch);
+            let dst = dx.row_mut(ch);
+            for b in 0..batch {
+                let g = src[b] * inv;
+                for v in &mut dst[b * s..(b + 1) * s] {
+                    *v = g;
+                }
+            }
+        }
+        Act::from_image(dx, batch, h, w)
+    }
+}
+
+/// Flatten image activations into feature activations.
+#[derive(Clone, Debug, Default)]
+pub struct Flatten {
+    cache: Option<(usize, usize, usize)>, // (c, h, w)
+}
+
+impl Flatten {
+    pub fn new() -> Flatten {
+        Flatten { cache: None }
+    }
+
+    pub fn forward(&mut self, x: &Act, _train: bool) -> Act {
+        self.cache = Some((x.channels(), x.h, x.w));
+        x.flatten()
+    }
+
+    pub fn backward(&mut self, dy: &Act) -> Act {
+        let (c, h, w) = self.cache.expect("Flatten backward");
+        dy.unflatten(c, h, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::engine::EngineKind;
+    use crate::nn::model::BackwardCtx;
+    use crate::util::prop::assert_close;
+    use crate::util::Rng;
+
+    fn fd_check_scalar<F: FnMut(&Act) -> f32>(
+        x: &Act,
+        dx: &Act,
+        mut f: F,
+        eps: f32,
+        tol: f32,
+    ) {
+        // Directional finite-difference against analytic dx for a handful of
+        // coordinates.
+        let n = x.mat.data.len();
+        for probe in [0usize, n / 3, n / 2, n - 1] {
+            let mut xp = x.clone();
+            xp.mat.data[probe] += eps;
+            let mut xm = x.clone();
+            xm.mat.data[probe] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            let an = dx.mat.data[probe];
+            assert!((fd - an).abs() < tol * (1.0 + fd.abs()), "probe {probe}: fd {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn relu_backward_masks() {
+        let mut r = Relu::new();
+        let x = Act::from_features(Mat::from_slice(2, 2, &[1.0, -2.0, 0.5, -0.1]), 2);
+        let y = r.forward(&x, true);
+        assert_eq!(y.mat.data, vec![1.0, 0.0, 0.5, 0.0]);
+        let dy = Act::from_features(Mat::from_slice(2, 2, &[1.0; 4]), 2);
+        let dx = r.backward(&dy);
+        assert_eq!(dx.mat.data, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn linear_fd_gradcheck() {
+        let mut rng = Rng::new(1);
+        let mut lin = Linear::new(ProjEngine::new(EngineKind::Digital, 3, 4, &mut rng));
+        let x = Act::from_features(Mat::randn(4, 2, 1.0, &mut rng), 2);
+        // Loss = sum(y²)/2 ⇒ dy = y.
+        let y = lin.forward(&x, true);
+        let mut ctx = BackwardCtx::plain(Rng::new(2));
+        let dx = lin.backward(&y, &mut ctx);
+        let mut lin2 = lin.clone();
+        fd_check_scalar(
+            &x,
+            &dx,
+            |xx| {
+                let yy = lin2.forward(xx, false);
+                0.5 * yy.mat.data.iter().map(|v| v * v).sum::<f32>()
+            },
+            1e-3,
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn conv_fd_gradcheck() {
+        let mut rng = Rng::new(3);
+        let eng = ProjEngine::new(EngineKind::Digital, 3, 2 * 9, &mut rng);
+        let mut conv = Conv2d::new(eng, 2, 3, 3, 1, 1);
+        let x = Act::from_nchw(
+            &(0..2 * 2 * 4 * 4).map(|_| rng.normal() as f32).collect::<Vec<_>>(),
+            2,
+            2,
+            4,
+            4,
+        );
+        let y = conv.forward(&x, true);
+        assert_eq!((y.channels(), y.h, y.w), (3, 4, 4));
+        let mut ctx = BackwardCtx::plain(Rng::new(4));
+        let dx = conv.backward(&y, &mut ctx);
+        let mut c2 = conv.clone();
+        fd_check_scalar(
+            &x,
+            &dx,
+            |xx| {
+                let yy = c2.forward(xx, false);
+                0.5 * yy.mat.data.iter().map(|v| v * v).sum::<f32>()
+            },
+            1e-3,
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn batchnorm_normalizes_and_gradchecks() {
+        let mut rng = Rng::new(5);
+        let mut bn = BatchNorm::new(3);
+        let x = Act::from_features(Mat::randn(3, 50, 2.0, &mut rng), 50);
+        let y = bn.forward(&x, true);
+        for ch in 0..3 {
+            let row = y.mat.row(ch);
+            let m: f32 = row.iter().sum::<f32>() / 50.0;
+            let v: f32 = row.iter().map(|a| (a - m) * (a - m)).sum::<f32>() / 50.0;
+            assert!(m.abs() < 1e-4, "mean {m}");
+            assert!((v - 1.0).abs() < 1e-3, "var {v}");
+        }
+        // Gradient check through the same loss.
+        let dy = y.clone();
+        let dx = bn.backward(&dy);
+        let mut bn2 = bn.clone();
+        fd_check_scalar(
+            &x,
+            &dx,
+            |xx| {
+                let yy = bn2.forward(xx, true);
+                0.5 * yy.mat.data.iter().map(|v| v * v).sum::<f32>()
+            },
+            1e-2,
+            5e-2,
+        );
+    }
+
+    #[test]
+    fn avgpool_roundtrip() {
+        let mut p = AvgPool::new(2);
+        let x = Act::from_nchw(&(0..16).map(|i| i as f32).collect::<Vec<_>>(), 1, 1, 4, 4);
+        let y = p.forward(&x, true);
+        assert_eq!((y.h, y.w), (2, 2));
+        assert_eq!(y.mat.data[0], (0.0 + 1.0 + 4.0 + 5.0) / 4.0);
+        let dy = Act::from_image(Mat::from_slice(1, 4, &[4.0; 4]), 1, 2, 2);
+        let dx = p.backward(&dy);
+        assert!(dx.mat.data.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn maxpool_routes_gradient() {
+        let mut p = MaxPool::new(2);
+        let x = Act::from_nchw(&[1.0, 2.0, 3.0, 9.0], 1, 1, 2, 2);
+        let y = p.forward(&x, true);
+        assert_eq!(y.mat.data, vec![9.0]);
+        let dy = Act::from_image(Mat::from_slice(1, 1, &[5.0]), 1, 1, 1);
+        let dx = p.backward(&dy);
+        assert_eq!(dx.mat.data, vec![0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn global_avg_pool() {
+        let mut p = GlobalAvgPool::new();
+        let x = Act::from_nchw(&[1.0, 3.0, 5.0, 7.0], 1, 1, 2, 2);
+        let y = p.forward(&x, true);
+        assert_eq!(y.mat.data, vec![4.0]);
+        let dx = p.backward(&Act::from_image(Mat::from_slice(1, 1, &[8.0]), 1, 1, 1));
+        assert_eq!(dx.mat.data, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut rng = Rng::new(6);
+        let mut f = Flatten::new();
+        let x = Act::from_nchw(
+            &(0..2 * 3 * 2 * 2).map(|_| rng.normal() as f32).collect::<Vec<_>>(),
+            2,
+            3,
+            2,
+            2,
+        );
+        let y = f.forward(&x, true);
+        assert_eq!((y.mat.rows, y.batch), (12, 2));
+        let dx = f.backward(&y);
+        assert_close(&dx.mat.data, &x.mat.data, 0.0, 0.0).unwrap();
+    }
+}

@@ -1,0 +1,117 @@
+//! Softmax cross-entropy loss and classification accuracy over
+//! feature-major logits [classes, batch].
+
+use crate::linalg::Mat;
+
+/// Numerically-stable softmax cross-entropy. Returns (mean loss, dlogits)
+/// where dlogits already carries the 1/B factor.
+pub fn softmax_cross_entropy(logits: &Mat, labels: &[usize]) -> (f32, Mat) {
+    let (c, b) = (logits.rows, logits.cols);
+    assert_eq!(labels.len(), b, "labels/batch mismatch");
+    let mut dl = Mat::zeros(c, b);
+    let mut loss = 0.0f64;
+    let inv_b = 1.0 / b as f32;
+    for col in 0..b {
+        let mut maxv = f32::NEG_INFINITY;
+        for r in 0..c {
+            maxv = maxv.max(logits[(r, col)]);
+        }
+        let mut z = 0.0f32;
+        for r in 0..c {
+            z += (logits[(r, col)] - maxv).exp();
+        }
+        let logz = z.ln();
+        let y = labels[col];
+        assert!(y < c, "label {y} out of range {c}");
+        loss += (logz - (logits[(y, col)] - maxv)) as f64;
+        for r in 0..c {
+            let p = (logits[(r, col)] - maxv).exp() / z;
+            dl[(r, col)] = (p - if r == y { 1.0 } else { 0.0 }) * inv_b;
+        }
+    }
+    ((loss / b as f64) as f32, dl)
+}
+
+/// Top-1 accuracy of logits against labels.
+pub fn accuracy(logits: &Mat, labels: &[usize]) -> f32 {
+    let (c, b) = (logits.rows, logits.cols);
+    let mut correct = 0usize;
+    for col in 0..b {
+        let mut best = 0usize;
+        let mut bestv = f32::NEG_INFINITY;
+        for r in 0..c {
+            if logits[(r, col)] > bestv {
+                bestv = logits[(r, col)];
+                best = r;
+            }
+        }
+        if best == labels[col] {
+            correct += 1;
+        }
+    }
+    correct as f32 / b as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn perfect_prediction_low_loss() {
+        let mut logits = Mat::zeros(3, 2);
+        logits[(0, 0)] = 10.0;
+        logits[(2, 1)] = 10.0;
+        let (loss, _) = softmax_cross_entropy(&logits, &[0, 2]);
+        assert!(loss < 1e-3, "loss {loss}");
+        assert_eq!(accuracy(&logits, &[0, 2]), 1.0);
+        assert_eq!(accuracy(&logits, &[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn uniform_logits_loss_is_log_c() {
+        let logits = Mat::zeros(10, 4);
+        let (loss, _) = softmax_cross_entropy(&logits, &[0, 3, 5, 9]);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Rng::new(1);
+        let logits = Mat::randn(5, 3, 1.0, &mut rng);
+        let labels = vec![1usize, 4, 0];
+        let (_, dl) = softmax_cross_entropy(&logits, &labels);
+        let eps = 1e-3f32;
+        for probe in [0usize, 7, 14] {
+            let mut lp = logits.clone();
+            lp.data[probe] += eps;
+            let mut lm = logits.clone();
+            lm.data[probe] -= eps;
+            let (fp, _) = softmax_cross_entropy(&lp, &labels);
+            let (fm, _) = softmax_cross_entropy(&lm, &labels);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - dl.data[probe]).abs() < 1e-3, "probe {probe}");
+        }
+    }
+
+    #[test]
+    fn gradient_sums_to_zero_per_column() {
+        let mut rng = Rng::new(2);
+        let logits = Mat::randn(7, 4, 2.0, &mut rng);
+        let (_, dl) = softmax_cross_entropy(&logits, &[0, 1, 2, 3]);
+        for col in 0..4 {
+            let s: f32 = (0..7).map(|r| dl[(r, col)]).sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn stability_with_large_logits() {
+        let mut logits = Mat::zeros(3, 1);
+        logits[(0, 0)] = 1e4;
+        logits[(1, 0)] = -1e4;
+        let (loss, dl) = softmax_cross_entropy(&logits, &[0]);
+        assert!(loss.is_finite());
+        assert!(dl.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,26 @@
+//! Neural-network layer substrate with explicit backward passes.
+//!
+//! Activations flow in *feature-major* layout (`Act`: a [C, B·H·W] matrix
+//! plus NCHW metadata) because the photonic mesh consumes column panels —
+//! this is the same layout the im2col lowering produces, so the sampling
+//! machinery (§3.4.2) can mask matrix columns directly.
+//!
+//! Every projection layer (Linear/Conv2d) is generic over a projection
+//! engine (`engine::ProjEngine`): `Digital` (dense weights, full-space
+//! autograd — used for software pretraining and as the noise-free baseline)
+//! or `Photonic` (a `PtcMesh`; only Σ receives gradients — the restricted
+//! subspace of §3.4).
+
+pub mod act;
+pub mod engine;
+pub mod layers;
+pub mod loss;
+pub mod model;
+pub mod models;
+
+pub use act::Act;
+pub use engine::{EngineKind, ProjEngine};
+pub use layers::Layer;
+pub use loss::{accuracy, softmax_cross_entropy};
+pub use model::{BackwardCtx, Model, Node, ParamKey};
+pub use models::{build_model, ModelArch};

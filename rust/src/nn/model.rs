@@ -1,0 +1,345 @@
+//! Model graph: a sequence of nodes, where a node is either a plain layer or
+//! a residual block (body + optional shortcut) — enough graph structure for
+//! the paper's model zoo (MLP, CNN-S, CNN-L, VGG-8, ResNet-18).
+
+use super::act::Act;
+use super::engine::ProjEngine;
+use super::layers::Layer;
+use crate::optim::Optimizer;
+use crate::sampling::{ColumnSampler, FeedbackMask, FeedbackSampler};
+use crate::util::Rng;
+
+/// Sampling context threaded through a backward pass (one per iteration).
+#[derive(Clone, Debug)]
+pub struct BackwardCtx {
+    /// Feedback-matrix sampler (None = dense feedback).
+    pub feedback: Option<FeedbackSampler>,
+    /// Feature sampler (CS / SS / off).
+    pub feature: ColumnSampler,
+    pub rng: Rng,
+}
+
+impl BackwardCtx {
+    /// Dense backward, no sampling.
+    pub fn plain(rng: Rng) -> BackwardCtx {
+        BackwardCtx { feedback: None, feature: ColumnSampler::OFF, rng }
+    }
+
+    /// Draw a feedback mask sized for `engine`'s block grid.
+    pub fn draw_feedback(&mut self, engine: &ProjEngine) -> Option<FeedbackMask> {
+        match self.feedback {
+            None => None,
+            Some(sampler) => {
+                let (p, q, norms) = engine.block_norms();
+                Some(sampler.draw(p, q, &norms, &mut self.rng))
+            }
+        }
+    }
+}
+
+/// A node in the model graph.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Plain(Layer),
+    /// out = body(x) + shortcut(x); empty shortcut = identity skip.
+    Residual { body: Vec<Node>, shortcut: Vec<Node> },
+}
+
+/// Stable identifier of one parameter tensor (traversal order).
+pub type ParamKey = usize;
+
+/// A trainable model.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub nodes: Vec<Node>,
+    pub name: String,
+}
+
+impl Model {
+    pub fn new(name: &str, nodes: Vec<Node>) -> Model {
+        Model { nodes, name: name.to_string() }
+    }
+
+    pub fn forward(&mut self, x: &Act, train: bool) -> Act {
+        forward_nodes(&mut self.nodes, x, train)
+    }
+
+    pub fn backward(&mut self, dy: &Act, ctx: &mut BackwardCtx) -> Act {
+        backward_nodes(&mut self.nodes, dy, ctx)
+    }
+
+    /// Visit every layer depth-first (stable order).
+    pub fn for_each_layer<F: FnMut(&mut Layer)>(&mut self, mut f: F) {
+        fn rec<F: FnMut(&mut Layer)>(nodes: &mut [Node], f: &mut F) {
+            for n in nodes {
+                match n {
+                    Node::Plain(l) => f(l),
+                    Node::Residual { body, shortcut } => {
+                        rec(body, f);
+                        rec(shortcut, f);
+                    }
+                }
+            }
+        }
+        rec(&mut self.nodes, &mut f);
+    }
+
+    /// Zero all gradient accumulators.
+    pub fn zero_grad(&mut self) {
+        self.for_each_layer(|l| {
+            if let Some(e) = l.engine_mut() {
+                e.zero_grad();
+            }
+            match l {
+                Layer::Linear(lin) => lin.grad_bias.fill(0.0),
+                Layer::Conv2d(c) => c.grad_bias.fill(0.0),
+                Layer::BatchNorm(bn) => {
+                    bn.grad_gamma.fill(0.0);
+                    bn.grad_beta.fill(0.0);
+                }
+                _ => {}
+            }
+        });
+    }
+
+    /// Apply one optimizer step to every trainable tensor. Weight decay is
+    /// applied to projection weights/Σ only (not biases or BN affine).
+    pub fn step(&mut self, opt: &mut dyn Optimizer) {
+        let mut key: ParamKey = 0;
+        self.for_each_layer(|l| {
+            if let Some(e) = l.engine_mut() {
+                match e {
+                    ProjEngine::Digital { w, grad_w, .. } => {
+                        opt.step(key, &mut w.data, &grad_w.data, true);
+                    }
+                    ProjEngine::Photonic { mesh, grad_sigma, .. } => {
+                        let mut sigma = mesh.sigma_flat();
+                        opt.step(key, &mut sigma, grad_sigma, true);
+                        mesh.set_sigma_flat(&sigma);
+                    }
+                }
+                key += 1;
+            }
+            match l {
+                Layer::Linear(lin) => {
+                    opt.step(key, &mut lin.bias, &lin.grad_bias.clone(), false);
+                    key += 1;
+                }
+                Layer::Conv2d(c) => {
+                    opt.step(key, &mut c.bias, &c.grad_bias.clone(), false);
+                    key += 1;
+                }
+                Layer::BatchNorm(bn) => {
+                    opt.step(key, &mut bn.gamma, &bn.grad_gamma.clone(), false);
+                    key += 1;
+                    opt.step(key, &mut bn.beta, &bn.grad_beta.clone(), false);
+                    key += 1;
+                }
+                _ => {}
+            }
+        });
+    }
+
+    /// (trainable parameter count, total parameter count). For photonic
+    /// engines trainable = Σ values (the restricted subspace); total counts
+    /// the full dense-equivalent weight (what the paper's "#Params" reports).
+    pub fn param_counts(&mut self) -> (usize, usize) {
+        let mut trainable = 0usize;
+        let mut total = 0usize;
+        self.for_each_layer(|l| {
+            if let Some(e) = l.engine_mut() {
+                match e {
+                    ProjEngine::Digital { w, .. } => {
+                        trainable += w.data.len();
+                        total += w.data.len();
+                    }
+                    ProjEngine::Photonic { mesh, .. } => {
+                        trainable += mesh.n_sigma();
+                        total += mesh.rows * mesh.cols;
+                    }
+                }
+            }
+            match l {
+                Layer::Linear(lin) => {
+                    trainable += lin.bias.len();
+                    total += lin.bias.len();
+                }
+                Layer::Conv2d(c) => {
+                    trainable += c.bias.len();
+                    total += c.bias.len();
+                }
+                Layer::BatchNorm(bn) => {
+                    trainable += 2 * bn.gamma.len();
+                    total += 2 * bn.gamma.len();
+                }
+                _ => {}
+            }
+        });
+        (trainable, total)
+    }
+
+    /// Clear cached forward state in every layer.
+    pub fn clear_caches(&mut self) {
+        self.for_each_layer(|l| l.clear_cache());
+    }
+
+    /// Sum of hardware-op statistics over all photonic meshes.
+    pub fn mesh_stats(&mut self) -> crate::photonics::mesh::MeshStats {
+        let mut acc = crate::photonics::mesh::MeshStats::default();
+        self.for_each_layer(|l| {
+            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+                acc.add(&mesh.stats);
+            }
+        });
+        acc
+    }
+
+    /// Reset hardware-op statistics.
+    pub fn reset_mesh_stats(&mut self) {
+        self.for_each_layer(|l| {
+            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+                mesh.stats = Default::default();
+            }
+        });
+    }
+}
+
+fn forward_nodes(nodes: &mut [Node], x: &Act, train: bool) -> Act {
+    let mut cur = x.clone();
+    for n in nodes.iter_mut() {
+        cur = match n {
+            Node::Plain(l) => l.forward(&cur, train),
+            Node::Residual { body, shortcut } => {
+                let main = forward_nodes(body, &cur, train);
+                let skip = if shortcut.is_empty() {
+                    cur.clone()
+                } else {
+                    forward_nodes(shortcut, &cur, train)
+                };
+                assert_eq!(
+                    (main.mat.rows, main.mat.cols),
+                    (skip.mat.rows, skip.mat.cols),
+                    "residual shape mismatch"
+                );
+                Act { mat: main.mat.add(&skip.mat), ..main }
+            }
+        };
+    }
+    cur
+}
+
+fn backward_nodes(nodes: &mut [Node], dy: &Act, ctx: &mut BackwardCtx) -> Act {
+    let mut cur = dy.clone();
+    for n in nodes.iter_mut().rev() {
+        cur = match n {
+            Node::Plain(l) => l.backward(&cur, ctx),
+            Node::Residual { body, shortcut } => {
+                let d_main = backward_nodes(body, &cur, ctx);
+                let d_skip = if shortcut.is_empty() {
+                    cur.clone()
+                } else {
+                    backward_nodes(shortcut, &cur, ctx)
+                };
+                Act { mat: d_main.mat.add(&d_skip.mat), ..d_main }
+            }
+        };
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::nn::engine::EngineKind;
+    use crate::nn::layers::{Linear, Relu};
+    use crate::nn::loss::softmax_cross_entropy;
+    use crate::optim::Sgd;
+
+    fn tiny_mlp(rng: &mut Rng) -> Model {
+        Model::new(
+            "tiny",
+            vec![
+                Node::Plain(Layer::Linear(Linear::new(ProjEngine::new(
+                    EngineKind::Digital,
+                    8,
+                    4,
+                    rng,
+                )))),
+                Node::Plain(Layer::Relu(Relu::new())),
+                Node::Plain(Layer::Linear(Linear::new(ProjEngine::new(
+                    EngineKind::Digital,
+                    3,
+                    8,
+                    rng,
+                )))),
+            ],
+        )
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_toy_task() {
+        let mut rng = Rng::new(1);
+        let mut model = tiny_mlp(&mut rng);
+        let x = Act::from_features(Mat::randn(4, 16, 1.0, &mut rng), 16);
+        let labels: Vec<usize> = (0..16).map(|i| i % 3).collect();
+        let mut opt = Sgd::new(0.5, 0.9, 0.0);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for it in 0..60 {
+            let logits = model.forward(&x, true);
+            let (loss, dl) = softmax_cross_entropy(&logits.mat, &labels);
+            if it == 0 {
+                first = loss;
+            }
+            last = loss;
+            model.zero_grad();
+            let mut ctx = BackwardCtx::plain(Rng::new(it as u64));
+            model.backward(&Act::from_features(dl, 16), &mut ctx);
+            model.step(&mut opt);
+        }
+        assert!(last < first * 0.3, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn residual_identity_gradient_splits() {
+        // Residual with empty body? Use body = [Relu] so shapes match; the
+        // skip must add dy to the body gradient.
+        let mut rng = Rng::new(2);
+        let mut model = Model::new(
+            "res",
+            vec![Node::Residual {
+                body: vec![Node::Plain(Layer::Relu(Relu::new()))],
+                shortcut: vec![],
+            }],
+        );
+        let x = Act::from_features(Mat::from_slice(2, 1, &[1.0, -1.0]), 1);
+        let y = model.forward(&x, true);
+        // y = relu(x) + x = [2, -1]
+        assert_eq!(y.mat.data, vec![2.0, -1.0]);
+        let dy = Act::from_features(Mat::from_slice(2, 1, &[1.0, 1.0]), 1);
+        let mut ctx = BackwardCtx::plain(Rng::new(3));
+        let dx = model.backward(&dy, &mut ctx);
+        // d/dx (relu(x)+x) = mask + 1 = [2, 1]
+        assert_eq!(dx.mat.data, vec![2.0, 1.0]);
+        let _ = rng.next_u32();
+    }
+
+    #[test]
+    fn param_counts_subspace_vs_full() {
+        let mut rng = Rng::new(3);
+        let mut m = Model::new(
+            "p",
+            vec![Node::Plain(Layer::Linear(Linear::new(ProjEngine::new(
+                EngineKind::Photonic { k: 3, noise: crate::photonics::NoiseModel::IDEAL },
+                9,
+                9,
+                &mut rng,
+            ))))],
+        );
+        let (tr, total) = m.param_counts();
+        // 3x3 grid of 3x3 blocks: sigma = 9 blocks * 3 = 27 (+9 bias), full = 81 (+9).
+        assert_eq!(tr, 27 + 9);
+        assert_eq!(total, 81 + 9);
+    }
+}

@@ -1,0 +1,304 @@
+//! The paper's model zoo (§4.1): MLP (8-16-16-4) for Vowel, CNN-S for MNIST,
+//! CNN-L for FashionMNIST, VGG-8 and ResNet-18 for CIFAR-10/100.
+//!
+//! Every architecture takes a width multiplier so the same topology can run
+//! full-size (paper scale) or scaled-down (CPU-budget experiments); the
+//! experiment harness records which width was used.
+
+use super::engine::{EngineKind, ProjEngine};
+use super::layers::{
+    AvgPool, BatchNorm, Conv2d, Flatten, GlobalAvgPool, Layer, Linear, MaxPool, Relu,
+};
+use super::model::{Model, Node};
+use crate::util::Rng;
+
+/// Architectures evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelArch {
+    /// 8-16-16-4 MLP (Vowel) [17].
+    MlpVowel,
+    /// CONV8K3S2-CONV6K3S2-FC10 (MNIST) [17].
+    CnnS,
+    /// {CONV64K3}×3-Pool5-FC10 (FashionMNIST).
+    CnnL,
+    /// VGG-8 (6 conv + 2 FC) for CIFAR.
+    Vgg8,
+    /// ResNet-18 (CIFAR variant).
+    ResNet18,
+}
+
+impl ModelArch {
+    pub fn parse(name: &str) -> Option<ModelArch> {
+        Some(match name {
+            "mlp" | "mlp-vowel" => ModelArch::MlpVowel,
+            "cnn-s" | "cnns" => ModelArch::CnnS,
+            "cnn-l" | "cnnl" => ModelArch::CnnL,
+            "vgg8" | "vgg-8" => ModelArch::Vgg8,
+            "resnet18" | "resnet-18" => ModelArch::ResNet18,
+            _ => return None,
+        })
+    }
+
+    /// (input channels, input H=W) expected by the architecture.
+    pub fn input_spec(&self) -> (usize, usize) {
+        match self {
+            ModelArch::MlpVowel => (8, 1), // feature vector of 8
+            ModelArch::CnnS => (1, 28),
+            ModelArch::CnnL => (1, 28),
+            ModelArch::Vgg8 | ModelArch::ResNet18 => (3, 32),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelArch::MlpVowel => "mlp-vowel",
+            ModelArch::CnnS => "cnn-s",
+            ModelArch::CnnL => "cnn-l",
+            ModelArch::Vgg8 => "vgg8",
+            ModelArch::ResNet18 => "resnet18",
+        }
+    }
+}
+
+fn scaled(c: usize, width: f32) -> usize {
+    ((c as f32 * width).round() as usize).max(4)
+}
+
+fn conv(
+    kind: EngineKind,
+    in_ch: usize,
+    out_ch: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    rng: &mut Rng,
+) -> Node {
+    let eng = ProjEngine::new(kind, out_ch, in_ch * k * k, rng);
+    Node::Plain(Layer::Conv2d(Conv2d::new(eng, in_ch, out_ch, k, stride, pad)))
+}
+
+fn linear(kind: EngineKind, inp: usize, out: usize, rng: &mut Rng) -> Node {
+    Node::Plain(Layer::Linear(Linear::new(ProjEngine::new(kind, out, inp, rng))))
+}
+
+fn bn(c: usize) -> Node {
+    Node::Plain(Layer::BatchNorm(BatchNorm::new(c)))
+}
+
+fn relu() -> Node {
+    Node::Plain(Layer::Relu(Relu::new()))
+}
+
+/// Build an architecture with the given projection engine kind, class count,
+/// and width multiplier.
+pub fn build_model(
+    arch: ModelArch,
+    kind: EngineKind,
+    classes: usize,
+    width: f32,
+    rng: &mut Rng,
+) -> Model {
+    match arch {
+        ModelArch::MlpVowel => {
+            let h = scaled(16, width);
+            Model::new(
+                arch.name(),
+                vec![
+                    linear(kind, 8, h, rng),
+                    relu(),
+                    linear(kind, h, h, rng),
+                    relu(),
+                    linear(kind, h, classes, rng),
+                ],
+            )
+        }
+        ModelArch::CnnS => {
+            let (c1, c2) = (scaled(8, width), scaled(6, width));
+            // 28 → 14 → 7 with k3 s2 p1.
+            Model::new(
+                arch.name(),
+                vec![
+                    conv(kind, 1, c1, 3, 2, 1, rng),
+                    bn(c1),
+                    relu(),
+                    conv(kind, c1, c2, 3, 2, 1, rng),
+                    bn(c2),
+                    relu(),
+                    Node::Plain(Layer::Flatten(Flatten::new())),
+                    linear(kind, c2 * 7 * 7, classes, rng),
+                ],
+            )
+        }
+        ModelArch::CnnL => {
+            let c = scaled(64, width);
+            let mut nodes = Vec::new();
+            let mut in_ch = 1;
+            for _ in 0..3 {
+                nodes.push(conv(kind, in_ch, c, 3, 1, 1, rng));
+                nodes.push(bn(c));
+                nodes.push(relu());
+                in_ch = c;
+            }
+            // 28 → Pool5 → 5 (floor division, matches stride=kernel pooling).
+            nodes.push(Node::Plain(Layer::AvgPool(AvgPool::new(5))));
+            nodes.push(Node::Plain(Layer::Flatten(Flatten::new())));
+            nodes.push(linear(kind, c * 5 * 5, classes, rng));
+            Model::new(arch.name(), nodes)
+        }
+        ModelArch::Vgg8 => {
+            // conv64-M-conv128-M-conv256x2-M-conv512x2-M, FC512, FCc — the
+            // common CIFAR VGG-8 (6 conv + 2 FC weighted layers) [8].
+            let (c1, c2, c3, c4) =
+                (scaled(64, width), scaled(128, width), scaled(256, width), scaled(512, width));
+            let mut n = Vec::new();
+            n.push(conv(kind, 3, c1, 3, 1, 1, rng));
+            n.push(bn(c1));
+            n.push(relu());
+            n.push(Node::Plain(Layer::MaxPool(MaxPool::new(2)))); // 32→16
+            n.push(conv(kind, c1, c2, 3, 1, 1, rng));
+            n.push(bn(c2));
+            n.push(relu());
+            n.push(Node::Plain(Layer::MaxPool(MaxPool::new(2)))); // 16→8
+            n.push(conv(kind, c2, c3, 3, 1, 1, rng));
+            n.push(bn(c3));
+            n.push(relu());
+            n.push(conv(kind, c3, c3, 3, 1, 1, rng));
+            n.push(bn(c3));
+            n.push(relu());
+            n.push(Node::Plain(Layer::MaxPool(MaxPool::new(2)))); // 8→4
+            n.push(conv(kind, c3, c4, 3, 1, 1, rng));
+            n.push(bn(c4));
+            n.push(relu());
+            n.push(conv(kind, c4, c4, 3, 1, 1, rng));
+            n.push(bn(c4));
+            n.push(relu());
+            n.push(Node::Plain(Layer::MaxPool(MaxPool::new(2)))); // 4→2
+            n.push(Node::Plain(Layer::GlobalAvgPool(GlobalAvgPool::new())));
+            n.push(Node::Plain(Layer::Flatten(Flatten::new())));
+            n.push(linear(kind, c4, scaled(512, width), rng));
+            n.push(relu());
+            n.push(linear(kind, scaled(512, width), classes, rng));
+            Model::new(arch.name(), n)
+        }
+        ModelArch::ResNet18 => {
+            let widths = [scaled(64, width), scaled(128, width), scaled(256, width),
+                scaled(512, width)];
+            let mut n = Vec::new();
+            n.push(conv(kind, 3, widths[0], 3, 1, 1, rng));
+            n.push(bn(widths[0]));
+            n.push(relu());
+            let mut in_ch = widths[0];
+            for (stage, &ch) in widths.iter().enumerate() {
+                let stride0 = if stage == 0 { 1 } else { 2 };
+                for blk in 0..2 {
+                    let stride = if blk == 0 { stride0 } else { 1 };
+                    n.push(basic_block(kind, in_ch, ch, stride, rng));
+                    n.push(relu());
+                    in_ch = ch;
+                }
+            }
+            n.push(Node::Plain(Layer::GlobalAvgPool(GlobalAvgPool::new())));
+            n.push(Node::Plain(Layer::Flatten(Flatten::new())));
+            n.push(linear(kind, in_ch, classes, rng));
+            Model::new(arch.name(), n)
+        }
+    }
+}
+
+/// ResNet basic block: conv-bn-relu-conv-bn with identity or 1×1 downsample.
+fn basic_block(
+    kind: EngineKind,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+    rng: &mut Rng,
+) -> Node {
+    let body = vec![
+        conv(kind, in_ch, out_ch, 3, stride, 1, rng),
+        bn(out_ch),
+        relu(),
+        conv(kind, out_ch, out_ch, 3, 1, 1, rng),
+        bn(out_ch),
+    ];
+    let shortcut = if stride != 1 || in_ch != out_ch {
+        vec![conv(kind, in_ch, out_ch, 1, stride, 0, rng), bn(out_ch)]
+    } else {
+        vec![]
+    };
+    Node::Residual { body, shortcut }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::nn::act::Act;
+    use crate::nn::model::BackwardCtx;
+
+    fn smoke(arch: ModelArch, classes: usize, width: f32) {
+        let mut rng = Rng::new(42);
+        let mut m = build_model(arch, EngineKind::Digital, classes, width, &mut rng);
+        let (c, hw) = arch.input_spec();
+        let b = 2;
+        let x = if hw == 1 {
+            Act::from_features(Mat::randn(c, b, 1.0, &mut rng), b)
+        } else {
+            Act::from_nchw(
+                &(0..b * c * hw * hw).map(|_| rng.normal() as f32).collect::<Vec<_>>(),
+                b,
+                c,
+                hw,
+                hw,
+            )
+        };
+        let y = m.forward(&x, true);
+        assert_eq!(y.mat.rows, classes, "{arch:?} logits");
+        assert_eq!(y.mat.cols, b);
+        assert!(y.mat.data.iter().all(|v| v.is_finite()), "{arch:?} NaN");
+        // Backward smoke.
+        let mut ctx = BackwardCtx::plain(Rng::new(1));
+        let dx = m.backward(&y, &mut ctx);
+        assert_eq!(dx.mat.rows, x.mat.rows, "{arch:?} dx");
+        assert!(dx.mat.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn mlp_shapes() {
+        smoke(ModelArch::MlpVowel, 4, 1.0);
+    }
+
+    #[test]
+    fn cnn_s_shapes() {
+        smoke(ModelArch::CnnS, 10, 1.0);
+    }
+
+    #[test]
+    fn cnn_l_shapes() {
+        smoke(ModelArch::CnnL, 10, 0.25);
+    }
+
+    #[test]
+    fn vgg8_shapes() {
+        smoke(ModelArch::Vgg8, 10, 0.125);
+    }
+
+    #[test]
+    fn resnet18_shapes() {
+        smoke(ModelArch::ResNet18, 10, 0.125);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(ModelArch::parse("vgg8"), Some(ModelArch::Vgg8));
+        assert_eq!(ModelArch::parse("resnet-18"), Some(ModelArch::ResNet18));
+        assert_eq!(ModelArch::parse("nope"), None);
+    }
+
+    #[test]
+    fn width_scaling_changes_params() {
+        let mut rng = Rng::new(1);
+        let mut a = build_model(ModelArch::CnnL, EngineKind::Digital, 10, 1.0, &mut rng);
+        let mut b = build_model(ModelArch::CnnL, EngineKind::Digital, 10, 0.25, &mut rng);
+        assert!(a.param_counts().1 > 4 * b.param_counts().1);
+    }
+}

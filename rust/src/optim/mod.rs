@@ -1,0 +1,225 @@
+//! First-order optimizers for the digital pretraining and the on-chip
+//! subspace-learning stage (§3.4: AdamW on Σ, lr 0.002, wd 0.01), plus the
+//! LR schedules the paper uses (cosine annealing for SL, exponential decay
+//! inside the ZOO stages).
+
+use std::collections::HashMap;
+
+/// A keyed, slice-oriented optimizer. Keys identify parameter tensors
+/// (stable traversal order from `Model::step`).
+pub trait Optimizer {
+    /// One update of `param` given `grad`; `decay` gates weight decay.
+    fn step(&mut self, key: usize, param: &mut [f32], grad: &[f32], decay: bool);
+    fn set_lr(&mut self, lr: f32);
+    fn lr(&self) -> f32;
+    /// Advance internal iteration counters (call once per optimizer step, not
+    /// per tensor) — only AdamW's bias correction cares.
+    fn tick(&mut self) {}
+}
+
+/// SGD with classical momentum and L2 weight decay.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: HashMap<usize, Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, weight_decay: f32) -> Sgd {
+        Sgd { lr, momentum, weight_decay, velocity: HashMap::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, key: usize, param: &mut [f32], grad: &[f32], decay: bool) {
+        assert_eq!(param.len(), grad.len(), "sgd grad size");
+        let v = self.velocity.entry(key).or_insert_with(|| vec![0.0; param.len()]);
+        assert_eq!(v.len(), param.len(), "sgd state size changed");
+        let wd = if decay { self.weight_decay } else { 0.0 };
+        for i in 0..param.len() {
+            let g = grad[i] + wd * param[i];
+            v[i] = self.momentum * v[i] + g;
+            param[i] -= self.lr * v[i];
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+}
+
+/// AdamW (decoupled weight decay) — the paper's subspace-learning optimizer.
+#[derive(Clone, Debug)]
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    t: i32,
+    m: HashMap<usize, Vec<f32>>,
+    v: HashMap<usize, Vec<f32>>,
+}
+
+impl AdamW {
+    pub fn new(lr: f32, weight_decay: f32) -> AdamW {
+        AdamW {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            t: 0,
+            m: HashMap::new(),
+            v: HashMap::new(),
+        }
+    }
+
+    /// The paper's SL-from-scratch setting (lr 0.002, wd 0.01).
+    pub fn paper_scratch() -> AdamW {
+        AdamW::new(0.002, 0.01)
+    }
+
+    /// The paper's SL-after-mapping setting (lr 0.0002).
+    pub fn paper_mapped() -> AdamW {
+        AdamW::new(0.0002, 0.01)
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(&mut self, key: usize, param: &mut [f32], grad: &[f32], decay: bool) {
+        assert_eq!(param.len(), grad.len(), "adamw grad size");
+        let t = (self.t.max(1)) as f32;
+        let m = self.m.entry(key).or_insert_with(|| vec![0.0; param.len()]);
+        let v = self.v.entry(key).or_insert_with(|| vec![0.0; param.len()]);
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let wd = if decay { self.weight_decay } else { 0.0 };
+        for i in 0..param.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            param[i] -= self.lr * (mhat / (vhat.sqrt() + self.eps) + wd * param[i]);
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn tick(&mut self) {
+        self.t += 1;
+    }
+}
+
+/// Learning-rate schedules.
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant,
+    /// Cosine annealing from lr0 to eta_min over total_steps.
+    Cosine { lr0: f32, eta_min: f32, total_steps: usize },
+    /// lr0 · decay^step.
+    Exponential { lr0: f32, decay: f32, floor: f32 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize, current: f32) -> f32 {
+        match *self {
+            LrSchedule::Constant => current,
+            LrSchedule::Cosine { lr0, eta_min, total_steps } => {
+                let t = (step as f32 / total_steps.max(1) as f32).min(1.0);
+                eta_min + 0.5 * (lr0 - eta_min) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+            LrSchedule::Exponential { lr0, decay, floor } => {
+                (lr0 * decay.powi(step as i32)).max(floor)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(x) = ½‖x − c‖² with each optimizer; both must converge.
+    fn quad_converges(opt: &mut dyn Optimizer) -> f32 {
+        let c = [3.0f32, -2.0, 0.5];
+        let mut x = [0.0f32; 3];
+        for _ in 0..500 {
+            opt.tick();
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| xi - ci).collect();
+            opt.step(0, &mut x, &g, false);
+        }
+        x.iter().zip(&c).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut opt = Sgd::new(0.1, 0.9, 0.0);
+        assert!(quad_converges(&mut opt) < 1e-3);
+    }
+
+    #[test]
+    fn adamw_converges_on_quadratic() {
+        let mut opt = AdamW::new(0.05, 0.0);
+        assert!(quad_converges(&mut opt) < 1e-2);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut opt = Sgd::new(0.1, 0.0, 0.5);
+        let mut x = [1.0f32];
+        opt.step(0, &mut x, &[0.0], true);
+        assert!(x[0] < 1.0);
+        let mut y = [1.0f32];
+        opt.step(1, &mut y, &[0.0], false); // decay gated off
+        assert_eq!(y[0], 1.0);
+    }
+
+    #[test]
+    fn adamw_decoupled_decay() {
+        // With zero gradient, AdamW still decays the weight by lr·wd·w.
+        let mut opt = AdamW::new(0.01, 0.1);
+        opt.tick();
+        let mut x = [2.0f32];
+        opt.step(0, &mut x, &[0.0], true);
+        assert!((x[0] - (2.0 - 0.01 * 0.1 * 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        let s = LrSchedule::Cosine { lr0: 1.0, eta_min: 0.1, total_steps: 100 };
+        assert!((s.at(0, 0.0) - 1.0).abs() < 1e-6);
+        assert!((s.at(100, 0.0) - 0.1).abs() < 1e-6);
+        assert!(s.at(50, 0.0) < 1.0 && s.at(50, 0.0) > 0.1);
+    }
+
+    #[test]
+    fn exponential_schedule_floors() {
+        let s = LrSchedule::Exponential { lr0: 1.0, decay: 0.5, floor: 0.1 };
+        assert_eq!(s.at(0, 0.0), 1.0);
+        assert_eq!(s.at(1, 0.0), 0.5);
+        assert_eq!(s.at(10, 0.0), 0.1);
+    }
+
+    #[test]
+    fn distinct_keys_have_distinct_state() {
+        let mut opt = Sgd::new(0.1, 0.9, 0.0);
+        let mut a = [0.0f32];
+        let mut b = [0.0f32];
+        opt.step(0, &mut a, &[1.0], false);
+        opt.step(1, &mut b, &[-1.0], false);
+        assert!(a[0] < 0.0 && b[0] > 0.0);
+    }
+}

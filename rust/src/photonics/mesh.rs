@@ -1,0 +1,590 @@
+//! The P×Q blocked photonic mesh realizing an M×N weight matrix out of k×k
+//! PTCs (paper §3.1, Eq. 1). Implements blocked forward, the in-situ
+//! subspace gradient of Eq. 5, masked error feedback (balanced feedback
+//! sampling, §3.4.2), OSP-based mapping from a dense weight, and the
+//! PTC-call statistics the Appendix-G cost model consumes.
+
+use super::noise::NoiseModel;
+use super::ptc::Ptc;
+use super::unitary::ReckMesh;
+use crate::linalg::{matmul_acc, svd_kxk, Mat};
+use crate::util::Rng;
+
+/// Raw hardware-op counters (Appendix G cost model, measured not estimated):
+/// `*_block_cols` are PTC calls — the normalized *energy* indicator —
+/// and `*_steps` accumulate the longest sequential accumulation path — the
+/// normalized *latency* indicator (k adders per PTC, sequential cross-PTC
+/// reduction, massively parallel PTCs).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MeshStats {
+    /// Forward k×k·(k-column group) products issued (ℒ energy).
+    pub fwd_block_cols: u64,
+    /// Reciprocal PTC calls for σ-gradient acquisition — Eq. 5 needs 2 per
+    /// block-column group (∇_Σℒ energy).
+    pub grad_block_cols: u64,
+    /// Feedback (Wᵀ·dy) block products issued after masking (∇_xℒ energy).
+    pub feedback_block_cols: u64,
+    /// Forward steps: per column group, 1 PTC call + Q sequential partial
+    /// accumulations (parallel over P).
+    pub fwd_steps: u64,
+    /// σ-gradient steps: 2 reciprocal passes per kept column group + 1
+    /// Hadamard step.
+    pub grad_steps: u64,
+    /// Feedback steps: per column group, 1 + longest kept accumulation row
+    /// (the load-balance-critical quantity of Fig. 7).
+    pub feedback_steps: u64,
+}
+
+impl MeshStats {
+    pub fn add(&mut self, o: &MeshStats) {
+        self.fwd_block_cols += o.fwd_block_cols;
+        self.grad_block_cols += o.grad_block_cols;
+        self.feedback_block_cols += o.feedback_block_cols;
+        self.fwd_steps += o.fwd_steps;
+        self.grad_steps += o.grad_steps;
+        self.feedback_steps += o.feedback_steps;
+    }
+
+    /// Total PTC-call energy.
+    pub fn total_energy(&self) -> u64 {
+        self.fwd_block_cols + self.grad_block_cols + self.feedback_block_cols
+    }
+
+    /// Total accumulation-path steps.
+    pub fn total_steps(&self) -> u64 {
+        self.fwd_steps + self.grad_steps + self.feedback_steps
+    }
+}
+
+/// A blocked photonic mesh for an `rows`×`cols` weight.
+#[derive(Clone, Debug)]
+pub struct PtcMesh {
+    pub rows: usize,
+    pub cols: usize,
+    pub k: usize,
+    /// ceil(rows/k)
+    pub p: usize,
+    /// ceil(cols/k)
+    pub q: usize,
+    /// Row-major [p][q] PTC array.
+    pub ptcs: Vec<Ptc>,
+    pub noise: NoiseModel,
+    pub stats: MeshStats,
+    /// Cached realized block matrices (invalidated with the PTC caches).
+    w_cache: Option<Vec<Mat>>,
+}
+
+impl PtcMesh {
+    pub fn new(rows: usize, cols: usize, k: usize, noise: NoiseModel, rng: &mut Rng) -> PtcMesh {
+        assert!(k >= 2, "block size must be ≥ 2");
+        let p = rows.div_ceil(k);
+        let q = cols.div_ceil(k);
+        let ptcs = (0..p * q).map(|_| Ptc::new(k, noise, rng)).collect();
+        PtcMesh { rows, cols, k, p, q, ptcs, noise, stats: MeshStats::default(), w_cache: None }
+    }
+
+    #[inline]
+    pub fn ptc(&self, pi: usize, qi: usize) -> &Ptc {
+        &self.ptcs[pi * self.q + qi]
+    }
+
+    #[inline]
+    pub fn ptc_mut(&mut self, pi: usize, qi: usize) -> &mut Ptc {
+        self.w_cache = None;
+        &mut self.ptcs[pi * self.q + qi]
+    }
+
+    /// Invalidate realized-weight caches (call after any phase programming).
+    pub fn invalidate(&mut self) {
+        self.w_cache = None;
+    }
+
+    /// Program the mesh from a dense pretrained weight: per-block SVD,
+    /// Reck-decompose the singular vectors into phases, program Σ. This is
+    /// the *ideal-parametrization initialization* of Algorithm 1 step 1; with
+    /// noise on, the realized mesh will deviate and PM refines it.
+    pub fn program_from_dense(&mut self, w: &Mat) {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols), "program_from_dense shape");
+        let k = self.k;
+        for pi in 0..self.p {
+            for qi in 0..self.q {
+                let blk = w.block(pi * k, qi * k, k);
+                let svd = svd_kxk(&blk);
+                // Eq. 8 parametrization: U = D·ΠR. The D diagonals are extra
+                // output-side π shifters, programmed alongside the phases.
+                let mu = ReckMesh::decompose(&svd.u);
+                let mv = ReckMesh::decompose(&svd.vt);
+                let maxabs = svd.s.iter().fold(0.0f32, |m, s| m.max(s.abs()));
+                let ptc = self.ptc_mut(pi, qi);
+                ptc.u_mesh.d = mu.d;
+                ptc.v_mesh.d = mv.d;
+                ptc.set_phases(super::ptc::Which::U, &mu.phases);
+                ptc.set_phases(super::ptc::Which::V, &mv.phases);
+                ptc.set_sigma_scale(maxabs.max(1e-6));
+                ptc.set_sigma(&svd.s);
+            }
+        }
+    }
+
+    /// The realized dense weight W̃ (noisy).
+    pub fn to_dense(&mut self) -> Mat {
+        let k = self.k;
+        let mut w = Mat::zeros(self.rows, self.cols);
+        self.ensure_cache();
+        let cache = self.w_cache.as_ref().unwrap();
+        for pi in 0..self.p {
+            for qi in 0..self.q {
+                w.set_block(pi * k, qi * k, &cache[pi * self.q + qi]);
+            }
+        }
+        w
+    }
+
+    fn ensure_cache(&mut self) {
+        if self.w_cache.is_none() {
+            let blocks: Vec<Mat> =
+                self.ptcs.iter_mut().map(|ptc| ptc.realized_matrix()).collect();
+            self.w_cache = Some(blocks);
+        }
+    }
+
+    /// Blocked forward Y = W̃ · X for X of shape [cols, B].
+    pub fn forward(&mut self, x: &Mat) -> Mat {
+        self.forward_masked(x, None, 1.0)
+    }
+
+    /// Forward with an optional [p][q] block keep-mask (p-major) — used by
+    /// the SWAT-U baseline, which sparsifies the *forward* weights too.
+    /// Dropped blocks issue no PTC call.
+    pub fn forward_masked(&mut self, x: &Mat, block_keep: Option<&[bool]>, scale: f32) -> Mat {
+        assert_eq!(x.rows, self.cols, "mesh forward input rows");
+        let (k, p, q, b) = (self.k, self.p, self.q, x.cols);
+        self.ensure_cache();
+        let cache = self.w_cache.as_ref().unwrap();
+        // Pad X rows to q·k; slice the q input panels once (§Perf: was
+        // p·q slice copies).
+        let xp = pad_rows(x, q * k);
+        let xqs: Vec<Mat> = (0..q).map(|qi| slice_rows(&xp, qi * k, k)).collect();
+        let mut yp = Mat::zeros(p * k, b);
+        let mut kept = 0u64;
+        let mut acc = Mat::zeros(k, b);
+        for pi in 0..p {
+            acc.data.fill(0.0);
+            for qi in 0..q {
+                if let Some(mask) = block_keep {
+                    if !mask[pi * q + qi] {
+                        continue;
+                    }
+                }
+                kept += 1;
+                matmul_acc(&cache[pi * q + qi], &xqs[qi], &mut acc);
+            }
+            if scale != 1.0 {
+                acc.scale(scale);
+            }
+            yp.set_block(pi * k, 0, &acc);
+        }
+        let groups = b.div_ceil(k).max(1) as u64;
+        self.stats.fwd_block_cols += kept * groups;
+        // Latency: per column group 1 PTC call + sequential accumulation over
+        // the deepest kept row (Q when dense).
+        let max_row_depth = (0..p)
+            .map(|pi| match block_keep {
+                None => q,
+                Some(m) => (0..q).filter(|&qi| m[pi * q + qi]).count(),
+            })
+            .max()
+            .unwrap_or(0) as u64;
+        self.stats.fwd_steps += groups * (1 + max_row_depth);
+        crop_rows(&yp, self.rows)
+    }
+
+    /// In-situ subspace gradient (Eq. 5), computed per block with the
+    /// reciprocal ops: dΣ_pq[i] = Σ_batch (Uᵀ dY_p)[i,·] ⊙ (V* X_q)[i,·],
+    /// with optional per-block feedback mask and column mask.
+    ///
+    /// * `x` — layer input [cols, B];
+    /// * `dy` — upstream gradient [rows, B];
+    /// * `col_keep` — optional boolean per batch column (column sampling);
+    /// * `scale` — unbiasedness normalization applied to the result.
+    ///
+    /// Returns the flattened gradient [p*q*k] in block order.
+    pub fn sigma_grad(
+        &mut self,
+        x: &Mat,
+        dy: &Mat,
+        col_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Vec<f32> {
+        assert_eq!(x.rows, self.cols);
+        assert_eq!(dy.rows, self.rows);
+        assert_eq!(x.cols, dy.cols);
+        let (k, p, q) = (self.k, self.p, self.q);
+        // select_cols clones; skip it entirely when the mask is off
+        // (§Perf: pad_rows is already the one unavoidable copy).
+        let (xp, dyp) = match col_keep {
+            None => (pad_rows(x, q * k), pad_rows(dy, p * k)),
+            Some(_) => (
+                pad_rows(&select_cols(x, col_keep), q * k),
+                pad_rows(&select_cols(dy, col_keep), p * k),
+            ),
+        };
+        let b = xp.cols;
+        let mut grad = vec![0.0f32; p * q * k];
+        // Per block: A = Uᵀ·dy_p (k×B), C = V*·x_q (k×B), dσ_i = Σ_b A⊙C —
+        // computed into preallocated scratch; input panels sliced once
+        // (§Perf: removed 2 allocations + q−1 slice copies per block).
+        let xbs: Vec<Mat> = (0..q).map(|qi| slice_rows(&xp, qi * k, k)).collect();
+        let mut ut_y = Mat::zeros(k, b);
+        let mut vx = Mat::zeros(k, b);
+        for pi in 0..p {
+            let dyb = slice_rows(&dyp, pi * k, k);
+            for qi in 0..q {
+                let ptc = &mut self.ptcs[pi * q + qi];
+                let g = (pi * q + qi) * k;
+                let (u, v) = ptc.realized_uv();
+                crate::linalg::sigma_grad_block(
+                    u,
+                    v,
+                    &dyb,
+                    &xbs[qi],
+                    scale,
+                    &mut ut_y,
+                    &mut vx,
+                    &mut grad[g..g + k],
+                );
+            }
+        }
+        // 2 reciprocal PTC calls per block-column group (Appendix G.1)...
+        let groups = b.div_ceil(k).max(1) as u64;
+        self.stats.grad_block_cols += 2 * (p * q) as u64 * groups;
+        // ...and 2 pipelined passes + 1 Hadamard step in latency.
+        self.stats.grad_steps += 2 * groups + 1;
+        grad
+    }
+
+    /// Masked error feedback dX = c_W · Σ_p [S_W(q,p)] W̃_pqᵀ dY_p
+    /// (§3.4.2 balanced feedback sampling). `block_keep` is a [q][p] mask
+    /// (None = dense), `scale` the unbiasedness factor c_W.
+    pub fn feedback(&mut self, dy: &Mat, block_keep: Option<&[bool]>, scale: f32) -> Mat {
+        assert_eq!(dy.rows, self.rows, "feedback dy rows");
+        let (k, p, q, b) = (self.k, self.p, self.q, dy.cols);
+        self.ensure_cache();
+        let cache = self.w_cache.as_ref().unwrap();
+        let dyp = pad_rows(dy, p * k);
+        let dybs: Vec<Mat> = (0..p).map(|pi| slice_rows(&dyp, pi * k, k)).collect();
+        let mut dxp = Mat::zeros(q * k, b);
+        let mut kept_products = 0u64;
+        let mut acc = Mat::zeros(k, b);
+        for qi in 0..q {
+            acc.data.fill(0.0);
+            for pi in 0..p {
+                if let Some(mask) = block_keep {
+                    if !mask[qi * p + pi] {
+                        continue;
+                    }
+                }
+                kept_products += 1;
+                // W̃ᵀ block product without materializing the transpose.
+                let wt = &cache[pi * q + qi];
+                acc_at_b(wt, &dybs[pi], &mut acc);
+            }
+            if scale != 1.0 {
+                acc.scale(scale);
+            }
+            dxp.set_block(qi * k, 0, &acc);
+        }
+        let groups = b.div_ceil(k).max(1) as u64;
+        self.stats.feedback_block_cols += kept_products * groups;
+        // Latency is bottlenecked by the longest accumulation row of Wᵀ
+        // (Fig. 7) — btopk's load balance shows up exactly here.
+        let critical = (0..q)
+            .map(|qi| match block_keep {
+                None => p,
+                Some(m) => (0..p).filter(|&pi| m[qi * p + pi]).count(),
+            })
+            .max()
+            .unwrap_or(0) as u64;
+        self.stats.feedback_steps += groups * (1 + critical);
+        crop_rows(&dxp, self.cols)
+    }
+
+    /// Per-block squared Frobenius norms estimated the on-chip way:
+    /// ‖W_pq‖²_F = Tr(|Σ_pq|²) (§3.4.2) — valid because U, V* are unitary.
+    /// Returned as a [p*q] vector in block row-major order.
+    pub fn block_norms_sq(&self) -> Vec<f32> {
+        self.ptcs.iter().map(|ptc| ptc.sigma.iter().map(|s| s * s).sum()).collect()
+    }
+
+    /// Flattened Σ view [p*q*k] (block row-major) for the optimizer.
+    pub fn sigma_flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.p * self.q * self.k);
+        for ptc in &self.ptcs {
+            v.extend_from_slice(&ptc.sigma);
+        }
+        v
+    }
+
+    /// Program Σ from a flattened vector (inverse of `sigma_flat`).
+    pub fn set_sigma_flat(&mut self, sigma: &[f32]) {
+        assert_eq!(sigma.len(), self.p * self.q * self.k);
+        let k = self.k;
+        for (bi, ptc) in self.ptcs.iter_mut().enumerate() {
+            // Keep the attenuator full-scale able to express the update.
+            let blk = &sigma[bi * k..(bi + 1) * k];
+            let maxabs = blk.iter().fold(0.0f32, |m, s| m.max(s.abs()));
+            if maxabs > ptc.sigma_scale {
+                ptc.set_sigma_scale(maxabs);
+            }
+            ptc.set_sigma(blk);
+        }
+        self.w_cache = None;
+    }
+
+    /// Number of trainable subspace parameters (P·Q·k singular values).
+    pub fn n_sigma(&self) -> usize {
+        self.p * self.q * self.k
+    }
+
+    /// Total number of MZI phases across all PTCs.
+    pub fn n_phases(&self) -> usize {
+        self.ptcs.iter().map(|ptc| ptc.n_phases()).sum()
+    }
+
+    /// Relative realized error ‖W̃−W‖²/‖W‖² against a dense target.
+    pub fn rel_error(&mut self, target: &Mat) -> f32 {
+        self.to_dense().rel_dist_sq(target)
+    }
+}
+
+/// acc += AᵀB with A as the stored (non-transposed) block.
+fn acc_at_b(a: &Mat, b: &Mat, acc: &mut Mat) {
+    let n = b.cols;
+    for kk in 0..a.rows {
+        let a_row = a.row(kk);
+        let b_row = b.row(kk);
+        for (i, &aki) in a_row.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let acc_row = &mut acc.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                acc_row[j] += aki * b_row[j];
+            }
+        }
+    }
+}
+
+/// Zero-pad a matrix's rows up to `target_rows`.
+pub fn pad_rows(x: &Mat, target_rows: usize) -> Mat {
+    if x.rows == target_rows {
+        return x.clone();
+    }
+    assert!(target_rows > x.rows);
+    let mut out = Mat::zeros(target_rows, x.cols);
+    out.data[..x.rows * x.cols].copy_from_slice(&x.data);
+    out
+}
+
+/// Take `k` contiguous rows starting at `r0` as an owned panel.
+pub fn slice_rows(x: &Mat, r0: usize, k: usize) -> Mat {
+    let mut out = Mat::zeros(k, x.cols);
+    out.data.copy_from_slice(&x.data[r0 * x.cols..(r0 + k) * x.cols]);
+    out
+}
+
+/// Truncate a matrix to its first `rows` rows.
+pub fn crop_rows(x: &Mat, rows: usize) -> Mat {
+    if x.rows == rows {
+        return x.clone();
+    }
+    Mat::from_slice(rows, x.cols, &x.data[..rows * x.cols])
+}
+
+/// Select a subset of batch columns by mask (None = all).
+fn select_cols(x: &Mat, keep: Option<&[bool]>) -> Mat {
+    match keep {
+        None => x.clone(),
+        Some(mask) => {
+            assert_eq!(mask.len(), x.cols);
+            let kept: Vec<usize> = (0..x.cols).filter(|&c| mask[c]).collect();
+            let mut out = Mat::zeros(x.rows, kept.len());
+            for r in 0..x.rows {
+                let src = x.row(r);
+                let dst = out.row_mut(r);
+                for (j, &c) in kept.iter().enumerate() {
+                    dst[j] = src[c];
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::prop::{assert_close, quickcheck};
+
+    #[test]
+    fn map_and_reconstruct_ideal() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(10, 14, 0.5, &mut rng);
+        let mut mesh = PtcMesh::new(10, 14, 4, NoiseModel::IDEAL, &mut rng);
+        mesh.program_from_dense(&w);
+        let w2 = mesh.to_dense();
+        assert!(w2.rel_dist_sq(&w) < 1e-7, "rel err {}", w2.rel_dist_sq(&w));
+    }
+
+    #[test]
+    fn forward_matches_dense() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(9, 13, 0.5, &mut rng);
+        let mut mesh = PtcMesh::new(9, 13, 4, NoiseModel::PAPER, &mut rng);
+        mesh.program_from_dense(&w);
+        let x = Mat::randn(13, 7, 1.0, &mut rng);
+        let y = mesh.forward(&x);
+        let wd = mesh.to_dense();
+        assert_close(&y.data, &matmul(&wd, &x).data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn noisy_mapping_has_bounded_error() {
+        // With Q+CT+DV (no phase bias), ideal-parametrization programming
+        // gives a small-but-nonzero relative error (Table 3 territory).
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(27, 27, 0.5, &mut rng);
+        let noise = NoiseModel { phase_bias: false, ..NoiseModel::PAPER };
+        let mut mesh = PtcMesh::new(27, 27, 9, noise, &mut rng);
+        mesh.program_from_dense(&w);
+        let e = mesh.rel_error(&w);
+        assert!(e > 1e-6, "noise should be visible, e={e}");
+        assert!(e < 0.5, "Q+CT+DV should not destroy the mapping, e={e}");
+    }
+
+    #[test]
+    fn unknown_phase_bias_destroys_direct_programming() {
+        // With Φ_b ~ U(0, 2π) present, programming decomposed phases directly
+        // is useless — the motivation for identity calibration (§3.2/Fig 1b).
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(18, 18, 0.5, &mut rng);
+        let mut mesh = PtcMesh::new(18, 18, 9, NoiseModel::PAPER, &mut rng);
+        mesh.program_from_dense(&w);
+        assert!(mesh.rel_error(&w) > 0.5);
+    }
+
+    #[test]
+    fn feedback_dense_is_wt_dy() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(8, 12, 0.5, &mut rng);
+        let mut mesh = PtcMesh::new(8, 12, 4, NoiseModel::IDEAL, &mut rng);
+        mesh.program_from_dense(&w);
+        let dy = Mat::randn(8, 5, 1.0, &mut rng);
+        let dx = mesh.feedback(&dy, None, 1.0);
+        let expect = matmul(&mesh.to_dense().t(), &dy);
+        assert_close(&dx.data, &expect.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn feedback_mask_zeroes_blocks() {
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(8, 8, 0.5, &mut rng);
+        let mut mesh = PtcMesh::new(8, 8, 4, NoiseModel::IDEAL, &mut rng);
+        mesh.program_from_dense(&w);
+        let dy = Mat::randn(8, 3, 1.0, &mut rng);
+        // Drop every block: gradient must be exactly zero.
+        let mask = vec![false; mesh.p * mesh.q];
+        let dx = mesh.feedback(&dy, Some(&mask), 2.0);
+        assert!(dx.fro_norm() == 0.0);
+        // Keep all: same as dense up to the scale.
+        let mask = vec![true; mesh.p * mesh.q];
+        let dx = mesh.feedback(&dy, Some(&mask), 1.0);
+        let expect = matmul(&mesh.to_dense().t(), &dy);
+        assert_close(&dx.data, &expect.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn sigma_grad_matches_analytic() {
+        // For the ideal mesh, dL/dσ_pq[i] with L = <dy, Wx> is
+        // (Uᵀ dy)_i (V* x)_i summed over batch. Compare against finite
+        // differences of the realized forward.
+        let mut rng = Rng::new(6);
+        let w = Mat::randn(8, 8, 0.5, &mut rng);
+        let mut mesh = PtcMesh::new(8, 8, 4, NoiseModel::IDEAL, &mut rng);
+        mesh.program_from_dense(&w);
+        let x = Mat::randn(8, 3, 1.0, &mut rng);
+        let dy = Mat::randn(8, 3, 1.0, &mut rng);
+        let g = mesh.sigma_grad(&x, &dy, None, 1.0);
+        // Finite differences on <dy, forward(x)> w.r.t. each sigma.
+        let eps = 1e-3f32;
+        let base_sigma = mesh.sigma_flat();
+        for idx in 0..g.len() {
+            let mut sp = base_sigma.clone();
+            sp[idx] += eps;
+            let mut m2 = mesh.clone();
+            m2.set_sigma_flat(&sp);
+            let yp = m2.forward(&x);
+            let mut sm = base_sigma.clone();
+            sm[idx] -= eps;
+            let mut m3 = mesh.clone();
+            m3.set_sigma_flat(&sm);
+            let ym = m3.forward(&x);
+            let fd: f32 = yp
+                .data
+                .iter()
+                .zip(&ym.data)
+                .zip(&dy.data)
+                .map(|((a, b), d)| (a - b) / (2.0 * eps) * d)
+                .sum();
+            assert!(
+                (fd - g[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd {fd} vs analytic {}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn prop_padding_roundtrip() {
+        quickcheck(
+            "pad/crop roundtrip",
+            |rng, size| {
+                let r = 1 + size % 20;
+                let c = 1 + size % 7;
+                (Mat::randn(r, c, 1.0, rng), r + size % 9)
+            },
+            |(m, target)| {
+                let p = pad_rows(m, *target.max(&m.rows));
+                let back = crop_rows(&p, m.rows);
+                assert_close(&back.data, &m.data, 0.0, 0.0)
+            },
+        );
+    }
+
+    #[test]
+    fn stats_count_ops() {
+        let mut rng = Rng::new(7);
+        let mut mesh = PtcMesh::new(8, 8, 4, NoiseModel::IDEAL, &mut rng);
+        let x = Mat::randn(8, 8, 1.0, &mut rng);
+        mesh.forward(&x); // p*q=4 blocks, 8 cols = 2 col groups
+        assert_eq!(mesh.stats.fwd_block_cols, 8);
+        let dy = Mat::randn(8, 8, 1.0, &mut rng);
+        mesh.feedback(&dy, None, 1.0);
+        assert_eq!(mesh.stats.feedback_block_cols, 8);
+        mesh.sigma_grad(&x, &dy, None, 1.0);
+        assert_eq!(mesh.stats.grad_block_cols, 16);
+    }
+
+    #[test]
+    fn sigma_flat_roundtrip() {
+        let mut rng = Rng::new(8);
+        let mut mesh = PtcMesh::new(8, 8, 4, NoiseModel::IDEAL, &mut rng);
+        let mut sig = mesh.sigma_flat();
+        for (i, s) in sig.iter_mut().enumerate() {
+            *s = (i as f32) * 0.1 - 0.7;
+        }
+        mesh.set_sigma_flat(&sig);
+        assert_close(&mesh.sigma_flat(), &sig, 1e-6, 1e-6).unwrap();
+    }
+}

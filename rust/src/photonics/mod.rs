@@ -1,0 +1,21 @@
+//! The photonic hardware substrate: MZI device physics, Reck-style unitary
+//! meshes, the non-ideality models of Appendix A.3, single k×k photonic
+//! tensor cores (PTCs), and the P×Q blocked mesh that realizes an M×N weight.
+//!
+//! Everything the paper's chip does in optics is simulated here in the same
+//! restricted-operation terms: a PTC exposes only {apply U, apply U*, apply
+//! V*, apply V, program phases, program Σ, read coherent output}. The
+//! higher stages (`crate::stages`) are written against that restricted
+//! interface, so the hardware constraints of §2 are honored by construction.
+
+pub mod dispersion;
+pub mod mzi;
+pub mod unitary;
+pub mod noise;
+pub mod ptc;
+pub mod mesh;
+
+pub use mesh::PtcMesh;
+pub use noise::NoiseModel;
+pub use ptc::Ptc;
+pub use unitary::ReckMesh;

@@ -1,0 +1,190 @@
+//! Mach-Zehnder interferometer device physics (paper Appendix A.1).
+//!
+//! A 2×2 MZI with two 50:50 directional couplers and four phase shifters
+//! realizes any SU(2); with the paper's operating point (θ_T=π/2, θ_L=3π/2,
+//! ω̄=π, Δω=π−2φ) it reduces to the real planar rotator R(2) of Eq. 7:
+//!
+//! ```text
+//! R(φ) = [ cos φ  −sin φ ]
+//!        [ sin φ   cos φ ]
+//! ```
+//!
+//! The full complex transfer function is kept here (used by the device-level
+//! tests that verify the reduction); the mesh code works with the reduced
+//! rotator.
+
+/// Complex number — tiny local implementation (no external num-complex).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+    pub const I: C64 = C64 { re: 0.0, im: 1.0 };
+
+    pub fn new(re: f64, im: f64) -> C64 {
+        C64 { re, im }
+    }
+    /// e^{iθ}
+    pub fn cis(theta: f64) -> C64 {
+        C64 { re: theta.cos(), im: theta.sin() }
+    }
+    pub fn mul(self, o: C64) -> C64 {
+        C64 { re: self.re * o.re - self.im * o.im, im: self.re * o.im + self.im * o.re }
+    }
+    pub fn add(self, o: C64) -> C64 {
+        C64 { re: self.re + o.re, im: self.im + o.im }
+    }
+    pub fn scale(self, s: f64) -> C64 {
+        C64 { re: self.re * s, im: self.im * s }
+    }
+    pub fn conj(self) -> C64 {
+        C64 { re: self.re, im: -self.im }
+    }
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// 2×2 complex matrix [[a,b],[c,d]].
+#[derive(Clone, Copy, Debug)]
+pub struct M2 {
+    pub a: C64,
+    pub b: C64,
+    pub c: C64,
+    pub d: C64,
+}
+
+impl M2 {
+    pub fn mul(self, o: M2) -> M2 {
+        M2 {
+            a: self.a.mul(o.a).add(self.b.mul(o.c)),
+            b: self.a.mul(o.b).add(self.b.mul(o.d)),
+            c: self.c.mul(o.a).add(self.d.mul(o.c)),
+            d: self.c.mul(o.b).add(self.d.mul(o.d)),
+        }
+    }
+
+    /// Deviation from unitarity: ‖M†M − I‖∞.
+    pub fn unitarity_error(self) -> f64 {
+        let g = M2 {
+            a: self.a.conj(),
+            b: self.c.conj(),
+            c: self.b.conj(),
+            d: self.d.conj(),
+        }
+        .mul(self);
+        let mut e: f64 = (g.a.re - 1.0).abs().max(g.a.im.abs());
+        e = e.max(g.d.re - 1.0).max(g.d.im.abs());
+        e = e.max(g.b.abs()).max(g.c.abs());
+        e
+    }
+}
+
+/// 50:50 directional coupler: t = k = √2/2, transfer [[t, kj],[kj, t]].
+pub fn coupler_50_50() -> M2 {
+    let t = std::f64::consts::FRAC_1_SQRT_2;
+    M2 {
+        a: C64::new(t, 0.0),
+        b: C64::new(0.0, t),
+        c: C64::new(0.0, t),
+        d: C64::new(t, 0.0),
+    }
+}
+
+/// Diagonal phase-shifter pair diag(e^{jα}, e^{jβ}).
+pub fn phase_pair(alpha: f64, beta: f64) -> M2 {
+    M2 { a: C64::cis(alpha), b: C64::ZERO, c: C64::ZERO, d: C64::cis(beta) }
+}
+
+/// Full physical MZI transfer function of Eq. 6 with the four phase
+/// shifters θ_T, θ_L (input) and ω_P, ω_W (internal).
+pub fn mzi_transfer(theta_t: f64, theta_l: f64, omega_p: f64, omega_w: f64) -> M2 {
+    coupler_50_50()
+        .mul(phase_pair(omega_p, omega_w))
+        .mul(coupler_50_50())
+        .mul(phase_pair(theta_t, theta_l))
+}
+
+/// Operating point of Eq. 7 mapping rotation angle φ to the four shifter
+/// settings: θ_T=π/2, θ_L=3π/2, ω̄=π, Δω=π−2φ.
+pub fn rotator_operating_point(phi: f64) -> (f64, f64, f64, f64) {
+    use std::f64::consts::PI;
+    let d_omega = PI - 2.0 * phi;
+    let omega_p = PI + d_omega / 2.0;
+    let omega_w = PI - d_omega / 2.0;
+    (PI / 2.0, 3.0 * PI / 2.0, omega_p, omega_w)
+}
+
+/// The reduced real planar rotator entries (cos φ, −sin φ; sin φ, cos φ).
+pub fn rotator(phi: f64) -> [[f64; 2]; 2] {
+    let (c, s) = (phi.cos(), phi.sin());
+    [[c, -s], [s, c]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn coupler_is_unitary() {
+        assert!(coupler_50_50().unitarity_error() < 1e-12);
+    }
+
+    #[test]
+    fn mzi_always_unitary() {
+        let mut rng = crate::util::Rng::new(13);
+        for _ in 0..200 {
+            let m = mzi_transfer(
+                rng.uniform_range(0.0, 2.0 * PI),
+                rng.uniform_range(0.0, 2.0 * PI),
+                rng.uniform_range(0.0, 2.0 * PI),
+                rng.uniform_range(0.0, 2.0 * PI),
+            );
+            assert!(m.unitarity_error() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn operating_point_reduces_to_planar_rotator() {
+        // Eq. 7: at the operating point the MZI transfer equals R(φ) up to a
+        // global phase that must be exactly removable.
+        let mut rng = crate::util::Rng::new(17);
+        for _ in 0..100 {
+            let phi = rng.uniform_range(-PI, PI);
+            let (tt, tl, op, ow) = rotator_operating_point(phi);
+            let m = mzi_transfer(tt, tl, op, ow);
+            let r = rotator(phi);
+            // Find the global phase from the largest-magnitude entry.
+            let entries = [(m.a, r[0][0]), (m.b, r[0][1]), (m.c, r[1][0]), (m.d, r[1][1])];
+            let (mz, rv) = entries
+                .iter()
+                .max_by(|x, y| x.1.abs().partial_cmp(&y.1.abs()).unwrap())
+                .unwrap();
+            assert!(rv.abs() > 0.1);
+            // global = mz / rv  (rv real)
+            let g = C64::new(mz.re / rv, mz.im / rv);
+            assert!((g.abs() - 1.0).abs() < 1e-9, "global phase not unit modulus");
+            for (mzv, rvv) in entries {
+                let expected = g.scale(rvv);
+                assert!(
+                    (mzv.re - expected.re).abs() < 1e-9 && (mzv.im - expected.im).abs() < 1e-9,
+                    "phi={phi}: {mzv:?} vs {expected:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rotator_orthogonal() {
+        for phi in [-1.0f64, 0.0, 0.3, PI / 2.0, 3.0] {
+            let r = rotator(phi);
+            let det = r[0][0] * r[1][1] - r[0][1] * r[1][0];
+            assert!((det - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Optical circuit non-ideality models (paper Appendix A.3, Eq. 1/9/10).
+//!
+//! The effective phase a device realizes is
+//!
+//! ```text
+//! Φ_eff = Ω · Γ · Q(Φ_programmed) + Φ_b
+//! ```
+//!
+//! * `Q(·)` — b-bit uniform phase quantization over [0, 2π) (Eq. 9);
+//! * `Γ`    — static multiplicative device variation, γᵢ ~ N(1, σ_γ²)
+//!            (paper: Δγ ~ N(0, 0.002²));
+//! * `Ω`    — thermal crosstalk: tridiagonal coupling between physically
+//!            adjacent MZIs, self-coupling 1, neighbor coupling 0.005
+//!            (Eq. 10, [31]);
+//! * `Φ_b`  — unknown static phase bias from manufacturing, ~ U(0, 2π).
+//!
+//! Γ and Φ_b are frozen per device instance (they model *manufacturing*
+//! outcomes); Q and Ω are deterministic functions of the programmed phases.
+
+use crate::util::Rng;
+
+/// Configuration of the non-ideality models.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NoiseModel {
+    /// Phase control bit width for U/V* meshes; `None` = ideal analog control.
+    pub phase_bits: Option<u32>,
+    /// Bit width for the Σ attenuator controls (paper assumes it affordable
+    /// to be larger); `None` = ideal.
+    pub sigma_bits: Option<u32>,
+    /// Std of the multiplicative γ variation (paper: 0.002).
+    pub gamma_std: f64,
+    /// Mutual coupling coefficient for adjacent MZIs (paper: 0.005).
+    pub crosstalk: f64,
+    /// Whether an unknown U(0, 2π) phase bias is present.
+    pub phase_bias: bool,
+}
+
+impl NoiseModel {
+    /// All non-idealities off.
+    pub const IDEAL: NoiseModel = NoiseModel {
+        phase_bits: None,
+        sigma_bits: None,
+        gamma_std: 0.0,
+        crosstalk: 0.0,
+        phase_bias: false,
+    };
+
+    /// The paper's default evaluation setting: 8-bit phases, 16-bit Σ,
+    /// σ_γ = 0.002, crosstalk 0.005, unknown phase bias present.
+    pub const PAPER: NoiseModel = NoiseModel {
+        phase_bits: Some(8),
+        sigma_bits: Some(16),
+        gamma_std: 0.002,
+        crosstalk: 0.005,
+        phase_bias: true,
+    };
+
+    /// The paper's Table-3 setting: quantization + variation + crosstalk but
+    /// no unknown phase bias (the chip is assumed calibrated — "phase shifter
+    /// gamma noise std=0.002, crosstalk factor=0.005, quantization 8-bit").
+    pub const PAPER_NO_BIAS: NoiseModel = NoiseModel {
+        phase_bits: Some(8),
+        sigma_bits: Some(16),
+        gamma_std: 0.002,
+        crosstalk: 0.005,
+        phase_bias: false,
+    };
+
+    /// Only quantization (Fig. 1(b) "Q").
+    pub fn quant_only(bits: u32) -> NoiseModel {
+        NoiseModel { phase_bits: Some(bits), ..NoiseModel::IDEAL }
+    }
+    /// Only crosstalk (Fig. 1(b) "CT").
+    pub fn crosstalk_only(ct: f64) -> NoiseModel {
+        NoiseModel { crosstalk: ct, ..NoiseModel::IDEAL }
+    }
+    /// Only device variation (Fig. 1(b) "DV").
+    pub fn variation_only(std: f64) -> NoiseModel {
+        NoiseModel { gamma_std: std, ..NoiseModel::IDEAL }
+    }
+    /// Only phase bias (Fig. 1(b) "PB").
+    pub fn bias_only() -> NoiseModel {
+        NoiseModel { phase_bias: true, ..NoiseModel::IDEAL }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        *self == NoiseModel::IDEAL
+    }
+}
+
+/// Uniform b-bit quantization of a phase into [0, 2π) (Eq. 9).
+pub fn quantize_phase(phi: f64, bits: u32) -> f64 {
+    let two_pi = 2.0 * std::f64::consts::PI;
+    let levels = (1u64 << bits) as f64 - 1.0;
+    let wrapped = phi.rem_euclid(two_pi);
+    (wrapped / (two_pi / levels)).round() * (two_pi / levels)
+}
+
+/// The smallest representable phase step at b bits — the ZOO step-size bound
+/// used by Algorithm 1 (δφ = 2π/(2^b − 1)).
+pub fn phase_resolution(bits: u32) -> f64 {
+    2.0 * std::f64::consts::PI / ((1u64 << bits) as f64 - 1.0)
+}
+
+/// Frozen manufacturing outcome for one mesh of `n_phases` shifters.
+#[derive(Clone, Debug)]
+pub struct DeviceInstance {
+    /// Multiplicative factors γᵢ (≈1).
+    pub gamma: Vec<f64>,
+    /// Static phase bias Φ_b.
+    pub bias: Vec<f64>,
+}
+
+impl DeviceInstance {
+    /// Sample a device: γᵢ ~ N(1, σ_γ²), bias ~ U(0, 2π) if enabled.
+    pub fn sample(n_phases: usize, model: &NoiseModel, rng: &mut Rng) -> DeviceInstance {
+        let gamma =
+            (0..n_phases).map(|_| 1.0 + rng.normal_ms(0.0, model.gamma_std)).collect();
+        let bias = if model.phase_bias {
+            (0..n_phases).map(|_| rng.uniform_range(0.0, 2.0 * std::f64::consts::PI)).collect()
+        } else {
+            vec![0.0; n_phases]
+        };
+        DeviceInstance { gamma, bias }
+    }
+
+    /// An ideal (γ=1, bias=0) device.
+    pub fn ideal(n_phases: usize) -> DeviceInstance {
+        DeviceInstance { gamma: vec![1.0; n_phases], bias: vec![0.0; n_phases] }
+    }
+
+    /// Realize the effective phases: Φ_eff = Ω·Γ·Q(Φ) + Φ_b.
+    /// Crosstalk couples chain-adjacent shifters (the triangular mesh is
+    /// routed as a serpentine chain, so index adjacency = physical adjacency).
+    pub fn effective_phases(&self, programmed: &[f64], model: &NoiseModel, out: &mut Vec<f64>) {
+        let n = programmed.len();
+        assert_eq!(self.gamma.len(), n, "device/phase count mismatch");
+        out.clear();
+        out.reserve(n);
+        // Q then Γ.
+        for (i, &phi) in programmed.iter().enumerate() {
+            let q = match model.phase_bits {
+                Some(b) => quantize_phase(phi, b),
+                None => phi,
+            };
+            out.push(self.gamma[i] * q);
+        }
+        // Ω: tridiagonal coupling φᶜᵢ = φᵢ + ω·(φᵢ₋₁ + φᵢ₊₁).
+        if model.crosstalk != 0.0 && n > 1 {
+            let w = model.crosstalk;
+            let prev_orig: Vec<f64> = out.clone();
+            for i in 0..n {
+                let mut v = prev_orig[i];
+                if i > 0 {
+                    v += w * prev_orig[i - 1];
+                }
+                if i + 1 < n {
+                    v += w * prev_orig[i + 1];
+                }
+                out[i] = v;
+            }
+        }
+        // Φ_b.
+        for (o, &b) in out.iter_mut().zip(&self.bias) {
+            *o += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_levels() {
+        let b = 8;
+        let step = phase_resolution(b);
+        for phi in [0.0, 0.1, 1.0, 3.14, 6.0] {
+            let q = quantize_phase(phi, b);
+            // On-grid and within half a step.
+            assert!((q / step - (q / step).round()).abs() < 1e-9);
+            assert!((q - phi).abs() <= step / 2.0 + 1e-12, "phi={phi} q={q}");
+        }
+    }
+
+    #[test]
+    fn quantize_wraps() {
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let q1 = quantize_phase(0.3, 8);
+        let q2 = quantize_phase(0.3 + two_pi, 8);
+        assert!((q1 - q2).abs() < 1e-9);
+        let qn = quantize_phase(-0.3, 8);
+        assert!((qn - quantize_phase(two_pi - 0.3, 8)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ideal_device_identity() {
+        let dev = DeviceInstance::ideal(5);
+        let phases = vec![0.1, 0.2, 0.3, 0.4, 0.5];
+        let mut out = Vec::new();
+        dev.effective_phases(&phases, &NoiseModel::IDEAL, &mut out);
+        assert_eq!(out, phases);
+    }
+
+    #[test]
+    fn gamma_statistics() {
+        let mut rng = Rng::new(1);
+        let model = NoiseModel::variation_only(0.002);
+        let dev = DeviceInstance::sample(10_000, &model, &mut rng);
+        let mean: f64 = dev.gamma.iter().sum::<f64>() / 10_000.0;
+        let var: f64 =
+            dev.gamma.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / 10_000.0;
+        assert!((mean - 1.0).abs() < 1e-4);
+        assert!((var.sqrt() - 0.002).abs() < 2e-4);
+        assert_eq!(dev.bias, vec![0.0; 10_000]);
+    }
+
+    #[test]
+    fn crosstalk_tridiagonal() {
+        let dev = DeviceInstance::ideal(3);
+        let model = NoiseModel::crosstalk_only(0.01);
+        let mut out = Vec::new();
+        dev.effective_phases(&[1.0, 2.0, 3.0], &model, &mut out);
+        assert!((out[0] - (1.0 + 0.01 * 2.0)).abs() < 1e-12);
+        assert!((out[1] - (2.0 + 0.01 * (1.0 + 3.0))).abs() < 1e-12);
+        assert!((out[2] - (3.0 + 0.01 * 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bias_uniform() {
+        let mut rng = Rng::new(2);
+        let dev = DeviceInstance::sample(20_000, &NoiseModel::bias_only(), &mut rng);
+        let mean: f64 = dev.bias.iter().sum::<f64>() / 20_000.0;
+        assert!((mean - std::f64::consts::PI).abs() < 0.05, "mean {mean}");
+        assert!(dev.bias.iter().all(|&b| (0.0..2.0 * std::f64::consts::PI).contains(&b)));
+    }
+
+    #[test]
+    fn pipeline_order_matters() {
+        // Bias must NOT be scaled by gamma or quantized (it is an additive
+        // physical offset after control).
+        let mut dev = DeviceInstance::ideal(1);
+        dev.bias[0] = 0.123456;
+        dev.gamma[0] = 2.0;
+        let model = NoiseModel { phase_bits: Some(8), phase_bias: true, ..NoiseModel::IDEAL };
+        let mut out = Vec::new();
+        dev.effective_phases(&[1.0], &model, &mut out);
+        let expect = 2.0 * quantize_phase(1.0, 8) + 0.123456;
+        assert!((out[0] - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,369 @@
+//! A single k×k photonic tensor core: W = U(Φᵁ) · diag(Σ) · V*(Φⱽ), with all
+//! Appendix-A.3 non-idealities applied to the realized unitaries, and the
+//! restricted operation set the paper's chip actually supports:
+//! program phases/Σ, apply U, U*, V*, V (reciprocity), read coherent output.
+//!
+//! The realized (noisy) matrices are cached and invalidated on phase writes —
+//! during subspace learning only Σ changes, so U/V* realization cost is paid
+//! once, which mirrors the real chip where U/V* are static after mapping.
+
+use super::noise::{DeviceInstance, NoiseModel};
+use super::unitary::{abs_identity_mse, num_phases, ReckMesh};
+use crate::linalg::{matmul, matmul_at_b, Mat};
+use crate::util::Rng;
+
+/// Which unitary of the PTC a phase belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Which {
+    U,
+    V,
+}
+
+/// One photonic tensor core.
+#[derive(Clone, Debug)]
+pub struct Ptc {
+    pub k: usize,
+    /// Programmed phases of the U mesh.
+    pub u_mesh: ReckMesh,
+    /// Programmed phases of the V* mesh (parametrizes V* directly).
+    pub v_mesh: ReckMesh,
+    /// Programmed singular values (signed; the hardware realizes |σ|·cos-coded
+    /// attenuation with the sign folded into a π phase).
+    pub sigma: Vec<f32>,
+    /// Attenuator full-scale max|Σ|.
+    pub sigma_scale: f32,
+    pub noise: NoiseModel,
+    u_dev: DeviceInstance,
+    v_dev: DeviceInstance,
+    u_real: Option<Mat>,
+    v_real: Option<Mat>,
+    /// Scratch for effective-phase realization.
+    scratch: Vec<f64>,
+}
+
+impl Ptc {
+    /// Fabricate a PTC: programmed phases start at zero, but the sampled
+    /// device instance (γ, Φ_b) makes the *realized* initial state unknown —
+    /// exactly the post-manufacturing situation IC must fix (§3.2).
+    pub fn new(k: usize, noise: NoiseModel, rng: &mut Rng) -> Ptc {
+        let m = num_phases(k);
+        Ptc {
+            k,
+            u_mesh: ReckMesh::identity(k),
+            v_mesh: ReckMesh::identity(k),
+            sigma: vec![1.0; k],
+            sigma_scale: 1.0,
+            noise,
+            u_dev: DeviceInstance::sample(m, &noise, rng),
+            v_dev: DeviceInstance::sample(m, &noise, rng),
+            u_real: None,
+            v_real: None,
+            scratch: Vec::with_capacity(m),
+        }
+    }
+
+    /// Number of programmable phases (both meshes): k(k−1).
+    pub fn n_phases(&self) -> usize {
+        2 * num_phases(self.k)
+    }
+
+    /// Read a programmed phase.
+    pub fn phase(&self, which: Which, idx: usize) -> f64 {
+        match which {
+            Which::U => self.u_mesh.phases[idx],
+            Which::V => self.v_mesh.phases[idx],
+        }
+    }
+
+    /// Write a programmed phase (invalidates the realization cache).
+    pub fn set_phase(&mut self, which: Which, idx: usize, val: f64) {
+        match which {
+            Which::U => {
+                self.u_mesh.phases[idx] = val;
+                self.u_real = None;
+            }
+            Which::V => {
+                self.v_mesh.phases[idx] = val;
+                self.v_real = None;
+            }
+        }
+    }
+
+    /// Program a whole mesh's phases at once.
+    pub fn set_phases(&mut self, which: Which, vals: &[f64]) {
+        match which {
+            Which::U => {
+                self.u_mesh.phases.copy_from_slice(vals);
+                self.u_real = None;
+            }
+            Which::V => {
+                self.v_mesh.phases.copy_from_slice(vals);
+                self.v_real = None;
+            }
+        }
+    }
+
+    /// Program Σ (values are clamped to the attenuator full-scale and
+    /// quantized at `sigma_bits`).
+    pub fn set_sigma(&mut self, sigma: &[f32]) {
+        assert_eq!(sigma.len(), self.k);
+        let fs = self.sigma_scale;
+        for (dst, &s) in self.sigma.iter_mut().zip(sigma) {
+            *dst = quantize_sigma(s.clamp(-fs, fs), fs, self.noise.sigma_bits);
+        }
+    }
+
+    /// Grow the attenuator full-scale (re-quantizes nothing retroactively;
+    /// called by mapping when a block needs a larger dynamic range).
+    pub fn set_sigma_scale(&mut self, scale: f32) {
+        self.sigma_scale = scale.max(1e-6);
+    }
+
+    /// The realized (noisy) U matrix.
+    pub fn realized_u(&mut self) -> &Mat {
+        if self.u_real.is_none() {
+            self.u_dev.effective_phases(&self.u_mesh.phases, &self.noise, &mut self.scratch);
+            self.u_real = Some(self.u_mesh.synthesize_with(&self.scratch.clone()));
+        }
+        self.u_real.as_ref().unwrap()
+    }
+
+    /// The realized (noisy) V* matrix.
+    pub fn realized_v(&mut self) -> &Mat {
+        if self.v_real.is_none() {
+            self.v_dev.effective_phases(&self.v_mesh.phases, &self.noise, &mut self.scratch);
+            self.v_real = Some(self.v_mesh.synthesize_with(&self.scratch.clone()));
+        }
+        self.v_real.as_ref().unwrap()
+    }
+
+    /// Realize both unitaries and return them together (hot-path helper:
+    /// one `&mut` call yielding both borrows for Eq. 5).
+    pub fn realized_uv(&mut self) -> (&Mat, &Mat) {
+        if self.u_real.is_none() {
+            self.realized_u();
+        }
+        if self.v_real.is_none() {
+            self.realized_v();
+        }
+        (self.u_real.as_ref().unwrap(), self.v_real.as_ref().unwrap())
+    }
+
+    /// Realized full transfer W̃ = U · diag(Σ) · V*.
+    pub fn realized_matrix(&mut self) -> Mat {
+        let sigma = self.sigma.clone();
+        let v = self.realized_v().clone();
+        let u = self.realized_u();
+        let mut sv = v;
+        for (r, &s) in sigma.iter().enumerate() {
+            for x in sv.row_mut(r) {
+                *x *= s;
+            }
+        }
+        matmul(u, &sv)
+    }
+
+    /// Coherent forward: Y = U Σ V* X for a k×B input panel.
+    pub fn forward(&mut self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.k);
+        let w = self.realized_matrix();
+        matmul(&w, x)
+    }
+
+    /// Reciprocal op: apply Uᵀ (= U* in the real-valued mesh) to a panel —
+    /// the "shine adjoint light from the output side" primitive of Eq. 5.
+    pub fn apply_ut(&mut self, y: &Mat) -> Mat {
+        assert_eq!(y.rows, self.k);
+        matmul_at_b(self.realized_u(), y)
+    }
+
+    /// Apply V* to a panel (the input-side projection of Eq. 5).
+    pub fn apply_v(&mut self, x: &Mat) -> Mat {
+        assert_eq!(x.rows, self.k);
+        matmul(self.realized_v(), x)
+    }
+
+    /// Optimal singular-value projection (Claim 1, Eq. 4):
+    /// Σ_opt = diag(Uᵀ W V) evaluated with the *realized* (noisy) unitaries,
+    /// i.e. exactly what the reciprocal chip measures. Writes Σ in place and
+    /// returns the projected values.
+    pub fn osp(&mut self, target: &Mat) -> Vec<f32> {
+        assert_eq!((target.rows, target.cols), (self.k, self.k));
+        let v = self.realized_v().clone();
+        let u = self.realized_u().clone();
+        let k = self.k;
+        let mut sig = vec![0.0f32; k];
+        for (i, si) in sig.iter_mut().enumerate() {
+            // σᵢ = uᵢᵀ · W · v*ᵢ where uᵢ = column i of U, v*ᵢ = row i of V*.
+            let mut acc = 0.0f32;
+            for a in 0..k {
+                let ua = u[(a, i)];
+                if ua == 0.0 {
+                    continue;
+                }
+                let wrow = target.row(a);
+                let vrow = v.row(i);
+                let mut dot = 0.0f32;
+                for b in 0..k {
+                    dot += wrow[b] * vrow[b];
+                }
+                acc += ua * dot;
+            }
+            *si = acc;
+        }
+        // Grow the full-scale if the projection exceeds it, then program.
+        let maxabs = sig.iter().fold(0.0f32, |m, s| m.max(s.abs()));
+        if maxabs > self.sigma_scale {
+            self.set_sigma_scale(maxabs);
+        }
+        self.set_sigma(&sig);
+        self.sigma.clone()
+    }
+
+    /// IC quality metrics: (MSEᵁ, MSEⱽ) against the |·| identity (§3.2).
+    pub fn identity_mse(&mut self) -> (f64, f64) {
+        let mu = abs_identity_mse(&self.realized_u().clone());
+        let mv = abs_identity_mse(&self.realized_v().clone());
+        (mu, mv)
+    }
+
+    /// Regression error ‖W̃ − W‖² for parallel mapping.
+    pub fn mapping_loss(&mut self, target: &Mat) -> f64 {
+        self.realized_matrix().sub(target).fro_norm_sq() as f64
+    }
+}
+
+/// Quantize a Σ value at b bits over [-full_scale, full_scale].
+pub fn quantize_sigma(s: f32, full_scale: f32, bits: Option<u32>) -> f32 {
+    match bits {
+        None => s,
+        Some(b) => {
+            let levels = ((1u64 << b) - 1) as f32;
+            let step = 2.0 * full_scale / levels;
+            (s / step).round() * step
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::orthogonality_error;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn ideal_ptc_starts_identity() {
+        let mut rng = Rng::new(1);
+        let mut ptc = Ptc::new(5, NoiseModel::IDEAL, &mut rng);
+        assert_close(&ptc.realized_u().clone().data, &Mat::eye(5).data, 1e-6, 1e-6).unwrap();
+        let w = ptc.realized_matrix();
+        assert_close(&w.data, &Mat::eye(5).data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn noisy_ptc_starts_scrambled_but_unitary() {
+        let mut rng = Rng::new(2);
+        let mut ptc = Ptc::new(9, NoiseModel::PAPER, &mut rng);
+        let u = ptc.realized_u().clone();
+        // Phase bias makes it far from identity...
+        assert!(abs_identity_mse(&u) > 1e-2);
+        // ...but it is still a (noisy) rotation product: orthogonal.
+        assert!(orthogonality_error(&u) < 1e-4);
+    }
+
+    #[test]
+    fn cache_invalidation_on_phase_write() {
+        let mut rng = Rng::new(3);
+        let mut ptc = Ptc::new(4, NoiseModel::IDEAL, &mut rng);
+        let before = ptc.realized_u().clone();
+        ptc.set_phase(Which::U, 0, 0.5);
+        let after = ptc.realized_u().clone();
+        assert!(before.sub(&after).fro_norm() > 1e-3);
+        // V untouched.
+        assert_close(&ptc.realized_v().clone().data, &Mat::eye(4).data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn forward_matches_matrix() {
+        let mut rng = Rng::new(4);
+        let mut ptc = Ptc::new(6, NoiseModel::PAPER, &mut rng);
+        ptc.set_sigma(&[0.9, -0.5, 0.3, 0.1, -0.2, 0.7]);
+        let x = Mat::randn(6, 3, 1.0, &mut rng);
+        let y = ptc.forward(&x);
+        let w = ptc.realized_matrix();
+        assert_close(&y.data, &matmul(&w, &x).data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn osp_is_optimal_given_unitaries() {
+        // After OSP, no other Σ gives lower ‖UΣV* − W‖ (check via perturbation).
+        let mut rng = Rng::new(5);
+        let mut ptc = Ptc::new(5, NoiseModel::IDEAL, &mut rng);
+        // Random unitaries via random phases.
+        let rand_phases: Vec<f64> =
+            (0..num_phases(5)).map(|_| rng.uniform_range(0.0, 6.28)).collect();
+        ptc.set_phases(Which::U, &rand_phases);
+        let rand_phases2: Vec<f64> =
+            (0..num_phases(5)).map(|_| rng.uniform_range(0.0, 6.28)).collect();
+        ptc.set_phases(Which::V, &rand_phases2);
+        let target = Mat::randn(5, 5, 1.0, &mut rng);
+        ptc.osp(&target);
+        let base = ptc.mapping_loss(&target);
+        for i in 0..5 {
+            for delta in [-0.05f32, 0.05] {
+                let mut s = ptc.sigma.clone();
+                s[i] += delta;
+                let mut alt = ptc.clone();
+                alt.sigma = s; // bypass quantization to test pure optimality
+                assert!(
+                    alt.mapping_loss(&target) >= base - 1e-6,
+                    "perturbed sigma beat OSP at i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn osp_exact_recovery_for_svd_triple() {
+        // If W = U Σ V* exactly (ideal device), OSP recovers Σ.
+        let mut rng = Rng::new(6);
+        let mut ptc = Ptc::new(4, NoiseModel::IDEAL, &mut rng);
+        let phases: Vec<f64> = (0..num_phases(4)).map(|_| rng.uniform_range(0.0, 6.28)).collect();
+        ptc.set_phases(Which::U, &phases);
+        let phases2: Vec<f64> = (0..num_phases(4)).map(|_| rng.uniform_range(0.0, 6.28)).collect();
+        ptc.set_phases(Which::V, &phases2);
+        let true_sigma = [1.2f32, -0.4, 0.8, 0.05];
+        ptc.set_sigma_scale(2.0);
+        ptc.set_sigma(&true_sigma);
+        let w = ptc.realized_matrix();
+        // Scramble sigma, then OSP back.
+        ptc.set_sigma(&[0.0; 4]);
+        let rec = ptc.osp(&w);
+        assert_close(&rec, &true_sigma, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn sigma_quantization_applies() {
+        let mut rng = Rng::new(7);
+        let noise = NoiseModel { sigma_bits: Some(4), ..NoiseModel::IDEAL };
+        let mut ptc = Ptc::new(3, noise, &mut rng);
+        ptc.set_sigma(&[0.33, -0.71, 0.99]);
+        let step = 2.0 / ((1u64 << 4) - 1) as f32;
+        for &s in &ptc.sigma {
+            assert!((s / step - (s / step).round()).abs() < 1e-5, "{s} not on grid");
+        }
+    }
+
+    #[test]
+    fn reciprocal_ops_are_transposes() {
+        let mut rng = Rng::new(8);
+        let mut ptc = Ptc::new(5, NoiseModel::PAPER, &mut rng);
+        let y = Mat::randn(5, 2, 1.0, &mut rng);
+        let ut_y = ptc.apply_ut(&y);
+        let u = ptc.realized_u().clone();
+        assert_close(&ut_y.data, &matmul(&u.t(), &y).data, 1e-5, 1e-5).unwrap();
+        let vx = ptc.apply_v(&y);
+        let v = ptc.realized_v().clone();
+        assert_close(&vx.data, &matmul(&v, &y).data, 1e-5, 1e-5).unwrap();
+    }
+}

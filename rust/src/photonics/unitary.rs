@@ -1,0 +1,293 @@
+//! Reck-style triangular MZI mesh parametrization of the real unitary
+//! (orthogonal) group (paper Appendix A.2, Eq. 8):
+//!
+//! ```text
+//! U(n) = D · Π_{i=n..2} Π_{j=1..i-1} R_ij(φ_ij)
+//! ```
+//!
+//! where D is a ±1 diagonal and R_ij(φ) is the n-dim identity with the 2×2
+//! planar rotator embedded at coordinates (i, j) (1-indexed):
+//! entries (i,i)=cosφ, (i,j)=−sinφ, (j,i)=sinφ, (j,j)=cosφ.
+//!
+//! Provides: phases → unitary synthesis, unitary → phases decomposition
+//! (Givens nulling in the Reck elimination order), and fast in-place
+//! application of the rotation product to vectors — the ZOO inner loops are
+//! phase-local, so synthesis cost dominates identity calibration and
+//! parallel mapping.
+
+use crate::linalg::Mat;
+
+/// Index pairs (i, j), 1-indexed, in the exact product order of Eq. 8:
+/// i from n down to 2, j from 1 to i-1.
+pub fn pair_order(n: usize) -> Vec<(usize, usize)> {
+    let mut pairs = Vec::with_capacity(n * (n - 1) / 2);
+    for i in (2..=n).rev() {
+        for j in 1..i {
+            pairs.push((i, j));
+        }
+    }
+    pairs
+}
+
+/// Number of MZI phases for an n×n unitary: n(n-1)/2.
+pub fn num_phases(n: usize) -> usize {
+    n * (n - 1) / 2
+}
+
+/// A Reck mesh: the phase vector (product order) and the diagonal D.
+#[derive(Clone, Debug)]
+pub struct ReckMesh {
+    pub n: usize,
+    /// φ_ij in `pair_order(n)` order.
+    pub phases: Vec<f64>,
+    /// ±1 diagonal.
+    pub d: Vec<f32>,
+}
+
+impl ReckMesh {
+    /// Identity-initialized mesh (all phases 0, D = +1).
+    pub fn identity(n: usize) -> ReckMesh {
+        ReckMesh { n, phases: vec![0.0; num_phases(n)], d: vec![1.0; n] }
+    }
+
+    /// Mesh with phases drawn U[0, 2π) — the unknown post-fab state.
+    pub fn random(n: usize, rng: &mut crate::util::Rng) -> ReckMesh {
+        let phases =
+            (0..num_phases(n)).map(|_| rng.uniform_range(0.0, 2.0 * std::f64::consts::PI)).collect();
+        ReckMesh { n, phases, d: vec![1.0; n] }
+    }
+
+    /// Synthesize the n×n orthogonal matrix U = D · Π R_ij(φ_ij) for an
+    /// arbitrary *effective* phase vector (the caller applies noise first).
+    pub fn synthesize_with(&self, effective_phases: &[f64]) -> Mat {
+        assert_eq!(effective_phases.len(), self.phases.len());
+        let n = self.n;
+        let mut m = Mat::eye(n);
+        // Product convention: U = D · R_{p_m} · … · R_{p_1} where p_t runs in
+        // `pair_order` — i.e. the *reverse* of the elimination order used by
+        // `decompose` (each factor peels from the right end there). This is
+        // the transposed-ordering variant of Eq. 8's triangular mesh; both
+        // orderings realize the same MZI triangle, just indexed from the
+        // other corner.
+        //
+        // Right-multiplication by R_ij mixes columns (j-1) and (i-1); from
+        // the embedding (i,i)=cos, (i,j)=−sin, (j,i)=sin, (j,j)=cos:
+        //   col_j' = cosφ·col_j − sinφ·col_i
+        //   col_i' = sinφ·col_j + cosφ·col_i
+        for (&(i, j), &phi) in pair_order(n).iter().zip(effective_phases).rev() {
+            apply_rotation_right(&mut m, i - 1, j - 1, phi);
+        }
+        // Left-multiplication by D scales rows.
+        for r in 0..n {
+            if self.d[r] < 0.0 {
+                for v in m.row_mut(r) {
+                    *v = -*v;
+                }
+            }
+        }
+        m
+    }
+
+    /// Synthesize with the stored (noise-free) phases.
+    pub fn synthesize(&self) -> Mat {
+        self.synthesize_with(&self.phases)
+    }
+
+    /// Decompose an orthogonal matrix into this parametrization. Returns the
+    /// mesh; reconstruction satisfies `synthesize() ≈ u` to f32 accuracy.
+    ///
+    /// Algorithm: right-multiply U by R_ij(φ)ᵀ in `pair_order` (row n first,
+    /// eliminating row i left-to-right: the rotation on columns (j, i)
+    /// touches, within row i, only entries (i,j) and (i,i), and rows already
+    /// reduced to ±e_r have zeros in both touched columns), choosing each φ
+    /// to null entry (i, j). The problem recurses on the leading (i−1)-minor
+    /// and what remains is the ±1 diagonal D. The synthesis product is the
+    /// reverse of this elimination order.
+    pub fn decompose(u: &Mat) -> ReckMesh {
+        assert_eq!(u.rows, u.cols, "decompose expects square");
+        let n = u.rows;
+        // Work in f64.
+        let mut m: Vec<f64> = u.data.iter().map(|&x| x as f64).collect();
+        let idx = |r: usize, c: usize| r * n + c;
+        let pairs = pair_order(n);
+        let mut phases = vec![0.0f64; pairs.len()];
+        for (t, &(i, j)) in pairs.iter().enumerate() {
+            let (ri, cj, ci) = (i - 1, j - 1, i - 1);
+            let a = m[idx(ri, cj)]; // entry to null (col j)
+            let b = m[idx(ri, ci)]; // diagonal-ward entry (col i)
+            // Right-multiplying by R(φ)ᵀ: col_j' = a·cosφ + b·sinφ;
+            // null ⇒ φ = atan2(−a, b).
+            let phi = (-a).atan2(b);
+            phases[t] = phi;
+            let (c, s) = (phi.cos(), phi.sin());
+            for r in 0..n {
+                let xj = m[idx(r, cj)];
+                let xi = m[idx(r, ci)];
+                // col_j' = cosφ·xj + sinφ·xi ; col_i' = −sinφ·xj + cosφ·xi
+                m[idx(r, cj)] = c * xj + s * xi;
+                m[idx(r, ci)] = -s * xj + c * xi;
+            }
+        }
+        // Remaining matrix should be diag(±1).
+        let mut d = vec![1.0f32; n];
+        for r in 0..n {
+            d[r] = if m[idx(r, r)] >= 0.0 { 1.0 } else { -1.0 };
+        }
+        ReckMesh { n, phases, d }
+    }
+
+    /// Apply U = D·ΠR to a vector in place without materializing U — used by
+    /// hot loops that stream activations through the mesh. Cost O(n²).
+    pub fn apply(&self, effective_phases: &[f64], x: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        // y = U x = D (R_{pm}·...·R_{p1}) x — apply factors right-to-left,
+        // i.e. R_{p1} first (forward `pair_order`).
+        for (&(i, j), &phi) in pair_order(self.n).iter().zip(effective_phases) {
+            let (c, s) = (phi.cos() as f32, phi.sin() as f32);
+            let (xi, xj) = (x[i - 1], x[j - 1]);
+            // R embedding: row i: cos·x_i − sin·x_j ; row j: sin·x_i + cos·x_j
+            x[i - 1] = c * xi - s * xj;
+            x[j - 1] = s * xi + c * xj;
+        }
+        for r in 0..self.n {
+            x[r] *= self.d[r];
+        }
+    }
+}
+
+/// In-place M := M · R_ij(φ) (0-indexed coordinates).
+#[inline]
+pub fn apply_rotation_right(m: &mut Mat, i: usize, j: usize, phi: f64) {
+    let (c, s) = (phi.cos() as f32, phi.sin() as f32);
+    let n = m.cols;
+    for r in 0..m.rows {
+        let row = &mut m.data[r * n..(r + 1) * n];
+        let xj = row[j];
+        let xi = row[i];
+        row[j] = c * xj - s * xi;
+        row[i] = s * xj + c * xi;
+    }
+}
+
+/// Mean squared error to the *absolute* identity: ‖|U| − I‖²/n² — the paper's
+/// observable IC quality metric MSEᵁ (§3.2; sign flips are unobservable).
+pub fn abs_identity_mse(u: &Mat) -> f64 {
+    let n = u.rows;
+    let mut acc = 0.0f64;
+    for r in 0..n {
+        for c in 0..n {
+            let target = if r == c { 1.0 } else { 0.0 };
+            let d = u[(r, c)].abs() as f64 - target;
+            acc += d * d;
+        }
+    }
+    acc / (n * n) as f64
+}
+
+/// Whether U is a signed identity Ĩ (±1 diagonal) within tolerance.
+pub fn is_signed_identity(u: &Mat, tol: f32) -> bool {
+    for r in 0..u.rows {
+        for c in 0..u.cols {
+            let v = u[(r, c)];
+            let ok = if r == c { (v.abs() - 1.0).abs() <= tol } else { v.abs() <= tol };
+            if !ok {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::orthogonality_error;
+    use crate::util::prop::{assert_close, quickcheck};
+    use crate::util::Rng;
+
+    #[test]
+    fn pair_order_count() {
+        assert_eq!(pair_order(9).len(), num_phases(9));
+        assert_eq!(num_phases(9), 36);
+        assert_eq!(pair_order(3), vec![(3, 1), (3, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn identity_mesh_is_identity() {
+        let mesh = ReckMesh::identity(6);
+        assert_close(&mesh.synthesize().data, &Mat::eye(6).data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn synthesized_is_orthogonal() {
+        let mut rng = Rng::new(21);
+        for n in [2, 3, 5, 9, 16] {
+            let mesh = ReckMesh::random(n, &mut rng);
+            let u = mesh.synthesize();
+            assert!(orthogonality_error(&u) < 1e-5, "n={n}");
+        }
+    }
+
+    #[test]
+    fn prop_decompose_roundtrip() {
+        // Random orthogonal (from SVD of a random matrix) → phases → back.
+        quickcheck(
+            "reck decompose/synthesize roundtrip",
+            |rng, size| {
+                let n = 2 + size % 12;
+                let a = Mat::randn(n, n, 1.0, rng);
+                crate::linalg::svd_kxk(&a).u
+            },
+            |u| {
+                let mesh = ReckMesh::decompose(u);
+                let u2 = mesh.synthesize();
+                assert_close(&u2.data, &u.data, 5e-4, 5e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn decompose_identity_gives_zero_phases() {
+        let mesh = ReckMesh::decompose(&Mat::eye(5));
+        for &p in &mesh.phases {
+            assert!(p.abs() < 1e-9);
+        }
+        assert_eq!(mesh.d, vec![1.0; 5]);
+    }
+
+    #[test]
+    fn decompose_captures_sign_flips() {
+        let mut neg = Mat::eye(4);
+        neg[(1, 1)] = -1.0;
+        neg[(3, 3)] = -1.0;
+        let mesh = ReckMesh::decompose(&neg);
+        let u = mesh.synthesize();
+        assert_close(&u.data, &neg.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn apply_matches_synthesize() {
+        let mut rng = Rng::new(33);
+        let mesh = ReckMesh::random(9, &mut rng);
+        let u = mesh.synthesize();
+        let mut x: Vec<f32> = (0..9).map(|i| (i as f32) - 4.0).collect();
+        let expect = crate::linalg::matvec(&u, &x);
+        mesh.apply(&mesh.phases, &mut x);
+        assert_close(&x, &expect, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn abs_identity_metrics() {
+        let eye = Mat::eye(5);
+        assert!(abs_identity_mse(&eye) < 1e-12);
+        let mut flip = Mat::eye(5);
+        flip[(2, 2)] = -1.0;
+        // Sign flips are invisible to the abs metric.
+        assert!(abs_identity_mse(&flip) < 1e-12);
+        assert!(is_signed_identity(&flip, 1e-6));
+        let mut rng = Rng::new(5);
+        let rand = crate::linalg::svd_kxk(&Mat::randn(5, 5, 1.0, &mut rng)).u;
+        assert!(abs_identity_mse(&rand) > 1e-3);
+        assert!(!is_signed_identity(&rand, 1e-2));
+    }
+}

@@ -1,0 +1,366 @@
+//! Appendix-G hardware cost model.
+//!
+//! Two complementary views, cross-checked in tests:
+//!
+//! * **Measured** — `MeshStats` counters accumulated by the simulator as
+//!   ops actually execute (`CostBreakdown::from_stats`), the numbers the
+//!   Table 2 / Fig. 11 benches report.
+//! * **Analytic** — the closed-form per-iteration estimates of Eq. 14/15
+//!   given layer shapes and sampling sparsities (`LayerCost::conv2d` /
+//!   `::linear`), used for scalability projections (Fig. 10) where actually
+//!   simulating a 10M-parameter ONN per point would be wasteful.
+//!
+//! Units follow the paper: *energy* = number of PTC calls (a PTC call is one
+//! k×k block times one k-column group), *steps* = the longest sequential
+//! partial-product accumulation path with k adders per PTC and fully
+//! parallel PTCs.
+
+use crate::photonics::mesh::MeshStats;
+use crate::util::bench::Table;
+use crate::util::fmt_sig;
+
+/// Per-pass energy/step breakdown (the paper's ℒ, ∇_Σℒ, ∇_xℒ columns).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    /// Forward-pass PTC calls (ℒ).
+    pub fwd_energy: f64,
+    /// Weight-gradient PTC calls (∇_Σℒ).
+    pub wgrad_energy: f64,
+    /// Error-feedback PTC calls (∇_xℒ).
+    pub fbk_energy: f64,
+    pub fwd_steps: f64,
+    pub wgrad_steps: f64,
+    pub fbk_steps: f64,
+}
+
+impl CostBreakdown {
+    /// From measured simulator counters.
+    pub fn from_stats(s: &MeshStats) -> CostBreakdown {
+        CostBreakdown {
+            fwd_energy: s.fwd_block_cols as f64,
+            wgrad_energy: s.grad_block_cols as f64,
+            fbk_energy: s.feedback_block_cols as f64,
+            fwd_steps: s.fwd_steps as f64,
+            wgrad_steps: s.grad_steps as f64,
+            fbk_steps: s.feedback_steps as f64,
+        }
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.fwd_energy + self.wgrad_energy + self.fbk_energy
+    }
+
+    pub fn total_steps(&self) -> f64 {
+        self.fwd_steps + self.wgrad_steps + self.fbk_steps
+    }
+
+    pub fn add(&mut self, o: &CostBreakdown) {
+        self.fwd_energy += o.fwd_energy;
+        self.wgrad_energy += o.wgrad_energy;
+        self.fbk_energy += o.fbk_energy;
+        self.fwd_steps += o.fwd_steps;
+        self.wgrad_steps += o.wgrad_steps;
+        self.fbk_steps += o.fbk_steps;
+    }
+
+    pub fn scale(&self, s: f64) -> CostBreakdown {
+        CostBreakdown {
+            fwd_energy: self.fwd_energy * s,
+            wgrad_energy: self.wgrad_energy * s,
+            fbk_energy: self.fbk_energy * s,
+            fwd_steps: self.fwd_steps * s,
+            wgrad_steps: self.wgrad_steps * s,
+            fbk_steps: self.fbk_steps * s,
+        }
+    }
+
+    /// Energy-efficiency ratio of `self` relative to a baseline (Table 2's
+    /// "Total (Ratio)" column is baseline/self).
+    pub fn energy_ratio_vs(&self, baseline: &CostBreakdown) -> f64 {
+        baseline.total_energy() / self.total_energy().max(1e-12)
+    }
+
+    pub fn steps_ratio_vs(&self, baseline: &CostBreakdown) -> f64 {
+        baseline.total_steps() / self.total_steps().max(1e-12)
+    }
+
+    /// A Table-2-style row: [ℒ, ∇_Σℒ, ∇_xℒ, total (ratio)] for energy then
+    /// steps. `unit` rescales raw counts into table units (e.g. 1e9).
+    pub fn table_cells(&self, baseline: &CostBreakdown, unit: f64) -> Vec<String> {
+        vec![
+            fmt_sig(self.fwd_energy / unit, 3),
+            fmt_sig(self.wgrad_energy / unit, 3),
+            fmt_sig(self.fbk_energy / unit, 3),
+            format!(
+                "{} ({})",
+                fmt_sig(self.total_energy() / unit, 3),
+                fmt_sig(self.energy_ratio_vs(baseline), 3)
+            ),
+            fmt_sig(self.fwd_steps / unit, 3),
+            fmt_sig(self.wgrad_steps / unit, 3),
+            fmt_sig(self.fbk_steps / unit, 3),
+            format!(
+                "{} ({})",
+                fmt_sig(self.total_steps() / unit, 3),
+                fmt_sig(self.steps_ratio_vs(baseline), 3)
+            ),
+        ]
+    }
+
+    /// Header matching `table_cells`.
+    pub fn table_header(label: &str) -> Vec<String> {
+        vec![
+            label.to_string(),
+            "E:L".into(),
+            "E:gradS".into(),
+            "E:gradX".into(),
+            "E:total(ratio)".into(),
+            "S:L".into(),
+            "S:gradS".into(),
+            "S:gradX".into(),
+            "S:total(ratio)".into(),
+        ]
+    }
+}
+
+/// Sampling sparsities entering the analytic model (keep fractions).
+#[derive(Clone, Copy, Debug)]
+pub struct SparsityConfig {
+    /// Feedback keep fraction α_W (1 = dense feedback).
+    pub alpha_w: f64,
+    /// Column keep fraction α_C (1 = all columns).
+    pub alpha_c: f64,
+    /// Fraction of iterations actually executed (1 − SMD skip probability).
+    pub alpha_d: f64,
+}
+
+impl SparsityConfig {
+    pub const DENSE: SparsityConfig = SparsityConfig { alpha_w: 1.0, alpha_c: 1.0, alpha_d: 1.0 };
+}
+
+/// Analytic per-iteration cost of one projection layer (Appendix G.1/G.2).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCost {
+    /// Block-grid rows P = ceil(out/k).
+    pub p: usize,
+    /// Block-grid cols Q = ceil(in/k).
+    pub q: usize,
+    pub k: usize,
+    /// Output columns per sample after im2col (H'·W'; 1 for linear).
+    pub out_cols: usize,
+    /// Input spatial size (H·W; 1 for linear) — enters the feedback cost.
+    pub in_cols: usize,
+}
+
+impl LayerCost {
+    /// Conv layer with `cout`×`cin`×`kk`×`kk` kernel over `h`×`w` inputs
+    /// (stride `s`, padding `pad`), blocked into k×k PTCs.
+    pub fn conv2d(
+        cout: usize,
+        cin: usize,
+        kk: usize,
+        h: usize,
+        w: usize,
+        s: usize,
+        pad: usize,
+        k: usize,
+    ) -> LayerCost {
+        let oh = (h + 2 * pad - kk) / s + 1;
+        let ow = (w + 2 * pad - kk) / s + 1;
+        LayerCost {
+            p: cout.div_ceil(k),
+            q: (cin * kk * kk).div_ceil(k),
+            k,
+            out_cols: oh * ow,
+            in_cols: h * w,
+        }
+    }
+
+    /// Fully-connected layer.
+    pub fn linear(out: usize, inp: usize, k: usize) -> LayerCost {
+        LayerCost { p: out.div_ceil(k), q: inp.div_ceil(k), k, out_cols: 1, in_cols: 1 }
+    }
+
+    /// Dense-equivalent parameter count of the layer.
+    pub fn params(&self) -> usize {
+        self.p * self.q * self.k * self.k
+    }
+
+    /// Number of MZI phases (U and V* meshes) realizing the layer.
+    pub fn phases(&self) -> usize {
+        self.p * self.q * self.k * (self.k - 1)
+    }
+
+    /// Per-iteration cost with batch `b` under `sp` (Eq. 14 energies; G.2
+    /// steps). Matches what the simulator counts for the same shapes — see
+    /// `analytic_matches_measured_dense_linear`.
+    pub fn per_iteration(&self, b: usize, sp: SparsityConfig) -> CostBreakdown {
+        let (p, q, k) = (self.p as f64, self.q as f64, self.k as f64);
+        // Column groups: the batch·spatial columns stream through in groups
+        // of k WDM channels.
+        let fwd_groups = ((b * self.out_cols) as f64 / k).ceil().max(1.0);
+        let kept_cols = (sp.alpha_c * (b * self.out_cols) as f64).round().max(1.0);
+        let grad_groups = (kept_cols / k).ceil().max(1.0);
+        let kept_fb_rows = (sp.alpha_w * p).round().max(1.0);
+        CostBreakdown {
+            // Forward: all P·Q blocks × column groups.
+            fwd_energy: p * q * fwd_groups,
+            // σ-grad: 2 reciprocal calls per block per kept column group.
+            wgrad_energy: 2.0 * p * q * grad_groups,
+            // Feedback: kept blocks per feedback row × column groups.
+            fbk_energy: kept_fb_rows * q * fwd_groups,
+            // Steps: PTCs are parallel; only accumulation depth serializes.
+            fwd_steps: fwd_groups * (1.0 + q),
+            wgrad_steps: 2.0 * grad_groups + 1.0,
+            fbk_steps: fwd_groups * (1.0 + kept_fb_rows),
+        }
+        .scale(sp.alpha_d)
+    }
+}
+
+/// Analytic whole-model training-cost estimate: layer costs × iterations.
+pub fn training_cost(
+    layers: &[LayerCost],
+    batch: usize,
+    iters_per_epoch: usize,
+    epochs: usize,
+    sp: SparsityConfig,
+) -> CostBreakdown {
+    let mut acc = CostBreakdown::default();
+    for l in layers {
+        acc.add(&l.per_iteration(batch, sp));
+    }
+    acc.scale((iters_per_epoch * epochs) as f64)
+}
+
+/// Forward-only inference cost (used for pricing ZO-protocol queries: one
+/// ZO query = one forward pass).
+pub fn forward_cost(layers: &[LayerCost], batch: usize) -> CostBreakdown {
+    let mut acc = CostBreakdown::default();
+    for l in layers {
+        let c = l.per_iteration(batch, SparsityConfig::DENSE);
+        acc.add(&CostBreakdown {
+            fwd_energy: c.fwd_energy,
+            fwd_steps: c.fwd_steps,
+            ..Default::default()
+        });
+    }
+    acc
+}
+
+/// Pretty-print labelled breakdowns as a Table-2-style table (first row is
+/// the ratio baseline).
+pub fn print_cost_table(title: &str, rows: &[(String, CostBreakdown)], unit: f64) {
+    if rows.is_empty() {
+        return;
+    }
+    let baseline = rows[0].1;
+    let header = CostBreakdown::table_header("config");
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for (label, c) in rows {
+        let mut cells = vec![label.clone()];
+        cells.extend(c.table_cells(&baseline, unit));
+        t.row(&cells);
+    }
+    t.print(title);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::photonics::{NoiseModel, PtcMesh};
+    use crate::util::Rng;
+
+    #[test]
+    fn breakdown_totals_and_ratio() {
+        let a = CostBreakdown {
+            fwd_energy: 2.0,
+            wgrad_energy: 3.0,
+            fbk_energy: 5.0,
+            fwd_steps: 1.0,
+            wgrad_steps: 1.0,
+            fbk_steps: 2.0,
+        };
+        assert_eq!(a.total_energy(), 10.0);
+        assert_eq!(a.total_steps(), 4.0);
+        let half = a.scale(0.5);
+        assert_eq!(half.total_energy(), 5.0);
+        assert!((half.energy_ratio_vs(&a) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analytic_matches_measured_dense_linear() {
+        // A dense k-blocked linear layer: analytic Eq.14 must equal the
+        // simulator's measured counters for fwd + σ-grad + dense feedback.
+        let (out, inp, k, b) = (8, 12, 4, 6);
+        let mut rng = Rng::new(9);
+        let mut mesh = PtcMesh::new(out, inp, k, NoiseModel::IDEAL, &mut rng);
+        let x = Mat::randn(inp, b, 1.0, &mut rng);
+        let dy = Mat::randn(out, b, 1.0, &mut rng);
+        let y = mesh.forward(&x);
+        assert_eq!(y.rows, out);
+        let _ = mesh.sigma_grad(&x, &dy, None, 1.0);
+        let _ = mesh.feedback(&dy, None, 1.0);
+        let measured = CostBreakdown::from_stats(&mesh.stats);
+
+        let analytic =
+            LayerCost::linear(out, inp, k).per_iteration(b, SparsityConfig::DENSE);
+        assert_eq!(measured.fwd_energy, analytic.fwd_energy, "fwd energy");
+        assert_eq!(measured.wgrad_energy, analytic.wgrad_energy, "wgrad energy");
+        assert_eq!(measured.fbk_energy, analytic.fbk_energy, "fbk energy");
+        assert_eq!(measured.fwd_steps, analytic.fwd_steps, "fwd steps");
+        assert_eq!(measured.wgrad_steps, analytic.wgrad_steps, "wgrad steps");
+        assert_eq!(measured.fbk_steps, analytic.fbk_steps, "fbk steps");
+    }
+
+    #[test]
+    fn feedback_sparsity_scales_feedback_energy_only() {
+        let l = LayerCost::linear(18, 18, 9);
+        let dense = l.per_iteration(9, SparsityConfig::DENSE);
+        let half = l.per_iteration(9, SparsityConfig { alpha_w: 0.5, alpha_c: 1.0, alpha_d: 1.0 });
+        assert_eq!(dense.fwd_energy, half.fwd_energy);
+        assert_eq!(dense.wgrad_energy, half.wgrad_energy);
+        assert!(half.fbk_energy < dense.fbk_energy);
+        assert!(half.fbk_steps < dense.fbk_steps);
+    }
+
+    #[test]
+    fn column_sparsity_scales_wgrad_only() {
+        let l = LayerCost::conv2d(16, 16, 3, 8, 8, 1, 1, 8);
+        let dense = l.per_iteration(4, SparsityConfig::DENSE);
+        let cs = l.per_iteration(4, SparsityConfig { alpha_w: 1.0, alpha_c: 0.5, alpha_d: 1.0 });
+        assert_eq!(dense.fwd_energy, cs.fwd_energy);
+        assert!(cs.wgrad_energy < dense.wgrad_energy);
+        assert_eq!(dense.fbk_energy, cs.fbk_energy);
+    }
+
+    #[test]
+    fn data_sparsity_scales_everything() {
+        let l = LayerCost::linear(32, 32, 8);
+        let dense = l.per_iteration(8, SparsityConfig::DENSE);
+        let ds = l.per_iteration(8, SparsityConfig { alpha_w: 1.0, alpha_c: 1.0, alpha_d: 0.5 });
+        assert!((ds.total_energy() - dense.total_energy() * 0.5).abs() < 1e-9);
+        assert!((ds.total_steps() - dense.total_steps() * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conv_shapes() {
+        // CONV64K3S1P1 over 32×32 with k=9: P = ceil(64/9)=8, Q = ceil(576/9)=64.
+        let l = LayerCost::conv2d(64, 64, 3, 32, 32, 1, 1, 9);
+        assert_eq!(l.p, 8);
+        assert_eq!(l.q, 64);
+        assert_eq!(l.out_cols, 32 * 32);
+        assert_eq!(l.params(), 8 * 64 * 81);
+    }
+
+    #[test]
+    fn forward_cost_is_fwd_only() {
+        let layers = [LayerCost::linear(16, 16, 8), LayerCost::linear(16, 8, 8)];
+        let c = forward_cost(&layers, 4);
+        assert!(c.fwd_energy > 0.0);
+        assert_eq!(c.wgrad_energy, 0.0);
+        assert_eq!(c.fbk_energy, 0.0);
+    }
+}

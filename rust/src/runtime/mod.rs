@@ -1,0 +1,316 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the rust hot path. Python never runs here — `make artifacts` is the only
+//! python invocation, at build time.
+//!
+//! * `Manifest` — parses `artifacts/manifest.json` (names, arg shapes/
+//!   dtypes, output arity) with the in-repo JSON parser.
+//! * `Runtime` — one `PjRtClient::cpu()`, compiling each HLO-text module on
+//!   first use and caching the loaded executable (one compiled executable
+//!   per model variant).
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of one artifact argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported artifact dtype {other}"),
+        }
+    }
+}
+
+/// Declared shape/dtype of one artifact argument.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&src).map_err(|e| anyhow!("manifest parse: {e:?}"))?;
+        let format = root.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if format != "hlo-text" {
+            bail!("manifest format {format:?}, expected \"hlo-text\"");
+        }
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let outputs = a
+                .get("outputs")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("artifact {name} missing outputs"))?;
+            let mut args = Vec::new();
+            for arg in a.get("args").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                let dtype = DType::parse(
+                    arg.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32"),
+                )?;
+                let shape: Vec<usize> = arg
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                    .unwrap_or_default();
+                args.push(ArgSpec { shape, dtype });
+            }
+            artifacts.push(ArtifactSpec { name, file, args, outputs });
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// An input value for one artifact argument.
+#[derive(Clone, Debug)]
+pub enum ArgValue<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl ArgValue<'_> {
+    fn len(&self) -> usize {
+        match self {
+            ArgValue::F32(v) => v.len(),
+            ArgValue::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Output buffers of one execution.
+#[derive(Clone, Debug)]
+pub enum OutValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutValue {
+    /// Borrow as f32 (errors if the output is integer).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            OutValue::F32(v) => Ok(v),
+            OutValue::I32(_) => bail!("output is i32, expected f32"),
+        }
+    }
+}
+
+/// The PJRT runtime: client + per-artifact compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `args`; returns the flattened outputs.
+    ///
+    /// Arguments are validated against the manifest (arity, length, dtype)
+    /// before anything touches the device.
+    pub fn call(&mut self, name: &str, args: &[ArgValue]) -> Result<Vec<OutValue>> {
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        if args.len() != spec.args.len() {
+            bail!("artifact {name} expects {} args, got {}", spec.args.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (a, s)) in args.iter().zip(&spec.args).enumerate() {
+            if a.len() != s.numel() {
+                bail!(
+                    "artifact {name} arg {i}: expected {} elements for shape {:?}, got {}",
+                    s.numel(),
+                    s.shape,
+                    a.len()
+                );
+            }
+            let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (a, s.dtype) {
+                (ArgValue::F32(v), DType::F32) => xla::Literal::vec1(v).reshape(&dims)?,
+                (ArgValue::I32(v), DType::I32) => xla::Literal::vec1(v).reshape(&dims)?,
+                _ => bail!("artifact {name} arg {i}: dtype mismatch (want {:?})", s.dtype),
+            };
+            literals.push(lit);
+        }
+        self.ensure_compiled(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: root is always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs {
+            bail!("artifact {name}: manifest says {} outputs, got {}", spec.outputs, parts.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            // Try f32 first (the dominant type), fall back to i32.
+            match part.to_vec::<f32>() {
+                Ok(v) => out.push(OutValue::F32(v)),
+                Err(_) => out.push(OutValue::I32(part.to_vec::<i32>()?)),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Convenience: single-f32-output call.
+    pub fn call1_f32(&mut self, name: &str, args: &[ArgValue]) -> Result<Vec<f32>> {
+        let mut outs = self.call(name, args)?;
+        if outs.len() != 1 {
+            bail!("artifact {name} has {} outputs, expected 1", outs.len());
+        }
+        match outs.pop().unwrap() {
+            OutValue::F32(v) => Ok(v),
+            OutValue::I32(_) => bail!("artifact {name} output is i32"),
+        }
+    }
+}
+
+/// Default artifact directory: `$L2IGHT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("L2IGHT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+          "format": "hlo-text",
+          "artifacts": [
+            {"name": "a", "file": "a.hlo.txt",
+             "args": [{"shape": [2, 3], "dtype": "f32"},
+                      {"shape": [4], "dtype": "i32"}],
+             "outputs": 2}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("l2ight_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("a").unwrap();
+        assert_eq!(a.args.len(), 2);
+        assert_eq!(a.args[0].shape, vec![2, 3]);
+        assert_eq!(a.args[0].numel(), 6);
+        assert_eq!(a.args[1].dtype, DType::I32);
+        assert_eq!(a.outputs, 2);
+        assert!(m.find("b").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_format() {
+        let dir = std::env::temp_dir().join("l2ight_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format": "proto", "artifacts": []}"#)
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_error_with_hint() {
+        let dir = std::env::temp_dir().join("l2ight_manifest_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

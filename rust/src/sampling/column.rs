@@ -1,0 +1,184 @@
+//! Feature sampling for gradient evaluation (§3.4.2, Fig. 9).
+//!
+//! * **Column sampling (CS, ours)** — drop whole columns of the im2col patch
+//!   matrix X (i.e. output spatial positions), shared across the batch.
+//!   Because a pixel appears in multiple patches, information is partially
+//!   preserved, and the structured drop translates directly to fewer PTC
+//!   calls and shorter accumulation (energy + step savings).
+//! * **Spatial sampling (SS, prior RAD/SWAT)** — drop input *pixels* before
+//!   im2col. After the unfold, the zeros scatter irregularly, so the dense
+//!   projection engine saves nothing — it only reduces activation storage.
+//!
+//! For CONV1×1 the two coincide. Per the paper, CS uses no magnitude
+//! rescale (α_C scaling is harmful when combined with α_W; §3.4.2).
+
+use crate::nn::act::Act;
+use crate::util::Rng;
+
+/// Which feature-sampling technique a layer uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureSampling {
+    /// No feature sampling.
+    None,
+    /// Column sampling with drop fraction α_C.
+    Column,
+    /// Spatial sampling with drop fraction α_S (prior art baseline).
+    Spatial,
+}
+
+/// Draws per-layer feature masks.
+#[derive(Clone, Copy, Debug)]
+pub struct ColumnSampler {
+    pub mode: FeatureSampling,
+    /// Dropped fraction (α_C or α_S).
+    pub sparsity: f32,
+    /// Whether to rescale kept features by 1/keep-fraction
+    /// (expectation-maintained); the paper uses `false` for CS.
+    pub rescale: bool,
+}
+
+impl ColumnSampler {
+    pub const OFF: ColumnSampler =
+        ColumnSampler { mode: FeatureSampling::None, sparsity: 0.0, rescale: false };
+
+    pub fn column(sparsity: f32) -> ColumnSampler {
+        ColumnSampler { mode: FeatureSampling::Column, sparsity, rescale: false }
+    }
+
+    pub fn spatial(sparsity: f32, rescale: bool) -> ColumnSampler {
+        ColumnSampler { mode: FeatureSampling::Spatial, sparsity, rescale }
+    }
+
+    /// Draw a keep-mask over the patch-matrix columns for a layer whose
+    /// im2col output has `spatial` output positions and batch `b`
+    /// (total columns b·spatial). CS masks positions *shared across batch*
+    /// (negligible mask-generation overhead, §3.4.2). Returns None when off.
+    pub fn draw_column_mask(&self, b: usize, spatial: usize, rng: &mut Rng) -> Option<Vec<bool>> {
+        if self.mode != FeatureSampling::Column || self.sparsity <= 0.0 {
+            return None;
+        }
+        let keep_n =
+            (((1.0 - self.sparsity) * spatial as f32).round() as usize).clamp(1, spatial);
+        let mut pos_keep = vec![false; spatial];
+        for i in rng.choose_k(spatial, keep_n) {
+            pos_keep[i] = true;
+        }
+        let mut mask = vec![false; b * spatial];
+        for bi in 0..b {
+            for s in 0..spatial {
+                mask[bi * spatial + s] = pos_keep[s];
+            }
+        }
+        Some(mask)
+    }
+
+    /// The gradient scale for kept columns (1 unless `rescale`).
+    pub fn scale(&self) -> f32 {
+        if self.rescale && self.mode != FeatureSampling::None && self.sparsity > 0.0 {
+            1.0 / (1.0 - self.sparsity)
+        } else {
+            1.0
+        }
+    }
+
+    /// Spatial sampling: zero dropped input *pixels* (all channels) of a
+    /// cached activation, returning the sparsified copy used for gradient
+    /// computation. Models RAD/SWAT-U: storage shrinks, but the zeros
+    /// scatter after im2col so no step reduction is possible.
+    pub fn apply_spatial(&self, x: &Act, rng: &mut Rng) -> Option<Act> {
+        if self.mode != FeatureSampling::Spatial || self.sparsity <= 0.0 {
+            return None;
+        }
+        let s = x.spatial();
+        let total = x.batch * s;
+        let keep_n = (((1.0 - self.sparsity) * total as f32).round() as usize).clamp(1, total);
+        let mut keep = vec![false; total];
+        for i in rng.choose_k(total, keep_n) {
+            keep[i] = true;
+        }
+        let scale = if self.rescale { total as f32 / keep_n as f32 } else { 1.0 };
+        let mut out = x.clone();
+        for ch in 0..out.channels() {
+            let row = out.mat.row_mut(ch);
+            for (c, &k) in keep.iter().enumerate() {
+                row[c] = if k { row[c] * scale } else { 0.0 };
+            }
+        }
+        Some(out)
+    }
+
+    /// Activation-storage reduction fraction achieved (the "Act↓" column of
+    /// Table 2): SS stores only kept pixels, CS stores kept columns.
+    pub fn act_reduction(&self) -> f32 {
+        match self.mode {
+            FeatureSampling::None => 0.0,
+            FeatureSampling::Column | FeatureSampling::Spatial => self.sparsity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn column_mask_shared_across_batch() {
+        let mut rng = Rng::new(1);
+        let s = ColumnSampler::column(0.5);
+        let mask = s.draw_column_mask(3, 10, &mut rng).unwrap();
+        assert_eq!(mask.len(), 30);
+        for bi in 1..3 {
+            for sp in 0..10 {
+                assert_eq!(mask[sp], mask[bi * 10 + sp], "mask must be batch-shared");
+            }
+        }
+        let kept = mask[..10].iter().filter(|&&m| m).count();
+        assert_eq!(kept, 5);
+    }
+
+    #[test]
+    fn off_draws_nothing() {
+        let mut rng = Rng::new(2);
+        assert!(ColumnSampler::OFF.draw_column_mask(2, 8, &mut rng).is_none());
+        assert_eq!(ColumnSampler::OFF.scale(), 1.0);
+    }
+
+    #[test]
+    fn spatial_zeroes_pixels_across_channels() {
+        let mut rng = Rng::new(3);
+        let s = ColumnSampler::spatial(0.5, false);
+        let act = Act::from_image(Mat::from_vec(2, 8, vec![1.0; 16]), 2, 2, 2);
+        let out = s.apply_spatial(&act, &mut rng).unwrap();
+        // Each dropped pixel must be dropped in *both* channels.
+        for col in 0..8 {
+            let a = out.mat[(0, col)];
+            let b = out.mat[(1, col)];
+            assert_eq!(a == 0.0, b == 0.0, "channel-inconsistent drop at {col}");
+        }
+        let dropped = (0..8).filter(|&c| out.mat[(0, c)] == 0.0).count();
+        assert_eq!(dropped, 4);
+    }
+
+    #[test]
+    fn spatial_rescale_maintains_expectation() {
+        let mut rng = Rng::new(4);
+        let s = ColumnSampler::spatial(0.5, true);
+        let act = Act::from_image(Mat::from_vec(1, 1000, vec![1.0; 1000]), 1, 1000, 1);
+        let mut acc = 0.0f64;
+        let reps = 200;
+        for _ in 0..reps {
+            let out = s.apply_spatial(&act, &mut rng).unwrap();
+            acc += out.mat.data.iter().map(|&v| v as f64).sum::<f64>();
+        }
+        let mean = acc / (reps as f64 * 1000.0);
+        assert!((mean - 1.0).abs() < 0.05, "expectation drift: {mean}");
+    }
+
+    #[test]
+    fn scale_logic() {
+        assert_eq!(ColumnSampler::column(0.6).scale(), 1.0);
+        let cs = ColumnSampler { mode: FeatureSampling::Column, sparsity: 0.6, rescale: true };
+        assert!((cs.scale() - 2.5).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,52 @@
+//! Data-level sparsity: stochastic mini-batch dropping (SMD, §3.4.2 /
+//! E2-Train [48]). Each iteration of an epoch is skipped with probability
+//! α_D, which translates one-for-one into training-time and energy
+//! reduction (Table 2 "+ Data Sampling", Fig. 12(c)).
+
+use crate::util::Rng;
+
+/// Iteration-skipping sampler.
+#[derive(Clone, Copy, Debug)]
+pub struct DataSampler {
+    /// Skip probability α_D ∈ [0, 1).
+    pub sparsity: f32,
+}
+
+impl DataSampler {
+    pub const OFF: DataSampler = DataSampler { sparsity: 0.0 };
+
+    pub fn new(sparsity: f32) -> DataSampler {
+        assert!((0.0..1.0).contains(&sparsity));
+        DataSampler { sparsity }
+    }
+
+    /// Whether to skip the current iteration.
+    pub fn skip(&self, rng: &mut Rng) -> bool {
+        self.sparsity > 0.0 && rng.bernoulli(self.sparsity as f64)
+    }
+
+    /// Expected fraction of iterations executed.
+    pub fn expected_kept(&self) -> f32 {
+        1.0 - self.sparsity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_never_skips() {
+        let mut rng = Rng::new(1);
+        assert!((0..1000).all(|_| !DataSampler::OFF.skip(&mut rng)));
+    }
+
+    #[test]
+    fn skip_rate_matches() {
+        let mut rng = Rng::new(2);
+        let s = DataSampler::new(0.8);
+        let skipped = (0..20_000).filter(|_| s.skip(&mut rng)).count();
+        assert!((skipped as f64 / 20_000.0 - 0.8).abs() < 0.02);
+        assert!((s.expected_kept() - 0.2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,269 @@
+//! Balanced feedback sampling (§3.4.2, Fig. 7).
+//!
+//! The error feedback dX = Wᵀ·dY is the most expensive backward product
+//! (Table 2: ∇ₓℒ dominates total steps). We sample Wᵀ with a structured
+//! block mask 𝒫_W = c_W·(S_W ⊗ 1): whole k×k PTC blocks are dropped, so the
+//! masked PTCs are idle (energy↓) and the partial-product accumulation
+//! chain shortens (steps↓).
+//!
+//! Strategies (Fig. 12(a)):
+//! * `Uniform` — importance-unaware random blocks; unbiased, high variance.
+//! * `TopK`    — globally greedy by block norm; biased, and load-imbalanced:
+//!   the feedback latency is the *longest* accumulation row of Wᵀ.
+//! * `BTopK`   — the paper's balanced top-K: per row of Wᵀ (fixed q), draw
+//!   the same number of blocks from a norm-guided distribution, bounding
+//!   both bias and the critical path.
+
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// Which blocks of Wᵀ to keep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeedbackStrategy {
+    Uniform,
+    TopK,
+    BTopK,
+}
+
+/// Gradient magnitude normalization after masking (Fig. 8(b)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Normalization {
+    /// No rescale.
+    None,
+    /// Expectation-maintained: scale by 1/keep-fraction (unbiased, App. D).
+    Exp,
+    /// Variance-maintained: scale by 1/sqrt(keep-fraction).
+    Var,
+}
+
+/// A drawn mask over the [q × p] block grid of Wᵀ plus its scale factor.
+#[derive(Clone, Debug)]
+pub struct FeedbackMask {
+    /// keep[qi * p + pi] — row-major over Wᵀ's block grid, matching
+    /// `PtcMesh::feedback`.
+    pub keep: Vec<bool>,
+    pub p: usize,
+    pub q: usize,
+    /// c_W normalization applied to the masked product.
+    pub scale: f32,
+}
+
+impl FeedbackMask {
+    /// Fraction of blocks kept.
+    pub fn keep_fraction(&self) -> f32 {
+        let kept = self.keep.iter().filter(|&&b| b).count();
+        kept as f32 / self.keep.len().max(1) as f32
+    }
+
+    /// Longest accumulation row (the latency-critical path, Fig. 7):
+    /// max over q of the number of kept p-blocks.
+    pub fn critical_path(&self) -> usize {
+        (0..self.q)
+            .map(|qi| (0..self.p).filter(|&pi| self.keep[qi * self.p + pi]).count())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total kept block-products (the energy proxy).
+    pub fn kept_blocks(&self) -> usize {
+        self.keep.iter().filter(|&&b| b).count()
+    }
+
+    /// Apply to a dense weight (for digital-engine baselines): zero dropped
+    /// blocks of W (blocks inferred from the grid) and scale the rest.
+    pub fn apply_dense(&self, w: &Mat) -> Mat {
+        let bk_r = w.rows.div_ceil(self.p);
+        let bk_c = w.cols.div_ceil(self.q);
+        let mut out = w.clone();
+        for pi in 0..self.p {
+            for qi in 0..self.q {
+                let keep = self.keep[qi * self.p + pi];
+                for r in pi * bk_r..((pi + 1) * bk_r).min(w.rows) {
+                    for c in qi * bk_c..((qi + 1) * bk_c).min(w.cols) {
+                        out[(r, c)] = if keep { out[(r, c)] * self.scale } else { 0.0 };
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Draws feedback masks for a given strategy/sparsity/normalization.
+#[derive(Clone, Copy, Debug)]
+pub struct FeedbackSampler {
+    pub strategy: FeedbackStrategy,
+    /// Dropped fraction α_W ∈ [0, 1) (paper Table 2 convention: α_W = 0.6
+    /// keeps 40% of the blocks).
+    pub sparsity: f32,
+    pub norm: Normalization,
+}
+
+impl FeedbackSampler {
+    pub fn new(strategy: FeedbackStrategy, sparsity: f32, norm: Normalization) -> Self {
+        assert!((0.0..1.0).contains(&sparsity), "sparsity must be in [0,1)");
+        FeedbackSampler { strategy, sparsity, norm }
+    }
+
+    /// Draw a mask for a (p, q) block grid given per-block squared Frobenius
+    /// norms (row-major [p][q], as `PtcMesh::block_norms_sq` returns).
+    pub fn draw(&self, p: usize, q: usize, norms_pq: &[f32], rng: &mut Rng) -> FeedbackMask {
+        assert_eq!(norms_pq.len(), p * q);
+        let keep_frac = 1.0 - self.sparsity;
+        let mut keep = vec![false; p * q]; // [q][p] layout
+        match self.strategy {
+            FeedbackStrategy::Uniform => {
+                let total = p * q;
+                let n_keep = ((keep_frac * total as f32).round() as usize).clamp(1, total);
+                for idx in rng.choose_k(total, n_keep) {
+                    keep[idx] = true;
+                }
+            }
+            FeedbackStrategy::TopK => {
+                // Globally greedy: largest block norms anywhere.
+                let total = p * q;
+                let n_keep = ((keep_frac * total as f32).round() as usize).clamp(1, total);
+                let mut idx: Vec<usize> = (0..total).collect();
+                // norms are [p][q]; transpose index into the [q][p] mask.
+                idx.sort_by(|&a, &b| {
+                    let na = norms_pq[(a % p) * q + a / p];
+                    let nb = norms_pq[(b % p) * q + b / p];
+                    nb.partial_cmp(&na).unwrap()
+                });
+                for &i in idx.iter().take(n_keep) {
+                    keep[(i / p) * p + (i % p)] = true;
+                }
+            }
+            FeedbackStrategy::BTopK => {
+                // Per q-row: same count, norm-guided sampling without
+                // replacement (Efraimidis–Spirakis keys u^{1/w}).
+                let per_row = ((keep_frac * p as f32).round() as usize).clamp(1, p);
+                for qi in 0..q {
+                    let mut keys: Vec<(f64, usize)> = (0..p)
+                        .map(|pi| {
+                            let w = norms_pq[pi * q + qi].max(1e-12) as f64;
+                            let u = rng.uniform().max(1e-300);
+                            (u.powf(1.0 / w), pi)
+                        })
+                        .collect();
+                    keys.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                    for &(_, pi) in keys.iter().take(per_row) {
+                        keep[qi * p + pi] = true;
+                    }
+                }
+            }
+        }
+        let kept = keep.iter().filter(|&&b| b).count().max(1);
+        let actual_keep_frac = kept as f32 / (p * q) as f32;
+        let scale = match self.norm {
+            Normalization::None => 1.0,
+            Normalization::Exp => 1.0 / actual_keep_frac,
+            Normalization::Var => 1.0 / actual_keep_frac.sqrt(),
+        };
+        FeedbackMask { keep, p, q, scale }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn norms(p: usize, q: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..p * q).map(|_| rng.uniform_f32() + 0.01).collect()
+    }
+
+    #[test]
+    fn btopk_is_load_balanced() {
+        let mut rng = Rng::new(1);
+        let (p, q) = (8, 6);
+        let n = norms(p, q, &mut rng);
+        let s = FeedbackSampler::new(FeedbackStrategy::BTopK, 0.5, Normalization::Exp);
+        for _ in 0..20 {
+            let m = s.draw(p, q, &n, &mut rng);
+            // Every q-row keeps exactly the same count.
+            let counts: Vec<usize> = (0..q)
+                .map(|qi| (0..p).filter(|&pi| m.keep[qi * p + pi]).count())
+                .collect();
+            assert!(counts.windows(2).all(|w| w[0] == w[1]), "{counts:?}");
+            assert_eq!(m.critical_path(), counts[0]);
+        }
+    }
+
+    #[test]
+    fn topk_prefers_large_norms() {
+        let mut rng = Rng::new(2);
+        let (p, q) = (4, 4);
+        let mut n = vec![0.01f32; p * q];
+        // Make blocks p=0 row huge.
+        for qi in 0..q {
+            n[qi] = 100.0; // p index 0, all q
+        }
+        let s = FeedbackSampler::new(FeedbackStrategy::TopK, 0.75, Normalization::None);
+        let m = s.draw(p, q, &n, &mut rng);
+        // keep count = 4; the 4 largest are p=0 blocks for each q.
+        for qi in 0..q {
+            assert!(m.keep[qi * p], "block (0, {qi}) should be kept");
+        }
+        assert_eq!(m.kept_blocks(), 4);
+        // ...and topk is maximally imbalanced here in the p-dimension:
+        assert_eq!(m.critical_path(), 1);
+    }
+
+    #[test]
+    fn uniform_keep_count_exact() {
+        let mut rng = Rng::new(3);
+        let (p, q) = (5, 7);
+        let n = norms(p, q, &mut rng);
+        let s = FeedbackSampler::new(FeedbackStrategy::Uniform, 0.6, Normalization::Exp);
+        let m = s.draw(p, q, &n, &mut rng);
+        assert_eq!(m.kept_blocks(), ((0.4 * 35.0f32).round()) as usize);
+        assert!((m.scale - 35.0 / m.kept_blocks() as f32).abs() < 1e-5);
+    }
+
+    #[test]
+    fn normalization_factors() {
+        let mut rng = Rng::new(4);
+        let n = norms(4, 4, &mut rng);
+        for (norm, expect) in [
+            (Normalization::None, 1.0f32),
+            (Normalization::Exp, 2.0),
+            (Normalization::Var, 2.0f32.sqrt()),
+        ] {
+            let s = FeedbackSampler::new(FeedbackStrategy::BTopK, 0.5, norm);
+            let m = s.draw(4, 4, &n, &mut rng);
+            assert!((m.scale - expect).abs() < 1e-4, "{norm:?}: {} vs {expect}", m.scale);
+        }
+    }
+
+    #[test]
+    fn unbiasedness_of_uniform_exp() {
+        // E[masked-and-scaled W] ≈ W elementwise (Appendix D, Claim 2).
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(8, 8, 1.0, &mut rng);
+        let s = FeedbackSampler::new(FeedbackStrategy::Uniform, 0.5, Normalization::Exp);
+        let n = vec![1.0f32; 16];
+        let mut acc = Mat::zeros(8, 8);
+        let reps = 4000;
+        for _ in 0..reps {
+            let m = s.draw(4, 4, &n, &mut rng);
+            acc = acc.add(&m.apply_dense(&w));
+        }
+        acc.scale(1.0 / reps as f32);
+        let err = acc.sub(&w).fro_norm() / w.fro_norm();
+        assert!(err < 0.05, "bias too large: {err}");
+    }
+
+    #[test]
+    fn apply_dense_zeroes_dropped() {
+        let w = Mat::from_slice(4, 4, &(0..16).map(|i| i as f32 + 1.0).collect::<Vec<_>>());
+        let mask = FeedbackMask { keep: vec![true, false, false, true], p: 2, q: 2, scale: 2.0 };
+        let out = mask.apply_dense(&w);
+        // keep[(q=0,p=0)]=true -> top-left block scaled; keep[(q=0,p=1)]=false
+        // -> bottom-left zero; keep[(q=1,p=0)]=false -> top-right zero;
+        // keep[(q=1,p=1)]=true -> bottom-right scaled.
+        assert_eq!(out[(0, 0)], 2.0);
+        assert_eq!(out[(2, 0)], 0.0);
+        assert_eq!(out[(0, 2)], 0.0);
+        assert_eq!(out[(2, 2)], 22.0);
+    }
+}

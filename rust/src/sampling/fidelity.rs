@@ -1,0 +1,142 @@
+//! Gradient-approximation fidelity metrics (Fig. 8): how well the sampled
+//! σ-gradient aligns with the true (dense) one, measured as average angular
+//! similarity [5] and normalized matrix distance.
+
+use crate::data::Dataset;
+use crate::nn::{softmax_cross_entropy, Act, BackwardCtx, Model, ProjEngine};
+use crate::sampling::{ColumnSampler, FeedbackSampler};
+use crate::util::Rng;
+
+/// Angular similarity of two vectors: 1 − arccos(cos θ)/π ∈ [0, 1]
+/// (1 = parallel, 0.5 = orthogonal) — the metric of Fig. 8.
+pub fn angular_similarity(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    let cos = (dot / (na.sqrt() * nb.sqrt()).max(1e-12)).clamp(-1.0, 1.0);
+    1.0 - cos.acos() / std::f64::consts::PI
+}
+
+/// Normalized distance ‖a − b‖² / ‖a‖².
+pub fn normalized_distance(truth: &[f32], approx: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&t, &e) in truth.iter().zip(approx) {
+        num += ((t - e) as f64).powi(2);
+        den += (t as f64).powi(2);
+    }
+    num / den.max(1e-12)
+}
+
+/// Flatten all Σ-gradient accumulators of a model.
+fn collect_sigma_grads(model: &mut Model) -> Vec<f32> {
+    let mut out = Vec::new();
+    model.for_each_layer(|l| {
+        if let Some(ProjEngine::Photonic { grad_sigma, .. }) = l.engine_mut() {
+            out.extend_from_slice(grad_sigma);
+        }
+    });
+    out
+}
+
+/// Run one forward/backward with the given samplers and return the flat
+/// σ-gradient vector.
+fn one_backward(
+    model: &mut Model,
+    x: &Act,
+    labels: &[usize],
+    feedback: Option<FeedbackSampler>,
+    feature: ColumnSampler,
+    rng_seed: u64,
+) -> Vec<f32> {
+    let logits = model.forward(x, true);
+    let (_, dl) = softmax_cross_entropy(&logits.mat, labels);
+    model.zero_grad();
+    let mut ctx = BackwardCtx { feedback, feature, rng: Rng::new(rng_seed) };
+    let dy = Act { mat: dl, ..logits };
+    model.backward(&dy, &mut ctx);
+    collect_sigma_grads(model)
+}
+
+/// Fidelity of a sampled σ-gradient vs the dense one, averaged over
+/// `draws` independent mask draws on one batch.
+///
+/// Returns (mean angular similarity, mean normalized distance).
+pub fn grad_fidelity(
+    model: &mut Model,
+    ds: &Dataset,
+    batch_idx: &[usize],
+    feedback: Option<FeedbackSampler>,
+    feature: ColumnSampler,
+    draws: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let (x, labels) = ds.gather(batch_idx, None);
+    let truth = one_backward(model, &x, &labels, None, ColumnSampler::OFF, seed);
+    let mut sim = 0.0;
+    let mut dist = 0.0;
+    for d in 0..draws {
+        let est = one_backward(model, &x, &labels, feedback, feature, seed ^ (d as u64 + 1));
+        sim += angular_similarity(&truth, &est);
+        dist += normalized_distance(&truth, &est);
+    }
+    model.clear_caches();
+    (sim / draws as f64, dist / draws as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, SynthSpec};
+    use crate::nn::{build_model, EngineKind, ModelArch};
+    use crate::photonics::NoiseModel;
+    use crate::sampling::{FeedbackStrategy, Normalization};
+
+    #[test]
+    fn angular_similarity_bounds() {
+        let a = [1.0f32, 0.0];
+        assert!((angular_similarity(&a, &[1.0, 0.0]) - 1.0).abs() < 1e-9);
+        assert!((angular_similarity(&a, &[0.0, 1.0]) - 0.5).abs() < 1e-9);
+        assert!(angular_similarity(&a, &[-1.0, 0.0]) < 1e-9);
+    }
+
+    #[test]
+    fn dense_sampling_is_exact() {
+        let mut rng = Rng::new(61);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::IDEAL };
+        let mut model = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut rng);
+        let (ds, _) = SynthSpec::quick(DatasetKind::VowelLike, 32, 8).generate();
+        let idx: Vec<usize> = (0..16).collect();
+        let (sim, dist) =
+            grad_fidelity(&mut model, &ds, &idx, None, ColumnSampler::OFF, 2, 1);
+        assert!(sim > 0.999, "dense should be exact: {sim}");
+        assert!(dist < 1e-9, "dense should be exact: {dist}");
+    }
+
+    #[test]
+    fn sparser_feedback_is_less_faithful() {
+        let mut rng = Rng::new(62);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::IDEAL };
+        let mut model = build_model(ModelArch::MlpVowel, kind, 4, 1.0, &mut rng);
+        let (ds, _) = SynthSpec::quick(DatasetKind::VowelLike, 64, 8).generate();
+        let idx: Vec<usize> = (0..32).collect();
+        let fs = |drop: f32| {
+            Some(FeedbackSampler::new(FeedbackStrategy::BTopK, drop, Normalization::Exp))
+        };
+        let (sim_mild, _) =
+            grad_fidelity(&mut model, &ds, &idx, fs(0.2), ColumnSampler::OFF, 6, 2);
+        let (sim_heavy, _) =
+            grad_fidelity(&mut model, &ds, &idx, fs(0.8), ColumnSampler::OFF, 6, 2);
+        assert!(
+            sim_mild >= sim_heavy - 0.02,
+            "mild sampling should align better: {sim_mild} vs {sim_heavy}"
+        );
+        assert!(sim_mild > 0.5, "btopk grads should be better than orthogonal");
+    }
+}

@@ -1,0 +1,17 @@
+//! Multi-level sparsity for efficient in-situ gradient evaluation (§3.4.2):
+//!
+//! * `feedback` — structured sampling of the feedback matrix Wᵀ (uniform /
+//!   topk / balanced top-K) with none/exp/var normalization;
+//! * `column`   — information-preserving column sampling (CS) of im2col
+//!   patches, vs. the prior spatial sampling (SS) it improves on;
+//! * `data`     — stochastic mini-batch dropping (SMD, [48]).
+
+pub mod column;
+pub mod fidelity;
+pub mod data;
+pub mod feedback;
+
+pub use column::{ColumnSampler, FeatureSampling};
+pub use fidelity::{angular_similarity, grad_fidelity, normalized_distance};
+pub use data::DataSampler;
+pub use feedback::{FeedbackMask, FeedbackSampler, FeedbackStrategy, Normalization};

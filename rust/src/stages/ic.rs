@@ -1,0 +1,271 @@
+//! Stage 1 — Identity Calibration (§3.2).
+//!
+//! After fabrication the realized U, V* are scrambled by unknown phase bias
+//! Φ_b and γ-variation. The exact problem `min ‖U−I‖ + ‖V*−I‖` is unsolvable
+//! under the observability constraints, so the paper minimizes the
+//! |·|-surrogate whose optimum is the *sign-flip identity* Ĩ:
+//!
+//! `min_Φ Σ_pq ( ‖|U_pq(Φᵁ)| − I‖² + ‖|V*_pq(Φⱽ)| − I‖² )`
+//!
+//! (observable on chip by sweeping Σ and reading the end-to-end transfer,
+//! Eq. 2). We optimize the programmed phases of both meshes jointly with a
+//! zeroth-order optimizer; each `eval` is one hardware query. Blocks are
+//! independent → embarrassingly parallel across PTCs (`std::thread`).
+
+use crate::photonics::ptc::{Ptc, Which};
+use crate::photonics::unitary::num_phases;
+use crate::photonics::PtcMesh;
+use crate::util::{mean, Rng};
+use crate::zoo::{ZoConfig, ZoKind, ZoProblem, ZoReport};
+
+/// Identity-calibration configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct IcConfig {
+    pub optimizer: ZoKind,
+    pub zo: ZoConfig,
+    pub seed: u64,
+    /// Worker threads for the per-block parallel sweep (1 = sequential).
+    pub threads: usize,
+}
+
+impl Default for IcConfig {
+    fn default() -> Self {
+        // Paper Appendix E: 400 epochs, lr 0.1, decay 0.99, 8-bit phases.
+        IcConfig {
+            optimizer: ZoKind::Zcd,
+            zo: ZoConfig { iters: 400, step: 0.1, decay: 0.99, step_floor: 2e-3, best_recording: true },
+            seed: 0xca11b,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+}
+
+impl IcConfig {
+    /// Few-iteration config for tests and smoke runs.
+    pub fn quick() -> IcConfig {
+        IcConfig {
+            zo: ZoConfig { iters: 60, step: 0.15, decay: 0.97, step_floor: 2e-3, best_recording: true },
+            ..Default::default()
+        }
+    }
+}
+
+/// Outcome of calibrating a mesh (or a whole model).
+#[derive(Clone, Debug, Default)]
+pub struct IcReport {
+    /// Mean MSEᵁ over blocks after calibration (Table 4's metric).
+    pub mse_u: f64,
+    /// Mean MSEⱽ over blocks after calibration.
+    pub mse_v: f64,
+    /// Mean per-block loss trace (for the Fig. 4(b) convergence plot).
+    pub trace: Vec<f64>,
+    /// Total ZO hardware queries over all blocks.
+    pub queries: u64,
+    /// Number of calibrated PTC blocks.
+    pub blocks: usize,
+}
+
+impl IcReport {
+    fn absorb(&mut self, r: &ZoReport, mse: (f64, f64)) {
+        self.mse_u += mse.0;
+        self.mse_v += mse.1;
+        self.queries += r.queries;
+        if self.trace.len() < r.trace.len() {
+            self.trace.resize(r.trace.len(), 0.0);
+        }
+        for (t, &v) in self.trace.iter_mut().zip(&r.trace) {
+            *t += v;
+        }
+        self.blocks += 1;
+    }
+
+    fn finalize(&mut self) {
+        let n = self.blocks.max(1) as f64;
+        self.mse_u /= n;
+        self.mse_v /= n;
+        for t in &mut self.trace {
+            *t /= n;
+        }
+    }
+
+    /// (MSEᵁ + MSEⱽ)/2, the Table 4 figure of merit.
+    pub fn mean_mse(&self) -> f64 {
+        (self.mse_u + self.mse_v) / 2.0
+    }
+}
+
+/// The per-block ZO problem: programmed phases ↦ |·|-identity surrogate.
+struct IcProblem<'a> {
+    ptc: &'a mut Ptc,
+    m: usize,
+}
+
+impl ZoProblem for IcProblem<'_> {
+    fn dim(&self) -> usize {
+        2 * self.m
+    }
+
+    fn eval(&mut self, phases: &[f64]) -> f64 {
+        self.ptc.set_phases(Which::U, &phases[..self.m]);
+        self.ptc.set_phases(Which::V, &phases[self.m..]);
+        let (mu, mv) = self.ptc.identity_mse();
+        mu + mv
+    }
+}
+
+/// Calibrate a single PTC in place; returns the ZO report and final MSEs.
+pub fn calibrate_ptc(ptc: &mut Ptc, cfg: &IcConfig, rng: &mut Rng) -> (ZoReport, (f64, f64)) {
+    let m = num_phases(ptc.k);
+    let mut init = Vec::with_capacity(2 * m);
+    for i in 0..m {
+        init.push(ptc.phase(Which::U, i));
+    }
+    for i in 0..m {
+        init.push(ptc.phase(Which::V, i));
+    }
+    let report = {
+        let mut prob = IcProblem { ptc, m };
+        cfg.optimizer.run(&mut prob, &init, cfg.zo, rng)
+    };
+    // Program the best phases found (the optimizer leaves the device at its
+    // last query point otherwise).
+    ptc.set_phases(Which::U, &report.best_phases[..m]);
+    ptc.set_phases(Which::V, &report.best_phases[m..]);
+    let mse = ptc.identity_mse();
+    (report, mse)
+}
+
+/// Calibrate all blocks of a mesh in parallel. Returns the aggregate report.
+pub fn calibrate_mesh(mesh: &mut PtcMesh, cfg: &IcConfig) -> IcReport {
+    let blocks = mesh.ptcs.len();
+    let threads = cfg.threads.clamp(1, blocks.max(1));
+    let mut results: Vec<Option<(ZoReport, (f64, f64))>> = vec![None; blocks];
+    if threads <= 1 || blocks <= 1 {
+        for (bi, ptc) in mesh.ptcs.iter_mut().enumerate() {
+            let mut rng = Rng::with_stream(cfg.seed, bi as u64);
+            results[bi] = Some(calibrate_ptc(ptc, cfg, &mut rng));
+        }
+    } else {
+        // Chunk the PTC array across a thread scope; each block forks its
+        // own RNG stream so the result is independent of thread count.
+        let chunk = blocks.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ci, (ptcs, res)) in mesh
+                .ptcs
+                .chunks_mut(chunk)
+                .zip(results.chunks_mut(chunk))
+                .enumerate()
+            {
+                let cfg = *cfg;
+                s.spawn(move || {
+                    for (i, (ptc, slot)) in ptcs.iter_mut().zip(res.iter_mut()).enumerate() {
+                        let bi = ci * chunk + i;
+                        let mut rng = Rng::with_stream(cfg.seed, bi as u64);
+                        *slot = Some(calibrate_ptc(ptc, &cfg, &mut rng));
+                    }
+                });
+            }
+        });
+    }
+    mesh.invalidate();
+    let mut agg = IcReport::default();
+    for r in results.into_iter().flatten() {
+        agg.absorb(&r.0, r.1);
+    }
+    agg.finalize();
+    agg
+}
+
+/// Calibrate every photonic engine in a model; aggregates across meshes.
+pub fn calibrate_model(model: &mut crate::nn::Model, cfg: &IcConfig) -> IcReport {
+    let mut agg = IcReport::default();
+    let mut traces: Vec<Vec<f64>> = Vec::new();
+    let mut mesh_idx = 0u64;
+    model.for_each_layer(|l| {
+        if let Some(crate::nn::ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+            let sub_cfg = IcConfig { seed: cfg.seed.wrapping_add(mesh_idx), ..*cfg };
+            let r = calibrate_mesh(mesh, &sub_cfg);
+            agg.mse_u += r.mse_u * r.blocks as f64;
+            agg.mse_v += r.mse_v * r.blocks as f64;
+            agg.queries += r.queries;
+            agg.blocks += r.blocks;
+            traces.push(r.trace);
+            mesh_idx += 1;
+        }
+    });
+    let n = agg.blocks.max(1) as f64;
+    agg.mse_u /= n;
+    agg.mse_v /= n;
+    let max_len = traces.iter().map(|t| t.len()).max().unwrap_or(0);
+    agg.trace = (0..max_len)
+        .map(|i| mean(&traces.iter().filter_map(|t| t.get(i).copied()).collect::<Vec<_>>()))
+        .collect();
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::photonics::unitary::is_signed_identity;
+    use crate::photonics::NoiseModel;
+
+    #[test]
+    fn ic_reaches_signed_identity_on_small_block() {
+        let mut rng = Rng::new(11);
+        // Bias-only noise: the classic post-fab scramble.
+        let mut ptc = Ptc::new(4, NoiseModel::bias_only(), &mut rng);
+        let before = ptc.identity_mse();
+        let cfg = IcConfig {
+            zo: ZoConfig { iters: 400, step: 0.3, decay: 0.995, step_floor: 1e-3, best_recording: true },
+            ..IcConfig::default()
+        };
+        let mut ic_rng = Rng::new(1);
+        let (_, after) = calibrate_ptc(&mut ptc, &cfg, &mut ic_rng);
+        assert!(after.0 + after.1 < (before.0 + before.1) * 0.2, "{before:?} -> {after:?}");
+        // The achievable optimum is a sign-flip identity, not I itself.
+        let u = ptc.realized_u().clone();
+        assert!(is_signed_identity(&u, 0.35), "not near signed identity");
+    }
+
+    #[test]
+    fn mesh_calibration_improves_all_blocks() {
+        let mut rng = Rng::new(12);
+        let mut mesh = PtcMesh::new(8, 8, 4, NoiseModel::bias_only(), &mut rng);
+        let before: f64 =
+            mesh.ptcs.iter_mut().map(|p| { let m = p.identity_mse(); m.0 + m.1 }).sum();
+        let cfg = IcConfig { threads: 2, ..IcConfig::quick() };
+        let r = calibrate_mesh(&mut mesh, &cfg);
+        assert_eq!(r.blocks, 4);
+        assert!(r.queries > 0);
+        let after: f64 =
+            mesh.ptcs.iter_mut().map(|p| { let m = p.identity_mse(); m.0 + m.1 }).sum();
+        assert!(after < before, "calibration made things worse: {before} -> {after}");
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        // Thread count must not change results (per-block RNG streams).
+        let mut rng = Rng::new(13);
+        let mesh0 = PtcMesh::new(8, 8, 4, NoiseModel::bias_only(), &mut rng);
+        let mut m1 = mesh0.clone();
+        let mut m2 = mesh0;
+        let r1 = calibrate_mesh(&mut m1, &IcConfig { threads: 1, ..IcConfig::quick() });
+        let r2 = calibrate_mesh(&mut m2, &IcConfig { threads: 4, ..IcConfig::quick() });
+        assert_eq!(r1.queries, r2.queries);
+        assert!((r1.mean_mse() - r2.mean_mse()).abs() < 1e-12);
+        for (a, b) in m1.ptcs.iter().zip(&m2.ptcs) {
+            assert_eq!(a.u_mesh.phases, b.u_mesh.phases);
+        }
+    }
+
+    #[test]
+    fn trace_is_averaged_and_monotone() {
+        let mut rng = Rng::new(14);
+        let mut mesh = PtcMesh::new(4, 4, 4, NoiseModel::bias_only(), &mut rng);
+        let r = calibrate_mesh(&mut mesh, &IcConfig::quick());
+        assert_eq!(r.trace.len(), IcConfig::quick().zo.iters);
+        for w in r.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "best-recording mean trace must be monotone");
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! The three-stage L2ight learning flow (§3, Figure 2):
+//!
+//! * [`ic`] — **Identity Calibration**: variation-agnostic circuit state
+//!   preparation (§3.2). ZOO drives every U, V* to a sign-flip identity Ĩ.
+//! * [`pm`] — **Parallel Mapping**: alternate projection-based model
+//!   deployment (§3.3, Algorithm 1). Per-block ZO regression onto pretrained
+//!   weights plus the analytic optimal singular-value projection (OSP).
+//! * [`sl`] — **Subspace Learning**: hardware-aware multi-level sparse
+//!   first-order training of Σ (§3.4).
+//!
+//! IC and PM are deterministic, data-independent, and local to each PTC —
+//! the stages parallelize over blocks with `std::thread`. SL is the
+//! stochastic (and therefore cost-dominant) stage; its hot path is what the
+//! runtime can optionally execute through PJRT artifacts.
+
+pub mod ic;
+pub mod pm;
+pub mod sl;
+
+pub use ic::{calibrate_mesh, calibrate_model, IcConfig, IcReport};
+pub use pm::{map_mesh, map_model, PmConfig, PmReport};
+pub use sl::{train, SlConfig, SlReport};

@@ -1,0 +1,337 @@
+//! Stage 3 — Subspace Learning (§3.4): first-order on-chip training of Σ
+//! with multi-level sparsity.
+//!
+//! The training loop is the paper's efficiency subject: per iteration it
+//! runs forward (ℒ), in-situ σ-gradient acquisition via reciprocity
+//! (∇_Σℒ, Eq. 5), and masked error feedback (∇_xℒ), with
+//!
+//! * **feedback sampling** — a `FeedbackSampler` drawn per layer per
+//!   iteration masks the blocked Wᵀ (uniform / topk / btopk × norm);
+//! * **column sampling** — a shared per-iteration batch-column mask enters
+//!   only the σ-gradient evaluation (α_C; paper adopts exp-normalization
+//!   with α_C-scaling off, §3.4.2 last note);
+//! * **data sampling** — SMD [48]: skip whole iterations with prob. α_D.
+//!
+//! The same loop trains digital models (pretraining, RAD/SWAT-U baselines) —
+//! the engines decide whether gradients are full-space or subspace.
+
+use crate::data::{Augment, Dataset, Loader};
+use crate::nn::{softmax_cross_entropy, Act, BackwardCtx, Model};
+use crate::optim::{AdamW, LrSchedule, Optimizer, Sgd};
+use crate::profiler::CostBreakdown;
+use crate::sampling::{ColumnSampler, DataSampler, FeedbackSampler};
+use crate::util::Rng;
+
+/// Which optimizer drives the Σ (or dense-weight) updates.
+#[derive(Clone, Copy, Debug)]
+pub enum OptKind {
+    /// AdamW(lr, weight_decay) — the paper's SL optimizer.
+    AdamW { lr: f32, weight_decay: f32 },
+    /// SGD(lr, momentum, weight_decay) — used for digital pretraining.
+    Sgd { lr: f32, momentum: f32, weight_decay: f32 },
+}
+
+/// Subspace-learning (and generic training) configuration.
+#[derive(Clone, Debug)]
+pub struct SlConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub opt: OptKind,
+    pub schedule: LrSchedule,
+    /// Feedback-matrix sampler (None = dense feedback).
+    pub feedback: Option<FeedbackSampler>,
+    /// Feature sampler (CS / SS / off).
+    pub feature: ColumnSampler,
+    /// SMD data sampler.
+    pub data: DataSampler,
+    pub augment: Augment,
+    pub seed: u64,
+    /// Evaluate on the test set every `eval_every` epochs (0 = only final).
+    pub eval_every: usize,
+    /// Print a progress line per epoch.
+    pub verbose: bool,
+}
+
+impl Default for SlConfig {
+    fn default() -> Self {
+        // Paper Appendix E, subspace learning from scratch.
+        SlConfig {
+            epochs: 20,
+            batch: 32,
+            opt: OptKind::AdamW { lr: 2e-3, weight_decay: 1e-2 },
+            schedule: LrSchedule::Cosine { lr0: 0.0, eta_min: 0.0, total_steps: 0 }, // fixed up in train()
+            feedback: None,
+            feature: ColumnSampler::OFF,
+            data: DataSampler::OFF,
+            augment: Augment::NONE,
+            seed: 0x51,
+            eval_every: 1,
+            verbose: false,
+        }
+    }
+}
+
+impl SlConfig {
+    /// Paper setting for SL after parallel mapping: fewer epochs, lr 2e-4.
+    pub fn mapped() -> SlConfig {
+        SlConfig { opt: OptKind::AdamW { lr: 2e-4, weight_decay: 1e-2 }, ..Default::default() }
+    }
+
+    /// Tiny config for tests.
+    pub fn quick(epochs: usize, batch: usize) -> SlConfig {
+        SlConfig { epochs, batch, eval_every: 0, ..Default::default() }
+    }
+}
+
+/// Per-epoch record.
+#[derive(Clone, Debug)]
+pub struct EpochStat {
+    pub epoch: usize,
+    pub loss: f32,
+    pub train_acc: f32,
+    /// Test accuracy if evaluated this epoch.
+    pub test_acc: Option<f32>,
+    /// Hardware cost accumulated *during this epoch* (photonic engines only).
+    pub cost: CostBreakdown,
+    /// Iterations actually executed (SMD skips excluded).
+    pub iters_run: usize,
+}
+
+/// Training outcome.
+#[derive(Clone, Debug, Default)]
+pub struct SlReport {
+    pub epochs: Vec<EpochStat>,
+    pub final_test_acc: f32,
+    pub best_test_acc: f32,
+    /// Total hardware cost over the run.
+    pub cost: CostBreakdown,
+}
+
+impl SlReport {
+    /// Accuracy-vs-steps curve: (cumulative steps, test acc) at each
+    /// evaluated epoch — the x/y of Fig. 12.
+    pub fn acc_vs_steps(&self) -> Vec<(f64, f32)> {
+        let mut out = Vec::new();
+        let mut steps = 0.0;
+        for e in &self.epochs {
+            steps += e.cost.total_steps();
+            if let Some(acc) = e.test_acc {
+                out.push((steps, acc));
+            }
+        }
+        out
+    }
+}
+
+/// Train `model` on `train_set`, evaluating on `test_set`.
+///
+/// Works for photonic models (subspace learning — only Σ moves) and digital
+/// models (full-space pretraining / baselines). Hardware cost is measured
+/// from the photonic mesh counters.
+pub fn train(
+    model: &mut Model,
+    train_set: &Dataset,
+    test_set: &Dataset,
+    cfg: &SlConfig,
+) -> SlReport {
+    let mut rng = Rng::with_stream(cfg.seed, 0xda7a);
+    let mut opt: Box<dyn Optimizer> = match cfg.opt {
+        OptKind::AdamW { lr, weight_decay } => Box::new(AdamW::new(lr, weight_decay)),
+        OptKind::Sgd { lr, momentum, weight_decay } => {
+            Box::new(Sgd::new(lr, momentum, weight_decay))
+        }
+    };
+    let base_lr = match cfg.opt {
+        OptKind::AdamW { lr, .. } => lr,
+        OptKind::Sgd { lr, .. } => lr,
+    };
+    let schedule = match cfg.schedule {
+        // Default marker: cosine over the actual horizon.
+        LrSchedule::Cosine { total_steps: 0, .. } => LrSchedule::Cosine {
+            lr0: base_lr,
+            eta_min: base_lr * 1e-2,
+            total_steps: cfg.epochs.max(1),
+        },
+        s => s,
+    };
+
+    let mut report = SlReport::default();
+    model.reset_mesh_stats();
+    let mut prev_stats = model.mesh_stats();
+
+    for epoch in 0..cfg.epochs {
+        let lr = schedule.at(epoch, base_lr);
+        opt.set_lr(lr);
+        let loader = Loader::new(train_set.n, cfg.batch, &mut rng);
+        let mut epoch_loss = 0.0f64;
+        let mut epoch_acc = 0.0f64;
+        let mut iters_run = 0usize;
+        for (it, idx) in loader.enumerate() {
+            // Data-level sparsity: stochastic mini-batch dropping.
+            if cfg.data.skip(&mut rng) {
+                continue;
+            }
+            let aug = if cfg.augment.is_none() { None } else { Some((&cfg.augment, &mut rng)) };
+            let (x, labels) = train_set.gather(&idx, aug);
+            let logits = model.forward(&x, true);
+            let (loss, dlogits) = softmax_cross_entropy(&logits.mat, &labels);
+            epoch_loss += loss as f64;
+            epoch_acc += crate::nn::accuracy(&logits.mat, &labels) as f64;
+            model.zero_grad();
+            let mut ctx = BackwardCtx {
+                feedback: cfg.feedback,
+                feature: cfg.feature,
+                rng: Rng::with_stream(cfg.seed ^ 0xbacc, (epoch * 131071 + it) as u64),
+            };
+            let dy = Act { mat: dlogits, ..logits };
+            model.backward(&dy, &mut ctx);
+            model.step(opt.as_mut());
+            iters_run += 1;
+        }
+        let denom = iters_run.max(1) as f64;
+        let stats = model.mesh_stats();
+        let mut delta = stats;
+        // Per-epoch delta of the cumulative counters.
+        delta.fwd_block_cols -= prev_stats.fwd_block_cols;
+        delta.grad_block_cols -= prev_stats.grad_block_cols;
+        delta.feedback_block_cols -= prev_stats.feedback_block_cols;
+        delta.fwd_steps -= prev_stats.fwd_steps;
+        delta.grad_steps -= prev_stats.grad_steps;
+        delta.feedback_steps -= prev_stats.feedback_steps;
+        prev_stats = stats;
+        let cost = CostBreakdown::from_stats(&delta);
+
+        let evaluate =
+            epoch + 1 == cfg.epochs || (cfg.eval_every > 0 && (epoch + 1) % cfg.eval_every == 0);
+        let test_acc = if evaluate {
+            // Exclude eval forwards from the training cost counters.
+            let acc = test_set.evaluate(model, cfg.batch);
+            let post = model.mesh_stats();
+            prev_stats = post;
+            Some(acc)
+        } else {
+            None
+        };
+        if let Some(acc) = test_acc {
+            report.best_test_acc = report.best_test_acc.max(acc);
+            report.final_test_acc = acc;
+        }
+        if cfg.verbose {
+            crate::info!(
+                "epoch {epoch:3} lr {lr:.2e} loss {:.4} train-acc {:.3} test-acc {} iters {iters_run}",
+                epoch_loss / denom,
+                epoch_acc / denom,
+                test_acc.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+            );
+        }
+        report.cost.add(&cost);
+        report.epochs.push(EpochStat {
+            epoch,
+            loss: (epoch_loss / denom) as f32,
+            train_acc: (epoch_acc / denom) as f32,
+            test_acc,
+            cost,
+            iters_run,
+        });
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DatasetKind, SynthSpec};
+    use crate::nn::{build_model, EngineKind, ModelArch};
+    use crate::photonics::NoiseModel;
+    use crate::sampling::{FeedbackStrategy, Normalization};
+
+    fn vowel_sets() -> (Dataset, Dataset) {
+        SynthSpec::quick(DatasetKind::VowelLike, 160, 64).with_difficulty(0.4).generate()
+    }
+
+    #[test]
+    fn digital_pretraining_learns() {
+        let mut rng = Rng::new(31);
+        let mut model = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 1.0, &mut rng);
+        let (train_set, test_set) = vowel_sets();
+        let cfg = SlConfig {
+            epochs: 12,
+            batch: 16,
+            opt: OptKind::Sgd { lr: 0.1, momentum: 0.9, weight_decay: 0.0 },
+            ..SlConfig::quick(12, 16)
+        };
+        let r = train(&mut model, &train_set, &test_set, &cfg);
+        assert!(r.final_test_acc > 0.6, "digital MLP acc {}", r.final_test_acc);
+        // Digital model: no photonic cost.
+        assert_eq!(r.cost.total_energy(), 0.0);
+    }
+
+    #[test]
+    fn subspace_learning_learns_from_scratch() {
+        // The paper's key learnability claim: training Σ only (random
+        // unitaries) is enough to learn a task.
+        let mut rng = Rng::new(32);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::IDEAL };
+        let mut model = build_model(ModelArch::MlpVowel, kind, 4, 1.0, &mut rng);
+        let (train_set, test_set) = vowel_sets();
+        let cfg = SlConfig { epochs: 15, batch: 16, ..SlConfig::quick(15, 16) };
+        let r = train(&mut model, &train_set, &test_set, &cfg);
+        assert!(r.final_test_acc > 0.5, "subspace acc {}", r.final_test_acc);
+        assert!(r.cost.total_energy() > 0.0, "photonic cost must be measured");
+    }
+
+    #[test]
+    fn feedback_sampling_reduces_feedback_cost() {
+        let mut rng = Rng::new(33);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::IDEAL };
+        let (train_set, test_set) = vowel_sets();
+        let mut dense_model = build_model(ModelArch::MlpVowel, kind, 4, 1.0, &mut rng);
+        let mut sparse_model = dense_model.clone();
+        let dense_cfg = SlConfig::quick(2, 16);
+        let sparse_cfg = SlConfig {
+            feedback: Some(FeedbackSampler::new(
+                FeedbackStrategy::BTopK,
+                0.5,
+                Normalization::Exp,
+            )),
+            ..SlConfig::quick(2, 16)
+        };
+        let rd = train(&mut dense_model, &train_set, &test_set, &dense_cfg);
+        let rs = train(&mut sparse_model, &train_set, &test_set, &sparse_cfg);
+        assert!(
+            rs.cost.fbk_energy < rd.cost.fbk_energy,
+            "feedback sampling must cut ∇x energy: {} vs {}",
+            rs.cost.fbk_energy,
+            rd.cost.fbk_energy
+        );
+        // Forward cost unchanged.
+        assert_eq!(rs.cost.fwd_energy, rd.cost.fwd_energy);
+    }
+
+    #[test]
+    fn data_sampling_skips_iterations() {
+        let mut rng = Rng::new(34);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::IDEAL };
+        let mut model = build_model(ModelArch::MlpVowel, kind, 4, 1.0, &mut rng);
+        let (train_set, test_set) = vowel_sets();
+        let cfg = SlConfig { data: DataSampler::new(0.5), ..SlConfig::quick(4, 16) };
+        let r = train(&mut model, &train_set, &test_set, &cfg);
+        let total_iters: usize = r.epochs.iter().map(|e| e.iters_run).sum();
+        let full = 4 * train_set.n.div_ceil(16);
+        assert!(total_iters < full, "SMD skipped nothing: {total_iters}/{full}");
+        assert!(total_iters > full / 5, "SMD skipped too much: {total_iters}/{full}");
+    }
+
+    #[test]
+    fn acc_vs_steps_is_cumulative() {
+        let mut rng = Rng::new(35);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::IDEAL };
+        let mut model = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut rng);
+        let (train_set, test_set) = vowel_sets();
+        let cfg = SlConfig { eval_every: 1, ..SlConfig::quick(3, 16) };
+        let r = train(&mut model, &train_set, &test_set, &cfg);
+        let curve = r.acc_vs_steps();
+        assert_eq!(curve.len(), 3);
+        assert!(curve.windows(2).all(|w| w[1].0 > w[0].0), "steps must increase");
+    }
+}

@@ -1,0 +1,208 @@
+//! Criterion-free micro/macro benchmark harness used by `rust/benches/*`
+//! (declared with `harness = false`). Provides warmup, adaptive iteration
+//! counts, robust statistics, and a uniform report format so every paper
+//! table/figure bench prints comparable rows.
+
+use std::time::{Duration, Instant};
+
+/// One measured series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Nanoseconds per iteration (sorted samples).
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 50.0)
+    }
+    pub fn p10_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 10.0)
+    }
+    pub fn p90_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 90.0)
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Benchmark runner with a fixed measurement budget per target.
+pub struct Bencher {
+    /// Wall-clock budget for the measurement phase of each target.
+    pub budget: Duration,
+    /// Number of sample groups to collect.
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { budget: Duration::from_millis(600), samples: 20, results: vec![] }
+    }
+}
+
+impl Bencher {
+    pub fn new(budget_ms: u64, samples: usize) -> Self {
+        Bencher { budget: Duration::from_millis(budget_ms), samples, results: vec![] }
+    }
+
+    /// Benchmark `f`, returning median ns/iter. `f` should perform one unit of
+    /// work; the harness picks the per-sample iteration count adaptively.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        // Warmup + calibration: find iters so one sample ≈ budget/samples.
+        let t0 = Instant::now();
+        f();
+        let one = t0.elapsed().as_secs_f64().max(1e-9);
+        let per_sample = self.budget.as_secs_f64() / self.samples as f64;
+        let iters = ((per_sample / one).ceil() as usize).clamp(1, 1_000_000);
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let m = Measurement { name: name.to_string(), samples_ns: samples };
+        let med = m.median_ns();
+        self.results.push(m);
+        med
+    }
+
+    /// All collected measurements.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Print a formatted summary table of all measurements.
+    pub fn report(&self, title: &str) {
+        println!("\n## {title}");
+        println!("{:<48} {:>14} {:>14} {:>14}", "benchmark", "p10", "median", "p90");
+        for m in &self.results {
+            println!(
+                "{:<48} {:>14} {:>14} {:>14}",
+                m.name,
+                fmt_ns(m.p10_ns()),
+                fmt_ns(m.median_ns()),
+                fmt_ns(m.p90_ns())
+            );
+        }
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a value (stable `black_box` shim).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Markdown-style table printer for paper-table reproductions.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_ref(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n### {title}");
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s += &format!(" {:<w$} |", c, w = widths[i]);
+            }
+            s
+        };
+        println!("{}", line(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep += &format!("{:-<w$}|", "", w = w + 2);
+        }
+        println!("{sep}");
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(30, 5);
+        let med = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(med > 0.0);
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].p10_ns() <= b.results()[0].p90_ns());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn table_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.rows_ref().len(), 1);
+        t.print("test"); // smoke: must not panic
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

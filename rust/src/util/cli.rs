@@ -1,0 +1,260 @@
+//! A small declarative CLI argument parser (the vendored crate set has no
+//! clap). Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options with defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A declarative argument parser for one (sub)command.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    command: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>,
+}
+
+impl ArgSpec {
+    pub fn new(command: &str, about: &str) -> Self {
+        ArgSpec { command: command.into(), about: about.into(), opts: vec![], positionals: vec![] }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare `--name <value>` that is required.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec { name: name.into(), help: help.into(), default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some("false".into()),
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument.
+    pub fn pos(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.command, self.about, self.command);
+        for (p, _) in &self.positionals {
+            s += &format!(" <{p}>");
+        }
+        s += " [OPTIONS]\n";
+        if !self.positionals.is_empty() {
+            s += "\nARGS:\n";
+            for (p, h) in &self.positionals {
+                s += &format!("  <{p}>  {h}\n");
+            }
+        }
+        s += "\nOPTIONS:\n";
+        for o in &self.opts {
+            let val = if o.is_flag { String::new() } else { " <v>".into() };
+            let def = match (&o.default, o.is_flag) {
+                (Some(d), false) => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s += &format!("  --{}{val}  {}{def}\n", o.name, o.help);
+        }
+        s
+    }
+
+    /// Parse a raw argument list (without the program/subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Args, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut pos_vals = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?;
+                let val = if spec.is_flag {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i).cloned().ok_or_else(|| format!("--{name} needs a value"))?
+                };
+                values.insert(name, val);
+            } else {
+                pos_vals.push(a.clone());
+            }
+            i += 1;
+        }
+        if pos_vals.len() < self.positionals.len() {
+            return Err(format!(
+                "missing positional <{}>\n\n{}",
+                self.positionals[pos_vals.len()].0,
+                self.help_text()
+            ));
+        }
+        for o in &self.opts {
+            if !values.contains_key(&o.name) {
+                return Err(format!("missing required --{}", o.name));
+            }
+        }
+        for (idx, (name, _)) in self.positionals.iter().enumerate() {
+            values.insert(format!("@{name}"), pos_vals[idx].clone());
+        }
+        Ok(Args { values })
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .or_else(|| self.values.get(&format!("@{name}")))
+            .unwrap_or_else(|| panic!("undeclared arg {name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.str(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.str(name).parse().unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.f64(name) as f32
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.str(name).parse().unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.str(name), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list of usize.
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad int '{s}'")))
+            .collect()
+    }
+
+    /// Comma-separated list of f64.
+    pub fn f64_list(&self, name: &str) -> Vec<f64> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{name}: bad float '{s}'")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("train", "train a model")
+            .opt("epochs", "10", "number of epochs")
+            .opt("lr", "0.002", "learning rate")
+            .flag("verbose", "chatty output")
+            .req("model", "model name")
+            .pos("dataset", "dataset name")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec().parse(&sv(&["mnist", "--model", "cnn-s", "--epochs=3"])).unwrap();
+        assert_eq!(a.usize("epochs"), 3);
+        assert_eq!(a.f64("lr"), 0.002);
+        assert!(!a.bool("verbose"));
+        assert_eq!(a.str("model"), "cnn-s");
+        assert_eq!(a.str("dataset"), "mnist");
+    }
+
+    #[test]
+    fn flags() {
+        let a = spec().parse(&sv(&["d", "--model", "m", "--verbose"])).unwrap();
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required() {
+        assert!(spec().parse(&sv(&["d"])).unwrap_err().contains("--model"));
+    }
+
+    #[test]
+    fn missing_positional() {
+        assert!(spec().parse(&sv(&["--model", "m"])).unwrap_err().contains("dataset"));
+    }
+
+    #[test]
+    fn unknown_option() {
+        assert!(spec().parse(&sv(&["d", "--model", "m", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let s = ArgSpec::new("x", "y").opt("sizes", "8,9,12", "block sizes");
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.usize_list("sizes"), vec![8, 9, 12]);
+    }
+
+    #[test]
+    fn help_is_error_path() {
+        let e = spec().parse(&sv(&["--help"])).unwrap_err();
+        assert!(e.contains("USAGE"));
+        assert!(e.contains("--epochs"));
+    }
+}

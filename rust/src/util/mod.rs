@@ -1,0 +1,126 @@
+//! Cross-cutting substrates built from scratch for the offline environment:
+//! a deterministic PRNG, a minimal JSON parser/emitter, a CLI argument
+//! parser, a criterion-free benchmark harness, and a seeded property-testing
+//! helper. See DESIGN.md §2 (the vendored crate set has no
+//! rand/serde/clap/criterion/proptest, so these are in-repo).
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod bench;
+pub mod prop;
+
+pub use rng::Rng;
+
+/// Simple stderr logger with runtime level control.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(1);
+
+/// Set the global log level (0=debug .. 3=error).
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether messages at `level` are currently emitted.
+pub fn log_enabled(level: Level) -> bool {
+    level as u8 >= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log line to stderr if `level` is enabled.
+pub fn log(level: Level, msg: &str) {
+    if log_enabled(level) {
+        let tag = match level {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Info, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Debug, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Warn, &format!($($arg)*)) };
+}
+
+/// Format a float with engineering-style compactness for tables.
+pub fn fmt_sig(v: f64, digits: usize) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if a >= 1e4 || a < 1e-3 {
+        format!("{v:.*e}", digits.saturating_sub(1))
+    } else {
+        let lead = a.log10().floor() as i64 + 1; // digits before the point (≤0 for a<1)
+        let frac = (digits as i64 - lead).clamp(0, 12) as usize;
+        format!("{v:.*}", frac)
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation of a slice.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_sig_ranges() {
+        assert_eq!(fmt_sig(0.0, 3), "0");
+        assert_eq!(fmt_sig(1234.4, 4), "1234");
+        assert_eq!(fmt_sig(0.01234, 3), "0.0123");
+        assert!(fmt_sig(1.0e9, 3).contains('e'));
+        assert!(fmt_sig(1.0e-9, 3).contains('e'));
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn log_level_gating() {
+        set_log_level(Level::Warn);
+        assert!(!log_enabled(Level::Info));
+        assert!(log_enabled(Level::Error));
+        set_log_level(Level::Info);
+        assert!(log_enabled(Level::Info));
+    }
+}

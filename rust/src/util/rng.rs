@@ -1,0 +1,254 @@
+//! Deterministic PCG32 pseudo-random number generator plus the sampling
+//! helpers the simulator needs (uniform, normal via Box-Muller, permutation,
+//! Bernoulli masks). Seeded everywhere for reproducible experiments — the
+//! paper's simulator reports ±σ over repeated runs, which we reproduce by
+//! seeding each repetition.
+
+/// PCG32 (Melissa O'Neill, PCG-XSH-RR 64/32) with a 64-bit state and stream.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+    /// Cached second Box-Muller variate.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    /// Create a generator from a seed (stream fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Create a generator with an explicit stream id (distinct streams are
+    /// statistically independent).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Rng { state: 0, inc: (stream << 1) | 1, gauss_spare: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (for parallel workers).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::with_stream(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15), tag | 1)
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased integer in [0, n) (Lemire's method).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_hi_lo(x, n);
+            if lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller with caching.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid u == 0 for the log.
+        let u = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Bernoulli(p).
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Choose k distinct indices from 0..n (k <= n), unsorted.
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Partial Fisher-Yates.
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            p.swap(i, j);
+        }
+        p.truncate(k);
+        p
+    }
+
+    /// Fill a slice with N(mean, std) samples (f32).
+    pub fn fill_normal(&mut self, xs: &mut [f32], mean: f32, std: f32) {
+        for x in xs.iter_mut() {
+            *x = self.normal_ms(mean as f64, std as f64) as f32;
+        }
+    }
+
+    /// Fill a slice with U[lo, hi) samples (f32).
+    pub fn fill_uniform(&mut self, xs: &mut [f32], lo: f32, hi: f32) {
+        for x in xs.iter_mut() {
+            *x = self.uniform_range(lo as f64, hi as f64) as f32;
+        }
+    }
+}
+
+#[inline]
+fn mul_hi_lo(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let m = xs.iter().sum::<f64>() / n as f64;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn below_unbiased() {
+        let mut rng = Rng::new(4);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 10_000).unsigned_abs() < 600, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let ks = rng.choose_k(20, 8);
+            assert_eq!(ks.len(), 8);
+            let mut sorted = ks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8, "duplicates in {ks:?}");
+            assert!(ks.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut rng = Rng::new(6);
+        let p = rng.permutation(50);
+        let mut s = p.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut a = Rng::new(7);
+        let mut c1 = a.fork(1);
+        let mut c2 = a.fork(2);
+        // Not a statistical test, just "not identical streams".
+        let v1: Vec<u64> = (0..8).map(|_| c1.next_u64()).collect();
+        let v2: Vec<u64> = (0..8).map(|_| c2.next_u64()).collect();
+        assert_ne!(v1, v2);
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Rng::new(8);
+        let hits = (0..50_000).filter(|_| rng.bernoulli(0.3)).count();
+        assert!((hits as f64 / 50_000.0 - 0.3).abs() < 0.01);
+    }
+}

@@ -1,0 +1,316 @@
+//! Zeroth-order optimizers for the hardware-restricted stages (IC and PM),
+//! where analytic phase gradients are unobtainable in situ (Appendix B).
+//!
+//! * `Zgd` — ZO stochastic gradient descent with momentum [15]: random-
+//!   direction gradient estimation (RGE) with a two-point query.
+//! * `Zcd` — ZO coordinate descent [30]: Algorithm 1's inner loop — try
+//!   ±δφ on one random coordinate, keep the better; δφ is bounded by the
+//!   phase-control resolution and decays exponentially.
+//! * `Ztp` — ZO three-point method [13]: evaluate f(x), f(x±δu) along a
+//!   random direction, move to the argmin.
+//!
+//! Each supports best-solution recording (the "-B" variants of Fig. 4(b)).
+
+use crate::util::Rng;
+
+/// A zeroth-order optimization problem: evaluate the loss at the current
+/// phase vector. The optimizer owns the query budget accounting.
+pub trait ZoProblem {
+    /// Number of optimization variables.
+    fn dim(&self) -> usize;
+    /// Loss at `phases` (one hardware query).
+    fn eval(&mut self, phases: &[f64]) -> f64;
+}
+
+/// Result of a ZOO run.
+#[derive(Clone, Debug)]
+pub struct ZoReport {
+    /// Best phases found.
+    pub best_phases: Vec<f64>,
+    /// Best loss.
+    pub best_loss: f64,
+    /// Loss after each outer iteration (for convergence plots, Fig. 4(b)).
+    pub trace: Vec<f64>,
+    /// Total number of `eval` queries issued (the energy proxy for ZO
+    /// protocols, Appendix G).
+    pub queries: u64,
+}
+
+/// Shared configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ZoConfig {
+    pub iters: usize,
+    /// Initial step / smoothing radius (bounded by phase resolution in PM).
+    pub step: f64,
+    /// Multiplicative step decay per outer iteration.
+    pub decay: f64,
+    /// Step floor (e.g. the minimum phase-control resolution).
+    pub step_floor: f64,
+    /// Record and return the best-so-far solution ("-B" variants).
+    pub best_recording: bool,
+}
+
+impl Default for ZoConfig {
+    fn default() -> Self {
+        ZoConfig { iters: 200, step: 0.1, decay: 0.99, step_floor: 1e-4, best_recording: true }
+    }
+}
+
+/// ZO gradient descent with momentum (ZGD).
+pub fn zgd<P: ZoProblem>(
+    problem: &mut P,
+    init: &[f64],
+    cfg: ZoConfig,
+    momentum: f64,
+    rng: &mut Rng,
+) -> ZoReport {
+    let n = problem.dim();
+    assert_eq!(init.len(), n);
+    let mut x = init.to_vec();
+    let mut vel = vec![0.0f64; n];
+    let mut queries = 0u64;
+    let mut f0 = problem.eval(&x);
+    queries += 1;
+    let mut best = (x.clone(), f0);
+    let mut trace = Vec::with_capacity(cfg.iters);
+    let mut step = cfg.step;
+    let mut xp = vec![0.0f64; n];
+    for _ in 0..cfg.iters {
+        // RGE: g ≈ (f(x + μu) − f(x)) / μ · u with u ~ N(0, I).
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        for i in 0..n {
+            xp[i] = x[i] + step * u[i];
+        }
+        let fp = problem.eval(&xp);
+        queries += 1;
+        let gscale = (fp - f0) / step;
+        for i in 0..n {
+            vel[i] = momentum * vel[i] + gscale * u[i];
+            x[i] -= step * vel[i];
+        }
+        f0 = problem.eval(&x);
+        queries += 1;
+        if f0 < best.1 {
+            best = (x.clone(), f0);
+        }
+        trace.push(if cfg.best_recording { best.1 } else { f0 });
+        step = (step * cfg.decay).max(cfg.step_floor);
+    }
+    finish(best, x, f0, trace, queries, cfg)
+}
+
+/// ZO coordinate descent (ZCD) — Algorithm 1's inner loop.
+pub fn zcd<P: ZoProblem>(
+    problem: &mut P,
+    init: &[f64],
+    cfg: ZoConfig,
+    inner: usize,
+    rng: &mut Rng,
+) -> ZoReport {
+    let n = problem.dim();
+    assert_eq!(init.len(), n);
+    let mut x = init.to_vec();
+    let mut f0 = problem.eval(&x);
+    let mut queries = 1u64;
+    let mut best = (x.clone(), f0);
+    let mut trace = Vec::with_capacity(cfg.iters);
+    let mut step = cfg.step;
+    for _ in 0..cfg.iters {
+        for _ in 0..inner {
+            let c = rng.below(n);
+            let orig = x[c];
+            // Try +δφ; if it does not improve, move −δφ (Algorithm 1 l.9-12).
+            x[c] = orig + step;
+            let fp = problem.eval(&x);
+            queries += 1;
+            if fp < f0 {
+                f0 = fp;
+            } else {
+                x[c] = orig - step;
+                let fm = problem.eval(&x);
+                queries += 1;
+                if fm < f0 {
+                    f0 = fm;
+                } else {
+                    x[c] = orig;
+                }
+            }
+        }
+        if f0 < best.1 {
+            best = (x.clone(), f0);
+        }
+        trace.push(if cfg.best_recording { best.1 } else { f0 });
+        step = (step * cfg.decay).max(cfg.step_floor);
+    }
+    finish(best, x, f0, trace, queries, cfg)
+}
+
+/// ZO three-point method (ZTP).
+pub fn ztp<P: ZoProblem>(
+    problem: &mut P,
+    init: &[f64],
+    cfg: ZoConfig,
+    rng: &mut Rng,
+) -> ZoReport {
+    let n = problem.dim();
+    assert_eq!(init.len(), n);
+    let mut x = init.to_vec();
+    let mut f0 = problem.eval(&x);
+    let mut queries = 1u64;
+    let mut best = (x.clone(), f0);
+    let mut trace = Vec::with_capacity(cfg.iters);
+    let mut step = cfg.step;
+    let mut xp = vec![0.0f64; n];
+    let mut xm = vec![0.0f64; n];
+    for _ in 0..cfg.iters {
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let norm = u.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+        for i in 0..n {
+            xp[i] = x[i] + step * u[i] / norm;
+            xm[i] = x[i] - step * u[i] / norm;
+        }
+        let fp = problem.eval(&xp);
+        let fm = problem.eval(&xm);
+        queries += 2;
+        if fp < f0 && fp <= fm {
+            x.copy_from_slice(&xp);
+            f0 = fp;
+        } else if fm < f0 {
+            x.copy_from_slice(&xm);
+            f0 = fm;
+        }
+        if f0 < best.1 {
+            best = (x.clone(), f0);
+        }
+        trace.push(if cfg.best_recording { best.1 } else { f0 });
+        step = (step * cfg.decay).max(cfg.step_floor);
+    }
+    finish(best, x, f0, trace, queries, cfg)
+}
+
+fn finish(
+    best: (Vec<f64>, f64),
+    x: Vec<f64>,
+    f0: f64,
+    trace: Vec<f64>,
+    queries: u64,
+    cfg: ZoConfig,
+) -> ZoReport {
+    let (bx, bf) = if cfg.best_recording { best } else { (x, f0) };
+    ZoReport { best_phases: bx, best_loss: bf, trace, queries }
+}
+
+/// Which ZO optimizer to run (for the benchmark sweeps of Fig. 4/5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ZoKind {
+    Zgd,
+    Zcd,
+    Ztp,
+}
+
+impl ZoKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ZoKind::Zgd => "ZGD",
+            ZoKind::Zcd => "ZCD",
+            ZoKind::Ztp => "ZTP",
+        }
+    }
+
+    /// Run the chosen optimizer with sensible per-kind defaults.
+    pub fn run<P: ZoProblem>(
+        &self,
+        problem: &mut P,
+        init: &[f64],
+        cfg: ZoConfig,
+        rng: &mut Rng,
+    ) -> ZoReport {
+        match self {
+            ZoKind::Zgd => zgd(problem, init, cfg, 0.9, rng),
+            ZoKind::Zcd => zcd(problem, init, cfg, problem.dim(), rng),
+            ZoKind::Ztp => ztp(problem, init, cfg, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smooth convex test problem: ‖x − c‖².
+    struct Quad {
+        c: Vec<f64>,
+    }
+
+    impl ZoProblem for Quad {
+        fn dim(&self) -> usize {
+            self.c.len()
+        }
+        fn eval(&mut self, x: &[f64]) -> f64 {
+            x.iter().zip(&self.c).map(|(a, b)| (a - b) * (a - b)).sum()
+        }
+    }
+
+    fn quad() -> Quad {
+        Quad { c: vec![0.4, -0.3, 0.8, 0.1, -0.6] }
+    }
+
+    #[test]
+    fn zcd_solves_quadratic() {
+        let mut rng = Rng::new(1);
+        let cfg = ZoConfig { iters: 300, step: 0.2, decay: 0.98, ..Default::default() };
+        let r = zcd(&mut quad(), &[0.0; 5], cfg, 5, &mut rng);
+        assert!(r.best_loss < 1e-2, "loss {}", r.best_loss);
+        assert!(r.queries > 300);
+    }
+
+    #[test]
+    fn ztp_solves_quadratic() {
+        let mut rng = Rng::new(2);
+        let cfg = ZoConfig { iters: 2000, step: 0.3, decay: 0.999, ..Default::default() };
+        let r = ztp(&mut quad(), &[0.0; 5], cfg, &mut rng);
+        assert!(r.best_loss < 5e-2, "loss {}", r.best_loss);
+    }
+
+    #[test]
+    fn zgd_improves_quadratic() {
+        let mut rng = Rng::new(3);
+        let cfg = ZoConfig { iters: 1500, step: 0.02, decay: 0.9995, ..Default::default() };
+        let r = zgd(&mut quad(), &[0.0; 5], cfg, 0.5, &mut rng);
+        let initial: f64 = quad().eval(&[0.0; 5]);
+        assert!(r.best_loss < initial * 0.6, "loss {} vs {initial}", r.best_loss);
+    }
+
+    #[test]
+    fn best_recording_is_monotone() {
+        let mut rng = Rng::new(4);
+        let cfg = ZoConfig { iters: 100, step: 0.5, decay: 1.0, ..Default::default() };
+        let r = ztp(&mut quad(), &[0.0; 5], cfg, &mut rng);
+        for w in r.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "best-recording trace must be monotone");
+        }
+    }
+
+    #[test]
+    fn trace_length_matches_iters() {
+        let mut rng = Rng::new(5);
+        let cfg = ZoConfig { iters: 37, ..Default::default() };
+        let r = zcd(&mut quad(), &[0.0; 5], cfg, 2, &mut rng);
+        assert_eq!(r.trace.len(), 37);
+    }
+
+    #[test]
+    fn step_floor_respected() {
+        // With a huge decay, the step clamps at the floor and still queries.
+        let mut rng = Rng::new(6);
+        let cfg = ZoConfig {
+            iters: 50,
+            step: 0.1,
+            decay: 0.01,
+            step_floor: 0.05,
+            best_recording: true,
+        };
+        let r = zcd(&mut quad(), &[0.0; 5], cfg, 1, &mut rng);
+        assert!(r.best_loss.is_finite());
+    }
+}

@@ -1,0 +1,99 @@
+//! CLI smoke: the release binary's subcommands run and print what they
+//! promise. Uses the already-built binary when present; builds it otherwise
+//! via CARGO_BIN_EXE (cargo provides it for integration tests).
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_l2ight")
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(bin()).args(args).output().expect("spawn l2ight");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (stdout, _, ok) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("calibrate"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (_, _, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+}
+
+#[test]
+fn help_flags_work_per_subcommand() {
+    for sub in ["run", "calibrate", "map", "infer", "artifacts"] {
+        let out = Command::new(bin()).args([sub, "--help"]).output().unwrap();
+        let text = String::from_utf8_lossy(&out.stderr).to_string()
+            + &String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("USAGE"), "{sub} --help missing usage");
+    }
+}
+
+#[test]
+fn calibrate_reports_mse_drop() {
+    let (stdout, stderr, ok) =
+        run(&["calibrate", "--rows", "4", "--cols", "4", "--k", "4", "--iters", "80"]);
+    assert!(ok, "calibrate failed: {stderr}");
+    assert!(stdout.contains("mean MSE"), "{stdout}");
+}
+
+#[test]
+fn map_reports_fidelity() {
+    let (stdout, stderr, ok) = run(&[
+        "map", "--rows", "4", "--cols", "4", "--k", "4", "--iters", "10", "--alternations", "1",
+    ]);
+    assert!(ok, "map failed: {stderr}");
+    assert!(stdout.contains("rel err"), "{stdout}");
+}
+
+#[test]
+fn run_tiny_job_end_to_end() {
+    let (stdout, stderr, ok) = run(&[
+        "run",
+        "--arch", "mlp",
+        "--dataset", "vowel",
+        "--k", "4",
+        "--epochs", "1",
+        "--pretrain-epochs", "2",
+        "--n-train", "48",
+        "--n-test", "32",
+        "--zo-budget", "0.1",
+        "--seed", "5",
+    ]);
+    assert!(ok, "run failed: {stderr}");
+    assert!(stdout.contains("final acc"), "{stdout}");
+    assert!(stdout.contains("PTC energy"), "{stdout}");
+}
+
+#[test]
+fn run_writes_metrics_jsonl() {
+    let path = std::env::temp_dir().join(format!("l2ight_cli_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&path).ok();
+    let (_, stderr, ok) = run(&[
+        "run",
+        "--arch", "mlp",
+        "--dataset", "vowel",
+        "--k", "4",
+        "--protocol", "l2ight-sl",
+        "--epochs", "1",
+        "--n-train", "32",
+        "--n-test", "16",
+        "--metrics", path.to_str().unwrap(),
+    ]);
+    assert!(ok, "run failed: {stderr}");
+    let text = std::fs::read_to_string(&path).expect("metrics file written");
+    assert!(text.lines().any(|l| l.contains("job_done")), "{text}");
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,192 @@
+//! Integration: the AOT artifacts (L1 Pallas kernels lowered through L2 jax
+//! → HLO text) must agree numerically with the native rust simulator.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise, so plain
+//! `cargo test` works in a fresh checkout).
+
+use l2ight::linalg::Mat;
+use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::runtime::{ArgValue, Runtime};
+use l2ight::util::prop::assert_close;
+use l2ight::util::Rng;
+
+const P: usize = 2;
+const Q: usize = 2;
+const K: usize = 9;
+const B: usize = 18;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = l2ight::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+/// Extract the realized (noisy) per-block U/Σ/V* of the mesh in the
+/// [P,Q,k,k]/[P,Q,k] layout the artifacts expect.
+fn mesh_blocks(mesh: &mut PtcMesh) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let k = mesh.k;
+    let mut u = Vec::with_capacity(P * Q * k * k);
+    let mut s = Vec::with_capacity(P * Q * k);
+    let mut v = Vec::with_capacity(P * Q * k * k);
+    for pi in 0..mesh.p {
+        for qi in 0..mesh.q {
+            let q_cols = mesh.q;
+            let ptc = &mut mesh.ptcs[pi * q_cols + qi];
+            u.extend_from_slice(&ptc.realized_u().data);
+            s.extend_from_slice(&ptc.sigma);
+            v.extend_from_slice(&ptc.realized_v().data);
+        }
+    }
+    (u, s, v)
+}
+
+/// [rows, B] column-major panels [Q,k,B] from a row-major Mat.
+fn to_panels(x: &Mat, q: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; q * k * x.cols];
+    for r in 0..x.rows {
+        let (qi, ki) = (r / k, r % k);
+        for c in 0..x.cols {
+            out[(qi * k + ki) * x.cols + c] = x[(r, c)];
+        }
+    }
+    out
+}
+
+fn from_panels(y: &[f32], p: usize, k: usize, b: usize) -> Mat {
+    let mut m = Mat::zeros(p * k, b);
+    for r in 0..p * k {
+        m.row_mut(r).copy_from_slice(&y[r * b..(r + 1) * b]);
+    }
+    m
+}
+
+#[test]
+fn pjrt_ptc_forward_matches_native_mesh() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0xa0);
+    let mut mesh = PtcMesh::new(P * K, Q * K, K, NoiseModel::PAPER, &mut rng);
+    // Program something non-trivial.
+    let target = Mat::randn(P * K, Q * K, 0.5, &mut rng);
+    mesh.program_from_dense(&target);
+    let x = Mat::randn(Q * K, B, 1.0, &mut rng);
+
+    let native = mesh.forward(&x);
+    let (u, s, v) = mesh_blocks(&mut mesh);
+    let xp = to_panels(&x, Q, K);
+    let out = rt
+        .call1_f32(
+            &format!("ptc_forward_p{P}_q{Q}_k{K}_b{B}"),
+            &[ArgValue::F32(&u), ArgValue::F32(&s), ArgValue::F32(&v), ArgValue::F32(&xp)],
+        )
+        .expect("pjrt call");
+    let pjrt = from_panels(&out, P, K, B);
+    assert_close(&native.data, &pjrt.data, 1e-4, 1e-4).expect("native vs PJRT forward");
+}
+
+#[test]
+fn pjrt_sigma_grad_matches_native_mesh() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0xa1);
+    let mut mesh = PtcMesh::new(P * K, Q * K, K, NoiseModel::PAPER, &mut rng);
+    let target = Mat::randn(P * K, Q * K, 0.5, &mut rng);
+    mesh.program_from_dense(&target);
+    let x = Mat::randn(Q * K, B, 1.0, &mut rng);
+    let dy = Mat::randn(P * K, B, 1.0, &mut rng);
+
+    let native = mesh.sigma_grad(&x, &dy, None, 1.0);
+    let (u, _s, v) = mesh_blocks(&mut mesh);
+    let xp = to_panels(&x, Q, K);
+    let dyp = to_panels(&dy, P, K);
+    let out = rt
+        .call1_f32(
+            &format!("sigma_grad_p{P}_q{Q}_k{K}_b{B}"),
+            &[ArgValue::F32(&u), ArgValue::F32(&v), ArgValue::F32(&xp), ArgValue::F32(&dyp)],
+        )
+        .expect("pjrt call");
+    // Artifact layout [P,Q,k] equals the mesh's flattened block order.
+    assert_close(&native, &out, 1e-3, 1e-3).expect("native vs PJRT sigma grad");
+}
+
+#[test]
+fn pjrt_feedback_matches_native_mesh() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0xa2);
+    let mut mesh = PtcMesh::new(P * K, Q * K, K, NoiseModel::PAPER, &mut rng);
+    let target = Mat::randn(P * K, Q * K, 0.5, &mut rng);
+    mesh.program_from_dense(&target);
+    let dy = Mat::randn(P * K, B, 1.0, &mut rng);
+
+    let native = mesh.feedback(&dy, None, 1.0);
+    let (u, s, v) = mesh_blocks(&mut mesh);
+    let dyp = to_panels(&dy, P, K);
+    let out = rt
+        .call1_f32(
+            &format!("feedback_p{P}_q{Q}_k{K}_b{B}"),
+            &[ArgValue::F32(&u), ArgValue::F32(&s), ArgValue::F32(&v), ArgValue::F32(&dyp)],
+        )
+        .expect("pjrt call");
+    let pjrt = from_panels(&out, Q, K, B);
+    assert_close(&native.data, &pjrt.data, 1e-3, 1e-3).expect("native vs PJRT feedback");
+}
+
+#[test]
+fn pjrt_mlp_step_loss_is_finite_and_shapes_match() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest().find("vowel_mlp_step_b16").expect("mlp step artifact").clone();
+    let mut rng = Rng::new(0xa3);
+    // Random but orthonormal-ish args are unnecessary here: the artifact is
+    // pure math; we only validate plumbing + output arity + finiteness.
+    let mut args_data: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<i32> = Vec::new();
+    for (i, a) in spec.args.iter().enumerate() {
+        match a.dtype {
+            l2ight::runtime::DType::F32 => {
+                let mut v = vec![0.0f32; a.numel()];
+                rng.fill_normal(&mut v, 0.0, 0.3);
+                args_data.push(v);
+                let _ = i;
+            }
+            l2ight::runtime::DType::I32 => {
+                labels = (0..a.numel()).map(|j| (j % 4) as i32).collect();
+                args_data.push(Vec::new());
+            }
+        }
+    }
+    let args: Vec<ArgValue> = spec
+        .args
+        .iter()
+        .zip(&args_data)
+        .map(|(a, d)| match a.dtype {
+            l2ight::runtime::DType::F32 => ArgValue::F32(d),
+            l2ight::runtime::DType::I32 => ArgValue::I32(&labels),
+        })
+        .collect();
+    let out = rt.call("vowel_mlp_step_b16", &args).expect("mlp step");
+    assert_eq!(out.len(), spec.outputs);
+    let loss = out[0].as_f32().unwrap();
+    assert_eq!(loss.len(), 1);
+    assert!(loss[0].is_finite(), "loss {}", loss[0]);
+    let logits = out[1].as_f32().unwrap();
+    assert_eq!(logits.len(), 4 * 16);
+}
+
+#[test]
+fn runtime_validates_arguments() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Wrong arity.
+    assert!(rt.call("ptc_forward_p2_q2_k9_b18", &[]).is_err());
+    // Wrong length.
+    let short = vec![0.0f32; 3];
+    let args = [
+        ArgValue::F32(&short),
+        ArgValue::F32(&short),
+        ArgValue::F32(&short),
+        ArgValue::F32(&short),
+    ];
+    assert!(rt.call("ptc_forward_p2_q2_k9_b18", &args).is_err());
+    // Unknown artifact.
+    assert!(rt.call("nope", &[]).is_err());
+}

@@ -1,0 +1,235 @@
+//! Cross-module property tests (seeded PCG sweeps via `util::prop`):
+//! invariants that must hold for *all* shapes/seeds, not just the unit-test
+//! examples.
+
+use l2ight::linalg::{matmul, Mat};
+use l2ight::photonics::unitary::ReckMesh;
+use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::sampling::{FeedbackSampler, FeedbackStrategy, Normalization};
+use l2ight::util::json::Json;
+use l2ight::util::prop::{assert_close, quickcheck};
+use l2ight::util::Rng;
+
+#[test]
+fn prop_random_phases_synthesize_orthogonal() {
+    // ∀ random Φ: the Reck mesh realizes an orthogonal matrix.
+    quickcheck(
+        "reck orthogonal",
+        |rng: &mut Rng, _size: usize| {
+            let n = 2 + rng.below(8);
+            ReckMesh::random(n, rng).synthesize()
+        },
+        |u: &Mat| {
+            let gram = matmul(&u.t(), u);
+            let eye = Mat::eye(u.rows);
+            assert_close(&gram.data, &eye.data, 1e-4, 1e-4).map_err(|e| format!("gram: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_decompose_roundtrips() {
+    // ∀ orthogonal U: decompose → synthesize reproduces U.
+    quickcheck(
+        "reck decompose roundtrip",
+        |rng: &mut Rng, _size: usize| {
+            let n = 2 + rng.below(7);
+            ReckMesh::random(n, rng).synthesize()
+        },
+        |u: &Mat| {
+            let mesh = ReckMesh::decompose(u);
+            let back = mesh.synthesize();
+            assert_close(&back.data, &u.data, 1e-4, 1e-4).map_err(|e| format!("roundtrip: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_ideal_mesh_program_forward_matches_dense() {
+    // ∀ W, x (random shapes): program_from_dense then forward ≈ W·x when
+    // the device is ideal.
+    quickcheck(
+        "mesh forward = W·x",
+        |rng: &mut Rng, _size: usize| {
+            let rows = 2 + rng.below(14);
+            let cols = 2 + rng.below(14);
+            let k = 2 + rng.below(5);
+            let b = 1 + rng.below(9);
+            let w = Mat::randn(rows, cols, 0.7, rng);
+            let x = Mat::randn(cols, b, 1.0, rng);
+            (w, x, k)
+        },
+        |(w, x, k): &(Mat, Mat, usize)| {
+            let mut rng = Rng::new(1);
+            let mut mesh = PtcMesh::new(w.rows, w.cols, *k, NoiseModel::IDEAL, &mut rng);
+            mesh.program_from_dense(w);
+            let got = mesh.forward(x);
+            let want = matmul(w, x);
+            assert_close(&got.data, &want.data, 2e-3, 2e-3)
+                .map_err(|e| format!("{}x{} k={}: {e}", w.rows, w.cols, k))
+        },
+    );
+}
+
+#[test]
+fn prop_feedback_mask_row_balance_and_fraction() {
+    // ∀ (p, q, sparsity): btopk masks have identical kept-count per
+    // feedback row (the load-balance guarantee of §3.4.2) and an overall
+    // keep fraction within one block of the target.
+    quickcheck(
+        "btopk balance",
+        |rng: &mut Rng, _size: usize| {
+            let p = 2 + rng.below(8);
+            let q = 2 + rng.below(8);
+            let sparsity = 0.1 + 0.8 * rng.uniform() as f32;
+            let norms: Vec<f32> = (0..p * q).map(|_| rng.uniform_f32() + 0.01).collect();
+            (p, q, sparsity, norms)
+        },
+        |(p, q, sparsity, norms): &(usize, usize, f32, Vec<f32>)| {
+            let sampler = FeedbackSampler::new(FeedbackStrategy::BTopK, *sparsity, Normalization::Exp);
+            let mut rng = Rng::new(7);
+            let mask = sampler.draw(*p, *q, norms, &mut rng);
+            // keep is [q][p]: rows of Wᵀ are indexed by q.
+            let per_row: Vec<usize> = (0..*q)
+                .map(|qi| (0..*p).filter(|&pi| mask.keep[qi * p + pi]).count())
+                .collect();
+            let first = per_row[0];
+            if !per_row.iter().all(|&c| c == first) {
+                return Err(format!("imbalanced rows: {per_row:?}"));
+            }
+            if first == 0 {
+                return Err("empty feedback row".into());
+            }
+            let target = ((1.0 - sparsity) * *p as f32).round().max(1.0) as usize;
+            if (first as i64 - target as i64).unsigned_abs() > 1 {
+                return Err(format!("keep {first} far from target {target}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_unbiased_feedback_estimator() {
+    // Appendix D: E[mask ⊙ Wᵀ · c_W] = Wᵀ for uniform sampling with exp
+    // normalization — check the Monte-Carlo mean converges toward W.
+    let mut rng = Rng::new(99);
+    let (p, q, k) = (3, 3, 3);
+    let mut mesh = PtcMesh::new(p * k, q * k, k, NoiseModel::IDEAL, &mut rng);
+    let w = Mat::randn(p * k, q * k, 0.7, &mut rng);
+    mesh.program_from_dense(&w);
+    let dy = Mat::eye(p * k); // feedback of I gives Wᵀ itself
+    let truth = mesh.feedback(&dy, None, 1.0);
+    let sampler = FeedbackSampler::new(FeedbackStrategy::Uniform, 0.5, Normalization::Exp);
+    let norms = mesh.block_norms_sq();
+    let mut mean = Mat::zeros(truth.rows, truth.cols);
+    let draws = 600;
+    for d in 0..draws {
+        let mut r = Rng::new(1000 + d);
+        let m = sampler.draw(p, q, &norms, &mut r);
+        let est = mesh.feedback(&dy, Some(&m.keep), m.scale);
+        for (acc, v) in mean.data.iter_mut().zip(&est.data) {
+            *acc += v / draws as f32;
+        }
+    }
+    let rel = mean.sub(&truth).fro_norm() / truth.fro_norm();
+    assert!(rel < 0.12, "uniform+exp estimator biased: rel {rel}");
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_trees() {
+    // ∀ machine-generated JSON trees: parse(dump(x)) == x.
+    fn gen_tree(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.normal() * 100.0 * 64.0).round() / 64.0),
+            3 => Json::Str(format!("s{}-\"esc\\{}", rng.below(100), rng.below(10))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen_tree(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(4) {
+                    o.set(&format!("k{i}"), gen_tree(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    quickcheck(
+        "json roundtrip",
+        |rng: &mut Rng, _size: usize| gen_tree(rng, 3),
+        |j: &Json| {
+            let text = j.dump();
+            let back = Json::parse(&text).map_err(|e| format!("parse {text}: {e:?}"))?;
+            if &back != j {
+                return Err(format!("mismatch: {text} vs {}", back.dump()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_osp_never_worse_than_prior_sigma() {
+    // ∀ targets and unitary states: OSP's mapping loss ≤ the loss before
+    // projection (it is the argmin over Σ given fixed unitaries).
+    quickcheck(
+        "osp optimal",
+        |rng: &mut Rng, _size: usize| {
+            let k = 2 + rng.below(6);
+            let target = Mat::randn(k, k, 0.8, rng);
+            let seed = rng.next_u64();
+            (k, target, seed)
+        },
+        |(k, target, seed): &(usize, Mat, u64)| {
+            let mut rng = Rng::new(*seed);
+            let mut ptc = l2ight::photonics::ptc::Ptc::new(*k, NoiseModel::IDEAL, &mut rng);
+            // Random unitaries, random prior Σ.
+            use l2ight::photonics::ptc::Which;
+            use l2ight::photonics::unitary::num_phases;
+            let ph: Vec<f64> =
+                (0..num_phases(*k)).map(|_| rng.uniform_range(0.0, 6.28)).collect();
+            ptc.set_phases(Which::U, &ph);
+            let ph2: Vec<f64> =
+                (0..num_phases(*k)).map(|_| rng.uniform_range(0.0, 6.28)).collect();
+            ptc.set_phases(Which::V, &ph2);
+            let sig: Vec<f32> = (0..*k).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+            ptc.set_sigma(&sig);
+            let before = ptc.mapping_loss(target);
+            ptc.osp(target);
+            let after = ptc.mapping_loss(target);
+            if after <= before + 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("OSP worsened loss: {before} -> {after}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_augment_preserves_shape_and_finiteness() {
+    use l2ight::data::Augment;
+    quickcheck(
+        "augment sane",
+        |rng: &mut Rng, _size: usize| {
+            let c = 1 + rng.below(3);
+            let side = 4 + rng.below(12);
+            let mut x = vec![0.0f32; c * side * side];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            (c, side, x, rng.next_u64())
+        },
+        |(c, side, x, seed): &(usize, usize, Vec<f32>, u64)| {
+            let mut rng = Rng::new(*seed);
+            let mut y = x.clone();
+            Augment::CIFAR.apply(&mut y, *c, *side, *side, &mut rng);
+            if y.len() != x.len() {
+                return Err("length changed".into());
+            }
+            if !y.iter().all(|v| v.is_finite()) {
+                return Err("non-finite values".into());
+            }
+            Ok(())
+        },
+    );
+}
