@@ -1,5 +1,6 @@
 //! §Perf hot-path microbenchmarks (the before/after log lives in
-//! EXPERIMENTS.md §Perf). Covers the L3 bottlenecks DESIGN.md §8 names:
+//! `BENCH_perf_hotpath.json` — machine-readable, appended per run). Covers
+//! the L3 bottlenecks DESIGN.md §8 names:
 //!
 //!   1. blocked mesh forward vs raw dense GEMM (the simulator floor),
 //!   2. σ-gradient acquisition (Eq. 5 reciprocal passes),
@@ -7,17 +8,25 @@
 //!   4. realization: phases → noisy unitaries (the ZOO inner-loop cost),
 //!   5. feedback-mask generation (btopk heap-select),
 //!   6. PJRT artifact call overhead (when artifacts are built).
+//!
+//! Env knobs:
+//!   * `L2IGHT_THREADS`   — pool width (recorded in the JSON).
+//!   * `L2IGHT_BENCH_QUICK=1` — 1-warmup smoke run for CI (tiny budget).
+//!   * `L2IGHT_BENCH_JSON` — output path (default `BENCH_perf_hotpath.json`).
 
 use l2ight::linalg::{matmul, Mat};
 use l2ight::photonics::{NoiseModel, PtcMesh};
 use l2ight::runtime::{default_artifact_dir, ArgValue, Runtime};
 use l2ight::sampling::{FeedbackSampler, FeedbackStrategy, Normalization};
 use l2ight::util::bench::{black_box, fmt_ns, Bencher, Table};
-use l2ight::util::Rng;
+use l2ight::util::json::Json;
+use l2ight::util::{pool, Rng};
 
 fn main() {
-    println!("== perf: L3 hot paths (native simulator + PJRT overhead) ==");
-    let mut bench = Bencher::new(400, 20);
+    let quick = std::env::var("L2IGHT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let threads = pool::global().threads();
+    println!("== perf: L3 hot paths (native simulator + PJRT overhead), {threads} threads ==");
+    let mut bench = if quick { Bencher::new(20, 3) } else { Bencher::new(400, 20) };
     let mut t = Table::new(&["hot path", "median", "p10", "p90", "notes"]);
 
     let (n, k, b) = (72usize, 9usize, 64usize);
@@ -108,22 +117,96 @@ fn main() {
     t.row(&["ptc realize 9x9 (1 phase poke)".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "ZOO eval unit".into()]);
 
     // 8. PJRT call overhead (artifact path).
-    if default_artifact_dir().join("manifest.json").exists() {
-        let mut rt = Runtime::new(&default_artifact_dir()).expect("runtime");
-        let name = "ptc_forward_p2_q2_k9_b18";
-        let spec = rt.manifest().find(name).unwrap().clone();
-        let args_data: Vec<Vec<f32>> =
-            spec.args.iter().map(|a| vec![0.1f32; a.numel()]).collect();
-        rt.ensure_compiled(name).unwrap();
-        bench.bench("pjrt ptc_forward call", || {
-            let args: Vec<ArgValue> = args_data.iter().map(|d| ArgValue::F32(d)).collect();
-            black_box(rt.call1_f32(name, &args).unwrap());
-        });
-        let (med, p10, p90) = last(&bench);
-        t.row(&["pjrt ptc_forward call".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "2x2 blocks k=9 b=18".into()]);
-    } else {
+    if !default_artifact_dir().join("manifest.json").exists() {
         t.row(&["pjrt call".into(), "-".into(), "-".into(), "-".into(), "run `make artifacts`".into()]);
+    } else if quick {
+        t.row(&["pjrt call".into(), "-".into(), "-".into(), "-".into(), "skipped (quick mode)".into()]);
+    } else {
+        match Runtime::new(&default_artifact_dir()) {
+            Ok(mut rt) => {
+                let name = "ptc_forward_p2_q2_k9_b18";
+                let spec = rt.manifest().find(name).unwrap().clone();
+                let args_data: Vec<Vec<f32>> =
+                    spec.args.iter().map(|a| vec![0.1f32; a.numel()]).collect();
+                rt.ensure_compiled(name).unwrap();
+                bench.bench("pjrt ptc_forward call", || {
+                    let args: Vec<ArgValue> = args_data.iter().map(|d| ArgValue::F32(d)).collect();
+                    black_box(rt.call1_f32(name, &args).unwrap());
+                });
+                let (med, p10, p90) = last(&bench);
+                t.row(&["pjrt ptc_forward call".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "2x2 blocks k=9 b=18".into()]);
+            }
+            Err(e) => {
+                t.row(&["pjrt call".into(), "-".into(), "-".into(), "-".into(), format!("{e:#}")]);
+            }
+        }
     }
 
     t.print("perf — hot-path medians");
+
+    let json_path = std::env::var("L2IGHT_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_perf_hotpath.json".to_string());
+    match emit_json(&bench, threads, quick, &json_path) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("WARN: could not write {json_path}: {e}"),
+    }
+}
+
+/// Append this run (median/p10/p90 per hot path, thread count, git rev) to
+/// the machine-readable perf log, keeping the last 50 runs so the perf
+/// trajectory is diffable across commits.
+fn emit_json(bench: &Bencher, threads: usize, quick: bool, path: &str) -> std::io::Result<()> {
+    let mut runs: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|src| Json::parse(&src).ok())
+        .and_then(|root| root.get("runs").and_then(|r| r.as_arr()).map(|r| r.to_vec()))
+        .unwrap_or_default();
+
+    let mut run = Json::obj();
+    run.set("git_rev", Json::Str(git_rev()));
+    run.set("threads", Json::Num(threads as f64));
+    run.set("quick", Json::Bool(quick));
+    run.set("unix_time", Json::Num(unix_time()));
+    let mut paths = Vec::new();
+    for m in bench.results() {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(m.name.clone()));
+        o.set("median_ns", Json::Num(m.median_ns()));
+        o.set("p10_ns", Json::Num(m.p10_ns()));
+        o.set("p90_ns", Json::Num(m.p90_ns()));
+        o.set("samples", Json::Num(m.samples_ns.len() as f64));
+        paths.push(o);
+    }
+    run.set("hot_paths", Json::Arr(paths));
+    runs.push(run);
+    let keep = runs.len().saturating_sub(50);
+    let runs = runs.split_off(keep);
+
+    let mut root = Json::obj();
+    root.set("bench", Json::Str("perf_hotpath".to_string()));
+    root.set("schema", Json::Num(1.0));
+    root.set("runs", Json::Arr(runs));
+    std::fs::write(path, root.pretty() + "\n")
+}
+
+fn git_rev() -> String {
+    if let Ok(rev) = std::env::var("GITHUB_SHA") {
+        if !rev.is_empty() {
+            return rev.chars().take(12).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn unix_time() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
 }

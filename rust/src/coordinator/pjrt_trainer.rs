@@ -9,9 +9,8 @@
 //! exactly the division of labor of the paper's chip (PTC array computes,
 //! electronic control updates).
 
-use anyhow::{anyhow, Result};
-
 use crate::data::{Dataset, Loader};
+use crate::util::error::{anyhow, Result};
 use crate::optim::{AdamW, Optimizer};
 use crate::photonics::unitary::ReckMesh;
 use crate::runtime::{ArgValue, Runtime};

@@ -12,6 +12,20 @@
 //!   multi-level sparse subspace learning), the baselines, the Appendix-G cost
 //!   profiler, and a PJRT runtime that executes the AOT artifacts.
 //!
+//! ## The compute engine
+//!
+//! Every simulator hot path runs on one shared engine:
+//! [`util::pool`] — a persistent scoped thread pool (std-only, sized by
+//! `L2IGHT_THREADS` or `available_parallelism`) with a per-thread scratch
+//! arena — and [`linalg::gemm`] — register-tiled GEMM microkernels for all
+//! four transpose cases that band large products across that pool. The
+//! blocked mesh ([`photonics::mesh`]) fans its PTC grid out over the pool
+//! (row strips for forward, column strips for feedback, blocks for the
+//! Eq. 5 σ-gradient and batch realization), and the IC/PM stages reuse the
+//! same pool for their per-block ZO sweeps. Work is partitioned by output
+//! region, so results are bit-identical at every thread count; see
+//! `rust/README.md` § "Performance & threading".
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
 pub mod util;

@@ -1,16 +1,190 @@
-//! GEMM micro-kernels. `matmul` is the native simulator's hot path: it uses a
-//! cache-blocked loop order (i-k-j) with the inner j-loop auto-vectorizable,
-//! which is the standard roofline-friendly layout for row-major operands.
-//! Variants for Aᵀ·B and A·Bᵀ avoid materializing transposes on the
-//! backward pass.
+//! GEMM micro-kernels — the native simulator's compute engine.
+//!
+//! Two layers:
+//!
+//! * **Slice kernels** (`gemm_acc_slices`, `gemm_at_b_acc_band`,
+//!   `gemm_a_bt_acc_slices`) — register-tiled inner loops over raw row-major
+//!   storage. The A·B and Aᵀ·B kernels process 4 rows per pass so each
+//!   loaded B row (or C row) is reused 4×, and the inner j-loops are
+//!   independent-lane updates that auto-vectorize without fast-math. The
+//!   A·Bᵀ kernel tiles 4 dot products per A-row load (4 independent
+//!   accumulator chains for ILP) and skips all-zero A rows (ReLU-sparse
+//!   upstream gradients). Operating on slices lets the mesh hot paths feed
+//!   sub-panels of padded activations directly — no per-call `Vec<Mat>`
+//!   panel slicing.
+//! * **`Mat` wrappers** (`matmul*`) — shape-checked entry points that band
+//!   the output rows across the shared thread pool (`util::pool`) when the
+//!   product is large enough to amortize a pool wakeup. Banding partitions
+//!   output elements, so per-element accumulation order — and therefore the
+//!   result — is identical at every thread count.
 
 use super::mat::Mat;
+use crate::util::pool::{self, SendPtr, PAR_MIN_WORK};
+
+// ---------------------------------------------------------------------------
+// Slice kernels
+// ---------------------------------------------------------------------------
+
+/// C[m×n] += A[m×kk] · B[kk×n] over raw row-major slices.
+/// Register-tiled: 4 C rows per pass share each loaded B row.
+pub fn gemm_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    debug_assert!(a.len() >= m * kk && b.len() >= kk * n && c.len() >= m * n);
+    let mut i = 0;
+    while i + 4 <= m {
+        let rows = &mut c[i * n..(i + 4) * n];
+        let (c0, rows) = rows.split_at_mut(n);
+        let (c1, rows) = rows.split_at_mut(n);
+        let (c2, c3) = rows.split_at_mut(n);
+        let a0 = &a[i * kk..(i + 1) * kk];
+        let a1 = &a[(i + 1) * kk..(i + 2) * kk];
+        let a2 = &a[(i + 2) * kk..(i + 3) * kk];
+        let a3 = &a[(i + 3) * kk..(i + 4) * kk];
+        for l in 0..kk {
+            let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                continue; // structured-sparsity fast path (masked weights)
+            }
+            let br = &b[l * n..(l + 1) * n];
+            for j in 0..n {
+                let v = br[j];
+                c0[j] += x0 * v;
+                c1[j] += x1 * v;
+                c2[j] += x2 * v;
+                c3[j] += x3 * v;
+            }
+        }
+        i += 4;
+    }
+    for r in i..m {
+        let ar = &a[r * kk..(r + 1) * kk];
+        let cr = &mut c[r * n..(r + 1) * n];
+        for (l, &x) in ar.iter().enumerate() {
+            if x == 0.0 {
+                continue;
+            }
+            let br = &b[l * n..(l + 1) * n];
+            for j in 0..n {
+                cr[j] += x * br[j];
+            }
+        }
+    }
+}
+
+/// C[i0..i1, n] += (Aᵀ·B)[i0..i1, n] where A is [kk×m] and B is [kk×n],
+/// writing into `c_band` (rows `i0..i1` only — the unit of pool banding).
+/// 4 A/B row pairs per pass so each C row is touched kk/4 times.
+pub fn gemm_at_b_acc_band(
+    a: &[f32],
+    kk: usize,
+    m: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    i1: usize,
+    c_band: &mut [f32],
+) {
+    debug_assert!(a.len() >= kk * m && b.len() >= kk * n);
+    debug_assert!(i1 <= m && c_band.len() >= (i1 - i0) * n);
+    let mut l = 0;
+    while l + 4 <= kk {
+        let a0 = &a[l * m..(l + 1) * m];
+        let a1 = &a[(l + 1) * m..(l + 2) * m];
+        let a2 = &a[(l + 2) * m..(l + 3) * m];
+        let a3 = &a[(l + 3) * m..(l + 4) * m];
+        let b0 = &b[l * n..(l + 1) * n];
+        let b1 = &b[(l + 1) * n..(l + 2) * n];
+        let b2 = &b[(l + 2) * n..(l + 3) * n];
+        let b3 = &b[(l + 3) * n..(l + 4) * n];
+        for i in i0..i1 {
+            let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+            if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                continue;
+            }
+            let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+            for j in 0..n {
+                cr[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
+            }
+        }
+        l += 4;
+    }
+    for ll in l..kk {
+        let ar = &a[ll * m..(ll + 1) * m];
+        let br = &b[ll * n..(ll + 1) * n];
+        for i in i0..i1 {
+            let x = ar[i];
+            if x == 0.0 {
+                continue;
+            }
+            let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+            for j in 0..n {
+                cr[j] += x * br[j];
+            }
+        }
+    }
+}
+
+/// C[m×p] += A[m×kk] · B[p×kk]ᵀ (dot-product layout). Tiles 4 B rows per
+/// A-row pass (4 independent accumulator chains) and skips all-zero A rows —
+/// the zero-skip fast path for ReLU-sparse upstream gradients.
+pub fn gemm_a_bt_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize, c: &mut [f32]) {
+    debug_assert!(a.len() >= m * kk && b.len() >= p * kk && c.len() >= m * p);
+    for i in 0..m {
+        let ar = &a[i * kk..(i + 1) * kk];
+        if ar.iter().all(|&v| v == 0.0) {
+            continue;
+        }
+        let cr = &mut c[i * p..(i + 1) * p];
+        let mut j = 0;
+        while j + 4 <= p {
+            let b0 = &b[j * kk..(j + 1) * kk];
+            let b1 = &b[(j + 1) * kk..(j + 2) * kk];
+            let b2 = &b[(j + 2) * kk..(j + 3) * kk];
+            let b3 = &b[(j + 3) * kk..(j + 4) * kk];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for l in 0..kk {
+                let av = ar[l];
+                s0 += av * b0[l];
+                s1 += av * b1[l];
+                s2 += av * b2[l];
+                s3 += av * b3[l];
+            }
+            cr[j] += s0;
+            cr[j + 1] += s1;
+            cr[j + 2] += s2;
+            cr[j + 3] += s3;
+            j += 4;
+        }
+        for jj in j..p {
+            let br = &b[jj * kk..(jj + 1) * kk];
+            let mut s = 0.0f32;
+            for (x, y) in ar.iter().zip(br) {
+                s += x * y;
+            }
+            cr[jj] += s;
+        }
+    }
+}
+
+/// Rows per band when splitting `rows` of `work_per_row` flops across the
+/// pool. Depends only on the problem size — never on the pool width — and
+/// is a multiple of 4 so every band starts on a 4-row tile boundary: the
+/// banded computation groups rows exactly like the unbanded one, making
+/// results bit-identical at every thread count (including `threads=1`,
+/// where the same bands simply run inline).
+fn band_rows(work_per_row: usize) -> usize {
+    let by_work = (PAR_MIN_WORK / work_per_row.max(1)).max(8);
+    by_work.div_ceil(4) * 4
+}
+
+// ---------------------------------------------------------------------------
+// Mat wrappers
+// ---------------------------------------------------------------------------
 
 /// C = A · B.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul inner dim: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
     let mut c = Mat::zeros(a.rows, b.cols);
-    matmul_into(a, b, &mut c);
+    matmul_acc(a, b, &mut c);
     c
 }
 
@@ -19,19 +193,20 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "matmul_acc inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_acc out shape");
-    let n = b.cols;
-    for i in 0..a.rows {
-        let a_row = a.row(i);
-        let c_row = c.row_mut(i);
-        for (kk, &aik) in a_row.iter().enumerate() {
-            if aik == 0.0 {
-                continue; // structured sparsity fast path (masked feedback)
-            }
-            let b_row = &b.data[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                c_row[j] += aik * b_row[j];
-            }
-        }
+    let (m, kk, n) = (a.rows, a.cols, b.cols);
+    if m > 4 && m * kk * n >= PAR_MIN_WORK {
+        let band = band_rows(kk * n);
+        let chunks = m.div_ceil(band);
+        let cptr = SendPtr(c.data.as_mut_ptr());
+        pool::global().parallel_for(chunks, |ci| {
+            let r0 = ci * band;
+            let r1 = (r0 + band).min(m);
+            // Safety: bands partition C's rows; chunk ci touches only its band.
+            let cb = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
+            gemm_acc_slices(&a.data[r0 * kk..r1 * kk], r1 - r0, kk, &b.data, n, cb);
+        });
+    } else {
+        gemm_acc_slices(&a.data, m, kk, &b.data, n, &mut c.data);
     }
 }
 
@@ -53,20 +228,21 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.rows, b.rows, "matmul_at_b inner dim");
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_at_b out shape");
-    c.data.fill(0.0);
-    let n = b.cols;
-    for kk in 0..a.rows {
-        let a_row = a.row(kk);
-        let b_row = b.row(kk);
-        for (i, &aki) in a_row.iter().enumerate() {
-            if aki == 0.0 {
-                continue;
-            }
-            let c_row = &mut c.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                c_row[j] += aki * b_row[j];
-            }
-        }
+    let (kk, m, n) = (a.rows, a.cols, b.cols);
+    if m > 4 && m * kk * n >= PAR_MIN_WORK {
+        let band = band_rows(kk * n);
+        let chunks = m.div_ceil(band);
+        let cptr = SendPtr(c.data.as_mut_ptr());
+        pool::global().parallel_for(chunks, |ci| {
+            let r0 = ci * band;
+            let r1 = (r0 + band).min(m);
+            let cb = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
+            cb.fill(0.0);
+            gemm_at_b_acc_band(&a.data, kk, m, &b.data, n, r0, r1, cb);
+        });
+    } else {
+        c.data.fill(0.0);
+        gemm_at_b_acc_band(&a.data, kk, m, &b.data, n, 0, m, &mut c.data);
     }
 }
 
@@ -74,22 +250,75 @@ pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_a_bt inner dim");
     let mut c = Mat::zeros(a.rows, b.rows);
-    for i in 0..a.rows {
-        let a_row = a.row(i);
-        for j in 0..b.rows {
-            let b_row = b.row(j);
-            let mut s = 0.0f32;
-            for (x, y) in a_row.iter().zip(b_row) {
-                s += x * y;
-            }
-            c[(i, j)] = s;
-        }
-    }
+    matmul_a_bt_acc(a, b, &mut c);
     c
 }
 
-/// Hot-path helper for Eq. 5: acc[i] += scale · Σ_b (Aᵀ·Y)[i,b] ⊙ (V·X)[i,b]
-/// computed with preallocated scratch (`ut_y`, `vx`).
+/// C = A · Bᵀ into preallocated storage.
+pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt_into inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_a_bt_into out shape");
+    c.data.fill(0.0);
+    matmul_a_bt_acc(a, b, c);
+}
+
+/// C += A · Bᵀ into preallocated storage — the weight-gradient accumulator
+/// (dW += dy·xᵀ) without the per-step temporary.
+pub fn matmul_a_bt_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt_acc inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_a_bt_acc out shape");
+    let (m, kk, p) = (a.rows, a.cols, b.rows);
+    if m > 4 && m * kk * p >= PAR_MIN_WORK {
+        let band = band_rows(kk * p);
+        let chunks = m.div_ceil(band);
+        let cptr = SendPtr(c.data.as_mut_ptr());
+        pool::global().parallel_for(chunks, |ci| {
+            let r0 = ci * band;
+            let r1 = (r0 + band).min(m);
+            let cb = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * p), (r1 - r0) * p) };
+            gemm_a_bt_acc_slices(&a.data[r0 * kk..r1 * kk], r1 - r0, kk, &b.data, p, cb);
+        });
+    } else {
+        gemm_a_bt_acc_slices(&a.data, m, kk, &b.data, p, &mut c.data);
+    }
+}
+
+/// Eq. 5 inner kernel over raw k×B panels: acc[i] += scale · Σ_b
+/// (Uᵀ·dy)[i,b] ⊙ (V·x)[i,b], with caller-provided scratch for the two
+/// intermediate k×B products.
+#[allow(clippy::too_many_arguments)]
+pub fn sigma_grad_block_slices(
+    u: &Mat,
+    v: &Mat,
+    dy_panel: &[f32],
+    x_panel: &[f32],
+    b: usize,
+    scale: f32,
+    ut_y: &mut [f32],
+    vx: &mut [f32],
+    acc: &mut [f32],
+) {
+    let k = u.rows;
+    debug_assert!(dy_panel.len() >= k * b && x_panel.len() >= k * b);
+    debug_assert!(ut_y.len() >= k * b && vx.len() >= k * b && acc.len() >= k);
+    ut_y[..k * b].fill(0.0);
+    gemm_at_b_acc_band(&u.data, k, k, dy_panel, b, 0, k, ut_y);
+    vx[..k * b].fill(0.0);
+    gemm_acc_slices(&v.data, k, k, x_panel, b, vx);
+    for (i, g) in acc.iter_mut().enumerate().take(k) {
+        let ar = &ut_y[i * b..(i + 1) * b];
+        let cr = &vx[i * b..(i + 1) * b];
+        let mut s = 0.0f32;
+        for (p, q) in ar.iter().zip(cr) {
+            s += p * q;
+        }
+        *g += s * scale;
+    }
+}
+
+/// Hot-path helper for Eq. 5 with `Mat` scratch (kept for compatibility —
+/// see `sigma_grad_block_slices` for the allocation-free panel form).
+#[allow(clippy::too_many_arguments)]
 pub fn sigma_grad_block(
     u: &Mat,
     v: &Mat,
@@ -100,18 +329,8 @@ pub fn sigma_grad_block(
     vx: &mut Mat,
     acc: &mut [f32],
 ) {
-    matmul_at_b_into(u, y, ut_y);
-    matmul_into(v, x, vx);
     let b = y.cols;
-    for (i, g) in acc.iter_mut().enumerate() {
-        let ar = &ut_y.data[i * b..(i + 1) * b];
-        let cr = &vx.data[i * b..(i + 1) * b];
-        let mut s = 0.0f32;
-        for (p, q) in ar.iter().zip(cr) {
-            s += p * q;
-        }
-        *g += s * scale;
-    }
+    sigma_grad_block_slices(u, v, &y.data, &x.data, b, scale, &mut ut_y.data, &mut vx.data, acc);
 }
 
 /// y = A · x for a dense vector.
@@ -199,6 +418,19 @@ mod tests {
     }
 
     #[test]
+    fn large_products_match_naive() {
+        // Big enough to take the pool-banded path at any thread count.
+        let mut rng = Rng::new(77);
+        let a = Mat::randn(97, 53, 1.0, &mut rng);
+        let b = Mat::randn(53, 61, 1.0, &mut rng);
+        assert_close(&matmul(&a, &b).data, &naive(&a, &b).data, 1e-3, 1e-3).unwrap();
+        let at = Mat::randn(53, 97, 1.0, &mut rng);
+        assert_close(&matmul_at_b(&at, &b).data, &matmul(&at.t(), &b).data, 1e-3, 1e-3).unwrap();
+        let bt = Mat::randn(61, 53, 1.0, &mut rng);
+        assert_close(&matmul_a_bt(&a, &bt).data, &matmul(&a, &bt.t()).data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
     fn matvec_matches_matmul() {
         let mut rng = Rng::new(11);
         let a = Mat::randn(7, 5, 1.0, &mut rng);
@@ -230,6 +462,37 @@ mod tests {
     }
 
     #[test]
+    fn a_bt_into_and_acc_match_fresh() {
+        let mut rng = Rng::new(33);
+        let a = Mat::randn(6, 5, 1.0, &mut rng);
+        let b = Mat::randn(4, 5, 1.0, &mut rng);
+        let fresh = matmul_a_bt(&a, &b);
+        let mut c = Mat::zeros(6, 4);
+        c.data.fill(3.0);
+        matmul_a_bt_into(&a, &b, &mut c);
+        assert_close(&fresh.data, &c.data, 1e-6, 1e-6).unwrap();
+        // acc: run twice over zeros == 2× the fresh product.
+        let mut c2 = Mat::zeros(6, 4);
+        matmul_a_bt_acc(&a, &b, &mut c2);
+        matmul_a_bt_acc(&a, &b, &mut c2);
+        let twice: Vec<f32> = fresh.data.iter().map(|v| 2.0 * v).collect();
+        assert_close(&twice, &c2.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn a_bt_zero_rows_are_skipped_exactly() {
+        let mut rng = Rng::new(34);
+        let mut a = Mat::randn(5, 7, 1.0, &mut rng);
+        for v in a.row_mut(2) {
+            *v = 0.0;
+        }
+        let b = Mat::randn(6, 7, 1.0, &mut rng);
+        let c = matmul_a_bt(&a, &b);
+        assert!(c.row(2).iter().all(|&v| v == 0.0));
+        assert_close(&c.data, &matmul(&a, &b.t()).data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
     fn sigma_grad_block_matches_naive() {
         let mut rng = Rng::new(32);
         let (k, b) = (4, 6);
@@ -252,5 +515,23 @@ mod tests {
         let mut s2 = Mat::zeros(k, b);
         sigma_grad_block(&u, &v, &y, &x, 2.0, &mut s1, &mut s2, &mut got);
         assert_close(&want, &got, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn slice_kernels_respect_band_windows() {
+        let mut rng = Rng::new(35);
+        let (kk, m, n) = (9, 13, 8);
+        let a = Mat::randn(kk, m, 1.0, &mut rng);
+        let b = Mat::randn(kk, n, 1.0, &mut rng);
+        let full = matmul_at_b(&a, &b);
+        // Reassemble from two bands.
+        let mid = 5;
+        let mut lo = vec![0.0f32; mid * n];
+        let mut hi = vec![0.0f32; (m - mid) * n];
+        gemm_at_b_acc_band(&a.data, kk, m, &b.data, n, 0, mid, &mut lo);
+        gemm_at_b_acc_band(&a.data, kk, m, &b.data, n, mid, m, &mut hi);
+        let mut joined = lo;
+        joined.extend_from_slice(&hi);
+        assert_close(&joined, &full.data, 1e-6, 1e-6).unwrap();
     }
 }

@@ -1,7 +1,8 @@
-//! Dense linear algebra substrate: a row-major f32 matrix type, a blocked
-//! GEMM micro-kernel (the native-simulator hot path — see DESIGN.md §8),
-//! one-sided Jacobi SVD for the k×k photonic blocks, and im2col/col2im for
-//! the convolution layers.
+//! Dense linear algebra substrate: a row-major f32 matrix type, a
+//! register-tiled + pool-parallel GEMM engine (the native-simulator hot
+//! path — see DESIGN.md §8 and `gemm`'s module docs), one-sided Jacobi SVD
+//! for the k×k photonic blocks, and im2col/col2im for the convolution
+//! layers.
 
 pub mod mat;
 pub mod gemm;
@@ -9,6 +10,10 @@ pub mod svd;
 pub mod conv;
 
 pub use conv::{col2im, im2col, Conv2dShape};
-pub use gemm::{matmul, matmul_a_bt, matmul_acc, matmul_at_b, matmul_at_b_into, matmul_into, matvec, sigma_grad_block};
+pub use gemm::{
+    gemm_a_bt_acc_slices, gemm_acc_slices, gemm_at_b_acc_band, matmul, matmul_a_bt,
+    matmul_a_bt_acc, matmul_a_bt_into, matmul_acc, matmul_at_b, matmul_at_b_into, matmul_into,
+    matvec, sigma_grad_block, sigma_grad_block_slices,
+};
 pub use mat::Mat;
 pub use svd::{svd_kxk, Svd};

@@ -7,8 +7,12 @@
 //!   blocked mesh; backward produces the Σ subspace gradient via the Eq. 5
 //!   reciprocity rule and the masked feedback product of §3.4.2. Full-space
 //!   weight gradients simply do not exist here, matching the hardware.
+//!
+//! Both engines route every matrix product through the shared compute
+//! engine (`linalg::gemm` tiled kernels + `util::pool` banding), so layer
+//! forward/backward parallelize without any threading code here.
 
-use crate::linalg::{matmul, matmul_a_bt, matmul_at_b, Mat};
+use crate::linalg::{matmul, matmul_a_bt, matmul_a_bt_acc, matmul_at_b, Mat};
 use crate::photonics::{NoiseModel, PtcMesh};
 use crate::sampling::feedback::FeedbackMask;
 use crate::util::Rng;
@@ -118,15 +122,26 @@ impl ProjEngine {
             ProjEngine::Digital { w, grad_w, .. } => {
                 // Full-space: dW += dy·xᵀ (with optional column masking to
                 // let the RAD/SWAT baselines reuse this engine), dx = Wᵀ dy.
-                let (dys, xs) = match col_keep {
-                    None => (dy.clone(), x.clone()),
-                    Some(mask) => (mask_cols(dy, mask), mask_cols(x, mask)),
-                };
-                let mut gw = matmul_a_bt(&dys, &xs);
-                if col_scale != 1.0 {
-                    gw.scale(col_scale);
+                // Full-batch fast path: accumulate dy·xᵀ straight into the
+                // gradient buffer (§Perf: no per-step temporaries or input
+                // clones; the A·Bᵀ kernel zero-skips ReLU-sparse dy rows).
+                match col_keep {
+                    None if col_scale == 1.0 => matmul_a_bt_acc(dy, x, grad_w),
+                    _ => {
+                        let gw = match col_keep {
+                            None => matmul_a_bt(dy, x),
+                            Some(mask) => {
+                                let (dys, xs) = (mask_cols(dy, mask), mask_cols(x, mask));
+                                matmul_a_bt(&dys, &xs)
+                            }
+                        };
+                        // In-place scaled accumulate — no temporaries beyond
+                        // the product itself.
+                        for (g, v) in grad_w.data.iter_mut().zip(&gw.data) {
+                            *g += col_scale * v;
+                        }
+                    }
                 }
-                *grad_w = grad_w.add(&gw);
                 match fb {
                     None => matmul_at_b(w, dy),
                     Some(m) => {

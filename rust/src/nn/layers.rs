@@ -116,14 +116,16 @@ impl Linear {
     }
 
     pub fn backward(&mut self, dy: &Act, ctx: &mut BackwardCtx) -> Act {
-        let x = self.cache.as_ref().expect("Linear backward without forward").clone();
         for (r, g) in self.grad_bias.iter_mut().enumerate() {
             *g += dy.mat.row(r).iter().sum::<f32>();
         }
         let fb = ctx.draw_feedback(&self.engine);
         // CS degenerates to batch sampling for FC layers; the paper applies
-        // it to CONV layers only, so no column mask here.
-        let dx = self.engine.backward(&x, &dy.mat, fb.as_ref(), None, 1.0);
+        // it to CONV layers only, so no column mask here. The cached input
+        // is borrowed, not cloned (§Perf: engine and cache are disjoint
+        // fields).
+        let x = self.cache.as_ref().expect("Linear backward without forward");
+        let dx = self.engine.backward(x, &dy.mat, fb.as_ref(), None, 1.0);
         Act::from_features(dx, dy.batch)
     }
 }
@@ -215,16 +217,16 @@ impl Conv2d {
         // Feature sampling: CS masks patch columns; SS re-unfolds a
         // pixel-sparsified input (no structured savings — the point of Fig 9).
         let col_mask = ctx.feature.draw_column_mask(sh.batch, sh.out_h() * sh.out_w(), &mut ctx.rng);
-        let x_for_grad = match ctx
+        let recomputed = ctx
             .feature
             .apply_spatial(self.cache_input.as_ref().unwrap(), &mut ctx.rng)
-        {
-            Some(sparse_in) => im2col(&sparse_in.to_nchw(), &sh),
-            None => self.cache_x.as_ref().unwrap().clone(),
-        };
+            .map(|sparse_in| im2col(&sparse_in.to_nchw(), &sh));
+        // Borrow the cached patch matrix on the common (no-SS) path instead
+        // of cloning it per backward (§Perf).
+        let x_for_grad: &Mat = recomputed.as_ref().unwrap_or_else(|| self.cache_x.as_ref().unwrap());
         let fb = ctx.draw_feedback(&self.engine);
         let dx_cols = self.engine.backward(
-            &x_for_grad,
+            x_for_grad,
             &dy.mat,
             fb.as_ref(),
             col_mask.as_deref(),

@@ -3,11 +3,22 @@
 //! subspace gradient of Eq. 5, masked error feedback (balanced feedback
 //! sampling, §3.4.2), OSP-based mapping from a dense weight, and the
 //! PTC-call statistics the Appendix-G cost model consumes.
+//!
+//! §Perf — every hot path routes through the shared compute engine:
+//! block/strip work fans out over `util::pool` (row strips for forward,
+//! column strips for feedback, PTC blocks for σ-grad and batch realization),
+//! the inner products run on the register-tiled slice kernels of
+//! `linalg::gemm`, and padded activations are fed to those kernels as
+//! sub-panel slices (the old per-call `Vec<Mat>` panel copies are gone; the
+//! σ-grad intermediates come from the per-thread scratch arena). Work is
+//! partitioned by output region, so results are identical at every thread
+//! count — `threads=1` reproduces the serial engine bit-for-bit.
 
 use super::noise::NoiseModel;
 use super::ptc::Ptc;
 use super::unitary::ReckMesh;
-use crate::linalg::{matmul_acc, svd_kxk, Mat};
+use crate::linalg::{gemm_acc_slices, gemm_at_b_acc_band, sigma_grad_block_slices, svd_kxk, Mat};
+use crate::util::pool::{self, Scratch, SendPtr, ThreadPool};
 use crate::util::Rng;
 
 /// Raw hardware-op counters (Appendix G cost model, measured not estimated):
@@ -130,7 +141,7 @@ impl PtcMesh {
     pub fn to_dense(&mut self) -> Mat {
         let k = self.k;
         let mut w = Mat::zeros(self.rows, self.cols);
-        self.ensure_cache();
+        self.ensure_cache(pool::global());
         let cache = self.w_cache.as_ref().unwrap();
         for pi in 0..self.p {
             for qi in 0..self.q {
@@ -140,12 +151,28 @@ impl PtcMesh {
         w
     }
 
-    fn ensure_cache(&mut self) {
-        if self.w_cache.is_none() {
-            let blocks: Vec<Mat> =
-                self.ptcs.iter_mut().map(|ptc| ptc.realized_matrix()).collect();
-            self.w_cache = Some(blocks);
+    /// Batch-realize all PTC blocks (phases → noisy matrices) across the
+    /// pool. This is the ZOO/noise-sim dominant cost — each block is
+    /// independent.
+    fn ensure_cache(&mut self, pool: &ThreadPool) {
+        if self.w_cache.is_some() {
+            return;
         }
+        let n = self.ptcs.len();
+        let k = self.k;
+        let pptr = SendPtr(self.ptcs.as_mut_ptr());
+        // Realization work per block ≈ O(k³) with a large constant (phase
+        // synthesis); gate tiny meshes to the inline path.
+        let blocks = if n > 1 && 8 * n * k * k * k >= pool::PAR_MIN_WORK {
+            pool.parallel_map(n, |i| {
+                // Safety: each index realizes exactly one distinct PTC.
+                let ptc = unsafe { &mut *pptr.0.add(i) };
+                ptc.realized_matrix()
+            })
+        } else {
+            self.ptcs.iter_mut().map(|ptc| ptc.realized_matrix()).collect()
+        };
+        self.w_cache = Some(blocks);
     }
 
     /// Blocked forward Y = W̃ · X for X of shape [cols, B].
@@ -157,33 +184,62 @@ impl PtcMesh {
     /// the SWAT-U baseline, which sparsifies the *forward* weights too.
     /// Dropped blocks issue no PTC call.
     pub fn forward_masked(&mut self, x: &Mat, block_keep: Option<&[bool]>, scale: f32) -> Mat {
+        self.forward_masked_on(pool::global(), x, block_keep, scale)
+    }
+
+    /// `forward_masked` on an explicit pool (the public entry point uses the
+    /// process-global one; tests use this to prove thread-count invariance).
+    pub fn forward_masked_on(
+        &mut self,
+        pool: &ThreadPool,
+        x: &Mat,
+        block_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Mat {
         assert_eq!(x.rows, self.cols, "mesh forward input rows");
         let (k, p, q, b) = (self.k, self.p, self.q, x.cols);
-        self.ensure_cache();
-        let cache = self.w_cache.as_ref().unwrap();
-        // Pad X rows to q·k; slice the q input panels once (§Perf: was
-        // p·q slice copies).
-        let xp = pad_rows(x, q * k);
-        let xqs: Vec<Mat> = (0..q).map(|qi| slice_rows(&xp, qi * k, k)).collect();
+        self.ensure_cache(pool);
         let mut yp = Mat::zeros(p * k, b);
-        let mut kept = 0u64;
-        let mut acc = Mat::zeros(k, b);
-        for pi in 0..p {
-            acc.data.fill(0.0);
-            for qi in 0..q {
-                if let Some(mask) = block_keep {
-                    if !mask[pi * q + qi] {
-                        continue;
+        {
+            let cache = self.w_cache.as_ref().unwrap();
+            // Borrow X when already k-aligned; pad once otherwise (§Perf:
+            // the q input panels are consumed as sub-slices, not copies).
+            let mut xp_store = None;
+            let xp = pad_rows_into(x, q * k, &mut xp_store);
+            let ypp = SendPtr(yp.data.as_mut_ptr());
+            // One task per output row strip; each strip accumulates its q
+            // block products directly into its disjoint rows of Y.
+            pool.parallel_for_sized(p, 2 * p * q * k * k * b, |pi| {
+                // Safety: strip pi writes rows [pi·k, (pi+1)·k) only.
+                let strip =
+                    unsafe { std::slice::from_raw_parts_mut(ypp.0.add(pi * k * b), k * b) };
+                for qi in 0..q {
+                    if let Some(mask) = block_keep {
+                        if !mask[pi * q + qi] {
+                            continue;
+                        }
+                    }
+                    let w = &cache[pi * q + qi];
+                    gemm_acc_slices(
+                        &w.data,
+                        k,
+                        k,
+                        &xp.data[qi * k * b..(qi + 1) * k * b],
+                        b,
+                        strip,
+                    );
+                }
+                if scale != 1.0 {
+                    for v in strip.iter_mut() {
+                        *v *= scale;
                     }
                 }
-                kept += 1;
-                matmul_acc(&cache[pi * q + qi], &xqs[qi], &mut acc);
-            }
-            if scale != 1.0 {
-                acc.scale(scale);
-            }
-            yp.set_block(pi * k, 0, &acc);
+            });
         }
+        let kept = match block_keep {
+            None => (p * q) as u64,
+            Some(m) => m.iter().filter(|&&keep| keep).count() as u64,
+        };
         let groups = b.div_ceil(k).max(1) as u64;
         self.stats.fwd_block_cols += kept * groups;
         // Latency: per column group 1 PTC call + sequential accumulation over
@@ -196,7 +252,11 @@ impl PtcMesh {
             .max()
             .unwrap_or(0) as u64;
         self.stats.fwd_steps += groups * (1 + max_row_depth);
-        crop_rows(&yp, self.rows)
+        if yp.rows == self.rows {
+            yp
+        } else {
+            crop_rows(&yp, self.rows)
+        }
     }
 
     /// In-situ subspace gradient (Eq. 5), computed per block with the
@@ -216,44 +276,66 @@ impl PtcMesh {
         col_keep: Option<&[bool]>,
         scale: f32,
     ) -> Vec<f32> {
+        self.sigma_grad_on(pool::global(), x, dy, col_keep, scale)
+    }
+
+    /// `sigma_grad` on an explicit pool (see `forward_masked_on`).
+    pub fn sigma_grad_on(
+        &mut self,
+        pool: &ThreadPool,
+        x: &Mat,
+        dy: &Mat,
+        col_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Vec<f32> {
         assert_eq!(x.rows, self.cols);
         assert_eq!(dy.rows, self.rows);
         assert_eq!(x.cols, dy.cols);
         let (k, p, q) = (self.k, self.p, self.q);
-        // select_cols clones; skip it entirely when the mask is off
-        // (§Perf: pad_rows is already the one unavoidable copy).
-        let (xp, dyp) = match col_keep {
-            None => (pad_rows(x, q * k), pad_rows(dy, p * k)),
-            Some(_) => (
-                pad_rows(&select_cols(x, col_keep), q * k),
-                pad_rows(&select_cols(dy, col_keep), p * k),
+        // select_cols clones; skip it entirely when the mask is off (§Perf:
+        // aligned inputs are borrowed — zero copies on the common path).
+        let mut xp_store = None;
+        let mut dyp_store = None;
+        let (xp, dyp): (&Mat, &Mat) = match col_keep {
+            None => (
+                pad_rows_into(x, q * k, &mut xp_store),
+                pad_rows_into(dy, p * k, &mut dyp_store),
             ),
+            Some(_) => {
+                xp_store = Some(pad_rows(&select_cols(x, col_keep), q * k));
+                dyp_store = Some(pad_rows(&select_cols(dy, col_keep), p * k));
+                (xp_store.as_ref().unwrap(), dyp_store.as_ref().unwrap())
+            }
         };
         let b = xp.cols;
         let mut grad = vec![0.0f32; p * q * k];
-        // Per block: A = Uᵀ·dy_p (k×B), C = V*·x_q (k×B), dσ_i = Σ_b A⊙C —
-        // computed into preallocated scratch; input panels sliced once
-        // (§Perf: removed 2 allocations + q−1 slice copies per block).
-        let xbs: Vec<Mat> = (0..q).map(|qi| slice_rows(&xp, qi * k, k)).collect();
-        let mut ut_y = Mat::zeros(k, b);
-        let mut vx = Mat::zeros(k, b);
-        for pi in 0..p {
-            let dyb = slice_rows(&dyp, pi * k, k);
-            for qi in 0..q {
-                let ptc = &mut self.ptcs[pi * q + qi];
-                let g = (pi * q + qi) * k;
+        {
+            // Per block: A = Uᵀ·dy_p (k×B), C = V*·x_q (k×B), dσ_i = Σ_b A⊙C.
+            // One task per PTC block: disjoint &mut PTC (realization cache)
+            // and disjoint k-slice of the gradient; intermediates live in the
+            // per-thread scratch arena (§Perf: no allocation per block).
+            let gptr = SendPtr(grad.as_mut_ptr());
+            let pptr = SendPtr(self.ptcs.as_mut_ptr());
+            pool.parallel_for_sized(p * q, 2 * p * q * k * k * b, |bi| {
+                // Safety: block bi owns ptcs[bi] and grad[bi·k .. bi·k+k].
+                let ptc = unsafe { &mut *pptr.0.add(bi) };
+                let g = unsafe { std::slice::from_raw_parts_mut(gptr.0.add(bi * k), k) };
+                let (pi, qi) = (bi / q, bi % q);
                 let (u, v) = ptc.realized_uv();
-                crate::linalg::sigma_grad_block(
+                let mut scratch = Scratch::take(2 * k * b);
+                let (ut_y, vx) = scratch.split_at_mut(k * b);
+                sigma_grad_block_slices(
                     u,
                     v,
-                    &dyb,
-                    &xbs[qi],
+                    &dyp.data[pi * k * b..(pi + 1) * k * b],
+                    &xp.data[qi * k * b..(qi + 1) * k * b],
+                    b,
                     scale,
-                    &mut ut_y,
-                    &mut vx,
-                    &mut grad[g..g + k],
+                    ut_y,
+                    vx,
+                    g,
                 );
-            }
+            });
         }
         // 2 reciprocal PTC calls per block-column group (Appendix G.1)...
         let groups = b.div_ceil(k).max(1) as u64;
@@ -267,33 +349,62 @@ impl PtcMesh {
     /// (§3.4.2 balanced feedback sampling). `block_keep` is a [q][p] mask
     /// (None = dense), `scale` the unbiasedness factor c_W.
     pub fn feedback(&mut self, dy: &Mat, block_keep: Option<&[bool]>, scale: f32) -> Mat {
+        self.feedback_on(pool::global(), dy, block_keep, scale)
+    }
+
+    /// `feedback` on an explicit pool (see `forward_masked_on`).
+    pub fn feedback_on(
+        &mut self,
+        pool: &ThreadPool,
+        dy: &Mat,
+        block_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Mat {
         assert_eq!(dy.rows, self.rows, "feedback dy rows");
         let (k, p, q, b) = (self.k, self.p, self.q, dy.cols);
-        self.ensure_cache();
-        let cache = self.w_cache.as_ref().unwrap();
-        let dyp = pad_rows(dy, p * k);
-        let dybs: Vec<Mat> = (0..p).map(|pi| slice_rows(&dyp, pi * k, k)).collect();
+        self.ensure_cache(pool);
         let mut dxp = Mat::zeros(q * k, b);
-        let mut kept_products = 0u64;
-        let mut acc = Mat::zeros(k, b);
-        for qi in 0..q {
-            acc.data.fill(0.0);
-            for pi in 0..p {
-                if let Some(mask) = block_keep {
-                    if !mask[qi * p + pi] {
-                        continue;
+        {
+            let cache = self.w_cache.as_ref().unwrap();
+            let mut dyp_store = None;
+            let dyp = pad_rows_into(dy, p * k, &mut dyp_store);
+            let dpp = SendPtr(dxp.data.as_mut_ptr());
+            // One task per input-side strip qi: accumulates its p block
+            // products W̃ᵀ·dy_p directly into its disjoint rows of dX.
+            pool.parallel_for_sized(q, 2 * p * q * k * k * b, |qi| {
+                // Safety: strip qi writes rows [qi·k, (qi+1)·k) only.
+                let strip =
+                    unsafe { std::slice::from_raw_parts_mut(dpp.0.add(qi * k * b), k * b) };
+                for pi in 0..p {
+                    if let Some(mask) = block_keep {
+                        if !mask[qi * p + pi] {
+                            continue;
+                        }
+                    }
+                    // W̃ᵀ block product without materializing the transpose.
+                    let wt = &cache[pi * q + qi];
+                    gemm_at_b_acc_band(
+                        &wt.data,
+                        k,
+                        k,
+                        &dyp.data[pi * k * b..(pi + 1) * k * b],
+                        b,
+                        0,
+                        k,
+                        strip,
+                    );
+                }
+                if scale != 1.0 {
+                    for v in strip.iter_mut() {
+                        *v *= scale;
                     }
                 }
-                kept_products += 1;
-                // W̃ᵀ block product without materializing the transpose.
-                let wt = &cache[pi * q + qi];
-                acc_at_b(wt, &dybs[pi], &mut acc);
-            }
-            if scale != 1.0 {
-                acc.scale(scale);
-            }
-            dxp.set_block(qi * k, 0, &acc);
+            });
         }
+        let kept_products = match block_keep {
+            None => (p * q) as u64,
+            Some(m) => m.iter().filter(|&&keep| keep).count() as u64,
+        };
         let groups = b.div_ceil(k).max(1) as u64;
         self.stats.feedback_block_cols += kept_products * groups;
         // Latency is bottlenecked by the longest accumulation row of Wᵀ
@@ -306,7 +417,11 @@ impl PtcMesh {
             .max()
             .unwrap_or(0) as u64;
         self.stats.feedback_steps += groups * (1 + critical);
-        crop_rows(&dxp, self.cols)
+        if dxp.rows == self.cols {
+            dxp
+        } else {
+            crop_rows(&dxp, self.cols)
+        }
     }
 
     /// Per-block squared Frobenius norms estimated the on-chip way:
@@ -357,21 +472,13 @@ impl PtcMesh {
     }
 }
 
-/// acc += AᵀB with A as the stored (non-transposed) block.
-fn acc_at_b(a: &Mat, b: &Mat, acc: &mut Mat) {
-    let n = b.cols;
-    for kk in 0..a.rows {
-        let a_row = a.row(kk);
-        let b_row = b.row(kk);
-        for (i, &aki) in a_row.iter().enumerate() {
-            if aki == 0.0 {
-                continue;
-            }
-            let acc_row = &mut acc.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                acc_row[j] += aki * b_row[j];
-            }
-        }
+/// Borrow `x` when it already has `target` rows; otherwise zero-pad into
+/// `store` and borrow that (the one unavoidable copy for ragged shapes).
+fn pad_rows_into<'a>(x: &'a Mat, target: usize, store: &'a mut Option<Mat>) -> &'a Mat {
+    if x.rows == target {
+        x
+    } else {
+        &*store.insert(pad_rows(x, target))
     }
 }
 
@@ -586,5 +693,46 @@ mod tests {
         }
         mesh.set_sigma_flat(&sig);
         assert_close(&mesh.sigma_flat(), &sig, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn hot_paths_identical_across_thread_counts() {
+        // The work partition is by output region, so the serial pool and a
+        // wide pool must produce bit-identical results.
+        let mut rng = Rng::new(9);
+        // Large enough that the sized gate takes the pooled path on `wide`.
+        let w = Mat::randn(40, 27, 0.5, &mut rng);
+        let mesh0 = {
+            let mut m = PtcMesh::new(40, 27, 4, NoiseModel::PAPER, &mut rng);
+            m.program_from_dense(&w);
+            m
+        };
+        let x = Mat::randn(27, 24, 1.0, &mut rng);
+        let dy = Mat::randn(40, 24, 1.0, &mut rng);
+        let serial = ThreadPool::new(1);
+        let wide = ThreadPool::new(4);
+        let mut m1 = mesh0.clone();
+        let mut m2 = mesh0;
+        assert_close(
+            &m1.forward_masked_on(&serial, &x, None, 1.0).data,
+            &m2.forward_masked_on(&wide, &x, None, 1.0).data,
+            0.0,
+            0.0,
+        )
+        .unwrap();
+        assert_close(
+            &m1.sigma_grad_on(&serial, &x, &dy, None, 1.0),
+            &m2.sigma_grad_on(&wide, &x, &dy, None, 1.0),
+            0.0,
+            0.0,
+        )
+        .unwrap();
+        assert_close(
+            &m1.feedback_on(&serial, &dy, None, 1.0).data,
+            &m2.feedback_on(&wide, &dy, None, 1.0).data,
+            0.0,
+            0.0,
+        )
+        .unwrap();
     }
 }

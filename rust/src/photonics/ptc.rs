@@ -137,27 +137,37 @@ impl Ptc {
         self.v_real.as_ref().unwrap()
     }
 
-    /// Realize both unitaries and return them together (hot-path helper:
-    /// one `&mut` call yielding both borrows for Eq. 5).
-    pub fn realized_uv(&mut self) -> (&Mat, &Mat) {
+    /// Realize both unitaries if needed (the batch-realization entry point —
+    /// `PtcMesh` fans this out across the pool, one task per block).
+    pub fn ensure_realized(&mut self) {
         if self.u_real.is_none() {
             self.realized_u();
         }
         if self.v_real.is_none() {
             self.realized_v();
         }
+    }
+
+    /// Realize both unitaries and return them together (hot-path helper:
+    /// one `&mut` call yielding both borrows for Eq. 5).
+    pub fn realized_uv(&mut self) -> (&Mat, &Mat) {
+        self.ensure_realized();
         (self.u_real.as_ref().unwrap(), self.v_real.as_ref().unwrap())
     }
 
     /// Realized full transfer W̃ = U · diag(Σ) · V*.
     pub fn realized_matrix(&mut self) -> Mat {
-        let sigma = self.sigma.clone();
-        let v = self.realized_v().clone();
-        let u = self.realized_u();
-        let mut sv = v;
-        for (r, &s) in sigma.iter().enumerate() {
-            for x in sv.row_mut(r) {
-                *x *= s;
+        self.ensure_realized();
+        let u = self.u_real.as_ref().unwrap();
+        let v = self.v_real.as_ref().unwrap();
+        // Σ·V* scaled row-by-row without cloning V* (§Perf: this runs once
+        // per block per cache refill, inside the pooled batch realization).
+        let mut sv = Mat::zeros(self.k, self.k);
+        for (r, &s) in self.sigma.iter().enumerate() {
+            let src = v.row(r);
+            let dst = sv.row_mut(r);
+            for (d, &x) in dst.iter_mut().zip(src) {
+                *d = s * x;
             }
         }
         matmul(u, &sv)

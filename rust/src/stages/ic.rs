@@ -10,11 +10,15 @@
 //! (observable on chip by sweeping Σ and reading the end-to-end transfer,
 //! Eq. 2). We optimize the programmed phases of both meshes jointly with a
 //! zeroth-order optimizer; each `eval` is one hardware query. Blocks are
-//! independent → embarrassingly parallel across PTCs (`std::thread`).
+//! independent → embarrassingly parallel across PTCs, fanned out over the
+//! shared compute pool (`util::pool` — one threading story with the mesh
+//! hot paths). Each block forks its own RNG stream, so results are
+//! independent of thread count.
 
 use crate::photonics::ptc::{Ptc, Which};
 use crate::photonics::unitary::num_phases;
 use crate::photonics::PtcMesh;
+use crate::util::pool;
 use crate::util::{mean, Rng};
 use crate::zoo::{ZoConfig, ZoKind, ZoProblem, ZoReport};
 
@@ -24,7 +28,9 @@ pub struct IcConfig {
     pub optimizer: ZoKind,
     pub zo: ZoConfig,
     pub seed: u64,
-    /// Worker threads for the per-block parallel sweep (1 = sequential).
+    /// Upper bound on concurrently-calibrated blocks: `<= 1` forces the
+    /// sequential sweep; larger values fan out over the shared pool (width
+    /// set by `L2IGHT_THREADS`) as at most this many tasks.
     pub threads: usize,
 }
 
@@ -137,39 +143,17 @@ pub fn calibrate_ptc(ptc: &mut Ptc, cfg: &IcConfig, rng: &mut Rng) -> (ZoReport,
 
 /// Calibrate all blocks of a mesh in parallel. Returns the aggregate report.
 pub fn calibrate_mesh(mesh: &mut PtcMesh, cfg: &IcConfig) -> IcReport {
-    let blocks = mesh.ptcs.len();
-    let threads = cfg.threads.clamp(1, blocks.max(1));
-    let mut results: Vec<Option<(ZoReport, (f64, f64))>> = vec![None; blocks];
-    if threads <= 1 || blocks <= 1 {
-        for (bi, ptc) in mesh.ptcs.iter_mut().enumerate() {
+    // Fan the blocks out over the shared pool, capped at `cfg.threads`
+    // lanes. Each block forks its own RNG stream, so the result is
+    // independent of thread count.
+    let results: Vec<(ZoReport, (f64, f64))> =
+        pool::global().parallel_map_chunked(&mut mesh.ptcs, cfg.threads, |bi, ptc| {
             let mut rng = Rng::with_stream(cfg.seed, bi as u64);
-            results[bi] = Some(calibrate_ptc(ptc, cfg, &mut rng));
-        }
-    } else {
-        // Chunk the PTC array across a thread scope; each block forks its
-        // own RNG stream so the result is independent of thread count.
-        let chunk = blocks.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (ci, (ptcs, res)) in mesh
-                .ptcs
-                .chunks_mut(chunk)
-                .zip(results.chunks_mut(chunk))
-                .enumerate()
-            {
-                let cfg = *cfg;
-                s.spawn(move || {
-                    for (i, (ptc, slot)) in ptcs.iter_mut().zip(res.iter_mut()).enumerate() {
-                        let bi = ci * chunk + i;
-                        let mut rng = Rng::with_stream(cfg.seed, bi as u64);
-                        *slot = Some(calibrate_ptc(ptc, &cfg, &mut rng));
-                    }
-                });
-            }
+            calibrate_ptc(ptc, cfg, &mut rng)
         });
-    }
     mesh.invalidate();
     let mut agg = IcReport::default();
-    for r in results.into_iter().flatten() {
+    for r in &results {
         agg.absorb(&r.0, r.1);
     }
     agg.finalize();

@@ -14,7 +14,7 @@
 //!    flips, and nearly free (3 extra PTC passes).
 //!
 //! Mapping involves no stochasticity and is local per PTC → parallel across
-//! blocks, like IC.
+//! blocks, like IC (both fan out over the shared `util::pool`).
 
 use crate::linalg::Mat;
 use crate::nn::{Model, ProjEngine};
@@ -23,6 +23,7 @@ use crate::photonics::unitary::num_phases;
 use crate::photonics::PtcMesh;
 #[cfg(test)]
 use crate::photonics::NoiseModel;
+use crate::util::pool;
 use crate::util::Rng;
 use crate::zoo::{ZoConfig, ZoKind, ZoProblem, ZoReport};
 
@@ -37,6 +38,9 @@ pub struct PmConfig {
     /// Run the final optimal singular-value projection.
     pub osp: bool,
     pub seed: u64,
+    /// Upper bound on concurrently-mapped blocks: `<= 1` forces the
+    /// sequential sweep; larger values fan out over the shared pool (width
+    /// set by `L2IGHT_THREADS`) as at most this many tasks.
     pub threads: usize,
 }
 
@@ -148,35 +152,18 @@ pub fn map_mesh(mesh: &mut PtcMesh, target: &Mat, cfg: &PmConfig) -> PmReport {
         (0..p * q).map(|i| padded.block((i / q) * k, (i % q) * k, k)).collect();
 
     let blocks = mesh.ptcs.len();
-    let threads = cfg.threads.clamp(1, blocks.max(1));
-    let mut results: Vec<Option<(Vec<f64>, u64)>> = vec![None; blocks];
-    if threads <= 1 || blocks <= 1 {
-        for (bi, ptc) in mesh.ptcs.iter_mut().enumerate() {
+    // Per-block fan-out over the shared pool, capped at `cfg.threads`
+    // lanes; per-block RNG streams keep the result independent of thread
+    // count.
+    let results: Vec<(Vec<f64>, u64)> =
+        pool::global().parallel_map_chunked(&mut mesh.ptcs, cfg.threads, |bi, ptc| {
             let mut rng = Rng::with_stream(cfg.seed, bi as u64);
-            results[bi] = Some(map_ptc(ptc, &targets[bi], cfg, &mut rng));
-        }
-    } else {
-        let chunk = blocks.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (ci, (ptcs, res)) in
-                mesh.ptcs.chunks_mut(chunk).zip(results.chunks_mut(chunk)).enumerate()
-            {
-                let cfg = *cfg;
-                let targets = &targets;
-                s.spawn(move || {
-                    for (i, (ptc, slot)) in ptcs.iter_mut().zip(res.iter_mut()).enumerate() {
-                        let bi = ci * chunk + i;
-                        let mut rng = Rng::with_stream(cfg.seed, bi as u64);
-                        *slot = Some(map_ptc(ptc, &targets[bi], &cfg, &mut rng));
-                    }
-                });
-            }
+            map_ptc(ptc, &targets[bi], cfg, &mut rng)
         });
-    }
     mesh.invalidate();
 
     let mut report = PmReport { err_init, blocks, ..Default::default() };
-    for r in results.into_iter().flatten() {
+    for r in &results {
         if report.trace.len() < r.0.len() {
             report.trace.resize(r.0.len(), 0.0);
         }

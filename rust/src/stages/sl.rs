@@ -14,6 +14,11 @@
 //!
 //! The same loop trains digital models (pretraining, RAD/SWAT-U baselines) —
 //! the engines decide whether gradients are full-space or subspace.
+//!
+//! Threading: the loop itself stays sequential (SGD is a serial recurrence);
+//! all parallelism lives below it, in the engines' mesh/GEMM hot paths on
+//! the shared `util::pool` (sized by `L2IGHT_THREADS`). Results are
+//! therefore independent of thread count.
 
 use crate::data::{Augment, Dataset, Loader};
 use crate::nn::{softmax_cross_entropy, Act, BackwardCtx, Model};

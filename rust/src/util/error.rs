@@ -1,0 +1,146 @@
+//! Std-only error type with context chaining — an in-repo stand-in for the
+//! `anyhow` surface the runtime/coordinator modules use (`anyhow!`, `bail!`,
+//! `Context::{context, with_context}`, `Result`). The vendored crate set has
+//! no anyhow, and tier-1 must build from a clean checkout with zero external
+//! dependencies.
+//!
+//! Formatting mirrors anyhow: `{}` prints the outermost message, `{:#}`
+//! prints the full chain outermost-first separated by `": "`.
+
+use std::fmt;
+
+/// A message-chain error. Frames are stored root-first; `context` pushes an
+/// outer frame.
+#[derive(Debug, Clone)]
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// New error from a message.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { frames: vec![m.into()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(mut self, c: impl Into<String>) -> Error {
+        self.frames.push(c.into());
+        self
+    }
+
+    /// The root-cause message.
+    pub fn root_cause(&self) -> &str {
+        &self.frames[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: outermost-first chain, anyhow-style.
+            for (i, frame) in self.frames.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{frame}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.frames.last().unwrap())
+        }
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (anyhow-compatible shape).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible value (anyhow's `Context` trait surface).
+pub trait Context<T> {
+    fn context<C: Into<String>>(self, c: C) -> Result<T>;
+    fn with_context<C: Into<String>, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Into<String>>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: Into<String>, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Into<String>>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: Into<String>, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`] from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+// Allow `use crate::util::error::{anyhow, bail}` alongside the type imports.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "root 42");
+        assert_eq!(format!("{e:#}"), "root 42");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn with_context_from_std_error() {
+        let r: std::result::Result<String, std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.with_context(|| "reading config".to_string()).unwrap_err();
+        assert!(format!("{e:#}").starts_with("reading config: "));
+        assert!(format!("{e:#}").contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+}

@@ -1,15 +1,20 @@
 //! Cross-cutting substrates built from scratch for the offline environment:
 //! a deterministic PRNG, a minimal JSON parser/emitter, a CLI argument
-//! parser, a criterion-free benchmark harness, and a seeded property-testing
-//! helper. See DESIGN.md §2 (the vendored crate set has no
-//! rand/serde/clap/criterion/proptest, so these are in-repo).
+//! parser, a criterion-free benchmark harness, a seeded property-testing
+//! helper, the shared compute thread pool (`pool`, sized by
+//! `L2IGHT_THREADS`), and a std-only error/context type (`error`). See
+//! DESIGN.md §2 (the vendored crate set has no
+//! rand/serde/clap/criterion/proptest/anyhow/rayon, so these are in-repo).
 
 pub mod rng;
 pub mod json;
 pub mod cli;
 pub mod bench;
 pub mod prop;
+pub mod pool;
+pub mod error;
 
+pub use pool::ThreadPool;
 pub use rng::Rng;
 
 /// Simple stderr logger with runtime level control.

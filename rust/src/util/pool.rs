@@ -1,0 +1,492 @@
+//! Shared scoped thread pool — the one threading story for every parallel
+//! hot path in the crate (mesh forward/feedback/σ-gradient, batch PTC
+//! realization, GEMM row-banding, and the per-block ZO sweeps of IC/PM).
+//!
+//! Design (std-only, no rayon):
+//!
+//! * A fixed set of persistent workers is spawned once; parallel regions
+//!   inject one job at a time (a chunk-indexed closure) and the submitting
+//!   thread participates in draining it, so `threads == 1` never parks.
+//! * Work distribution is an atomic claim counter over chunk indices —
+//!   self-balancing without per-chunk channels or allocation.
+//! * Job lifetime is tied to the submitting call: `parallel_for` does not
+//!   return until every chunk has executed, which is what makes handing the
+//!   workers a non-`'static` closure sound (the `Arc<Job>` keeps the
+//!   bookkeeping alive for late-waking workers, and a late waker can never
+//!   claim a chunk of a finished job because the claim counter is already
+//!   exhausted).
+//! * Nested parallel regions run inline on the calling thread (a
+//!   thread-local re-entrancy flag), so `matmul` inside a parallel mesh
+//!   strip degrades to the serial kernel instead of deadlocking.
+//!
+//! Pool size: `L2IGHT_THREADS` env var if set (≥1), else
+//! `std::thread::available_parallelism()`. `threads == 1` (or tiny work —
+//! see [`ThreadPool::parallel_for_sized`]) bypasses the pool entirely, which
+//! is why serial results are bit-identical to the parallel ones: every
+//! chunk computes the same values in the same order regardless of which
+//! thread claims it.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Below this many "flop-equivalents" of total work, `parallel_for_sized`
+/// runs inline — waking the pool costs more than it saves.
+pub const PAR_MIN_WORK: usize = 32_768;
+
+thread_local! {
+    /// True while this thread is a pool worker or is inside a parallel
+    /// region it submitted — nested regions then run inline.
+    static IN_PARALLEL: Cell<bool> = Cell::new(false);
+}
+
+/// Type-erased pointer to the job closure. Only dereferenced while the
+/// submitting stack frame is alive (see module docs).
+#[derive(Clone, Copy)]
+struct FnPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for FnPtr {}
+unsafe impl Sync for FnPtr {}
+
+/// One parallel region's bookkeeping, shared between submitter and workers.
+struct Job {
+    func: FnPtr,
+    chunks: usize,
+    /// Next chunk index to claim.
+    next: AtomicUsize,
+    /// Chunks claimed-and-finished accounting: counts down to 0.
+    pending: AtomicUsize,
+    /// Set when any chunk panicked (the panic is re-raised by the submitter).
+    panicked: AtomicBool,
+}
+
+struct PoolState {
+    job: Option<Arc<Job>>,
+    /// Bumped once per submitted job so workers can tell new work from
+    /// spurious wakeups.
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for new jobs.
+    work_cv: Condvar,
+    /// Submitters wait here for job completion (and for the slot to free).
+    done_cv: Condvar,
+}
+
+/// A fixed-size thread pool running one chunk-indexed job at a time.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total lanes of parallelism (the submitting thread
+    /// counts as one, so this spawns `threads - 1` workers).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { job: None, epoch: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for i in 0..threads - 1 {
+            let sh = shared.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("l2ight-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        ThreadPool { shared, threads, handles }
+    }
+
+    /// Total lanes of parallelism (including the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..n)` across the pool. Blocks until every index has executed.
+    /// Indices are claimed dynamically, one at a time; each index runs
+    /// exactly once. Panics (after completing the region) if any task
+    /// panicked.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let serial = self.threads <= 1 || n == 1 || IN_PARALLEL.with(|c| c.get());
+        if serial {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let obj: &(dyn Fn(usize) + Sync) = &f;
+        let job = Arc::new(Job {
+            func: FnPtr(obj as *const (dyn Fn(usize) + Sync)),
+            chunks: n,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // One job at a time: wait for the slot (another user thread may
+            // be mid-region; pool workers never reach here).
+            while st.job.is_some() {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = Some(job.clone());
+            st.epoch += 1;
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter drains chunks too, flagged so nested regions inline.
+        IN_PARALLEL.with(|c| c.set(true));
+        work_on(&self.shared, &job);
+        IN_PARALLEL.with(|c| c.set(false));
+        let mut st = self.shared.state.lock().unwrap();
+        while job.pending.load(Ordering::Acquire) != 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        // Wake any queued submitter waiting for the slot.
+        self.shared.done_cv.notify_all();
+        drop(st);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("l2ight thread pool: a parallel task panicked");
+        }
+    }
+
+    /// `parallel_for` with a work-size gate: if the region's total work
+    /// (in rough flop-equivalents) is below [`PAR_MIN_WORK`], run inline —
+    /// tiny meshes should not pay pool wakeup latency.
+    pub fn parallel_for_sized<F: Fn(usize) + Sync>(&self, n: usize, total_work: usize, f: F) {
+        if total_work < PAR_MIN_WORK || self.threads <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+        } else {
+            self.parallel_for(n, f);
+        }
+    }
+
+    /// Map `f` over `0..n` in parallel, preserving index order in the output.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let slots = SendPtr(out.as_mut_ptr());
+        self.parallel_for(n, |i| {
+            // Safety: each index writes exactly one distinct slot, and the
+            // Vec outlives the region (parallel_for blocks to completion).
+            let slot = unsafe { &mut *slots.0.add(i) };
+            *slot = Some(f(i));
+        });
+        out.into_iter().map(|o| o.expect("parallel_map slot unfilled")).collect()
+    }
+
+    /// Map `f(index, &mut item)` over a mutable slice with at most
+    /// `max_lanes` concurrent tasks, preserving index order in the output.
+    /// Each lane owns a disjoint contiguous chunk, so `max_lanes` is an
+    /// honest upper bound on concurrency even when the pool is wider —
+    /// the per-block fan-out used by the IC/PM stages. `max_lanes <= 1`
+    /// runs inline.
+    pub fn parallel_map_chunked<T, R, F>(&self, items: &mut [T], max_lanes: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let lanes = max_lanes.clamp(1, n);
+        if lanes == 1 {
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let chunk = n.div_ceil(lanes);
+        let base = SendPtr(items.as_mut_ptr());
+        self.parallel_map(n.div_ceil(chunk), |t| {
+            let lo = t * chunk;
+            let hi = (lo + chunk).min(n);
+            let mut out = Vec::with_capacity(hi - lo);
+            for i in lo..hi {
+                // Safety: lanes own disjoint contiguous index ranges.
+                let item = unsafe { &mut *base.0.add(i) };
+                out.push(f(i, item));
+            }
+            out
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_PARALLEL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(j) = st.job.clone() {
+                        break j;
+                    }
+                    // Epoch moved but the job is already cleared — re-wait.
+                    continue;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        work_on(shared, &job);
+    }
+}
+
+/// Claim and execute chunks until the counter is exhausted.
+fn work_on(shared: &Shared, job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.chunks {
+            return;
+        }
+        let f = unsafe { &*job.func.0 };
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+        if r.is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        // Release pairs with the submitter's Acquire load: all writes made
+        // by this chunk are visible once pending reads 0.
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _guard = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// The process-wide pool used by the hot paths. Sized once, on first use.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// Pool size policy: `L2IGHT_THREADS` or `available_parallelism`.
+/// `L2IGHT_THREADS=0` is honored as "fully serial" (same as 1); a value
+/// that doesn't parse is loudly ignored rather than silently widening the
+/// pool to the whole machine.
+pub fn default_threads() -> usize {
+    if let Ok(raw) = std::env::var("L2IGHT_THREADS") {
+        match raw.trim().parse::<usize>() {
+            Ok(0) => return 1,
+            Ok(n) => return n,
+            Err(_) => {
+                crate::warn!("ignoring invalid L2IGHT_THREADS={raw:?} (not a number); using available parallelism");
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Raw-pointer courier for handing disjoint mutable regions to pool tasks.
+/// The caller is responsible for index-disjointness; every hot-path use
+/// writes region `i` from task `i` only. The `T: Send` bound keeps the
+/// compiler's thread-safety check: workers materialize disjoint `&mut T`
+/// from this, which is exactly a send of `T` to another thread.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+// ---------------------------------------------------------------------------
+// Per-thread scratch arena
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Small stack of reusable f32 buffers per thread (the "scratch arena").
+    static SCRATCH: RefCell<Vec<Vec<f32>>> = RefCell::new(Vec::new());
+}
+
+/// A zeroed f32 scratch buffer borrowed from the per-thread arena; returned
+/// on drop. Eliminates the per-call panel/workspace allocations in the mesh
+/// hot paths (`Vec<Mat>` slicing) without threading buffers through APIs.
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+impl Scratch {
+    /// Take a zero-filled buffer of exactly `len` floats.
+    pub fn take(len: usize) -> Scratch {
+        let mut buf = SCRATCH
+            .try_with(|s| s.borrow_mut().pop())
+            .ok()
+            .flatten()
+            .unwrap_or_default();
+        buf.clear();
+        buf.resize(len, 0.0);
+        Scratch { buf }
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        // Cap the arena so pathological sizes don't pin memory forever.
+        let _ = SCRATCH.try_with(|s| {
+            let mut v = s.borrow_mut();
+            if v.len() < 8 {
+                v.push(buf);
+            }
+        });
+    }
+}
+
+impl std::ops::Deref for Scratch {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl std::ops::DerefMut for Scratch {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let pool = ThreadPool::new(8);
+        let out = pool.parallel_map(3, |i| i * 10);
+        assert_eq!(out, vec![0, 10, 20]);
+    }
+
+    #[test]
+    fn empty_work_list_is_noop() {
+        let pool = ThreadPool::new(4);
+        pool.parallel_for(0, |_| panic!("must not run"));
+        let out: Vec<usize> = pool.parallel_map(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.parallel_map(1000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn nested_regions_run_inline() {
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        pool.parallel_for(8, |_| {
+            // Nested call must not deadlock on the single job slot.
+            pool.parallel_for(8, |j| {
+                total.fetch_add(j as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 28);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_workers() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for(17, |i| {
+                sum.fetch_add((i + round) as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), (136 + 17 * round) as u64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "a parallel task panicked")]
+    fn task_panic_propagates() {
+        let pool = ThreadPool::new(4);
+        pool.parallel_for(8, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn sized_gate_runs_small_work_inline() {
+        let pool = ThreadPool::new(4);
+        let sum = AtomicU64::new(0);
+        pool.parallel_for_sized(4, 16, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn scratch_is_zeroed_and_reused() {
+        {
+            let mut s = Scratch::take(64);
+            assert!(s.iter().all(|&v| v == 0.0));
+            s[0] = 5.0;
+        }
+        let s2 = Scratch::take(32);
+        assert_eq!(s2.len(), 32);
+        assert!(s2.iter().all(|&v| v == 0.0), "recycled scratch must be re-zeroed");
+    }
+
+    #[test]
+    fn default_threads_is_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

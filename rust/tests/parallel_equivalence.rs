@@ -1,0 +1,195 @@
+//! Parallel-engine equivalence: the pooled hot paths must be numerically
+//! indistinguishable from the serial engine — `threads=N` vs `threads=1`
+//! bit-identical (work is partitioned by output region, never by summation
+//! order), and both within 1e-6-grade tolerance of straightforward dense
+//! reference formulas. Plus pool edge cases at the integration level.
+
+use l2ight::linalg::{matmul, matmul_at_b, Mat};
+use l2ight::photonics::mesh::{crop_rows, pad_rows, slice_rows};
+use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::sampling::{FeedbackSampler, FeedbackStrategy, Normalization};
+use l2ight::util::pool::ThreadPool;
+use l2ight::util::prop::{assert_close, quickcheck};
+use l2ight::util::Rng;
+
+/// Straight-line reference for the Eq. 5 subspace gradient, built from the
+/// mesh's realized unitaries and plain `Mat` products.
+fn sigma_grad_reference(mesh: &mut PtcMesh, x: &Mat, dy: &Mat, scale: f32) -> Vec<f32> {
+    let (k, p, q) = (mesh.k, mesh.p, mesh.q);
+    let xp = pad_rows(x, q * k);
+    let dyp = pad_rows(dy, p * k);
+    let b = x.cols;
+    let mut grad = vec![0.0f32; p * q * k];
+    for pi in 0..p {
+        for qi in 0..q {
+            let dyb = slice_rows(&dyp, pi * k, k);
+            let xb = slice_rows(&xp, qi * k, k);
+            let ptc = &mut mesh.ptcs[pi * q + qi];
+            let (u, v) = ptc.realized_uv();
+            let uty = matmul_at_b(u, &dyb);
+            let vx = matmul(v, &xb);
+            for i in 0..k {
+                let s: f32 = (0..b).map(|c| uty[(i, c)] * vx[(i, c)]).sum();
+                grad[(pi * q + qi) * k + i] = s * scale;
+            }
+        }
+    }
+    grad
+}
+
+fn random_mesh(rng: &mut Rng, size: usize) -> (PtcMesh, Mat, Mat) {
+    let k = 2 + size % 5;
+    let rows = k + 1 + size % 37;
+    let cols = k + 1 + (size / 2) % 29;
+    let b = 1 + size % 21;
+    let w = Mat::randn(rows, cols, 0.5, rng);
+    let mut mesh = PtcMesh::new(rows, cols, k, NoiseModel::PAPER, rng);
+    mesh.program_from_dense(&w);
+    let x = Mat::randn(cols, b, 1.0, rng);
+    let dy = Mat::randn(rows, b, 1.0, rng);
+    (mesh, x, dy)
+}
+
+#[test]
+fn prop_forward_is_thread_count_invariant_and_matches_dense() {
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(5);
+    quickcheck(
+        "forward: threads=1 == threads=N == dense",
+        |rng: &mut Rng, size: usize| random_mesh(rng, size),
+        |case| {
+            let (mesh, x, _) = case;
+            let mut m1 = mesh.clone();
+            let mut m2 = mesh.clone();
+            let y1 = m1.forward_masked_on(&serial, x, None, 1.0);
+            let y2 = m2.forward_masked_on(&wide, x, None, 1.0);
+            assert_close(&y1.data, &y2.data, 0.0, 0.0)
+                .map_err(|e| format!("threads=1 vs threads=N: {e}"))?;
+            let dense = matmul(&m1.to_dense(), x);
+            assert_close(&y1.data, &dense.data, 1e-4, 1e-4)
+                .map_err(|e| format!("vs dense: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_sigma_grad_is_thread_count_invariant_and_matches_reference() {
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(5);
+    quickcheck(
+        "sigma_grad: threads=1 == threads=N == reference",
+        |rng: &mut Rng, size: usize| random_mesh(rng, size),
+        |case| {
+            let (mesh, x, dy) = case;
+            let mut m1 = mesh.clone();
+            let mut m2 = mesh.clone();
+            let g1 = m1.sigma_grad_on(&serial, x, dy, None, 1.5);
+            let g2 = m2.sigma_grad_on(&wide, x, dy, None, 1.5);
+            assert_close(&g1, &g2, 0.0, 0.0)
+                .map_err(|e| format!("threads=1 vs threads=N: {e}"))?;
+            let mut m3 = mesh.clone();
+            let gref = sigma_grad_reference(&mut m3, x, dy, 1.5);
+            assert_close(&g1, &gref, 1e-5, 1e-5).map_err(|e| format!("vs reference: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_feedback_is_thread_count_invariant_and_matches_wt_dy() {
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(5);
+    quickcheck(
+        "feedback: threads=1 == threads=N == Wᵀ·dy",
+        |rng: &mut Rng, size: usize| random_mesh(rng, size),
+        |case| {
+            let (mesh, _, dy) = case;
+            let mut m1 = mesh.clone();
+            let mut m2 = mesh.clone();
+            let dx1 = m1.feedback_on(&serial, dy, None, 1.0);
+            let dx2 = m2.feedback_on(&wide, dy, None, 1.0);
+            assert_close(&dx1.data, &dx2.data, 0.0, 0.0)
+                .map_err(|e| format!("threads=1 vs threads=N: {e}"))?;
+            // Reference: pad dy to the block grid, multiply by the padded
+            // realized weight transposed, crop to the true input width.
+            let (k, p, q) = (m1.k, m1.p, m1.q);
+            let dense = m1.to_dense();
+            let wp = {
+                let mut w = Mat::zeros(p * k, q * k);
+                w.set_block(0, 0, &dense);
+                w
+            };
+            let expect = crop_rows(&matmul(&wp.t(), &pad_rows(dy, p * k)), m1.cols);
+            assert_close(&dx1.data, &expect.data, 1e-4, 1e-4)
+                .map_err(|e| format!("vs dense Wᵀdy: {e}"))
+        },
+    );
+}
+
+#[test]
+fn prop_masked_feedback_and_forward_thread_invariant() {
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(3);
+    quickcheck(
+        "masked paths: threads=1 == threads=N",
+        |rng: &mut Rng, size: usize| {
+            let (mesh, x, dy) = random_mesh(rng, size);
+            let sampler = FeedbackSampler::new(FeedbackStrategy::BTopK, 0.5, Normalization::Exp);
+            let mask = sampler.draw(mesh.p, mesh.q, &mesh.block_norms_sq(), rng);
+            let fwd_mask: Vec<bool> = (0..mesh.p * mesh.q).map(|i| i % 3 != 0).collect();
+            (mesh, x, dy, mask.keep, mask.scale, fwd_mask)
+        },
+        |case| {
+            let (mesh, x, dy, keep, scale, fwd_mask) = case;
+            let mut m1 = mesh.clone();
+            let mut m2 = mesh.clone();
+            let dx1 = m1.feedback_on(&serial, dy, Some(keep), *scale);
+            let dx2 = m2.feedback_on(&wide, dy, Some(keep), *scale);
+            assert_close(&dx1.data, &dx2.data, 0.0, 0.0)
+                .map_err(|e| format!("masked feedback: {e}"))?;
+            let y1 = m1.forward_masked_on(&serial, x, Some(fwd_mask), 2.0);
+            let y2 = m2.forward_masked_on(&wide, x, Some(fwd_mask), 2.0);
+            assert_close(&y1.data, &y2.data, 0.0, 0.0)
+                .map_err(|e| format!("masked forward: {e}"))?;
+            // Stats (the Appendix-G counters) must also be thread-invariant.
+            if m1.stats != m2.stats {
+                return Err(format!("stats diverged: {:?} vs {:?}", m1.stats, m2.stats));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn column_sampled_sigma_grad_thread_invariant() {
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(4);
+    let mut rng = Rng::new(0xc01);
+    let (mesh, x, dy) = random_mesh(&mut rng, 60);
+    let col_keep: Vec<bool> = (0..x.cols).map(|c| c % 2 == 0).collect();
+    let mut m1 = mesh.clone();
+    let mut m2 = mesh;
+    let g1 = m1.sigma_grad_on(&serial, &x, &dy, Some(&col_keep), 2.0);
+    let g2 = m2.sigma_grad_on(&wide, &x, &dy, Some(&col_keep), 2.0);
+    assert_close(&g1, &g2, 0.0, 0.0).unwrap();
+}
+
+#[test]
+fn pool_edge_cases_through_mesh() {
+    // 1 thread, more threads than blocks, and an empty-batch forward all
+    // behave; a 1-block mesh exercises the degenerate grid.
+    let one = ThreadPool::new(1);
+    let many = ThreadPool::new(16);
+    let mut rng = Rng::new(0xedce);
+    let w = Mat::randn(4, 4, 0.5, &mut rng);
+    let mut mesh = PtcMesh::new(4, 4, 4, NoiseModel::IDEAL, &mut rng);
+    mesh.program_from_dense(&w);
+    let x = Mat::randn(4, 3, 1.0, &mut rng);
+    let y_one = mesh.clone().forward_masked_on(&one, &x, None, 1.0);
+    let y_many = mesh.clone().forward_masked_on(&many, &x, None, 1.0);
+    assert_close(&y_one.data, &y_many.data, 0.0, 0.0).unwrap();
+    // Empty feedback mask ⇒ empty pooled work list per strip.
+    let dy = Mat::randn(4, 3, 1.0, &mut rng);
+    let mask = vec![false; 1];
+    let dx = mesh.feedback_on(&many, &dy, Some(&mask), 1.0);
+    assert_eq!(dx.fro_norm(), 0.0);
+}
