@@ -6,6 +6,14 @@
 //! subspace learning. Baseline protocols reuse the same substrate with
 //! their own update rules / samplers, so every row of Fig. 10/11/Table 2
 //! is produced by the same code path with one enum flipped.
+//!
+//! `run_job` is re-entrant: every piece of randomness derives from
+//! `cfg.seed` (no process-global state, one `MetricSink` per call), so the
+//! scenario-matrix engine (`crate::scenarios`) can fan jobs out across the
+//! shared thread pool and still get results that are independent of
+//! execution order and thread count. Batches of jobs should seed each row
+//! with [`job_seed`] — a pure mix of (base seed, row index) — never by
+//! drawing row seeds from a shared sequential `Rng`.
 
 use crate::baselines;
 use crate::coordinator::config::{JobConfig, Protocol};
@@ -19,6 +27,20 @@ use crate::stages::sl::{train, OptKind, SlConfig, SlReport};
 use crate::util::json::Json;
 use crate::util::Rng;
 use crate::zoo::ZoConfig;
+
+/// Derive the seed for job `index` of a batch (scenario-matrix row, bench
+/// repetition, …) from one base seed. A pure SplitMix64 mix rather than a
+/// shared sequential `Rng`, so a row's seed — and therefore its result —
+/// depends only on `(base, index)`, never on which other rows ran or in
+/// what order.
+pub fn job_seed(base: u64, index: u64) -> u64 {
+    let mut z = base
+        .wrapping_add(0x9e3779b97f4a7c15)
+        .wrapping_add(index.wrapping_mul(0xbf58476d1ce4e5b9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
 
 /// Outcome of one job.
 #[derive(Clone, Debug)]
@@ -43,6 +65,9 @@ pub struct JobSummary {
     pub zo_queries: u64,
     /// Per-epoch record of the (final) training phase.
     pub sl: Option<SlReport>,
+    /// Wall time per executed stage, in run order (`("ic", secs)`, …).
+    /// Diagnostic only — excluded from golden-metric comparisons.
+    pub stage_secs: Vec<(&'static str, f64)>,
 }
 
 /// Build the (train, test) datasets a config asks for.
@@ -105,13 +130,24 @@ fn base_sl(cfg: &JobConfig, mapped: bool) -> SlConfig {
     }
 }
 
+/// Record the wall time of the stage that just finished and restart the
+/// stage clock.
+fn mark_stage(summary: &mut JobSummary, clock: &mut std::time::Instant, stage: &'static str) {
+    summary.stage_secs.push((stage, clock.elapsed().as_secs_f64()));
+    *clock = std::time::Instant::now();
+}
+
 /// Run one experiment end to end, emitting progress into `sink`.
 pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
     let (train_set, test_set) = build_datasets(cfg);
     let classes = classes_of(&train_set);
-    let mut rng = Rng::with_stream(cfg.seed, 0x10b);
+    // All model-build randomness flows from one cfg.seed-derived stream;
+    // stage schedules (IC/PM/SL) and batches use their own seed-xor-tagged
+    // streams (see ic_config/pm_config/base_sl), so a job is a pure
+    // function of its config.
+    let mut model_rng = Rng::with_stream(cfg.seed, 0x10b);
     let kind = EngineKind::Photonic { k: cfg.k, noise: cfg.noise };
-    let mut model = build_model(cfg.arch, kind, classes, cfg.width, &mut rng);
+    let mut model = build_model(cfg.arch, kind, classes, cfg.width, &mut model_rng);
     let (trainable, total) = model.param_counts();
     sink.emit(
         "job_start",
@@ -135,12 +171,17 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
         cost: CostBreakdown::default(),
         zo_queries: 0,
         sl: None,
+        stage_secs: Vec::new(),
     };
+    let mut clock = std::time::Instant::now();
 
     match cfg.protocol {
         Protocol::L2ight => {
             // Stage 0: digital pretraining (the paper's offline model).
-            let mut digital = build_model(cfg.arch, EngineKind::Digital, classes, cfg.width, &mut rng);
+            // The digital twin continues the same build stream; both builds
+            // are fully determined by cfg.seed.
+            let mut digital =
+                build_model(cfg.arch, EngineKind::Digital, classes, cfg.width, &mut model_rng);
             if cfg.pretrain_epochs > 0 {
                 let pre_cfg = SlConfig {
                     epochs: cfg.pretrain_epochs,
@@ -151,6 +192,7 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
                 let pre = train(&mut digital, &train_set, &test_set, &pre_cfg);
                 summary.pretrain_acc = Some(pre.final_test_acc);
                 sink.emit_nums("pretrain_done", &[("acc", pre.final_test_acc as f64)]);
+                mark_stage(&mut summary, &mut clock, "pretrain");
             }
             // Stage 1: identity calibration.
             let ic = calibrate_model(&mut model, &ic_config(cfg));
@@ -160,6 +202,7 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
                 "ic_done",
                 &[("mse", ic.mean_mse()), ("queries", ic.queries as f64)],
             );
+            mark_stage(&mut summary, &mut clock, "ic");
             // Stage 2: parallel mapping + aux transfer.
             let pm = map_model(&mut model, &mut digital, &pm_config(cfg));
             copy_aux_params(&mut model, &mut digital);
@@ -176,6 +219,7 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
                     ("mapped_acc", mapped_acc as f64),
                 ],
             );
+            mark_stage(&mut summary, &mut clock, "pm");
             // Stage 3: sparse subspace learning (fine-tune).
             let sl_cfg = baselines::l2ight_sl_config(
                 cfg.alpha_w,
@@ -189,6 +233,7 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
             summary.best_acc = r.best_test_acc.max(mapped_acc);
             summary.cost = r.cost;
             summary.sl = Some(r);
+            mark_stage(&mut summary, &mut clock, "sl");
         }
         Protocol::L2ightSlScratch | Protocol::Rad | Protocol::SwatU => {
             let base = base_sl(cfg, false);
@@ -213,6 +258,7 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
             summary.best_acc = r.best_test_acc.max(summary.final_acc);
             summary.cost = r.cost;
             summary.sl = Some(r);
+            mark_stage(&mut summary, &mut clock, "sl");
         }
         Protocol::Flops | Protocol::MixedTrn => {
             let zo_cfg = baselines::ZoTrainConfig {
@@ -230,6 +276,7 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
             summary.best_acc = r.best_test_acc;
             summary.cost = r.cost;
             summary.zo_queries = r.queries;
+            mark_stage(&mut summary, &mut clock, "zo");
         }
     }
 
@@ -290,6 +337,21 @@ mod tests {
         assert!(mapped > pre - 0.25, "mapping destroyed the model: {pre} -> {mapped}");
         assert!(sink.last("job_done").is_some());
         assert!(sink.last("ic_done").is_some());
+        let stages: Vec<&str> = s.stage_secs.iter().map(|(n, _)| *n).collect();
+        assert_eq!(stages, vec!["pretrain", "ic", "pm", "sl"]);
+        assert!(s.stage_secs.iter().all(|(_, t)| *t >= 0.0));
+    }
+
+    #[test]
+    fn job_seed_is_pure_and_spreads() {
+        assert_eq!(job_seed(42, 0), job_seed(42, 0));
+        assert_ne!(job_seed(42, 0), job_seed(42, 1));
+        assert_ne!(job_seed(42, 0), job_seed(43, 0));
+        // Index 0 must not degenerate to the base seed itself.
+        assert_ne!(job_seed(42, 0), 42);
+        let seeds: std::collections::BTreeSet<u64> =
+            (0..256u64).map(|i| job_seed(7, i)).collect();
+        assert_eq!(seeds.len(), 256, "collisions in the first 256 rows");
     }
 
     #[test]

@@ -26,6 +26,6 @@ pub mod pjrt_trainer;
 pub use batcher::{Batcher, BatcherConfig, BatcherStats};
 pub use checkpoint::{load_model_state, save_model_state};
 pub use config::{JobConfig, Protocol};
-pub use driver::{run_job, JobSummary};
+pub use driver::{job_seed, run_job, JobSummary};
 pub use metrics::MetricSink;
 pub use pjrt_trainer::PjrtMlpTrainer;

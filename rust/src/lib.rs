@@ -26,6 +26,14 @@
 //! region, so results are bit-identical at every thread count; see
 //! `rust/README.md` § "Performance & threading".
 //!
+//! ## The scenario matrix
+//!
+//! [`scenarios`] turns the paper's breadth claim into a CI artifact: a
+//! declarative matrix of arch × dataset × noise × sparsity × protocol rows
+//! runs in parallel over the same pool, emits `SCENARIOS_matrix.json`, and
+//! is diffed against golden fixtures with per-metric tolerances
+//! (`l2ight matrix --tier quick`).
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
 pub mod util;
@@ -41,3 +49,4 @@ pub mod profiler;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;
+pub mod scenarios;

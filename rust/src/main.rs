@@ -1,12 +1,14 @@
 //! `l2ight` — leader entrypoint / CLI for the on-chip-learning coordinator.
 //!
 //! Subcommands:
-//!   run        run an experiment from flags or a JSON config
-//!   calibrate  identity-calibrate a mesh and report MSE
-//!   map        parallel-map a random target matrix and report fidelity
-//!   infer      batched-inference smoke over the PJRT artifacts
-//!   artifacts  list the AOT artifacts the runtime can see
-//!   info       print build + environment info
+//!   run          run an experiment from flags or a JSON config
+//!   matrix       run the scenario matrix and gate against golden metrics
+//!   matrix-diff  compare two scenario-matrix reports
+//!   calibrate    identity-calibrate a mesh and report MSE
+//!   map          parallel-map a random target matrix and report fidelity
+//!   infer        batched-inference smoke over the PJRT artifacts
+//!   artifacts    list the AOT artifacts the runtime can see
+//!   info         print build + environment info
 
 use std::path::{Path, PathBuf};
 
@@ -16,6 +18,10 @@ use l2ight::linalg::Mat;
 use l2ight::nn::ModelArch;
 use l2ight::photonics::{NoiseModel, PtcMesh};
 use l2ight::runtime::{default_artifact_dir, Runtime};
+use l2ight::scenarios::{
+    diff_reports, expand, golden, report_json, run_matrix, write_report, GoldenOutcome,
+    MatrixSpec, Tier, Tolerances,
+};
 use l2ight::stages::ic::{calibrate_mesh, IcConfig};
 use l2ight::stages::pm::{map_mesh, PmConfig};
 use l2ight::util::cli::ArgSpec;
@@ -27,6 +33,8 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args[1..]),
+        Some("matrix") => cmd_matrix(&args[1..]),
+        Some("matrix-diff") => cmd_matrix_diff(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("map") => cmd_map(&args[1..]),
         Some("infer") => cmd_infer(&args[1..]),
@@ -50,12 +58,14 @@ fn print_usage() {
         "l2ight — scalable ONN on-chip learning (NeurIPS 2021 reproduction)\n\n\
          USAGE:\n  l2ight <SUBCOMMAND> [OPTIONS]\n\n\
          SUBCOMMANDS:\n\
-         \x20 run        run a training protocol (l2ight / l2ight-sl / flops / mixedtrn / rad / swat-u)\n\
-         \x20 calibrate  identity-calibrate a PTC mesh (stage 1)\n\
-         \x20 map        parallel-map a target matrix (stage 2)\n\
-         \x20 infer      batched inference through the PJRT artifacts\n\
-         \x20 artifacts  list AOT artifacts\n\
-         \x20 info       build + environment info\n\n\
+         \x20 run          run a training protocol (l2ight / l2ight-sl / flops / mixedtrn / rad / swat-u)\n\
+         \x20 matrix       run the scenario matrix + golden regression gate\n\
+         \x20 matrix-diff  compare two scenario-matrix reports\n\
+         \x20 calibrate    identity-calibrate a PTC mesh (stage 1)\n\
+         \x20 map          parallel-map a target matrix (stage 2)\n\
+         \x20 infer        batched inference through the PJRT artifacts\n\
+         \x20 artifacts    list AOT artifacts\n\
+         \x20 info         build + environment info\n\n\
          Run `l2ight <SUBCOMMAND> --help` for options."
     );
 }
@@ -116,7 +126,9 @@ fn cmd_run(args: &[String]) -> i32 {
                 return 2;
             }
         };
-        match Json::parse(&text).map_err(|e| format!("{e:?}")).and_then(|j| JobConfig::from_json(&j)) {
+        let parsed =
+            Json::parse(&text).map_err(|e| format!("{e:?}")).and_then(|j| JobConfig::from_json(&j));
+        match parsed {
             Ok(c) => c,
             Err(e) => {
                 eprintln!("bad config: {e}");
@@ -125,21 +137,21 @@ fn cmd_run(args: &[String]) -> i32 {
         }
     };
     // Flags override.
-    cfg.protocol = match Protocol::parse(&a.str("protocol")) {
+    cfg.protocol = match Protocol::parse(a.str("protocol")) {
         Some(p) => p,
         None => {
             eprintln!("unknown protocol");
             return 2;
         }
     };
-    cfg.arch = match ModelArch::parse(&a.str("arch")) {
+    cfg.arch = match ModelArch::parse(a.str("arch")) {
         Some(m) => m,
         None => {
             eprintln!("unknown arch");
             return 2;
         }
     };
-    cfg.dataset = match DatasetKind::parse(&a.str("dataset")) {
+    cfg.dataset = match DatasetKind::parse(a.str("dataset")) {
         Some(d) => d,
         None => {
             eprintln!("unknown dataset");
@@ -147,7 +159,7 @@ fn cmd_run(args: &[String]) -> i32 {
         }
     };
     cfg.k = a.usize("k");
-    cfg.noise = noise_by_name(&a.str("noise"));
+    cfg.noise = noise_by_name(a.str("noise"));
     cfg.width = a.f64("width") as f32;
     cfg.n_train = a.usize("n-train");
     cfg.n_test = a.usize("n-test");
@@ -166,7 +178,7 @@ fn cmd_run(args: &[String]) -> i32 {
     let mut sink = if a.str("metrics").is_empty() {
         MetricSink::memory()
     } else {
-        match MetricSink::to_file(Path::new(&a.str("metrics"))) {
+        match MetricSink::to_file(Path::new(a.str("metrics"))) {
             Ok(s) => s,
             Err(e) => {
                 eprintln!("cannot open metrics file: {e}");
@@ -215,6 +227,190 @@ fn cmd_run(args: &[String]) -> i32 {
     0
 }
 
+fn print_golden_diffs(diffs: &[l2ight::scenarios::GoldenDiff]) {
+    eprintln!("golden gate FAILED — {} discrepancies:", diffs.len());
+    for d in diffs.iter().take(25) {
+        eprintln!("  {} :: {}  got {}  want {}  ({})", d.row, d.metric, d.got, d.want, d.detail);
+    }
+    if diffs.len() > 25 {
+        eprintln!("  … and {} more", diffs.len() - 25);
+    }
+}
+
+fn cmd_matrix(args: &[String]) -> i32 {
+    let spec = ArgSpec::new(
+        "l2ight matrix",
+        "run the scenario matrix (arch x dataset x noise x sparsity x protocol) and gate \
+         the metrics against a golden fixture",
+    )
+    .opt("tier", "quick", "quick|full")
+    .opt("filter", "", "comma-separated substrings; keep rows whose name matches any")
+    .opt("out", "SCENARIOS_matrix.json", "machine-readable report output path")
+    .opt("golden", "", "golden fixture to diff against (e.g. golden/matrix_quick.json)")
+    .opt("seed", "42", "base seed; per-row seeds derive from (seed, row index)")
+    .flag("bless", "write the produced report as the new golden and exit")
+    .flag("list", "print matching row names without running anything");
+    let a = parse_or_exit(&spec, args);
+
+    let tier = match Tier::parse(a.str("tier")) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown tier {:?} (quick|full)", a.str("tier"));
+            return 2;
+        }
+    };
+    let filters: Vec<String> = a
+        .str("filter")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let filters_active = !filters.is_empty();
+    let rows = expand(&MatrixSpec { tier, base_seed: a.usize("seed") as u64, filters });
+    if rows.is_empty() {
+        eprintln!("no scenario rows match the filter");
+        return 2;
+    }
+    if a.bool("list") {
+        for r in &rows {
+            println!("{}", r.name);
+        }
+        return 0;
+    }
+    // Validate the golden flags before paying for the run.
+    if a.bool("bless") {
+        if a.str("golden").is_empty() {
+            eprintln!("--bless needs --golden <path>");
+            return 2;
+        }
+        if filters_active {
+            eprintln!(
+                "refusing to bless from a filtered run: a partial golden would fail \
+                 every unselected row in CI"
+            );
+            return 2;
+        }
+    }
+
+    let pool = l2ight::util::pool::global();
+    println!(
+        "running {} scenario rows ({} tier) on {} threads",
+        rows.len(),
+        tier.name(),
+        pool.threads()
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_matrix(&rows, pool);
+    for r in &results {
+        println!(
+            "  {:<52} acc {:.4} best {:.4}  E {:>12}  zo {:>8}  {:.1}s",
+            r.row.name,
+            r.summary.final_acc,
+            r.summary.best_acc,
+            fmt_sig(r.summary.cost.total_energy(), 4),
+            r.summary.zo_queries,
+            r.wall_secs
+        );
+    }
+    println!("matrix done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let report = report_json(tier, pool.threads(), &results);
+    let out = a.str("out");
+    if let Err(e) = write_report(Path::new(out), &report) {
+        eprintln!("cannot write {out}: {e}");
+        return 1;
+    }
+    println!("wrote {out}");
+
+    let golden_path = a.str("golden");
+    if golden_path.is_empty() {
+        return 0;
+    }
+    if a.bool("bless") {
+        return match write_report(Path::new(golden_path), &report) {
+            Ok(()) => {
+                println!("blessed {golden_path} ({} rows)", results.len());
+                0
+            }
+            Err(e) => {
+                eprintln!("cannot bless {golden_path}: {e}");
+                1
+            }
+        };
+    }
+    if filters_active {
+        // A filtered report would flag every unselected golden row as
+        // missing; the gate is only meaningful over the tier's full set.
+        println!("golden gate skipped (--filter active); run without --filter to gate");
+        return 0;
+    }
+    match golden::load(Path::new(golden_path)) {
+        Err(e) => {
+            eprintln!("cannot read golden: {e}\n(create it with --bless)");
+            1
+        }
+        Ok(gold) => match diff_reports(&report, &gold, &Tolerances::gate()) {
+            GoldenOutcome::Unblessed => {
+                println!(
+                    "golden {golden_path} is an unblessed placeholder — gate skipped.\n\
+                     bless it on the gate platform with:\n  \
+                     l2ight matrix --tier {} --golden {golden_path} --bless",
+                    tier.name()
+                );
+                0
+            }
+            GoldenOutcome::Match { rows } => {
+                println!("golden gate OK — {rows} rows within tolerance");
+                0
+            }
+            GoldenOutcome::Mismatch(diffs) => {
+                print_golden_diffs(&diffs);
+                1
+            }
+        },
+    }
+}
+
+fn cmd_matrix_diff(args: &[String]) -> i32 {
+    let spec = ArgSpec::new("l2ight matrix-diff", "compare two scenario-matrix reports")
+        .pos("golden", "reference report (treated as the golden)")
+        .pos("report", "report under test")
+        .flag("exact", "zero tolerance on every metric (thread-invariance gate)");
+    let a = parse_or_exit(&spec, args);
+    let want = match golden::load(Path::new(a.str("golden"))) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let got = match golden::load(Path::new(a.str("report"))) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let tol = if a.bool("exact") { Tolerances::STRICT } else { Tolerances::gate() };
+    match diff_reports(&got, &want, &tol) {
+        GoldenOutcome::Unblessed => {
+            eprintln!("reference report is an unblessed placeholder — nothing to compare");
+            2
+        }
+        GoldenOutcome::Match { rows } => {
+            println!(
+                "reports match — {rows} rows identical{}",
+                if a.bool("exact") { " (bitwise)" } else { " within tolerance" }
+            );
+            0
+        }
+        GoldenOutcome::Mismatch(diffs) => {
+            print_golden_diffs(&diffs);
+            1
+        }
+    }
+}
+
 fn cmd_calibrate(args: &[String]) -> i32 {
     let spec = ArgSpec::new("l2ight calibrate", "identity-calibrate a PTC mesh (stage 1)")
         .opt("rows", "18", "mesh rows")
@@ -230,7 +426,7 @@ fn cmd_calibrate(args: &[String]) -> i32 {
         a.usize("rows"),
         a.usize("cols"),
         a.usize("k"),
-        noise_by_name(&a.str("noise")),
+        noise_by_name(a.str("noise")),
         &mut rng,
     );
     let before: f64 = {
@@ -281,11 +477,15 @@ fn cmd_map(args: &[String]) -> i32 {
         a.usize("rows"),
         a.usize("cols"),
         a.usize("k"),
-        noise_by_name(&a.str("noise")),
+        noise_by_name(a.str("noise")),
         &mut rng,
     );
     let target = Mat::randn(a.usize("rows"), a.usize("cols"), 0.5, &mut rng);
-    let mut cfg = PmConfig { alternations: a.usize("alternations"), osp: !a.bool("no-osp"), ..PmConfig::default() };
+    let mut cfg = PmConfig {
+        alternations: a.usize("alternations"),
+        osp: !a.bool("no-osp"),
+        ..PmConfig::default()
+    };
     cfg.zo.iters = a.usize("iters");
     let t0 = std::time::Instant::now();
     let r = map_mesh(&mut mesh, &target, &cfg);

@@ -1,0 +1,390 @@
+//! Golden-metrics regression gate.
+//!
+//! A *golden* is simply a checked-in scenario-matrix report (see
+//! `report`). [`diff_reports`] compares a freshly produced report against
+//! it: rows are matched by name, each row's `config` must match exactly
+//! (a config drift silently invalidates every number, so it fails loudly),
+//! and every numeric leaf under `metrics` is compared with a per-metric
+//! tolerance. `threads`, `wall_secs`, and `stage_secs` are ignored —
+//! wall-clock is not a reproduction claim.
+//!
+//! Bootstrapping: a golden containing `"placeholder": true` has never been
+//! blessed; the gate reports [`GoldenOutcome::Unblessed`] and callers skip
+//! it (CI stays green until someone runs `l2ight matrix --tier quick
+//! --golden golden/matrix_quick.json --bless` on the gate platform and
+//! commits the result).
+//!
+//! Tolerances exist for cross-platform libm drift (`sin`/`ln` differ at
+//! the ulp level between libc implementations, and tiny-run training
+//! amplifies that); on one platform the engine is bit-deterministic, which
+//! is what [`Tolerances::STRICT`] asserts for the thread-invariance gate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Per-metric-family allowances. Keys are classified by name: accuracies
+/// get an absolute band, IC/PM fidelities a relative band, hardware cost a
+/// (tight) relative band, and integer-valued counters must match exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerances {
+    /// Absolute band for `*acc*` metrics.
+    pub acc_abs: f64,
+    /// Relative band for `*mse*` / `*err*` metrics.
+    pub fid_rel: f64,
+    /// Relative band for `cost.*` energy/step counters.
+    pub cost_rel: f64,
+    /// Absolute band for integer counters (`*queries*`, `*params*`).
+    pub count_abs: f64,
+}
+
+impl Tolerances {
+    /// Zero tolerance everywhere — bitwise metric equality. Used for the
+    /// thread-invariance gate (same binary, same platform).
+    pub const STRICT: Tolerances =
+        Tolerances { acc_abs: 0.0, fid_rel: 0.0, cost_rel: 0.0, count_abs: 0.0 };
+
+    /// The CI golden gate: absorbs libm-level drift, still catches any
+    /// real regression (an accuracy drop, a fidelity loss, a cost change).
+    pub fn gate() -> Tolerances {
+        Tolerances { acc_abs: 0.02, fid_rel: 0.10, cost_rel: 1e-6, count_abs: 0.0 }
+    }
+
+    /// Allowed |got − want| for metric `key` with golden value `want`.
+    fn allowed(&self, key: &str, want: f64) -> f64 {
+        if key.contains("acc") {
+            self.acc_abs
+        } else if key.contains("mse") || key.contains("err") {
+            self.fid_rel * want.abs()
+        } else if key.contains("queries") || key.contains("params") {
+            self.count_abs
+        } else {
+            self.cost_rel * want.abs()
+        }
+    }
+}
+
+/// One discrepancy between a report and its golden.
+#[derive(Clone, Debug)]
+pub struct GoldenDiff {
+    /// Row name (or `<report>` for document-level problems).
+    pub row: String,
+    /// Dotted metric path (`cost.fwd_energy`), or `config` / `tier` / `row`.
+    pub metric: String,
+    pub got: String,
+    pub want: String,
+    pub detail: String,
+}
+
+/// Outcome of a golden comparison.
+#[derive(Clone, Debug)]
+pub enum GoldenOutcome {
+    /// The golden is an unblessed placeholder; the gate is skipped.
+    Unblessed,
+    /// Every row and metric within tolerance.
+    Match { rows: usize },
+    /// At least one discrepancy (most severe first is not guaranteed;
+    /// order follows row name / metric path).
+    Mismatch(Vec<GoldenDiff>),
+}
+
+/// Read and parse a report / golden file.
+pub fn load(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Flatten the numeric leaves of a `metrics` object into dotted paths.
+/// `null` leaves are kept (as `None`) so presence is part of the contract.
+fn flatten(j: &Json, path: &str, out: &mut BTreeMap<String, Option<f64>>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                flatten(v, &p, out);
+            }
+        }
+        Json::Num(n) => {
+            out.insert(path.to_string(), Some(*n));
+        }
+        Json::Null => {
+            out.insert(path.to_string(), None);
+        }
+        _ => {}
+    }
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x}"),
+        None => "null".to_string(),
+    }
+}
+
+fn diff_row(name: &str, got: &Json, want: &Json, tol: &Tolerances, out: &mut Vec<GoldenDiff>) {
+    // Config drift makes every golden number meaningless — compare the
+    // canonical (sorted-key) dumps exactly.
+    let gc = got.get("config").map(|c| c.dump()).unwrap_or_default();
+    let wc = want.get("config").map(|c| c.dump()).unwrap_or_default();
+    if gc != wc {
+        out.push(GoldenDiff {
+            row: name.to_string(),
+            metric: "config".to_string(),
+            got: gc,
+            want: wc,
+            detail: "row config changed — re-bless the golden".to_string(),
+        });
+        return;
+    }
+    let mut gm = BTreeMap::new();
+    let mut wm = BTreeMap::new();
+    if let Some(j) = got.get("metrics") {
+        flatten(j, "", &mut gm);
+    }
+    if let Some(j) = want.get("metrics") {
+        flatten(j, "", &mut wm);
+    }
+    let keys: std::collections::BTreeSet<&String> = gm.keys().chain(wm.keys()).collect();
+    for key in keys {
+        let g = gm.get(key).copied();
+        let w = wm.get(key).copied();
+        match (g, w) {
+            (Some(Some(g)), Some(Some(w))) => {
+                let allowed = tol.allowed(key, w);
+                let delta = (g - w).abs();
+                // NaN/∞ deltas must fail, so check finiteness explicitly.
+                let within = delta.is_finite() && delta <= allowed;
+                if !within {
+                    out.push(GoldenDiff {
+                        row: name.to_string(),
+                        metric: key.clone(),
+                        got: format!("{g}"),
+                        want: format!("{w}"),
+                        detail: format!("|Δ| {delta} > allowed {allowed}"),
+                    });
+                }
+            }
+            (Some(None), Some(None)) => {}
+            (g, w) => {
+                out.push(GoldenDiff {
+                    row: name.to_string(),
+                    metric: key.clone(),
+                    got: fmt_opt(g.flatten()),
+                    want: fmt_opt(w.flatten()),
+                    detail: if g.is_none() || w.is_none() {
+                        "metric present on one side only".to_string()
+                    } else {
+                        "metric null on one side only".to_string()
+                    },
+                });
+            }
+        }
+    }
+}
+
+/// Compare a fresh report (`got`) against a golden (`want`).
+pub fn diff_reports(got: &Json, want: &Json, tol: &Tolerances) -> GoldenOutcome {
+    if want.get("placeholder").and_then(|v| v.as_bool()) == Some(true) {
+        return GoldenOutcome::Unblessed;
+    }
+    let mut diffs = Vec::new();
+    let gt = got.get("tier").and_then(|v| v.as_str()).unwrap_or("");
+    let wt = want.get("tier").and_then(|v| v.as_str()).unwrap_or("");
+    if gt != wt {
+        diffs.push(GoldenDiff {
+            row: "<report>".to_string(),
+            metric: "tier".to_string(),
+            got: gt.to_string(),
+            want: wt.to_string(),
+            detail: "tier mismatch".to_string(),
+        });
+    }
+    let empty: Vec<Json> = Vec::new();
+    let g_rows = got.get("rows").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let w_rows = want.get("rows").and_then(|v| v.as_arr()).unwrap_or(&empty);
+    let by_name = |rows: &[Json]| -> BTreeMap<String, Json> {
+        rows.iter()
+            .filter_map(|r| {
+                r.get("name").and_then(|n| n.as_str()).map(|n| (n.to_string(), r.clone()))
+            })
+            .collect()
+    };
+    let gmap = by_name(g_rows);
+    let wmap = by_name(w_rows);
+    for (name, wrow) in &wmap {
+        match gmap.get(name) {
+            None => diffs.push(GoldenDiff {
+                row: name.clone(),
+                metric: "row".to_string(),
+                got: "<missing>".to_string(),
+                want: "present".to_string(),
+                detail: "golden row missing from report".to_string(),
+            }),
+            Some(grow) => diff_row(name, grow, wrow, tol, &mut diffs),
+        }
+    }
+    for name in gmap.keys() {
+        if !wmap.contains_key(name) {
+            diffs.push(GoldenDiff {
+                row: name.clone(),
+                metric: "row".to_string(),
+                got: "present".to_string(),
+                want: "<missing>".to_string(),
+                detail: "report row not in golden — re-bless after adding rows".to_string(),
+            });
+        }
+    }
+    if diffs.is_empty() {
+        GoldenOutcome::Match { rows: wmap.len() }
+    } else {
+        GoldenOutcome::Mismatch(diffs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(rows: &[(&str, &[(&str, Option<f64>)])]) -> Json {
+        let mut root = Json::obj();
+        root.set("schema", Json::Num(1.0)).set("tier", Json::Str("quick".into()));
+        let mut arr = Vec::new();
+        for (name, metrics) in rows {
+            let mut m = Json::obj();
+            for (k, v) in *metrics {
+                m.set(
+                    k,
+                    match v {
+                        Some(x) => Json::Num(*x),
+                        None => Json::Null,
+                    },
+                );
+            }
+            let mut row = Json::obj();
+            row.set("name", Json::Str((*name).into()))
+                .set("config", Json::obj())
+                .set("metrics", m)
+                .set("wall_secs", Json::Num(1.0));
+            arr.push(row);
+        }
+        root.set("rows", Json::Arr(arr));
+        root
+    }
+
+    #[test]
+    fn identical_reports_match_strictly() {
+        let a = report(&[("r1", &[("final_acc", Some(0.8)), ("ic_mse", None)])]);
+        match diff_reports(&a, &a, &Tolerances::STRICT) {
+            GoldenOutcome::Match { rows } => assert_eq!(rows, 1),
+            other => panic!("expected match, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wall_time_and_threads_are_ignored() {
+        let mut a = report(&[("r1", &[("final_acc", Some(0.8))])]);
+        let mut b = report(&[("r1", &[("final_acc", Some(0.8))])]);
+        a.set("threads", Json::Num(1.0));
+        b.set("threads", Json::Num(8.0));
+        assert!(matches!(
+            diff_reports(&a, &b, &Tolerances::STRICT),
+            GoldenOutcome::Match { .. }
+        ));
+    }
+
+    #[test]
+    fn drift_beyond_tolerance_is_caught() {
+        let want = report(&[("r1", &[("final_acc", Some(0.80))])]);
+        let ok = report(&[("r1", &[("final_acc", Some(0.81))])]);
+        let bad = report(&[("r1", &[("final_acc", Some(0.90))])]);
+        assert!(matches!(
+            diff_reports(&ok, &want, &Tolerances::gate()),
+            GoldenOutcome::Match { .. }
+        ));
+        match diff_reports(&bad, &want, &Tolerances::gate()) {
+            GoldenOutcome::Mismatch(ds) => {
+                assert_eq!(ds.len(), 1);
+                assert_eq!(ds[0].metric, "final_acc");
+            }
+            other => panic!("expected mismatch, got {other:?}"),
+        }
+        // STRICT rejects even the 0.01 drift.
+        assert!(matches!(
+            diff_reports(&ok, &want, &Tolerances::STRICT),
+            GoldenOutcome::Mismatch(_)
+        ));
+    }
+
+    #[test]
+    fn null_vs_number_is_a_mismatch() {
+        let want = report(&[("r1", &[("ic_mse", None)])]);
+        let got = report(&[("r1", &[("ic_mse", Some(0.5))])]);
+        assert!(matches!(
+            diff_reports(&got, &want, &Tolerances::gate()),
+            GoldenOutcome::Mismatch(_)
+        ));
+    }
+
+    #[test]
+    fn missing_and_extra_rows_are_mismatches() {
+        let want = report(&[("r1", &[("final_acc", Some(0.5))])]);
+        let got = report(&[("r2", &[("final_acc", Some(0.5))])]);
+        match diff_reports(&got, &want, &Tolerances::gate()) {
+            GoldenOutcome::Mismatch(ds) => assert_eq!(ds.len(), 2),
+            other => panic!("expected mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn integer_counters_are_exact_even_in_gate_mode() {
+        let want = report(&[("r1", &[("zo_queries", Some(100.0))])]);
+        let got = report(&[("r1", &[("zo_queries", Some(101.0))])]);
+        assert!(matches!(
+            diff_reports(&got, &want, &Tolerances::gate()),
+            GoldenOutcome::Mismatch(_)
+        ));
+    }
+
+    #[test]
+    fn config_drift_fails_loudly() {
+        let mut want = report(&[("r1", &[("final_acc", Some(0.5))])]);
+        let got = want.clone();
+        // Mutate the golden row's config.
+        if let Json::Obj(root) = &mut want {
+            if let Some(Json::Arr(rows)) = root.get_mut("rows") {
+                rows[0].set("config", {
+                    let mut c = Json::obj();
+                    c.set("k", Json::Num(9.0));
+                    c
+                });
+            }
+        }
+        match diff_reports(&got, &want, &Tolerances::gate()) {
+            GoldenOutcome::Mismatch(ds) => assert_eq!(ds[0].metric, "config"),
+            other => panic!("expected mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn placeholder_golden_skips_the_gate() {
+        let got = report(&[("r1", &[("final_acc", Some(0.5))])]);
+        let mut gold = Json::obj();
+        gold.set("placeholder", Json::Bool(true));
+        assert!(matches!(
+            diff_reports(&got, &gold, &Tolerances::gate()),
+            GoldenOutcome::Unblessed
+        ));
+    }
+
+    #[test]
+    fn nan_never_matches() {
+        let want = report(&[("r1", &[("final_acc", Some(0.5))])]);
+        let got = report(&[("r1", &[("final_acc", Some(f64::NAN))])]);
+        assert!(matches!(
+            diff_reports(&got, &want, &Tolerances::gate()),
+            GoldenOutcome::Mismatch(_)
+        ));
+    }
+}

@@ -1,0 +1,372 @@
+//! Declarative scenario-matrix expander.
+//!
+//! A *scenario row* is one fully seeded `JobConfig` with a stable,
+//! human-readable name of the form
+//! `protocol/arch/dataset/noise/aw<α_W>-ac<α_C>-ad<α_D>`. The expander
+//! enumerates the crossed axes the paper's breadth claim rests on —
+//! architecture × dataset × noise level × sampling sparsity × training
+//! protocol — in two tiers:
+//!
+//! * **quick** — tiny models/datasets, every axis represented at least
+//!   once. Cheap enough for CI and for the determinism tests; its metrics
+//!   are pinned by `golden/matrix_quick.json`.
+//! * **full** — the paper-shaped sweep (all protocols on MLP/CNN-S, the
+//!   noise and sparsity ladders, and the small-width vision models). Run
+//!   on demand, not in CI.
+//!
+//! Seeds are assigned **before** filtering, by [`job_seed`]`(base, index)`
+//! over the enumeration index, so a row's seed — and therefore its result —
+//! is identical whether it runs alone (`--filter`), in the full matrix, or
+//! at any thread count.
+
+use crate::coordinator::config::{JobConfig, Protocol};
+use crate::coordinator::driver::job_seed;
+use crate::data::DatasetKind;
+use crate::nn::ModelArch;
+use crate::photonics::NoiseModel;
+
+/// Which slice of the scenario space to enumerate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Quick,
+    Full,
+}
+
+impl Tier {
+    pub fn parse(s: &str) -> Option<Tier> {
+        Some(match s {
+            "quick" => Tier::Quick,
+            "full" => Tier::Full,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Quick => "quick",
+            Tier::Full => "full",
+        }
+    }
+}
+
+/// One row of the scenario matrix: a named, fully seeded job.
+#[derive(Clone, Debug)]
+pub struct ScenarioRow {
+    /// Stable id (`protocol/arch/dataset/noise/sparsity`); unique per tier.
+    pub name: String,
+    pub cfg: JobConfig,
+}
+
+/// Matrix expansion parameters.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    pub tier: Tier,
+    /// Base seed; per-row seeds derive via `job_seed(base, row_index)`.
+    pub base_seed: u64,
+    /// Substring filters over row names; a row is kept when any filter
+    /// matches (empty = keep everything).
+    pub filters: Vec<String>,
+}
+
+impl MatrixSpec {
+    pub fn new(tier: Tier) -> MatrixSpec {
+        MatrixSpec { tier, base_seed: 42, filters: Vec::new() }
+    }
+}
+
+/// The noise ladder rows are named after.
+fn noise_tag(n: &NoiseModel) -> &'static str {
+    if *n == NoiseModel::IDEAL {
+        "ideal"
+    } else if *n == NoiseModel::PAPER {
+        "paper"
+    } else if *n == NoiseModel::quant_only(8) {
+        "quant8"
+    } else {
+        "custom"
+    }
+}
+
+fn row_name(cfg: &JobConfig) -> String {
+    format!(
+        "{}/{}/{}/{}/aw{}-ac{}-ad{}",
+        cfg.protocol.name(),
+        cfg.arch.name(),
+        cfg.dataset.name(),
+        noise_tag(&cfg.noise),
+        cfg.alpha_w,
+        cfg.alpha_c,
+        cfg.alpha_d
+    )
+}
+
+/// Quick-tier base: the smallest job that still exercises the whole
+/// three-stage flow (mirrors the driver's own test fixture).
+fn quick_base() -> JobConfig {
+    JobConfig {
+        arch: ModelArch::MlpVowel,
+        dataset: DatasetKind::VowelLike,
+        protocol: Protocol::L2ight,
+        k: 4,
+        noise: NoiseModel::quant_only(8),
+        width: 0.5,
+        n_train: 96,
+        n_test: 48,
+        pretrain_epochs: 4,
+        epochs: 3,
+        batch: 16,
+        alpha_w: 0.6,
+        alpha_c: 1.0,
+        alpha_d: 0.0,
+        zo_budget: 0.1,
+        seed: 0, // assigned by expand()
+    }
+}
+
+/// Full-tier base: paper-scale MLP job (still synthetic-data sized).
+fn full_base() -> JobConfig {
+    JobConfig {
+        arch: ModelArch::MlpVowel,
+        dataset: DatasetKind::VowelLike,
+        protocol: Protocol::L2ight,
+        k: 9,
+        noise: NoiseModel::PAPER,
+        width: 1.0,
+        n_train: 512,
+        n_test: 256,
+        pretrain_epochs: 10,
+        epochs: 10,
+        batch: 32,
+        alpha_w: 0.6,
+        alpha_c: 1.0,
+        alpha_d: 0.0,
+        zo_budget: 1.0,
+        seed: 0,
+    }
+}
+
+const ALL_PROTOCOLS: [Protocol; 6] = [
+    Protocol::L2ight,
+    Protocol::L2ightSlScratch,
+    Protocol::Flops,
+    Protocol::MixedTrn,
+    Protocol::Rad,
+    Protocol::SwatU,
+];
+
+fn quick_rows() -> Vec<JobConfig> {
+    let base = quick_base();
+    let mut rows = Vec::new();
+    // Protocol axis: every protocol on the tiny MLP. ZO baselines pay per
+    // query, so they get a single epoch (the matrix tracks their query
+    // count, not their convergence).
+    for p in ALL_PROTOCOLS {
+        let mut c = base.clone();
+        c.protocol = p;
+        if matches!(p, Protocol::Flops | Protocol::MixedTrn) {
+            c.epochs = 1;
+            c.n_train = 48;
+        }
+        rows.push(c);
+    }
+    // Noise axis: the L2ight flow under the noise ladder (quant8 is the
+    // protocol-axis row above).
+    for noise in [NoiseModel::IDEAL, NoiseModel::PAPER] {
+        let mut c = base.clone();
+        c.noise = noise;
+        rows.push(c);
+    }
+    // Sparsity axis: subspace learning from scratch across (α_W, α_C, α_D).
+    for (aw, ac, ad) in [(1.0, 1.0, 0.0), (0.6, 0.7, 0.0), (0.4, 0.5, 0.3)] {
+        let mut c = base.clone();
+        c.protocol = Protocol::L2ightSlScratch;
+        c.alpha_w = aw;
+        c.alpha_c = ac;
+        c.alpha_d = ad;
+        rows.push(c);
+    }
+    // Architecture axis: one tiny CNN row so conv plumbing is gated too.
+    let mut cnn = base.clone();
+    cnn.arch = ModelArch::CnnS;
+    cnn.dataset = DatasetKind::MnistLike;
+    cnn.width = 0.25;
+    cnn.n_train = 64;
+    cnn.n_test = 32;
+    cnn.pretrain_epochs = 2;
+    cnn.epochs = 2;
+    rows.push(cnn);
+    rows
+}
+
+fn full_rows() -> Vec<JobConfig> {
+    let base = full_base();
+    let mut rows = Vec::new();
+    // Protocol axis × {MLP/vowel, CNN-S/mnist}.
+    for p in ALL_PROTOCOLS {
+        for arch in [ModelArch::MlpVowel, ModelArch::CnnS] {
+            let mut c = base.clone();
+            c.protocol = p;
+            if arch == ModelArch::CnnS {
+                c.arch = ModelArch::CnnS;
+                c.dataset = DatasetKind::MnistLike;
+                c.width = 0.5;
+                c.n_train = 256;
+                c.n_test = 128;
+                c.pretrain_epochs = 5;
+                c.epochs = 5;
+            }
+            if matches!(p, Protocol::Flops | Protocol::MixedTrn) {
+                c.epochs = 2;
+            }
+            rows.push(c);
+        }
+    }
+    // Noise ladder on the full flow.
+    for noise in [NoiseModel::IDEAL, NoiseModel::quant_only(8), NoiseModel::PAPER_NO_BIAS] {
+        let mut c = base.clone();
+        c.noise = noise;
+        rows.push(c);
+    }
+    // Sparsity grid on scratch subspace learning.
+    for aw in [1.0, 0.6, 0.3] {
+        for ac in [1.0, 0.5] {
+            let mut c = base.clone();
+            c.protocol = Protocol::L2ightSlScratch;
+            c.alpha_w = aw;
+            c.alpha_c = ac;
+            rows.push(c);
+        }
+    }
+    // Data-sampling (SMD) axis.
+    for ad in [0.3, 0.6] {
+        let mut c = base.clone();
+        c.protocol = Protocol::L2ightSlScratch;
+        c.alpha_d = ad;
+        rows.push(c);
+    }
+    // Vision models at CPU-budget widths.
+    for (arch, ds, width) in [
+        (ModelArch::CnnL, DatasetKind::FashionLike, 0.25),
+        (ModelArch::Vgg8, DatasetKind::Cifar10Like, 0.125),
+        (ModelArch::ResNet18, DatasetKind::Cifar10Like, 0.125),
+    ] {
+        let mut c = base.clone();
+        c.arch = arch;
+        c.dataset = ds;
+        c.width = width;
+        c.n_train = 128;
+        c.n_test = 64;
+        c.pretrain_epochs = 2;
+        c.epochs = 2;
+        rows.push(c);
+    }
+    // A many-class row (CIFAR-100 shape).
+    let mut c100 = base.clone();
+    c100.protocol = Protocol::L2ightSlScratch;
+    c100.arch = ModelArch::Vgg8;
+    c100.dataset = DatasetKind::Cifar100Like;
+    c100.width = 0.125;
+    c100.n_train = 200;
+    c100.n_test = 100;
+    c100.epochs = 2;
+    rows.push(c100);
+    rows
+}
+
+/// Enumerate the matrix for `spec`: name every row, assign pre-filter
+/// seeds, drop duplicate names (first wins), then apply the filters.
+pub fn expand(spec: &MatrixSpec) -> Vec<ScenarioRow> {
+    let cfgs = match spec.tier {
+        Tier::Quick => quick_rows(),
+        Tier::Full => full_rows(),
+    };
+    let mut seen = std::collections::BTreeSet::new();
+    let mut rows = Vec::new();
+    for (i, mut cfg) in cfgs.into_iter().enumerate() {
+        cfg.seed = job_seed(spec.base_seed, i as u64);
+        let name = row_name(&cfg);
+        if !seen.insert(name.clone()) {
+            continue;
+        }
+        rows.push(ScenarioRow { name, cfg });
+    }
+    if !spec.filters.is_empty() {
+        rows.retain(|r| spec.filters.iter().any(|f| r.name.contains(f.as_str())));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_tier_covers_every_axis() {
+        let rows = expand(&MatrixSpec::new(Tier::Quick));
+        assert!(rows.len() >= 10, "quick tier too small: {}", rows.len());
+        // Every protocol appears.
+        for p in ALL_PROTOCOLS {
+            assert!(
+                rows.iter().any(|r| r.cfg.protocol == p),
+                "protocol {p:?} missing from quick tier"
+            );
+        }
+        // Noise ladder appears.
+        for tag in ["ideal", "quant8", "paper"] {
+            assert!(rows.iter().any(|r| r.name.contains(tag)), "noise {tag} missing");
+        }
+        // A conv architecture appears.
+        assert!(rows.iter().any(|r| r.cfg.arch == ModelArch::CnnS));
+        // A sparsified row appears.
+        assert!(rows.iter().any(|r| r.cfg.alpha_c < 1.0 && r.cfg.alpha_w < 1.0));
+    }
+
+    #[test]
+    fn names_and_seeds_are_unique() {
+        for tier in [Tier::Quick, Tier::Full] {
+            let rows = expand(&MatrixSpec::new(tier));
+            let names: std::collections::BTreeSet<&str> =
+                rows.iter().map(|r| r.name.as_str()).collect();
+            assert_eq!(names.len(), rows.len(), "{tier:?} has duplicate names");
+            let seeds: std::collections::BTreeSet<u64> =
+                rows.iter().map(|r| r.cfg.seed).collect();
+            assert_eq!(seeds.len(), rows.len(), "{tier:?} has duplicate seeds");
+        }
+    }
+
+    #[test]
+    fn filtering_preserves_row_identity() {
+        // A filtered row must keep the exact seed/config it has in the full
+        // enumeration — results may never depend on what else was selected.
+        let all = expand(&MatrixSpec::new(Tier::Quick));
+        let spec = MatrixSpec {
+            filters: vec!["l2ight/".to_string()],
+            ..MatrixSpec::new(Tier::Quick)
+        };
+        let filtered = expand(&spec);
+        assert!(!filtered.is_empty());
+        assert!(filtered.len() < all.len());
+        for f in &filtered {
+            let full = all.iter().find(|r| r.name == f.name).expect("row vanished");
+            assert_eq!(full.cfg.seed, f.cfg.seed, "{}: seed changed under filter", f.name);
+        }
+    }
+
+    #[test]
+    fn base_seed_changes_every_row_seed() {
+        let a = expand(&MatrixSpec { base_seed: 1, ..MatrixSpec::new(Tier::Quick) });
+        let b = expand(&MatrixSpec { base_seed: 2, ..MatrixSpec::new(Tier::Quick) });
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.name, rb.name);
+            assert_ne!(ra.cfg.seed, rb.cfg.seed, "{}", ra.name);
+        }
+    }
+
+    #[test]
+    fn tier_parse_roundtrip() {
+        for t in [Tier::Quick, Tier::Full] {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tier::parse("nope"), None);
+    }
+}

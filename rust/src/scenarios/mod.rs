@@ -1,0 +1,30 @@
+//! Scenario-matrix engine: the breadth gate of the reproduction.
+//!
+//! The paper's headline claim is that the three-stage flow holds up across
+//! models, datasets, noise levels, sampling sparsities, and against every
+//! baseline protocol. This subsystem turns that claim into a regression
+//! artifact:
+//!
+//! * [`matrix`] — declarative expander: tiered scenario rows over
+//!   arch × dataset × noise × sparsity × protocol, each a fully seeded
+//!   `JobConfig` (seeds derive from `(base_seed, row_index)`, never from
+//!   execution order);
+//! * [`runner`] — fans rows out over the shared thread pool; results are
+//!   independent of thread count and completion order;
+//! * [`report`] — one machine-readable `SCENARIOS_matrix.json` with
+//!   per-row accuracy/fidelity/cost metrics;
+//! * [`golden`] — diffs a report against a checked-in golden fixture with
+//!   per-metric tolerances (the CI gate), plus the zero-tolerance mode the
+//!   thread-invariance check uses.
+//!
+//! CLI entry points: `l2ight matrix` and `l2ight matrix-diff` (src/main.rs).
+
+pub mod golden;
+pub mod matrix;
+pub mod report;
+pub mod runner;
+
+pub use golden::{diff_reports, GoldenDiff, GoldenOutcome, Tolerances};
+pub use matrix::{expand, MatrixSpec, ScenarioRow, Tier};
+pub use report::{report_json, write_report};
+pub use runner::{run_matrix, RowResult};

@@ -1,0 +1,171 @@
+//! Machine-readable scenario-matrix report (`SCENARIOS_matrix.json`).
+//!
+//! Layout (schema 1):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "tier": "quick",
+//!   "threads": 4,
+//!   "rows": [
+//!     {
+//!       "name": "l2ight/mlp-vowel/vowel/quant8/aw0.6-ac1-ad0",
+//!       "config": { ...JobConfig::to_json()... },
+//!       "metrics": {
+//!         "final_acc": 0.83, "best_acc": 0.85,
+//!         "pretrain_acc": 0.87, "mapped_acc": 0.79,
+//!         "ic_mse": 1.2e-3, "pm_err": 4.0e-2,
+//!         "zo_queries": 96, "trainable_params": 128, "total_params": 420,
+//!         "cost": {"fwd_energy": ..., "wgrad_energy": ..., "fbk_energy": ...,
+//!                  "fwd_steps": ..., "wgrad_steps": ..., "fbk_steps": ...}
+//!       },
+//!       "stage_secs": {"pretrain": 0.1, "ic": 0.2, "pm": 0.3, "sl": 0.4},
+//!       "wall_secs": 1.0
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Everything under `metrics` is deterministic per row (independent of
+//! thread count and execution order) and is what `golden` compares;
+//! `threads`, `wall_secs`, and `stage_secs` are diagnostics and are
+//! ignored by the gate. Metrics that a protocol does not produce (e.g.
+//! `ic_mse` for baselines) are emitted as `null` so presence itself is
+//! golden-checked.
+
+use std::path::Path;
+
+use crate::scenarios::matrix::Tier;
+use crate::scenarios::runner::RowResult;
+use crate::util::json::Json;
+
+/// Report schema version.
+pub const SCHEMA: f64 = 1.0;
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+/// The deterministic per-row metric object.
+fn metrics_json(r: &RowResult) -> Json {
+    let s = &r.summary;
+    let mut m = Json::obj();
+    m.set("final_acc", Json::Num(s.final_acc as f64))
+        .set("best_acc", Json::Num(s.best_acc as f64))
+        .set("pretrain_acc", opt_num(s.pretrain_acc.map(|v| v as f64)))
+        .set("mapped_acc", opt_num(s.mapped_acc.map(|v| v as f64)))
+        .set("ic_mse", opt_num(s.ic_mse))
+        .set("pm_err", opt_num(s.pm_err))
+        .set("zo_queries", Json::Num(s.zo_queries as f64))
+        .set("trainable_params", Json::Num(s.trainable_params as f64))
+        .set("total_params", Json::Num(s.total_params as f64));
+    let c = &s.cost;
+    let mut cost = Json::obj();
+    cost.set("fwd_energy", Json::Num(c.fwd_energy))
+        .set("wgrad_energy", Json::Num(c.wgrad_energy))
+        .set("fbk_energy", Json::Num(c.fbk_energy))
+        .set("fwd_steps", Json::Num(c.fwd_steps))
+        .set("wgrad_steps", Json::Num(c.wgrad_steps))
+        .set("fbk_steps", Json::Num(c.fbk_steps));
+    m.set("cost", cost);
+    m
+}
+
+/// One report row.
+pub fn row_json(r: &RowResult) -> Json {
+    let mut stages = Json::obj();
+    for (stage, secs) in &r.summary.stage_secs {
+        stages.set(stage, Json::Num(*secs));
+    }
+    let mut row = Json::obj();
+    row.set("name", Json::Str(r.row.name.clone()))
+        .set("config", r.row.cfg.to_json())
+        .set("metrics", metrics_json(r))
+        .set("stage_secs", stages)
+        .set("wall_secs", Json::Num(r.wall_secs));
+    row
+}
+
+/// Assemble the full report document.
+pub fn report_json(tier: Tier, threads: usize, results: &[RowResult]) -> Json {
+    let mut root = Json::obj();
+    root.set("schema", Json::Num(SCHEMA))
+        .set("tier", Json::Str(tier.name().into()))
+        .set("threads", Json::Num(threads as f64))
+        .set("rows", Json::Arr(results.iter().map(row_json).collect()));
+    root
+}
+
+/// Write a report (pretty-printed, trailing newline), creating parent
+/// directories as needed.
+pub fn write_report(path: &Path, report: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, report.pretty() + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{JobConfig, Protocol};
+    use crate::coordinator::driver::JobSummary;
+    use crate::profiler::CostBreakdown;
+    use crate::scenarios::matrix::ScenarioRow;
+
+    fn fake_result(name: &str, acc: f32) -> RowResult {
+        RowResult {
+            row: ScenarioRow { name: name.into(), cfg: JobConfig::default() },
+            summary: JobSummary {
+                protocol: Protocol::L2ight,
+                trainable_params: 8,
+                total_params: 64,
+                final_acc: acc,
+                best_acc: acc,
+                pretrain_acc: Some(0.5),
+                mapped_acc: None,
+                ic_mse: Some(1e-3),
+                pm_err: None,
+                cost: CostBreakdown::default(),
+                zo_queries: 7,
+                sl: None,
+                stage_secs: vec![("ic", 0.25)],
+            },
+            wall_secs: 1.5,
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let results = vec![fake_result("a", 0.75), fake_result("b", 0.5)];
+        let rep = report_json(Tier::Quick, 4, &results);
+        let back = Json::parse(&rep.pretty()).unwrap();
+        assert_eq!(back, rep);
+        assert_eq!(back.get("tier").unwrap().as_str(), Some("quick"));
+        let rows = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        let m = rows[0].get("metrics").unwrap();
+        assert_eq!(m.get("final_acc").unwrap().as_f64(), Some(0.75));
+        assert_eq!(m.get("mapped_acc"), Some(&Json::Null));
+        assert_eq!(m.get("zo_queries").unwrap().as_f64(), Some(7.0));
+        assert!(m.get("cost").unwrap().get("fwd_energy").is_some());
+        assert_eq!(rows[0].get("stage_secs").unwrap().get("ic").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn write_report_creates_parent_dirs() {
+        let dir = std::env::temp_dir()
+            .join(format!("l2ight_report_{}", std::process::id()));
+        let path = dir.join("nested").join("out.json");
+        let rep = report_json(Tier::Quick, 1, &[fake_result("a", 0.1)]);
+        write_report(&path, &rep).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(text.trim()).unwrap(), rep);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

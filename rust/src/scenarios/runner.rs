@@ -1,0 +1,97 @@
+//! Parallel scenario runner.
+//!
+//! Rows fan out over a [`ThreadPool`] (normally the process-wide pool from
+//! `util::pool::global`, sized by `L2IGHT_THREADS`). Each row gets its own
+//! in-memory `MetricSink` and runs `run_job` to completion on whichever
+//! worker claims it; nested parallel regions inside the job (mesh strips,
+//! GEMM bands, IC/PM block sweeps) then inline on that worker, so the pool
+//! is never oversubscribed.
+//!
+//! Determinism: a row's result is a pure function of its `JobConfig`
+//! (see `coordinator::driver`), rows share no mutable state, and
+//! `parallel_map` returns results in row order — so the produced
+//! `Vec<RowResult>` is bitwise identical (wall times aside) at every
+//! thread count and under any execution interleaving.
+
+use crate::coordinator::driver::{run_job, JobSummary};
+use crate::coordinator::metrics::MetricSink;
+use crate::scenarios::matrix::ScenarioRow;
+use crate::util::pool::ThreadPool;
+
+/// One executed row: the scenario plus its measured outcome.
+#[derive(Clone, Debug)]
+pub struct RowResult {
+    pub row: ScenarioRow,
+    pub summary: JobSummary,
+    /// End-to-end wall time of the row on its worker (diagnostic only —
+    /// excluded from golden-metric comparisons).
+    pub wall_secs: f64,
+}
+
+/// Run every row, fanning out across `pool`. Blocks until all rows are
+/// done; results come back in row order regardless of completion order.
+pub fn run_matrix(rows: &[ScenarioRow], pool: &ThreadPool) -> Vec<RowResult> {
+    pool.parallel_map(rows.len(), |i| {
+        let row = rows[i].clone();
+        let mut sink = MetricSink::memory();
+        let t0 = std::time::Instant::now();
+        let summary = run_job(&row.cfg, &mut sink);
+        RowResult { row, summary, wall_secs: t0.elapsed().as_secs_f64() }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Protocol;
+    use crate::data::DatasetKind;
+    use crate::nn::ModelArch;
+    use crate::photonics::NoiseModel;
+
+    fn tiny_row(name: &str, protocol: Protocol, seed: u64) -> ScenarioRow {
+        ScenarioRow {
+            name: name.to_string(),
+            cfg: crate::coordinator::config::JobConfig {
+                arch: ModelArch::MlpVowel,
+                dataset: DatasetKind::VowelLike,
+                protocol,
+                k: 4,
+                noise: NoiseModel::quant_only(8),
+                width: 0.5,
+                n_train: 48,
+                n_test: 24,
+                pretrain_epochs: 2,
+                epochs: 1,
+                batch: 16,
+                alpha_w: 0.6,
+                alpha_c: 1.0,
+                alpha_d: 0.0,
+                zo_budget: 0.1,
+                seed,
+            },
+        }
+    }
+
+    #[test]
+    fn results_come_back_in_row_order() {
+        let rows = vec![
+            tiny_row("a", Protocol::L2ightSlScratch, 1),
+            tiny_row("b", Protocol::Rad, 2),
+            tiny_row("c", Protocol::L2ightSlScratch, 3),
+        ];
+        let pool = ThreadPool::new(3);
+        let out = run_matrix(&rows, &pool);
+        assert_eq!(out.len(), 3);
+        for (r, o) in rows.iter().zip(&out) {
+            assert_eq!(r.name, o.row.name);
+            assert!(o.summary.final_acc.is_finite());
+            assert!(o.wall_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_matrix_is_noop() {
+        let pool = ThreadPool::new(2);
+        assert!(run_matrix(&[], &pool).is_empty());
+    }
+}

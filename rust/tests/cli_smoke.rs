@@ -33,7 +33,7 @@ fn unknown_subcommand_fails() {
 
 #[test]
 fn help_flags_work_per_subcommand() {
-    for sub in ["run", "calibrate", "map", "infer", "artifacts"] {
+    for sub in ["run", "matrix", "matrix-diff", "calibrate", "map", "infer", "artifacts"] {
         let out = Command::new(bin()).args([sub, "--help"]).output().unwrap();
         let text = String::from_utf8_lossy(&out.stderr).to_string()
             + &String::from_utf8_lossy(&out.stdout);
@@ -75,6 +75,41 @@ fn run_tiny_job_end_to_end() {
     assert!(ok, "run failed: {stderr}");
     assert!(stdout.contains("final acc"), "{stdout}");
     assert!(stdout.contains("PTC energy"), "{stdout}");
+}
+
+#[test]
+fn matrix_list_names_rows_without_running() {
+    let (stdout, stderr, ok) = run(&["matrix", "--tier", "quick", "--list"]);
+    assert!(ok, "matrix --list failed: {stderr}");
+    let names: Vec<&str> = stdout.lines().collect();
+    assert!(names.len() >= 10, "{stdout}");
+    assert!(names.iter().any(|n| n.starts_with("l2ight/")), "{stdout}");
+    // Filters narrow the listing.
+    let (filtered, _, ok) =
+        run(&["matrix", "--tier", "quick", "--list", "--filter", "cnn-s"]);
+    assert!(ok);
+    assert!(filtered.lines().count() < names.len());
+    assert!(filtered.lines().all(|n| n.contains("cnn-s")), "{filtered}");
+}
+
+#[test]
+fn matrix_bless_flags_are_validated_before_running() {
+    let (_, stderr, ok) = run(&["matrix", "--tier", "quick", "--bless"]);
+    assert!(!ok);
+    assert!(stderr.contains("--golden"), "{stderr}");
+    let (_, stderr, ok) = run(&[
+        "matrix", "--tier", "quick", "--bless", "--golden", "g.json", "--filter", "rad/",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("filtered"), "{stderr}");
+}
+
+#[test]
+fn matrix_rejects_unknown_tier_and_empty_filter() {
+    let (_, _, ok) = run(&["matrix", "--tier", "nope", "--list"]);
+    assert!(!ok);
+    let (_, _, ok) = run(&["matrix", "--tier", "quick", "--list", "--filter", "zzz-no-row"]);
+    assert!(!ok);
 }
 
 #[test]

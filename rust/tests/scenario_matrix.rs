@@ -1,0 +1,142 @@
+//! Locks the scenario-matrix contract: quick-tier rows are deterministic —
+//! bitwise-identical metrics at every thread count and independent of which
+//! other rows run — and the golden gate catches real drift.
+
+use std::path::PathBuf;
+
+use l2ight::scenarios::{
+    diff_reports, expand, report_json, run_matrix, write_report, GoldenOutcome, MatrixSpec,
+    RowResult, Tier, Tolerances,
+};
+use l2ight::util::json::Json;
+use l2ight::util::ThreadPool;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("l2ight_scn_{name}_{}", std::process::id()))
+}
+
+/// A cheap but representative quick-tier slice: the full three-stage flow,
+/// a first-order baseline, and a ZO baseline.
+fn subset_spec() -> MatrixSpec {
+    MatrixSpec {
+        filters: vec![
+            "l2ight/mlp-vowel/vowel/quant8".to_string(),
+            "rad/".to_string(),
+            "flops/".to_string(),
+        ],
+        ..MatrixSpec::new(Tier::Quick)
+    }
+}
+
+#[test]
+fn quick_rows_are_bitwise_thread_invariant() {
+    let rows = expand(&subset_spec());
+    let names: Vec<&String> = rows.iter().map(|r| &r.name).collect();
+    assert_eq!(rows.len(), 3, "filter selected {names:?}");
+
+    // Serial outer pool: rows sequential, inner engine parallelism active.
+    let serial = run_matrix(&rows, &ThreadPool::new(1));
+    // Wide outer pool: rows concurrent, inner parallelism inlined.
+    let wide = run_matrix(&rows, &ThreadPool::new(4));
+
+    let rep_serial = report_json(Tier::Quick, 1, &serial);
+    let rep_wide = report_json(Tier::Quick, 4, &wide);
+    match diff_reports(&rep_wide, &rep_serial, &Tolerances::STRICT) {
+        GoldenOutcome::Match { rows } => assert_eq!(rows, 3),
+        GoldenOutcome::Mismatch(ds) => {
+            panic!(
+                "thread count changed row metrics: {:?}",
+                ds.iter()
+                    .map(|d| format!("{} :: {} {} vs {}", d.row, d.metric, d.got, d.want))
+                    .collect::<Vec<_>>()
+            );
+        }
+        other => panic!("unexpected outcome {other:?}"),
+    }
+
+    // The L2ight row must expose the full stage ladder.
+    let l2 = &serial[0];
+    assert!(l2.row.name.starts_with("l2ight/"));
+    assert!(l2.summary.ic_mse.is_some());
+    assert!(l2.summary.pm_err.is_some());
+    assert!(l2.summary.zo_queries > 0);
+    assert!(l2.summary.cost.total_energy() > 0.0);
+    assert!(!l2.summary.stage_secs.is_empty());
+    // Baselines report no IC/PM fidelity.
+    for r in &serial[1..] {
+        assert!(r.summary.ic_mse.is_none(), "{}", r.row.name);
+    }
+}
+
+#[test]
+fn rows_reproduce_in_isolation() {
+    // A row run through a single-row matrix must equal the same row run
+    // alongside others (seeds derive from (base, index), not run order).
+    let all = run_matrix(&expand(&subset_spec()), &ThreadPool::new(2));
+    let solo_spec = MatrixSpec {
+        filters: vec!["rad/".to_string()],
+        ..MatrixSpec::new(Tier::Quick)
+    };
+    let solo = run_matrix(&expand(&solo_spec), &ThreadPool::new(1));
+    assert_eq!(solo.len(), 1);
+    let joint = all.iter().find(|r| r.row.name == solo[0].row.name).unwrap();
+    assert_eq!(joint.summary.final_acc, solo[0].summary.final_acc);
+    assert_eq!(joint.summary.best_acc, solo[0].summary.best_acc);
+    assert_eq!(joint.summary.cost.total_energy(), solo[0].summary.cost.total_energy());
+    assert_eq!(joint.summary.zo_queries, solo[0].summary.zo_queries);
+}
+
+fn one_cheap_result() -> Vec<RowResult> {
+    let spec = MatrixSpec {
+        filters: vec!["rad/".to_string()],
+        ..MatrixSpec::new(Tier::Quick)
+    };
+    run_matrix(&expand(&spec), &ThreadPool::new(1))
+}
+
+#[test]
+fn golden_roundtrip_bless_then_gate() {
+    let results = one_cheap_result();
+    let report = report_json(Tier::Quick, 1, &results);
+    let path = tmp("golden.json");
+    write_report(&path, &report).unwrap();
+
+    // Freshly blessed golden matches strictly.
+    let gold = l2ight::scenarios::golden::load(&path).unwrap();
+    assert!(matches!(
+        diff_reports(&report, &gold, &Tolerances::STRICT),
+        GoldenOutcome::Match { .. }
+    ));
+
+    // Inject a metric drift into the golden and the gate must fire.
+    let mut drifted = gold.clone();
+    if let Json::Obj(root) = &mut drifted {
+        if let Some(Json::Arr(rows)) = root.get_mut("rows") {
+            if let Some(metrics) = rows[0].get("metrics") {
+                let old = metrics.get("final_acc").unwrap().as_f64().unwrap();
+                let mut m = metrics.clone();
+                m.set("final_acc", Json::Num(old + 0.5));
+                rows[0].set("metrics", m);
+            }
+        }
+    }
+    match diff_reports(&report, &drifted, &Tolerances::gate()) {
+        GoldenOutcome::Mismatch(ds) => {
+            assert!(ds.iter().any(|d| d.metric == "final_acc"), "{ds:?}");
+        }
+        other => panic!("drift not caught: {other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn placeholder_golden_reports_unblessed() {
+    let results = one_cheap_result();
+    let report = report_json(Tier::Quick, 1, &results);
+    let mut placeholder = Json::obj();
+    placeholder.set("placeholder", Json::Bool(true));
+    assert!(matches!(
+        diff_reports(&report, &placeholder, &Tolerances::gate()),
+        GoldenOutcome::Unblessed
+    ));
+}
