@@ -9,12 +9,19 @@
 //!   5. feedback-mask generation (btopk heap-select),
 //!   6. PJRT artifact call overhead (when artifacts are built).
 //!
+//! Plus the SIMD acceptance targets (ISSUE 5): a square-GEMM ladder
+//! (256–1024) and the conv-forward path, fused packed-panel vs eager
+//! im2col+GEMM — run once with `L2IGHT_SIMD=scalar` and once with the
+//! default `auto` to get before/after medians in one JSON artifact (the
+//! dispatch level is recorded per run).
+//!
 //! Env knobs:
 //!   * `L2IGHT_THREADS`   — pool width (recorded in the JSON).
+//!   * `L2IGHT_SIMD`      — kernel dispatch level (recorded in the JSON).
 //!   * `L2IGHT_BENCH_QUICK=1` — 1-warmup smoke run for CI (tiny budget).
 //!   * `L2IGHT_BENCH_JSON` — output path (default `BENCH_perf_hotpath.json`).
 
-use l2ight::linalg::{matmul, Mat};
+use l2ight::linalg::{conv2d_forward_packed, im2col, matmul, matmul_into, simd, Conv2dShape, Mat};
 use l2ight::photonics::{NoiseModel, PtcMesh};
 use l2ight::runtime::{default_artifact_dir, ArgValue, Runtime};
 use l2ight::sampling::{FeedbackSampler, FeedbackStrategy, Normalization};
@@ -25,7 +32,11 @@ use l2ight::util::{pool, Rng};
 fn main() {
     let quick = std::env::var("L2IGHT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let threads = pool::global().threads();
-    println!("== perf: L3 hot paths (native simulator + PJRT overhead), {threads} threads ==");
+    let level = simd::active();
+    println!(
+        "== perf: L3 hot paths (native simulator + PJRT overhead), {threads} threads, simd={} ==",
+        level.name()
+    );
     let mut bench = if quick { Bencher::new(20, 3) } else { Bencher::new(400, 20) };
     let mut t = Table::new(&["hot path", "median", "p10", "p90", "notes"]);
 
@@ -46,6 +57,67 @@ fn main() {
     let (med, p10, p90) = last(&bench);
     t.row(&["dense gemm 72x72x64".into(), fmt_ns(med), fmt_ns(p10), fmt_ns(p90), "simulator floor".into()]);
     let gemm_ns = g;
+
+    // 1b. square-GEMM ladder — the SIMD acceptance sizes (256–1024). Quick
+    // mode keeps only 256 so the CI smoke stays cheap; the output buffer is
+    // preallocated so the series measures kernels, not the allocator.
+    let gemm_sizes: &[usize] = if quick { &[256] } else { &[256, 512, 1024] };
+    for &s in gemm_sizes {
+        let a = Mat::randn(s, s, 0.5, &mut rng);
+        let b2 = Mat::randn(s, s, 0.5, &mut rng);
+        let mut c = Mat::zeros(s, s);
+        bench.bench(&format!("dense gemm {s}x{s}x{s}"), || {
+            matmul_into(black_box(&a), black_box(&b2), &mut c);
+        });
+        let (med, p10, p90) = last(&bench);
+        t.row(&[
+            format!("dense gemm {s}x{s}x{s}"),
+            fmt_ns(med),
+            fmt_ns(p10),
+            fmt_ns(p90),
+            "SIMD acceptance".into(),
+        ]);
+    }
+
+    // 1c. conv forward — fused packed-panel vs eager im2col+GEMM (the
+    // §3.4.2 CNN hot loop; 32×144 weight over 8×16×16×16 activations).
+    let csh = Conv2dShape {
+        batch: 8,
+        in_ch: 16,
+        in_h: 16,
+        in_w: 16,
+        out_ch: 32,
+        kernel: 3,
+        stride: 1,
+        padding: 1,
+    };
+    let cinput: Vec<f32> = (0..csh.batch * csh.in_ch * csh.in_h * csh.in_w)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let wconv = Mat::randn(csh.out_ch, csh.patch_rows(), 0.5, &mut rng);
+    let cf = bench.bench("conv fwd fused b8c16x16 k3", || {
+        black_box(conv2d_forward_packed(&wconv, black_box(&cinput), &csh));
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&[
+        "conv fwd fused b8c16x16 k3".into(),
+        fmt_ns(med),
+        fmt_ns(p10),
+        fmt_ns(p90),
+        "packed panels".into(),
+    ]);
+    let ce = bench.bench("conv fwd eager b8c16x16 k3", || {
+        let patches = im2col(black_box(&cinput), &csh);
+        black_box(matmul(&wconv, &patches));
+    });
+    let (med, p10, p90) = last(&bench);
+    t.row(&[
+        "conv fwd eager b8c16x16 k3".into(),
+        fmt_ns(med),
+        fmt_ns(p10),
+        fmt_ns(p90),
+        format!("{:.2}x fused", ce / cf),
+    ]);
 
     // 2. mesh forward (realization cached — the SL steady state).
     let mut mesh = PtcMesh::new(n, n, k, NoiseModel::PAPER, &mut rng);
@@ -146,16 +218,23 @@ fn main() {
 
     let json_path = std::env::var("L2IGHT_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_perf_hotpath.json".to_string());
-    match emit_json(&bench, threads, quick, &json_path) {
+    match emit_json(&bench, threads, level.name(), quick, &json_path) {
         Ok(()) => println!("\nwrote {json_path}"),
         Err(e) => eprintln!("WARN: could not write {json_path}: {e}"),
     }
 }
 
-/// Append this run (median/p10/p90 per hot path, thread count, git rev) to
-/// the machine-readable perf log, keeping the last 50 runs so the perf
-/// trajectory is diffable across commits.
-fn emit_json(bench: &Bencher, threads: usize, quick: bool, path: &str) -> std::io::Result<()> {
+/// Append this run (median/p10/p90 per hot path, thread count, SIMD level,
+/// git rev) to the machine-readable perf log, keeping the last 50 runs so
+/// the perf trajectory is diffable across commits — and so a scalar run
+/// followed by an auto run gives before/after medians in one artifact.
+fn emit_json(
+    bench: &Bencher,
+    threads: usize,
+    simd: &str,
+    quick: bool,
+    path: &str,
+) -> std::io::Result<()> {
     let mut runs: Vec<Json> = std::fs::read_to_string(path)
         .ok()
         .and_then(|src| Json::parse(&src).ok())
@@ -165,6 +244,7 @@ fn emit_json(bench: &Bencher, threads: usize, quick: bool, path: &str) -> std::i
     let mut run = Json::obj();
     run.set("git_rev", Json::Str(git_rev()));
     run.set("threads", Json::Num(threads as f64));
+    run.set("simd", Json::Str(simd.to_string()));
     run.set("quick", Json::Bool(quick));
     run.set("unix_time", Json::Num(unix_time()));
     let mut paths = Vec::new();

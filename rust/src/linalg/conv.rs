@@ -2,8 +2,35 @@
 //! convolutions as blocked matrix multiplications over flattened patches
 //! (paper §3.4.2 Figure 9), so the sampling machinery (column sampling CS vs
 //! spatial sampling SS) operates directly on the im2col layout produced here.
+//!
+//! §Perf — two execution strategies share one layout:
+//!
+//! * **Fused packed-panel** ([`PatchExtractor`] + [`gemm_packed_panels`],
+//!   [`conv2d_forward_packed`], `PtcMesh::forward_packed_on`) — the forward
+//!   path. Fixed-width column panels of the logical patch matrix are
+//!   extracted *directly into pool scratch GEMM packing buffers* and
+//!   consumed immediately by the tiled kernels: the `[Cin·K², B·H'·W']`
+//!   intermediate is never materialized. Panels have a fixed width
+//!   ([`PANEL_COLS`]), independent of the pool, so results are bitwise
+//!   thread-count-invariant; within a SIMD dispatch level the values equal
+//!   the eager `im2col` + GEMM reference (the per-element accumulation
+//!   order over the inner dimension is identical).
+//! * **Eager pooled** ([`im2col_pooled`] / [`col2im_pooled`]) — the
+//!   backward path, where the σ-gradient API consumes a whole patch matrix.
+//!   Parallel pack / per-plane parallel fold, bitwise identical to the
+//!   serial [`im2col`] / [`col2im`] reference (pure gather; per-plane
+//!   accumulation order preserved). The patch matrix exists only for the
+//!   lifetime of one backward call.
 
+use super::gemm::gemm_acc_slices_at;
 use super::mat::Mat;
+use super::simd::{self, SimdLevel};
+use crate::util::pool::{self, Scratch, SendPtr, ThreadPool};
+
+/// Column-panel width of the fused packed-panel path. A fixed constant —
+/// never derived from the pool width — so the panel partition (and with it
+/// every rounding decision) is identical at every thread count.
+pub const PANEL_COLS: usize = 128;
 
 /// Static shape of a conv2d: NCHW input, OIHW kernel.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,6 +64,10 @@ impl Conv2dShape {
 
 /// Unfold an NCHW input (flattened) into the patch matrix X of shape
 /// [Cin·K², B·H'·W']; column index is b·(H'·W') + oh·W' + ow.
+///
+/// Serial reference implementation — the hot paths use [`im2col_pooled`]
+/// (bitwise identical) or skip materialization entirely via
+/// [`PatchExtractor`].
 pub fn im2col(input: &[f32], sh: &Conv2dShape) -> Mat {
     assert_eq!(input.len(), sh.batch * sh.in_ch * sh.in_h * sh.in_w, "im2col input size");
     let (oh, ow) = (sh.out_h(), sh.out_w());
@@ -74,6 +105,9 @@ pub fn im2col(input: &[f32], sh: &Conv2dShape) -> Mat {
 
 /// Fold the patch-matrix gradient back to the NCHW input gradient
 /// (adjoint of `im2col`: overlapping patches accumulate).
+///
+/// Serial reference implementation — the hot paths use [`col2im_pooled`]
+/// (bitwise identical).
 pub fn col2im(cols: &Mat, sh: &Conv2dShape) -> Vec<f32> {
     assert_eq!(cols.rows, sh.patch_rows(), "col2im rows");
     assert_eq!(cols.cols, sh.patch_cols(), "col2im cols");
@@ -105,6 +139,270 @@ pub fn col2im(cols: &Mat, sh: &Conv2dShape) -> Vec<f32> {
         }
     }
     out
+}
+
+// ---------------------------------------------------------------------------
+// Fused packed-panel path
+// ---------------------------------------------------------------------------
+
+/// Scatter a packed row-major panel (`rows` rows of width `wpan`) into
+/// columns `[c0, c0+wpan)` of a row-major destination with row stride
+/// `total_cols` — the single home of the packed paths' column-scatter
+/// (used by [`gemm_packed_panels_at`], [`im2col_pooled_on`], and
+/// `PtcMesh::forward_packed_on`).
+///
+/// # Safety
+/// The caller must own columns `[c0, c0+wpan)` of every destination row
+/// exclusively for the duration of the call (the panel-partition argument
+/// of the packed paths), and the destination allocation must cover
+/// `rows · total_cols` elements.
+pub(crate) unsafe fn scatter_panel(
+    dst: SendPtr<f32>,
+    total_cols: usize,
+    c0: usize,
+    wpan: usize,
+    rows: usize,
+    src: &[f32],
+) {
+    debug_assert!(src.len() >= rows * wpan && c0 + wpan <= total_cols);
+    for r in 0..rows {
+        std::ptr::copy_nonoverlapping(
+            src[r * wpan..].as_ptr(),
+            dst.0.add(r * total_cols + c0),
+            wpan,
+        );
+    }
+}
+
+/// On-demand patch-panel extractor: produces column sub-panels of the
+/// logical im2col matrix without ever materializing it. The values written
+/// are exactly those of [`im2col`] restricted to the requested column range
+/// (a pure gather — no arithmetic), so every consumer inherits im2col's
+/// numerics verbatim.
+pub struct PatchExtractor<'a> {
+    input: &'a [f32],
+    sh: Conv2dShape,
+}
+
+impl<'a> PatchExtractor<'a> {
+    pub fn new(input: &'a [f32], sh: &Conv2dShape) -> PatchExtractor<'a> {
+        assert_eq!(
+            input.len(),
+            sh.batch * sh.in_ch * sh.in_h * sh.in_w,
+            "PatchExtractor input size"
+        );
+        PatchExtractor { input, sh: *sh }
+    }
+
+    /// Write columns `[c0, c1)` of the patch matrix into `dst`, row-major
+    /// with row stride `c1 - c0`. `dst` must be pre-zeroed (the extractor
+    /// only writes in-bounds input values; padding positions — and any rows
+    /// past `patch_rows` in an over-tall buffer — stay zero, which is how
+    /// the mesh path fuses its `q·k` row padding for free).
+    ///
+    /// Iteration is grouped into runs of output pixels sharing `(b, o_r)`,
+    /// so stride-1 convolutions degrade to `copy_from_slice` per kernel
+    /// tap — patch extraction is memcpy-bound, not index-arithmetic-bound.
+    pub fn pack_into(&self, c0: usize, c1: usize, dst: &mut [f32]) {
+        let sh = &self.sh;
+        let (oh, ow) = (sh.out_h(), sh.out_w());
+        let ohw = oh * ow;
+        let wpan = c1 - c0;
+        debug_assert!(c1 <= sh.patch_cols() && dst.len() >= sh.patch_rows() * wpan);
+        let hw = sh.in_h * sh.in_w;
+        let kk = sh.kernel;
+        let mut col = c0;
+        while col < c1 {
+            let b = col / ohw;
+            let rem = col - b * ohw;
+            let o_r = rem / ow;
+            let o_c0 = rem - o_r * ow;
+            // Columns [col, col+run) share (b, o_r) and walk o_c contiguously.
+            let run = (ow - o_c0).min(c1 - col);
+            let d0 = col - c0;
+            for c in 0..sh.in_ch {
+                let plane = &self.input[(b * sh.in_ch + c) * hw..(b * sh.in_ch + c + 1) * hw];
+                for kr in 0..kk {
+                    let ir = (o_r * sh.stride + kr) as isize - sh.padding as isize;
+                    if ir < 0 || ir as usize >= sh.in_h {
+                        continue; // whole tap row out of bounds → stays zero
+                    }
+                    let irow = &plane[ir as usize * sh.in_w..(ir as usize + 1) * sh.in_w];
+                    for kc in 0..kk {
+                        let row = (c * kk + kr) * kk + kc;
+                        let drow = &mut dst[row * wpan + d0..row * wpan + d0 + run];
+                        if sh.stride == 1 {
+                            // ic = o_c0 + j + kc - padding: one contiguous
+                            // in-bounds segment per (kr, kc).
+                            let ic0 = o_c0 as isize + kc as isize - sh.padding as isize;
+                            let j_lo = (-ic0).max(0) as usize;
+                            let j_hi = (sh.in_w as isize - ic0).clamp(0, run as isize) as usize;
+                            if j_lo < j_hi {
+                                let s0 = (ic0 + j_lo as isize) as usize;
+                                drow[j_lo..j_hi]
+                                    .copy_from_slice(&irow[s0..s0 + (j_hi - j_lo)]);
+                            }
+                        } else {
+                            for (j, d) in drow.iter_mut().enumerate() {
+                                let ic = ((o_c0 + j) * sh.stride + kc) as isize
+                                    - sh.padding as isize;
+                                if ic >= 0 && (ic as usize) < sh.in_w {
+                                    *d = irow[ic as usize];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            col += run;
+        }
+    }
+}
+
+/// Y = W · X for a packed X that is never materialized: `pack(c0, c1, dst)`
+/// fills column panel `[c0, c1)` of the logical `[kk × total_cols]` operand
+/// (row stride `c1 - c0`, pre-zeroed scratch). Panels are GEMMed in pool
+/// scratch and scattered into Y's columns — the fused im2col-GEMM engine
+/// for digital conv layers. Within a dispatch level results are bitwise
+/// equal to `matmul(w, x_full)` at every thread count.
+pub fn gemm_packed_panels_at<P>(
+    level: SimdLevel,
+    pool: &ThreadPool,
+    w: &Mat,
+    total_cols: usize,
+    pack: &P,
+) -> Mat
+where
+    P: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let (m, kk) = (w.rows, w.cols);
+    let mut y = Mat::zeros(m, total_cols);
+    if m == 0 || total_cols == 0 {
+        return y;
+    }
+    let panels = total_cols.div_ceil(PANEL_COLS);
+    let yptr = SendPtr(y.data.as_mut_ptr());
+    pool.parallel_for_sized(panels, 2 * m * kk * total_cols, |ti| {
+        let c0 = ti * PANEL_COLS;
+        let c1 = (c0 + PANEL_COLS).min(total_cols);
+        let wpan = c1 - c0;
+        let mut xbuf = Scratch::take(kk * wpan);
+        pack(c0, c1, &mut xbuf);
+        let mut ybuf = Scratch::take(m * wpan);
+        gemm_acc_slices_at(level, &w.data, m, kk, &xbuf, wpan, &mut ybuf);
+        // Safety: panel ti owns columns [c0, c1) of every row of Y.
+        unsafe { scatter_panel(yptr, total_cols, c0, wpan, m, &ybuf) };
+    });
+    y
+}
+
+/// [`gemm_packed_panels_at`] at the process-wide dispatch level.
+pub fn gemm_packed_panels<P>(pool: &ThreadPool, w: &Mat, total_cols: usize, pack: &P) -> Mat
+where
+    P: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    gemm_packed_panels_at(simd::active(), pool, w, total_cols, pack)
+}
+
+/// Fused conv forward Y = W · im2col(input) without materializing the
+/// patch matrix, at an explicit dispatch level (tests pin levels here).
+pub fn conv2d_forward_packed_at(
+    level: SimdLevel,
+    pool: &ThreadPool,
+    w: &Mat,
+    input: &[f32],
+    sh: &Conv2dShape,
+) -> Mat {
+    assert_eq!(w.cols, sh.patch_rows(), "conv2d_forward_packed weight cols");
+    let ex = PatchExtractor::new(input, sh);
+    gemm_packed_panels_at(level, pool, w, sh.patch_cols(), &|c0, c1, dst: &mut [f32]| {
+        ex.pack_into(c0, c1, dst)
+    })
+}
+
+/// Fused conv forward at the process-wide dispatch level and global pool.
+pub fn conv2d_forward_packed(w: &Mat, input: &[f32], sh: &Conv2dShape) -> Mat {
+    conv2d_forward_packed_at(simd::active(), pool::global(), w, input, sh)
+}
+
+// ---------------------------------------------------------------------------
+// Pooled eager materialization (backward path)
+// ---------------------------------------------------------------------------
+
+/// Parallel [`im2col`] on an explicit pool: fixed-width column panels are
+/// packed into scratch and scattered into the full matrix. A pure gather,
+/// bitwise identical to the serial reference at every thread count.
+pub fn im2col_pooled_on(pool: &ThreadPool, input: &[f32], sh: &Conv2dShape) -> Mat {
+    let (rows, cols) = (sh.patch_rows(), sh.patch_cols());
+    let mut x = Mat::zeros(rows, cols);
+    if rows == 0 || cols == 0 {
+        return x;
+    }
+    let ex = PatchExtractor::new(input, sh);
+    let panels = cols.div_ceil(PANEL_COLS);
+    let xptr = SendPtr(x.data.as_mut_ptr());
+    pool.parallel_for_sized(panels, rows * cols, |ti| {
+        let c0 = ti * PANEL_COLS;
+        let c1 = (c0 + PANEL_COLS).min(cols);
+        let wpan = c1 - c0;
+        let mut buf = Scratch::take(rows * wpan);
+        ex.pack_into(c0, c1, &mut buf);
+        // Safety: panel ti owns columns [c0, c1) of every row of X.
+        unsafe { scatter_panel(xptr, cols, c0, wpan, rows, &buf) };
+    });
+    x
+}
+
+/// [`im2col_pooled_on`] over the global pool.
+pub fn im2col_pooled(input: &[f32], sh: &Conv2dShape) -> Mat {
+    im2col_pooled_on(pool::global(), input, sh)
+}
+
+/// Parallel [`col2im`] on an explicit pool: one task per (batch, channel)
+/// input plane, preserving the serial per-plane accumulation order — the
+/// fold is bitwise identical to the reference at every thread count.
+pub fn col2im_pooled_on(pool: &ThreadPool, cols: &Mat, sh: &Conv2dShape) -> Vec<f32> {
+    assert_eq!(cols.rows, sh.patch_rows(), "col2im rows");
+    assert_eq!(cols.cols, sh.patch_cols(), "col2im cols");
+    let (oh, ow) = (sh.out_h(), sh.out_w());
+    let hw = sh.in_h * sh.in_w;
+    let planes = sh.batch * sh.in_ch;
+    let mut out = vec![0.0f32; planes * hw];
+    if planes == 0 {
+        return out;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.parallel_for_sized(planes, sh.patch_rows() * sh.patch_cols(), |pl| {
+        let b = pl / sh.in_ch;
+        let c = pl % sh.in_ch;
+        // Safety: plane pl owns out[pl·hw .. (pl+1)·hw] exclusively.
+        let plane = unsafe { std::slice::from_raw_parts_mut(optr.0.add(pl * hw), hw) };
+        for kr in 0..sh.kernel {
+            for kc in 0..sh.kernel {
+                let row = (c * sh.kernel + kr) * sh.kernel + kc;
+                for o_r in 0..oh {
+                    let ir = (o_r * sh.stride + kr) as isize - sh.padding as isize;
+                    if ir < 0 || ir as usize >= sh.in_h {
+                        continue;
+                    }
+                    for o_c in 0..ow {
+                        let ic = (o_c * sh.stride + kc) as isize - sh.padding as isize;
+                        if ic < 0 || ic as usize >= sh.in_w {
+                            continue;
+                        }
+                        let col = b * (oh * ow) + o_r * ow + o_c;
+                        plane[ir as usize * sh.in_w + ic as usize] += cols[(row, col)];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// [`col2im_pooled_on`] over the global pool.
+pub fn col2im_pooled(cols: &Mat, sh: &Conv2dShape) -> Vec<f32> {
+    col2im_pooled_on(pool::global(), cols, sh)
 }
 
 #[cfg(test)]
@@ -226,6 +524,61 @@ mod tests {
                 let rhs: f32 = x.iter().zip(&back).map(|(a, b)| a * b).sum();
                 if (lhs - rhs).abs() > 1e-3 * (1.0 + lhs.abs()) {
                     return Err(format!("adjoint mismatch {lhs} vs {rhs}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_patch_extractor_matches_im2col_bitwise() {
+        // Every panel split of the extractor reproduces the eager patch
+        // matrix exactly — strides, padding (including padding ≥ kernel),
+        // non-square inputs, 1×1 kernels.
+        quickcheck(
+            "pack_into == im2col columns",
+            |rng, size| {
+                let h = 2 + size % 6;
+                let w = 2 + (size / 2) % 7; // non-square
+                let k = 1 + size % 3;
+                let sh = Conv2dShape {
+                    batch: 1 + size % 3,
+                    in_ch: 1 + size % 2,
+                    in_h: h,
+                    in_w: w,
+                    out_ch: 1,
+                    kernel: k.min(h).min(w),
+                    stride: 1 + size % 3,
+                    padding: size % 4, // can exceed the kernel
+                };
+                let n_in = sh.batch * sh.in_ch * h * w;
+                let input: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32).collect();
+                let width = 1 + size % 5; // deliberately odd panel widths
+                (sh, input, width)
+            },
+            |(sh, input, width)| {
+                let eager = im2col(input, sh);
+                let ex = PatchExtractor::new(input, sh);
+                let rows = sh.patch_rows();
+                let cols = sh.patch_cols();
+                let mut c0 = 0;
+                while c0 < cols {
+                    let c1 = (c0 + width).min(cols);
+                    let wpan = c1 - c0;
+                    let mut buf = vec![0.0f32; rows * wpan];
+                    ex.pack_into(c0, c1, &mut buf);
+                    for r in 0..rows {
+                        for j in 0..wpan {
+                            let (got, want) = (buf[r * wpan + j], eager[(r, c0 + j)]);
+                            if got != want {
+                                return Err(format!(
+                                    "({r},{}) got {got} want {want} (panel {c0}..{c1})",
+                                    c0 + j
+                                ));
+                            }
+                        }
+                    }
+                    c0 = c1;
                 }
                 Ok(())
             },

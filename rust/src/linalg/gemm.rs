@@ -1,33 +1,41 @@
 //! GEMM micro-kernels — the native simulator's compute engine.
 //!
-//! Two layers:
+//! Three layers:
 //!
-//! * **Slice kernels** (`gemm_acc_slices`, `gemm_at_b_acc_band`,
-//!   `gemm_a_bt_acc_slices`) — register-tiled inner loops over raw row-major
-//!   storage. The A·B and Aᵀ·B kernels process 4 rows per pass so each
-//!   loaded B row (or C row) is reused 4×, and the inner j-loops are
-//!   independent-lane updates that auto-vectorize without fast-math. The
-//!   A·Bᵀ kernel tiles 4 dot products per A-row load (4 independent
-//!   accumulator chains for ILP) and skips all-zero A rows (ReLU-sparse
-//!   upstream gradients). Operating on slices lets the mesh hot paths feed
-//!   sub-panels of padded activations directly — no per-call `Vec<Mat>`
-//!   panel slicing.
+//! * **SIMD dispatch** ([`super::simd`]) — every slice kernel resolves to
+//!   an AVX2+FMA 8-lane implementation or the portable scalar one, picked
+//!   once per process from `L2IGHT_SIMD` (`auto`|`avx2`|`scalar`). The
+//!   `*_at` variants take an explicit [`SimdLevel`] so tests, benches, and
+//!   CI legs can pin a level; the unsuffixed entry points use
+//!   [`simd::active`].
+//! * **Slice kernels** (`gemm_acc_slices*`, `gemm_at_b_acc_band*`,
+//!   `gemm_a_bt_acc_slices*`) — register-tiled inner loops over raw
+//!   row-major storage. The A·B and Aᵀ·B kernels process 4 rows per pass so
+//!   each loaded B row (or C row) is reused 4×, and the inner j-loops are
+//!   independent-lane updates (auto-vectorized in the scalar kernels,
+//!   explicit 8-lane FMA in the AVX2 ones). The A·Bᵀ kernel tiles 4 dot
+//!   products per A-row load (4 independent accumulator chains for ILP) and
+//!   skips all-zero A rows (ReLU-sparse upstream gradients). Operating on
+//!   slices lets the mesh hot paths feed sub-panels of padded activations
+//!   directly — no per-call `Vec<Mat>` panel slicing.
 //! * **`Mat` wrappers** (`matmul*`) — shape-checked entry points that band
 //!   the output rows across the shared thread pool (`util::pool`) when the
 //!   product is large enough to amortize a pool wakeup. Banding partitions
 //!   output elements, so per-element accumulation order — and therefore the
-//!   result — is identical at every thread count.
+//!   result — is identical at every thread count *within a dispatch level*.
 
 use super::mat::Mat;
+use super::simd::{self, SimdLevel};
 use crate::util::pool::{self, SendPtr, PAR_MIN_WORK};
 
 // ---------------------------------------------------------------------------
-// Slice kernels
+// Slice kernels — scalar reference implementations
 // ---------------------------------------------------------------------------
 
-/// C[m×n] += A[m×kk] · B[kk×n] over raw row-major slices.
-/// Register-tiled: 4 C rows per pass share each loaded B row.
-pub fn gemm_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &mut [f32]) {
+/// Portable scalar C[m×n] += A[m×kk] · B[kk×n] over raw row-major slices.
+/// Register-tiled: 4 C rows per pass share each loaded B row. Bitwise
+/// identical to the seed-era engine (pre-SIMD numerics).
+pub fn gemm_acc_slices_scalar(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &mut [f32]) {
     debug_assert!(a.len() >= m * kk && b.len() >= kk * n && c.len() >= m * n);
     let mut i = 0;
     while i + 4 <= m {
@@ -70,10 +78,12 @@ pub fn gemm_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &
     }
 }
 
-/// C[i0..i1, n] += (Aᵀ·B)[i0..i1, n] where A is [kk×m] and B is [kk×n],
-/// writing into `c_band` (rows `i0..i1` only — the unit of pool banding).
-/// 4 A/B row pairs per pass so each C row is touched kk/4 times.
-pub fn gemm_at_b_acc_band(
+/// Portable scalar C[i0..i1, n] += (Aᵀ·B)[i0..i1, n] where A is [kk×m] and
+/// B is [kk×n], writing into `c_band` (rows `i0..i1` only — the unit of
+/// pool banding). 4 A/B row pairs per pass so each C row is touched kk/4
+/// times.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_at_b_acc_band_scalar(
     a: &[f32],
     kk: usize,
     m: usize,
@@ -123,10 +133,18 @@ pub fn gemm_at_b_acc_band(
     }
 }
 
-/// C[m×p] += A[m×kk] · B[p×kk]ᵀ (dot-product layout). Tiles 4 B rows per
-/// A-row pass (4 independent accumulator chains) and skips all-zero A rows —
-/// the zero-skip fast path for ReLU-sparse upstream gradients.
-pub fn gemm_a_bt_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize, c: &mut [f32]) {
+/// Portable scalar C[m×p] += A[m×kk] · B[p×kk]ᵀ (dot-product layout).
+/// Tiles 4 B rows per A-row pass (4 independent accumulator chains) and
+/// skips all-zero A rows — the zero-skip fast path for ReLU-sparse
+/// upstream gradients.
+pub fn gemm_a_bt_acc_slices_scalar(
+    a: &[f32],
+    m: usize,
+    kk: usize,
+    b: &[f32],
+    p: usize,
+    c: &mut [f32],
+) {
     debug_assert!(a.len() >= m * kk && b.len() >= p * kk && c.len() >= m * p);
     for i in 0..m {
         let ar = &a[i * kk..(i + 1) * kk];
@@ -165,6 +183,125 @@ pub fn gemm_a_bt_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize,
     }
 }
 
+fn dot_mul_scalar(x: &[f32], y: &[f32], len: usize) -> f32 {
+    let mut s = 0.0f32;
+    for (p, q) in x[..len].iter().zip(&y[..len]) {
+        s += p * q;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Slice kernels — SIMD dispatch
+// ---------------------------------------------------------------------------
+
+/// C[m×n] += A[m×kk] · B[kk×n] at an explicit dispatch level. Pinning
+/// `Avx2` on a CPU without AVX2+FMA is the caller's bug — check
+/// [`simd::avx2_available`] first (the unsuffixed entry points go through
+/// [`simd::active`], which only selects detected levels).
+pub fn gemm_acc_slices_at(
+    level: SimdLevel,
+    a: &[f32],
+    m: usize,
+    kk: usize,
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only reachable after runtime feature detection
+        // (see the doc contract above).
+        SimdLevel::Avx2 => unsafe { simd::avx2::gemm_acc(a, m, kk, b, n, c) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdLevel::Avx2 => gemm_acc_slices_scalar(a, m, kk, b, n, c),
+        SimdLevel::Scalar => gemm_acc_slices_scalar(a, m, kk, b, n, c),
+    }
+}
+
+/// C[m×n] += A[m×kk] · B[kk×n] at the process-wide dispatch level.
+pub fn gemm_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &mut [f32]) {
+    gemm_acc_slices_at(simd::active(), a, m, kk, b, n, c)
+}
+
+/// Banded Aᵀ·B accumulate at an explicit dispatch level (see
+/// [`gemm_acc_slices_at`] for the level contract).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_at_b_acc_band_at(
+    level: SimdLevel,
+    a: &[f32],
+    kk: usize,
+    m: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    i1: usize,
+    c_band: &mut [f32],
+) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only reachable after runtime feature detection.
+        SimdLevel::Avx2 => unsafe { simd::avx2::gemm_at_b_band(a, kk, m, b, n, i0, i1, c_band) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdLevel::Avx2 => gemm_at_b_acc_band_scalar(a, kk, m, b, n, i0, i1, c_band),
+        SimdLevel::Scalar => gemm_at_b_acc_band_scalar(a, kk, m, b, n, i0, i1, c_band),
+    }
+}
+
+/// C[i0..i1, n] += (Aᵀ·B)[i0..i1, n] at the process-wide dispatch level.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_at_b_acc_band(
+    a: &[f32],
+    kk: usize,
+    m: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    i1: usize,
+    c_band: &mut [f32],
+) {
+    gemm_at_b_acc_band_at(simd::active(), a, kk, m, b, n, i0, i1, c_band)
+}
+
+/// A·Bᵀ accumulate at an explicit dispatch level (see
+/// [`gemm_acc_slices_at`] for the level contract).
+pub fn gemm_a_bt_acc_slices_at(
+    level: SimdLevel,
+    a: &[f32],
+    m: usize,
+    kk: usize,
+    b: &[f32],
+    p: usize,
+    c: &mut [f32],
+) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only reachable after runtime feature detection.
+        SimdLevel::Avx2 => unsafe { simd::avx2::gemm_a_bt(a, m, kk, b, p, c) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdLevel::Avx2 => gemm_a_bt_acc_slices_scalar(a, m, kk, b, p, c),
+        SimdLevel::Scalar => gemm_a_bt_acc_slices_scalar(a, m, kk, b, p, c),
+    }
+}
+
+/// C[m×p] += A[m×kk] · B[p×kk]ᵀ at the process-wide dispatch level.
+pub fn gemm_a_bt_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize, c: &mut [f32]) {
+    gemm_a_bt_acc_slices_at(simd::active(), a, m, kk, b, p, c)
+}
+
+/// Σ_j x[j]·y[j] over `len` elements at an explicit dispatch level — the
+/// Eq. 5 Hadamard reduction (scalar: seed-order sequential sum).
+pub fn dot_mul_at(level: SimdLevel, x: &[f32], y: &[f32], len: usize) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only reachable after runtime feature detection.
+        SimdLevel::Avx2 => unsafe { simd::avx2::dot_mul(x, y, len) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdLevel::Avx2 => dot_mul_scalar(x, y, len),
+        SimdLevel::Scalar => dot_mul_scalar(x, y, len),
+    }
+}
+
 /// Rows per band when splitting `rows` of `work_per_row` flops across the
 /// pool. Depends only on the problem size — never on the pool width — and
 /// is a multiple of 4 so every band starts on a 4-row tile boundary: the
@@ -188,9 +325,9 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C += A · B into preallocated storage (C must be zeroed by the caller if a
-/// fresh product is wanted).
-pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+/// C += A · B into preallocated storage, pool-banded, at an explicit
+/// dispatch level — the bench/CI hook for before/after SIMD comparisons.
+pub fn matmul_acc_at(level: SimdLevel, a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "matmul_acc inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_acc out shape");
     let (m, kk, n) = (a.rows, a.cols, b.cols);
@@ -203,17 +340,28 @@ pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
             let r1 = (r0 + band).min(m);
             // Safety: bands partition C's rows; chunk ci touches only its band.
             let cb = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
-            gemm_acc_slices(&a.data[r0 * kk..r1 * kk], r1 - r0, kk, &b.data, n, cb);
+            gemm_acc_slices_at(level, &a.data[r0 * kk..r1 * kk], r1 - r0, kk, &b.data, n, cb);
         });
     } else {
-        gemm_acc_slices(&a.data, m, kk, &b.data, n, &mut c.data);
+        gemm_acc_slices_at(level, &a.data, m, kk, &b.data, n, &mut c.data);
     }
+}
+
+/// C += A · B into preallocated storage (C must be zeroed by the caller if a
+/// fresh product is wanted).
+pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    matmul_acc_at(simd::active(), a, b, c)
+}
+
+/// C = A · B into preallocated storage at an explicit dispatch level.
+pub fn matmul_into_at(level: SimdLevel, a: &Mat, b: &Mat, c: &mut Mat) {
+    c.data.fill(0.0);
+    matmul_acc_at(level, a, b, c);
 }
 
 /// C = A · B into preallocated storage.
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
-    c.data.fill(0.0);
-    matmul_acc(a, b, c);
+    matmul_into_at(simd::active(), a, b, c)
 }
 
 /// C = Aᵀ · B without forming Aᵀ.
@@ -228,6 +376,7 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.rows, b.rows, "matmul_at_b inner dim");
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_at_b out shape");
+    let level = simd::active();
     let (kk, m, n) = (a.rows, a.cols, b.cols);
     if m > 4 && m * kk * n >= PAR_MIN_WORK {
         let band = band_rows(kk * n);
@@ -238,11 +387,11 @@ pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
             let r1 = (r0 + band).min(m);
             let cb = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
             cb.fill(0.0);
-            gemm_at_b_acc_band(&a.data, kk, m, &b.data, n, r0, r1, cb);
+            gemm_at_b_acc_band_at(level, &a.data, kk, m, &b.data, n, r0, r1, cb);
         });
     } else {
         c.data.fill(0.0);
-        gemm_at_b_acc_band(&a.data, kk, m, &b.data, n, 0, m, &mut c.data);
+        gemm_at_b_acc_band_at(level, &a.data, kk, m, &b.data, n, 0, m, &mut c.data);
     }
 }
 
@@ -267,6 +416,7 @@ pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
 pub fn matmul_a_bt_acc(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols, "matmul_a_bt_acc inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_a_bt_acc out shape");
+    let level = simd::active();
     let (m, kk, p) = (a.rows, a.cols, b.rows);
     if m > 4 && m * kk * p >= PAR_MIN_WORK {
         let band = band_rows(kk * p);
@@ -276,18 +426,19 @@ pub fn matmul_a_bt_acc(a: &Mat, b: &Mat, c: &mut Mat) {
             let r0 = ci * band;
             let r1 = (r0 + band).min(m);
             let cb = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * p), (r1 - r0) * p) };
-            gemm_a_bt_acc_slices(&a.data[r0 * kk..r1 * kk], r1 - r0, kk, &b.data, p, cb);
+            gemm_a_bt_acc_slices_at(level, &a.data[r0 * kk..r1 * kk], r1 - r0, kk, &b.data, p, cb);
         });
     } else {
-        gemm_a_bt_acc_slices(&a.data, m, kk, &b.data, p, &mut c.data);
+        gemm_a_bt_acc_slices_at(level, &a.data, m, kk, &b.data, p, &mut c.data);
     }
 }
 
-/// Eq. 5 inner kernel over raw k×B panels: acc[i] += scale · Σ_b
-/// (Uᵀ·dy)[i,b] ⊙ (V·x)[i,b], with caller-provided scratch for the two
-/// intermediate k×B products.
+/// Eq. 5 inner kernel over raw k×B panels at an explicit dispatch level:
+/// acc[i] += scale · Σ_b (Uᵀ·dy)[i,b] ⊙ (V·x)[i,b], with caller-provided
+/// scratch for the two intermediate k×B products.
 #[allow(clippy::too_many_arguments)]
-pub fn sigma_grad_block_slices(
+pub fn sigma_grad_block_slices_at(
+    level: SimdLevel,
     u: &Mat,
     v: &Mat,
     dy_panel: &[f32],
@@ -302,18 +453,29 @@ pub fn sigma_grad_block_slices(
     debug_assert!(dy_panel.len() >= k * b && x_panel.len() >= k * b);
     debug_assert!(ut_y.len() >= k * b && vx.len() >= k * b && acc.len() >= k);
     ut_y[..k * b].fill(0.0);
-    gemm_at_b_acc_band(&u.data, k, k, dy_panel, b, 0, k, ut_y);
+    gemm_at_b_acc_band_at(level, &u.data, k, k, dy_panel, b, 0, k, ut_y);
     vx[..k * b].fill(0.0);
-    gemm_acc_slices(&v.data, k, k, x_panel, b, vx);
+    gemm_acc_slices_at(level, &v.data, k, k, x_panel, b, vx);
     for (i, g) in acc.iter_mut().enumerate().take(k) {
-        let ar = &ut_y[i * b..(i + 1) * b];
-        let cr = &vx[i * b..(i + 1) * b];
-        let mut s = 0.0f32;
-        for (p, q) in ar.iter().zip(cr) {
-            s += p * q;
-        }
+        let s = dot_mul_at(level, &ut_y[i * b..(i + 1) * b], &vx[i * b..(i + 1) * b], b);
         *g += s * scale;
     }
+}
+
+/// Eq. 5 inner kernel at the process-wide dispatch level.
+#[allow(clippy::too_many_arguments)]
+pub fn sigma_grad_block_slices(
+    u: &Mat,
+    v: &Mat,
+    dy_panel: &[f32],
+    x_panel: &[f32],
+    b: usize,
+    scale: f32,
+    ut_y: &mut [f32],
+    vx: &mut [f32],
+    acc: &mut [f32],
+) {
+    sigma_grad_block_slices_at(simd::active(), u, v, dy_panel, x_panel, b, scale, ut_y, vx, acc)
 }
 
 /// Hot-path helper for Eq. 5 with `Mat` scratch (kept for compatibility —
@@ -533,5 +695,85 @@ mod tests {
         let mut joined = lo;
         joined.extend_from_slice(&hi);
         assert_close(&joined, &full.data, 1e-6, 1e-6).unwrap();
+    }
+
+    // ---------------------------------------------------------------
+    // SIMD dispatch
+    // ---------------------------------------------------------------
+
+    /// Random shapes that cover pure-tail (< 8 lanes), mixed, and
+    /// multi-lane bodies plus odd row counts around the 4-row tiles.
+    fn simd_case(rng: &mut Rng, size: usize) -> (Mat, Mat, Mat) {
+        let m = 1 + size % 13;
+        let k = 1 + (size / 2) % 21;
+        let n = 1 + (size / 3) % 19;
+        (Mat::randn(m, k, 1.0, rng), Mat::randn(k, n, 1.0, rng), Mat::randn(n, k, 1.0, rng))
+    }
+
+    #[test]
+    fn prop_avx2_kernels_match_scalar() {
+        if !simd::avx2_available() {
+            return; // nothing to compare on this CPU
+        }
+        quickcheck(
+            "avx2 kernels ≈ scalar kernels",
+            |rng, size| simd_case(rng, size),
+            |(a, b, bt)| {
+                let (m, k, n) = (a.rows, a.cols, b.cols);
+                // A·B
+                let mut cs = vec![0.1f32; m * n];
+                let mut cv = vec![0.1f32; m * n];
+                gemm_acc_slices_at(SimdLevel::Scalar, &a.data, m, k, &b.data, n, &mut cs);
+                gemm_acc_slices_at(SimdLevel::Avx2, &a.data, m, k, &b.data, n, &mut cv);
+                assert_close(&cs, &cv, 1e-4, 1e-4).map_err(|e| format!("A·B: {e}"))?;
+                // Aᵀ·B: reinterpret a's [m·k] storage as a [k×m] operand so
+                // it contracts against b's k rows (kk=k, output rows 0..m).
+                let mut ds = vec![0.2f32; m * n];
+                let mut dv = vec![0.2f32; m * n];
+                gemm_at_b_acc_band_at(SimdLevel::Scalar, &a.data, k, m, &b.data, n, 0, m, &mut ds);
+                gemm_at_b_acc_band_at(SimdLevel::Avx2, &a.data, k, m, &b.data, n, 0, m, &mut dv);
+                assert_close(&ds, &dv, 1e-4, 1e-4).map_err(|e| format!("Aᵀ·B: {e}"))?;
+                // A·Bᵀ
+                let p = bt.rows;
+                let mut es = vec![0.3f32; m * p];
+                let mut ev = vec![0.3f32; m * p];
+                gemm_a_bt_acc_slices_at(SimdLevel::Scalar, &a.data, m, k, &bt.data, p, &mut es);
+                gemm_a_bt_acc_slices_at(SimdLevel::Avx2, &a.data, m, k, &bt.data, p, &mut ev);
+                assert_close(&es, &ev, 1e-4, 1e-4).map_err(|e| format!("A·Bᵀ: {e}"))
+            },
+        );
+    }
+
+    #[test]
+    fn avx2_preserves_zero_skip_exactness() {
+        if !simd::avx2_available() {
+            return;
+        }
+        let mut rng = Rng::new(36);
+        let mut a = Mat::randn(6, 9, 1.0, &mut rng);
+        for v in a.row_mut(3) {
+            *v = 0.0;
+        }
+        let b = Mat::randn(5, 9, 1.0, &mut rng);
+        let mut c = vec![0.0f32; 6 * 5];
+        gemm_a_bt_acc_slices_at(SimdLevel::Avx2, &a.data, 6, 9, &b.data, 5, &mut c);
+        assert!(c[3 * 5..4 * 5].iter().all(|&v| v == 0.0), "zero row must be skipped");
+    }
+
+    #[test]
+    fn dot_mul_levels_agree() {
+        let x: Vec<f32> = (0..23).map(|i| 0.5 - 0.1 * i as f32).collect();
+        let y: Vec<f32> = (0..23).map(|i| 0.2 * i as f32 - 1.0).collect();
+        let s = dot_mul_at(SimdLevel::Scalar, &x, &y, 23);
+        if simd::avx2_available() {
+            let v = dot_mul_at(SimdLevel::Avx2, &x, &y, 23);
+            assert!((s - v).abs() < 1e-4 * (1.0 + s.abs()), "{s} vs {v}");
+        }
+        // Scalar path is the exact sequential sum.
+        let mut want = 0.0f32;
+        for (a, b) in x.iter().zip(&y) {
+            want += a * b;
+        }
+        assert_eq!(s, want);
     }
 }

@@ -1,19 +1,27 @@
 //! Dense linear algebra substrate: a row-major f32 matrix type, a
-//! register-tiled + pool-parallel GEMM engine (the native-simulator hot
-//! path — see DESIGN.md §8 and `gemm`'s module docs), one-sided Jacobi SVD
-//! for the k×k photonic blocks, and im2col/col2im for the convolution
-//! layers.
+//! register-tiled + pool-parallel + SIMD-dispatched GEMM engine (the
+//! native-simulator hot path — see DESIGN.md §8, `gemm`'s and `simd`'s
+//! module docs), one-sided Jacobi SVD for the k×k photonic blocks, and the
+//! im2col/col2im conv lowering with its fused packed-panel execution path.
 
 pub mod mat;
+pub mod simd;
 pub mod gemm;
 pub mod svd;
 pub mod conv;
 
-pub use conv::{col2im, im2col, Conv2dShape};
+pub use conv::{
+    col2im, col2im_pooled, col2im_pooled_on, conv2d_forward_packed, conv2d_forward_packed_at,
+    gemm_packed_panels, gemm_packed_panels_at, im2col, im2col_pooled, im2col_pooled_on,
+    Conv2dShape, PatchExtractor, PANEL_COLS,
+};
 pub use gemm::{
-    gemm_a_bt_acc_slices, gemm_acc_slices, gemm_at_b_acc_band, matmul, matmul_a_bt,
-    matmul_a_bt_acc, matmul_a_bt_into, matmul_acc, matmul_at_b, matmul_at_b_into, matmul_into,
-    matvec, sigma_grad_block, sigma_grad_block_slices,
+    dot_mul_at, gemm_a_bt_acc_slices, gemm_a_bt_acc_slices_at, gemm_a_bt_acc_slices_scalar,
+    gemm_acc_slices, gemm_acc_slices_at, gemm_acc_slices_scalar, gemm_at_b_acc_band,
+    gemm_at_b_acc_band_at, gemm_at_b_acc_band_scalar, matmul, matmul_a_bt, matmul_a_bt_acc,
+    matmul_a_bt_into, matmul_acc, matmul_acc_at, matmul_at_b, matmul_at_b_into, matmul_into,
+    matmul_into_at, matvec, sigma_grad_block, sigma_grad_block_slices, sigma_grad_block_slices_at,
 };
 pub use mat::Mat;
+pub use simd::SimdLevel;
 pub use svd::{svd_kxk, Svd};

@@ -1,0 +1,432 @@
+//! Runtime-dispatched SIMD layer under the GEMM engine.
+//!
+//! Two kernel families sit behind one dispatch switch:
+//!
+//! * **AVX2 + FMA** (`avx2`, x86_64 only) — 8-lane fused-multiply-add
+//!   versions of every slice microkernel in [`super::gemm`], selected at
+//!   runtime via CPU feature detection.
+//! * **Portable scalar** — the seed-era auto-vectorizable loops in
+//!   [`super::gemm`] itself; always available and bitwise-identical to the
+//!   pre-SIMD engine on every platform.
+//!
+//! The level is resolved **once per process** from `L2IGHT_SIMD`
+//! (`auto` | `avx2` | `scalar`, default `auto` = best available) by
+//! [`active`]; every hot-path kernel call dispatches on it.
+//!
+//! ## Determinism contract
+//!
+//! Within one dispatch level, lane order and accumulation order are fixed:
+//! the accumulate-into-memory kernels (`gemm_acc`, `gemm_at_b_band`) apply
+//! one FMA per element per inner step regardless of where the 8-lane body
+//! ends and the scalar tail begins, and the reduction kernels (`gemm_a_bt`,
+//! `dot_mul`) split lanes by the (fixed) inner dimension only. Combined
+//! with the pool's partition-by-output-region banding, results are
+//! **bitwise thread-count-invariant at every level**. Across levels the
+//! FMA contraction changes rounding, which is why switching `L2IGHT_SIMD`
+//! moves numerics at the ulp scale (and why the scenario golden carries a
+//! per-level bless — see `rust/README.md` § "SIMD dispatch").
+
+use std::sync::OnceLock;
+
+/// Instruction-set level the slice kernels run at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar kernels — bitwise identical to the seed-era engine.
+    Scalar,
+    /// AVX2 + FMA 8-lane kernels (x86_64 only, runtime-detected).
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Stable lowercase name (reports, bench JSON, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// True when the CPU supports the AVX2+FMA kernels.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The process-wide dispatch level, resolved once from `L2IGHT_SIMD`.
+/// Requesting `avx2` on a CPU without it warns and falls back to scalar;
+/// an unknown value warns and behaves like `auto`.
+pub fn active() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        let auto = if avx2_available() { SimdLevel::Avx2 } else { SimdLevel::Scalar };
+        match std::env::var("L2IGHT_SIMD") {
+            Err(_) => auto,
+            Ok(raw) => match raw.trim().to_ascii_lowercase().as_str() {
+                "" | "auto" => auto,
+                "scalar" => SimdLevel::Scalar,
+                "avx2" => {
+                    if avx2_available() {
+                        SimdLevel::Avx2
+                    } else {
+                        crate::warn!(
+                            "L2IGHT_SIMD=avx2 requested but the CPU lacks AVX2+FMA; using scalar kernels"
+                        );
+                        SimdLevel::Scalar
+                    }
+                }
+                other => {
+                    crate::warn!(
+                        "ignoring unknown L2IGHT_SIMD={other:?} (want auto|avx2|scalar); using auto"
+                    );
+                    auto
+                }
+            },
+        }
+    })
+}
+
+/// AVX2+FMA slice kernels. Every function here requires AVX2 **and** FMA at
+/// runtime; the dispatcher in `super::gemm` only routes here after
+/// [`avx2_available`] (or an explicit, caller-checked level override).
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use std::arch::x86_64::{
+        __m256, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+
+    /// Fixed-order horizontal sum of the 8 lanes (deterministic tree:
+    /// lane pairs (0,4)(1,5)(2,6)(3,7), then two rounds of adjacent adds).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut t = [0.0f32; 8];
+        _mm256_storeu_ps(t.as_mut_ptr(), v);
+        ((t[0] + t[4]) + (t[1] + t[5])) + ((t[2] + t[6]) + (t[3] + t[7]))
+    }
+
+    /// C[m×n] += A[m×kk] · B[kk×n] over raw row-major slices — the 8-lane
+    /// FMA version of `gemm::gemm_acc_slices_scalar`, with the same 4-row
+    /// register tiling and all-zero-quad skip. Per output element each
+    /// inner step is one FMA (vector body and scalar tail alike), so the
+    /// result does not depend on n or on panel boundaries.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (`simd::avx2_available`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_acc(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * kk && b.len() >= kk * n && c.len() >= m * n);
+        let mut i = 0;
+        while i + 4 <= m {
+            let rows = &mut c[i * n..(i + 4) * n];
+            let (c0, rows) = rows.split_at_mut(n);
+            let (c1, rows) = rows.split_at_mut(n);
+            let (c2, c3) = rows.split_at_mut(n);
+            let a0 = &a[i * kk..(i + 1) * kk];
+            let a1 = &a[(i + 1) * kk..(i + 2) * kk];
+            let a2 = &a[(i + 2) * kk..(i + 3) * kk];
+            let a3 = &a[(i + 3) * kk..(i + 4) * kk];
+            for l in 0..kk {
+                let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue; // structured-sparsity fast path (masked weights)
+                }
+                let br = &b[l * n..(l + 1) * n];
+                let v0 = _mm256_set1_ps(x0);
+                let v1 = _mm256_set1_ps(x1);
+                let v2 = _mm256_set1_ps(x2);
+                let v3 = _mm256_set1_ps(x3);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let bv = _mm256_loadu_ps(br.as_ptr().add(j));
+                    _mm256_storeu_ps(
+                        c0.as_mut_ptr().add(j),
+                        _mm256_fmadd_ps(v0, bv, _mm256_loadu_ps(c0.as_ptr().add(j))),
+                    );
+                    _mm256_storeu_ps(
+                        c1.as_mut_ptr().add(j),
+                        _mm256_fmadd_ps(v1, bv, _mm256_loadu_ps(c1.as_ptr().add(j))),
+                    );
+                    _mm256_storeu_ps(
+                        c2.as_mut_ptr().add(j),
+                        _mm256_fmadd_ps(v2, bv, _mm256_loadu_ps(c2.as_ptr().add(j))),
+                    );
+                    _mm256_storeu_ps(
+                        c3.as_mut_ptr().add(j),
+                        _mm256_fmadd_ps(v3, bv, _mm256_loadu_ps(c3.as_ptr().add(j))),
+                    );
+                    j += 8;
+                }
+                while j < n {
+                    let v = br[j];
+                    c0[j] = x0.mul_add(v, c0[j]);
+                    c1[j] = x1.mul_add(v, c1[j]);
+                    c2[j] = x2.mul_add(v, c2[j]);
+                    c3[j] = x3.mul_add(v, c3[j]);
+                    j += 1;
+                }
+            }
+            i += 4;
+        }
+        for r in i..m {
+            let ar = &a[r * kk..(r + 1) * kk];
+            let cr = &mut c[r * n..(r + 1) * n];
+            for (l, &x) in ar.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let br = &b[l * n..(l + 1) * n];
+                let xv = _mm256_set1_ps(x);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let bv = _mm256_loadu_ps(br.as_ptr().add(j));
+                    _mm256_storeu_ps(
+                        cr.as_mut_ptr().add(j),
+                        _mm256_fmadd_ps(xv, bv, _mm256_loadu_ps(cr.as_ptr().add(j))),
+                    );
+                    j += 8;
+                }
+                while j < n {
+                    cr[j] = x.mul_add(br[j], cr[j]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// C[i0..i1, n] += (Aᵀ·B)[i0..i1, n] for A [kk×m], B [kk×n], writing
+    /// rows `i0..i1` into `c_band` — the 8-lane FMA version of
+    /// `gemm::gemm_at_b_acc_band_scalar` with the same 4-pair tiling.
+    /// The four FMAs per element chain in fixed order (x0 first).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (`simd::avx2_available`).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_at_b_band(
+        a: &[f32],
+        kk: usize,
+        m: usize,
+        b: &[f32],
+        n: usize,
+        i0: usize,
+        i1: usize,
+        c_band: &mut [f32],
+    ) {
+        debug_assert!(a.len() >= kk * m && b.len() >= kk * n);
+        debug_assert!(i1 <= m && c_band.len() >= (i1 - i0) * n);
+        let mut l = 0;
+        while l + 4 <= kk {
+            let a0 = &a[l * m..(l + 1) * m];
+            let a1 = &a[(l + 1) * m..(l + 2) * m];
+            let a2 = &a[(l + 2) * m..(l + 3) * m];
+            let a3 = &a[(l + 3) * m..(l + 4) * m];
+            let b0 = &b[l * n..(l + 1) * n];
+            let b1 = &b[(l + 1) * n..(l + 2) * n];
+            let b2 = &b[(l + 2) * n..(l + 3) * n];
+            let b3 = &b[(l + 3) * n..(l + 4) * n];
+            for i in i0..i1 {
+                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue;
+                }
+                let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+                let v0 = _mm256_set1_ps(x0);
+                let v1 = _mm256_set1_ps(x1);
+                let v2 = _mm256_set1_ps(x2);
+                let v3 = _mm256_set1_ps(x3);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let mut acc = _mm256_loadu_ps(cr.as_ptr().add(j));
+                    acc = _mm256_fmadd_ps(v0, _mm256_loadu_ps(b0.as_ptr().add(j)), acc);
+                    acc = _mm256_fmadd_ps(v1, _mm256_loadu_ps(b1.as_ptr().add(j)), acc);
+                    acc = _mm256_fmadd_ps(v2, _mm256_loadu_ps(b2.as_ptr().add(j)), acc);
+                    acc = _mm256_fmadd_ps(v3, _mm256_loadu_ps(b3.as_ptr().add(j)), acc);
+                    _mm256_storeu_ps(cr.as_mut_ptr().add(j), acc);
+                    j += 8;
+                }
+                while j < n {
+                    let mut s = cr[j];
+                    s = x0.mul_add(b0[j], s);
+                    s = x1.mul_add(b1[j], s);
+                    s = x2.mul_add(b2[j], s);
+                    s = x3.mul_add(b3[j], s);
+                    cr[j] = s;
+                    j += 1;
+                }
+            }
+            l += 4;
+        }
+        for ll in l..kk {
+            let ar = &a[ll * m..(ll + 1) * m];
+            let br = &b[ll * n..(ll + 1) * n];
+            for i in i0..i1 {
+                let x = ar[i];
+                if x == 0.0 {
+                    continue;
+                }
+                let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+                let xv = _mm256_set1_ps(x);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let bv = _mm256_loadu_ps(br.as_ptr().add(j));
+                    _mm256_storeu_ps(
+                        cr.as_mut_ptr().add(j),
+                        _mm256_fmadd_ps(xv, bv, _mm256_loadu_ps(cr.as_ptr().add(j))),
+                    );
+                    j += 8;
+                }
+                while j < n {
+                    cr[j] = x.mul_add(br[j], cr[j]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// C[m×p] += A[m×kk] · B[p×kk]ᵀ (dot-product layout) — the 8-lane FMA
+    /// version of `gemm::gemm_a_bt_acc_slices_scalar` with the same 4-dot
+    /// tiling and all-zero A-row skip. Each dot product accumulates the
+    /// 8-lane body in vector lanes (reduced by the fixed [`hsum`] tree),
+    /// then appends the scalar tail; the split depends only on `kk`.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (`simd::avx2_available`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_a_bt(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * kk && b.len() >= p * kk && c.len() >= m * p);
+        for i in 0..m {
+            let ar = &a[i * kk..(i + 1) * kk];
+            if ar.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let cr = &mut c[i * p..(i + 1) * p];
+            let mut j = 0;
+            while j + 4 <= p {
+                let b0 = &b[j * kk..(j + 1) * kk];
+                let b1 = &b[(j + 1) * kk..(j + 2) * kk];
+                let b2 = &b[(j + 2) * kk..(j + 3) * kk];
+                let b3 = &b[(j + 3) * kk..(j + 4) * kk];
+                let mut s0 = _mm256_setzero_ps();
+                let mut s1 = _mm256_setzero_ps();
+                let mut s2 = _mm256_setzero_ps();
+                let mut s3 = _mm256_setzero_ps();
+                let mut l = 0;
+                while l + 8 <= kk {
+                    let av = _mm256_loadu_ps(ar.as_ptr().add(l));
+                    s0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b0.as_ptr().add(l)), s0);
+                    s1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b1.as_ptr().add(l)), s1);
+                    s2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b2.as_ptr().add(l)), s2);
+                    s3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b3.as_ptr().add(l)), s3);
+                    l += 8;
+                }
+                let mut t0 = hsum(s0);
+                let mut t1 = hsum(s1);
+                let mut t2 = hsum(s2);
+                let mut t3 = hsum(s3);
+                while l < kk {
+                    let av = ar[l];
+                    t0 = av.mul_add(b0[l], t0);
+                    t1 = av.mul_add(b1[l], t1);
+                    t2 = av.mul_add(b2[l], t2);
+                    t3 = av.mul_add(b3[l], t3);
+                    l += 1;
+                }
+                cr[j] += t0;
+                cr[j + 1] += t1;
+                cr[j + 2] += t2;
+                cr[j + 3] += t3;
+                j += 4;
+            }
+            for jj in j..p {
+                let br = &b[jj * kk..(jj + 1) * kk];
+                let mut sv = _mm256_setzero_ps();
+                let mut l = 0;
+                while l + 8 <= kk {
+                    sv = _mm256_fmadd_ps(
+                        _mm256_loadu_ps(ar.as_ptr().add(l)),
+                        _mm256_loadu_ps(br.as_ptr().add(l)),
+                        sv,
+                    );
+                    l += 8;
+                }
+                let mut s = hsum(sv);
+                while l < kk {
+                    s = ar[l].mul_add(br[l], s);
+                    l += 1;
+                }
+                cr[jj] += s;
+            }
+        }
+    }
+
+    /// Σ_j x[j]·y[j] over `len` elements — the Eq. 5 Hadamard reduction
+    /// (8-lane FMA body, fixed [`hsum`] tree, scalar FMA tail).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA (`simd::avx2_available`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_mul(x: &[f32], y: &[f32], len: usize) -> f32 {
+        debug_assert!(x.len() >= len && y.len() >= len);
+        let mut acc = _mm256_setzero_ps();
+        let mut l = 0;
+        while l + 8 <= len {
+            acc = _mm256_fmadd_ps(
+                _mm256_loadu_ps(x.as_ptr().add(l)),
+                _mm256_loadu_ps(y.as_ptr().add(l)),
+                acc,
+            );
+            l += 8;
+        }
+        let mut s = hsum(acc);
+        while l < len {
+            s = x[l].mul_add(y[l], s);
+            l += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_is_stable_and_consistent_with_detection() {
+        // Whatever the env says, the resolved level must be available on
+        // this CPU, and repeated calls must agree (OnceLock).
+        let l1 = active();
+        let l2 = active();
+        assert_eq!(l1, l2);
+        if l1 == SimdLevel::Avx2 {
+            assert!(avx2_available(), "active() picked avx2 on a CPU without it");
+        }
+    }
+
+    #[test]
+    fn level_names() {
+        assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert_eq!(SimdLevel::Avx2.name(), "avx2");
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn dot_mul_matches_scalar_sum() {
+        if !avx2_available() {
+            return;
+        }
+        // 19 elements: 2 full lanes + a 3-element tail.
+        let x: Vec<f32> = (0..19).map(|i| 0.25 * i as f32 - 2.0).collect();
+        let y: Vec<f32> = (0..19).map(|i| 1.0 - 0.125 * i as f32).collect();
+        let want: f64 = x.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let got = unsafe { avx2::dot_mul(&x, &y, 19) };
+        assert!((got as f64 - want).abs() < 1e-4 * (1.0 + want.abs()), "{got} vs {want}");
+    }
+}

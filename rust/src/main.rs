@@ -294,10 +294,11 @@ fn cmd_matrix(args: &[String]) -> i32 {
 
     let pool = l2ight::util::pool::global();
     println!(
-        "running {} scenario rows ({} tier) on {} threads",
+        "running {} scenario rows ({} tier) on {} threads, simd={}",
         rows.len(),
         tier.name(),
-        pool.threads()
+        pool.threads(),
+        l2ight::linalg::simd::active().name()
     );
     let t0 = std::time::Instant::now();
     let results = run_matrix(&rows, pool);
@@ -314,7 +315,7 @@ fn cmd_matrix(args: &[String]) -> i32 {
     }
     println!("matrix done in {:.1}s", t0.elapsed().as_secs_f64());
 
-    let report = report_json(tier, pool.threads(), &results);
+    let report = report_json(tier, pool.threads(), l2ight::linalg::simd::active().name(), &results);
     let out = a.str("out");
     if let Err(e) = write_report(Path::new(out), &report) {
         eprintln!("cannot write {out}: {e}");

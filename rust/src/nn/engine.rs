@@ -12,9 +12,10 @@
 //! engine (`linalg::gemm` tiled kernels + `util::pool` banding), so layer
 //! forward/backward parallelize without any threading code here.
 
-use crate::linalg::{matmul, matmul_a_bt, matmul_a_bt_acc, matmul_at_b, Mat};
+use crate::linalg::{gemm_packed_panels, matmul, matmul_a_bt, matmul_a_bt_acc, matmul_at_b, Mat};
 use crate::photonics::{NoiseModel, PtcMesh};
 use crate::sampling::feedback::FeedbackMask;
+use crate::util::pool;
 use crate::util::Rng;
 
 /// How to instantiate projection engines when building a model.
@@ -103,6 +104,40 @@ impl ProjEngine {
             ProjEngine::Photonic { mesh, fwd_mask, .. } => match fwd_mask {
                 None => mesh.forward(x),
                 Some((keep, scale)) => mesh.forward_masked(x, Some(keep), *scale),
+            },
+        }
+    }
+
+    /// Fused conv forward y = W · X_packed: `pack(c0, c1, dst)` produces
+    /// column panel `[c0, c1)` of the logical im2col patch matrix on demand
+    /// (see `linalg::conv::PatchExtractor`), straight into pool scratch.
+    /// Numerically identical to `forward(&im2col(...))` within a SIMD
+    /// dispatch level — same per-element accumulation order, same
+    /// `MeshStats` — but the `[Cin·K², B·H'·W']` intermediate is never
+    /// materialized.
+    pub fn forward_packed<P>(&mut self, total_cols: usize, pack: &P) -> Mat
+    where
+        P: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        match self {
+            ProjEngine::Digital { w, fwd_mask, .. } => match fwd_mask {
+                None => gemm_packed_panels(pool::global(), w, total_cols, pack),
+                Some(mask) => {
+                    // SWAT-U style: zero masked weights on the forward path.
+                    let mut wm = w.clone();
+                    for (v, &keep) in wm.data.iter_mut().zip(mask.iter()) {
+                        if !keep {
+                            *v = 0.0;
+                        }
+                    }
+                    gemm_packed_panels(pool::global(), &wm, total_cols, pack)
+                }
+            },
+            ProjEngine::Photonic { mesh, fwd_mask, .. } => match fwd_mask {
+                None => mesh.forward_packed_on(pool::global(), total_cols, pack, None, 1.0),
+                Some((keep, scale)) => {
+                    mesh.forward_packed_on(pool::global(), total_cols, pack, Some(keep), *scale)
+                }
             },
         }
     }

@@ -5,7 +5,7 @@
 use super::act::Act;
 use super::engine::ProjEngine;
 use super::model::BackwardCtx;
-use crate::linalg::{col2im, im2col, Conv2dShape, Mat};
+use crate::linalg::{col2im_pooled, im2col_pooled, Conv2dShape, Mat, PatchExtractor};
 
 /// A single layer.
 #[derive(Clone, Debug)]
@@ -134,7 +134,13 @@ impl Linear {
 // Conv2d
 // ---------------------------------------------------------------------------
 
-/// 2-D convolution lowered to im2col + blocked projection.
+/// 2-D convolution lowered to im2col + blocked projection. The forward
+/// path is fused (§Perf): patch panels are extracted straight into the GEMM
+/// packing buffers via `ProjEngine::forward_packed`, so the `[Cin·K²,
+/// B·H'·W']` patch matrix is never materialized on forward. The backward
+/// σ-/weight-gradient API consumes a whole patch matrix, so it is built
+/// lazily on first backward (`im2col_pooled`) and the input-gradient fold
+/// runs per-plane-parallel (`col2im_pooled`).
 #[derive(Clone, Debug)]
 pub struct Conv2d {
     pub engine: ProjEngine,
@@ -145,10 +151,12 @@ pub struct Conv2d {
     pub padding: usize,
     pub bias: Vec<f32>,
     pub grad_bias: Vec<f32>,
-    /// Cached im2col patch matrix (recomputed under SS).
+    /// im2col patch matrix, materialized lazily by the first backward (the
+    /// fused forward never builds it; recomputed under SS).
     cache_x: Option<Mat>,
     cache_shape: Option<Conv2dShape>,
-    /// Cached raw input (needed only when spatial sampling re-unfolds).
+    /// Cached raw input (the source for the lazy patch materialization and
+    /// for spatial-sampling re-unfolds).
     cache_input: Option<Act>,
 }
 
@@ -194,15 +202,21 @@ impl Conv2d {
     pub fn forward(&mut self, x: &Act, train: bool) -> Act {
         assert_eq!(x.channels(), self.in_ch, "Conv2d input channels");
         let sh = self.shape_for(x);
-        let patches = im2col(&x.to_nchw(), &sh);
-        let mut y = self.engine.forward(&patches);
+        // Fused packed-panel path: patch panels go straight from the NCHW
+        // activation into pool-scratch GEMM packing buffers (bitwise equal
+        // to forward(&im2col(..)) within a SIMD dispatch level).
+        let nchw = x.to_nchw();
+        let ex = PatchExtractor::new(&nchw, &sh);
+        let mut y = self
+            .engine
+            .forward_packed(sh.patch_cols(), &|c0, c1, dst: &mut [f32]| ex.pack_into(c0, c1, dst));
         for (r, &b) in self.bias.iter().enumerate() {
             for v in y.row_mut(r) {
                 *v += b;
             }
         }
         if train {
-            self.cache_x = Some(patches);
+            self.cache_x = None; // built lazily by backward
             self.cache_shape = Some(sh);
             self.cache_input = Some(x.clone());
         }
@@ -220,9 +234,15 @@ impl Conv2d {
         let recomputed = ctx
             .feature
             .apply_spatial(self.cache_input.as_ref().unwrap(), &mut ctx.rng)
-            .map(|sparse_in| im2col(&sparse_in.to_nchw(), &sh));
-        // Borrow the cached patch matrix on the common (no-SS) path instead
-        // of cloning it per backward (§Perf).
+            .map(|sparse_in| im2col_pooled(&sparse_in.to_nchw(), &sh));
+        // The gradient API consumes a whole patch matrix; on the common
+        // (no-SS) path materialize it lazily from the cached input — the
+        // fused forward never built it — and keep it for repeat backwards.
+        if recomputed.is_none() && self.cache_x.is_none() {
+            let nchw =
+                self.cache_input.as_ref().expect("Conv2d backward without forward").to_nchw();
+            self.cache_x = Some(im2col_pooled(&nchw, &sh));
+        }
         let x_for_grad: &Mat = recomputed.as_ref().unwrap_or_else(|| self.cache_x.as_ref().unwrap());
         let fb = ctx.draw_feedback(&self.engine);
         let dx_cols = self.engine.backward(
@@ -232,7 +252,7 @@ impl Conv2d {
             col_mask.as_deref(),
             ctx.feature.scale(),
         );
-        let dx_nchw = col2im(&dx_cols, &sh);
+        let dx_nchw = col2im_pooled(&dx_cols, &sh);
         Act::from_nchw(&dx_nchw, sh.batch, sh.in_ch, sh.in_h, sh.in_w)
     }
 }

@@ -6,18 +6,22 @@
 //!
 //! §Perf — every hot path routes through the shared compute engine:
 //! block/strip work fans out over `util::pool` (row strips for forward,
-//! column strips for feedback, PTC blocks for σ-grad and batch realization),
-//! the inner products run on the register-tiled slice kernels of
-//! `linalg::gemm`, and padded activations are fed to those kernels as
-//! sub-panel slices (the old per-call `Vec<Mat>` panel copies are gone; the
-//! σ-grad intermediates come from the per-thread scratch arena). Work is
-//! partitioned by output region, so results are identical at every thread
-//! count — `threads=1` reproduces the serial engine bit-for-bit.
+//! column strips for feedback, PTC blocks for σ-grad and batch realization,
+//! column panels for the fused packed forward), the inner products run on
+//! the SIMD-dispatched register-tiled slice kernels of `linalg::gemm`
+//! (`L2IGHT_SIMD`), and padded activations are fed to those kernels as
+//! sub-panel slices. Ragged inputs are padded — and masked batch columns
+//! gathered — into per-thread scratch-arena buffers, so the masked paths
+//! allocate nothing per call. Work is partitioned by output region, so
+//! results are identical at every thread count within a dispatch level —
+//! `threads=1` reproduces the serial engine bit-for-bit.
 
 use super::noise::NoiseModel;
 use super::ptc::Ptc;
 use super::unitary::ReckMesh;
-use crate::linalg::{gemm_acc_slices, gemm_at_b_acc_band, sigma_grad_block_slices, svd_kxk, Mat};
+use crate::linalg::{
+    gemm_acc_slices, gemm_at_b_acc_band, sigma_grad_block_slices, svd_kxk, Mat, PANEL_COLS,
+};
 use crate::util::pool::{self, Scratch, SendPtr, ThreadPool};
 use crate::util::Rng;
 
@@ -202,10 +206,11 @@ impl PtcMesh {
         let mut yp = Mat::zeros(p * k, b);
         {
             let cache = self.w_cache.as_ref().unwrap();
-            // Borrow X when already k-aligned; pad once otherwise (§Perf:
-            // the q input panels are consumed as sub-slices, not copies).
-            let mut xp_store = None;
-            let xp = pad_rows_into(x, q * k, &mut xp_store);
+            // Borrow X when already k-aligned; pad into scratch otherwise
+            // (§Perf: the q input panels are consumed as sub-slices, and the
+            // pad buffer comes from the per-thread arena — no allocation).
+            let mut xp_store: Option<Scratch> = None;
+            let xp: &[f32] = padded_panel(x, q * k, &mut xp_store);
             let ypp = SendPtr(yp.data.as_mut_ptr());
             // One task per output row strip; each strip accumulates its q
             // block products directly into its disjoint rows of Y.
@@ -220,14 +225,7 @@ impl PtcMesh {
                         }
                     }
                     let w = &cache[pi * q + qi];
-                    gemm_acc_slices(
-                        &w.data,
-                        k,
-                        k,
-                        &xp.data[qi * k * b..(qi + 1) * k * b],
-                        b,
-                        strip,
-                    );
+                    gemm_acc_slices(&w.data, k, k, &xp[qi * k * b..(qi + 1) * k * b], b, strip);
                 }
                 if scale != 1.0 {
                     for v in strip.iter_mut() {
@@ -236,11 +234,96 @@ impl PtcMesh {
                 }
             });
         }
+        self.note_forward_stats(b, block_keep);
+        if yp.rows == self.rows {
+            yp
+        } else {
+            crop_rows(&yp, self.rows)
+        }
+    }
+
+    /// Fused packed-panel forward Y = W̃ · X for an X that is never
+    /// materialized: `pack(c0, c1, dst)` fills column panel `[c0, c1)` of
+    /// the logical `[cols × total_cols]` operand into pre-zeroed scratch
+    /// with row stride `c1 − c0` (rows `cols..q·k` stay zero — the block
+    /// padding is fused too). This is the §3.4.2 conv path: patch tiles go
+    /// straight from the activation into the GEMM packing buffers. Within a
+    /// SIMD dispatch level the result — and the `MeshStats` accounting — is
+    /// bitwise identical to `forward_masked` on the materialized matrix;
+    /// panels have fixed width ([`PANEL_COLS`]), so results are also
+    /// thread-count-invariant.
+    pub fn forward_packed_on<P>(
+        &mut self,
+        pool: &ThreadPool,
+        total_cols: usize,
+        pack: &P,
+        block_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Mat
+    where
+        P: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        let (k, p, q) = (self.k, self.p, self.q);
+        self.ensure_cache(pool);
+        let mut y = Mat::zeros(self.rows, total_cols);
+        {
+            let cache = self.w_cache.as_ref().unwrap();
+            let rows = self.rows;
+            let yptr = SendPtr(y.data.as_mut_ptr());
+            let panels = total_cols.div_ceil(PANEL_COLS);
+            // One task per column panel; each panel packs its X tile, runs
+            // the full P×Q block loop over it, and owns its Y columns.
+            pool.parallel_for_sized(panels, 2 * p * q * k * k * total_cols, |ti| {
+                let c0 = ti * PANEL_COLS;
+                let c1 = (c0 + PANEL_COLS).min(total_cols);
+                let wpan = c1 - c0;
+                let mut xbuf = Scratch::take(q * k * wpan);
+                pack(c0, c1, &mut xbuf);
+                let mut ybuf = Scratch::take(p * k * wpan);
+                for pi in 0..p {
+                    let strip = &mut ybuf[pi * k * wpan..(pi + 1) * k * wpan];
+                    for qi in 0..q {
+                        if let Some(mask) = block_keep {
+                            if !mask[pi * q + qi] {
+                                continue;
+                            }
+                        }
+                        let w = &cache[pi * q + qi];
+                        gemm_acc_slices(
+                            &w.data,
+                            k,
+                            k,
+                            &xbuf[qi * k * wpan..(qi + 1) * k * wpan],
+                            wpan,
+                            strip,
+                        );
+                    }
+                    if scale != 1.0 {
+                        for v in strip.iter_mut() {
+                            *v *= scale;
+                        }
+                    }
+                }
+                // Safety: panel ti owns columns [c0, c1) of every row of Y
+                // (the row crop to `rows` is fused into the scatter).
+                unsafe {
+                    crate::linalg::conv::scatter_panel(yptr, total_cols, c0, wpan, rows, &ybuf)
+                };
+            });
+        }
+        self.note_forward_stats(total_cols, block_keep);
+        y
+    }
+
+    /// Appendix-G forward accounting, shared by the eager and packed paths —
+    /// one formula keeps the cost model independent of execution strategy.
+    fn note_forward_stats(&mut self, b: usize, block_keep: Option<&[bool]>) {
+        let (p, q) = (self.p, self.q);
         let kept = match block_keep {
             None => (p * q) as u64,
             Some(m) => m.iter().filter(|&&keep| keep).count() as u64,
         };
-        let groups = b.div_ceil(k).max(1) as u64;
+        let groups = b.div_ceil(self.k).max(1) as u64;
         self.stats.fwd_block_cols += kept * groups;
         // Latency: per column group 1 PTC call + sequential accumulation over
         // the deepest kept row (Q when dense).
@@ -252,11 +335,6 @@ impl PtcMesh {
             .max()
             .unwrap_or(0) as u64;
         self.stats.fwd_steps += groups * (1 + max_row_depth);
-        if yp.rows == self.rows {
-            yp
-        } else {
-            crop_rows(&yp, self.rows)
-        }
     }
 
     /// In-situ subspace gradient (Eq. 5), computed per block with the
@@ -292,22 +370,31 @@ impl PtcMesh {
         assert_eq!(dy.rows, self.rows);
         assert_eq!(x.cols, dy.cols);
         let (k, p, q) = (self.k, self.p, self.q);
-        // select_cols clones; skip it entirely when the mask is off (§Perf:
-        // aligned inputs are borrowed — zero copies on the common path).
-        let mut xp_store = None;
-        let mut dyp_store = None;
-        let (xp, dyp): (&Mat, &Mat) = match col_keep {
+        // §Perf: aligned unmasked inputs are borrowed (zero copies on the
+        // common path); ragged ones pad into scratch, and the masked path
+        // gathers kept columns + pads in one scratch pass — the old
+        // select_cols/pad_rows clone-per-call pair is gone.
+        let mut xp_store: Option<Scratch> = None;
+        let mut dyp_store: Option<Scratch> = None;
+        let (xp, dyp, b): (&[f32], &[f32], usize) = match col_keep {
             None => (
-                pad_rows_into(x, q * k, &mut xp_store),
-                pad_rows_into(dy, p * k, &mut dyp_store),
+                padded_panel(x, q * k, &mut xp_store),
+                padded_panel(dy, p * k, &mut dyp_store),
+                x.cols,
             ),
-            Some(_) => {
-                xp_store = Some(pad_rows(&select_cols(x, col_keep), q * k));
-                dyp_store = Some(pad_rows(&select_cols(dy, col_keep), p * k));
-                (xp_store.as_ref().unwrap(), dyp_store.as_ref().unwrap())
+            Some(mask) => {
+                assert_eq!(mask.len(), x.cols);
+                let kept: Vec<usize> = (0..x.cols).filter(|&c| mask[c]).collect();
+                let b = kept.len();
+                xp_store = Some(gather_cols_padded(x, &kept, q * k));
+                dyp_store = Some(gather_cols_padded(dy, &kept, p * k));
+                (
+                    &xp_store.as_ref().unwrap()[..],
+                    &dyp_store.as_ref().unwrap()[..],
+                    b,
+                )
             }
         };
-        let b = xp.cols;
         let mut grad = vec![0.0f32; p * q * k];
         {
             // Per block: A = Uᵀ·dy_p (k×B), C = V*·x_q (k×B), dσ_i = Σ_b A⊙C.
@@ -327,8 +414,8 @@ impl PtcMesh {
                 sigma_grad_block_slices(
                     u,
                     v,
-                    &dyp.data[pi * k * b..(pi + 1) * k * b],
-                    &xp.data[qi * k * b..(qi + 1) * k * b],
+                    &dyp[pi * k * b..(pi + 1) * k * b],
+                    &xp[qi * k * b..(qi + 1) * k * b],
                     b,
                     scale,
                     ut_y,
@@ -366,8 +453,8 @@ impl PtcMesh {
         let mut dxp = Mat::zeros(q * k, b);
         {
             let cache = self.w_cache.as_ref().unwrap();
-            let mut dyp_store = None;
-            let dyp = pad_rows_into(dy, p * k, &mut dyp_store);
+            let mut dyp_store: Option<Scratch> = None;
+            let dyp: &[f32] = padded_panel(dy, p * k, &mut dyp_store);
             let dpp = SendPtr(dxp.data.as_mut_ptr());
             // One task per input-side strip qi: accumulates its p block
             // products W̃ᵀ·dy_p directly into its disjoint rows of dX.
@@ -387,7 +474,7 @@ impl PtcMesh {
                         &wt.data,
                         k,
                         k,
-                        &dyp.data[pi * k * b..(pi + 1) * k * b],
+                        &dyp[pi * k * b..(pi + 1) * k * b],
                         b,
                         0,
                         k,
@@ -472,14 +559,35 @@ impl PtcMesh {
     }
 }
 
-/// Borrow `x` when it already has `target` rows; otherwise zero-pad into
-/// `store` and borrow that (the one unavoidable copy for ragged shapes).
-fn pad_rows_into<'a>(x: &'a Mat, target: usize, store: &'a mut Option<Mat>) -> &'a Mat {
+/// Borrow `x`'s storage when it already has `target` rows; otherwise
+/// zero-pad into a scratch-arena buffer held by `store` and borrow that
+/// (§Perf: the one unavoidable copy for ragged shapes reuses the arena —
+/// no per-call allocation on the per-block-per-step masked paths).
+fn padded_panel<'a>(x: &'a Mat, target: usize, store: &'a mut Option<Scratch>) -> &'a [f32] {
     if x.rows == target {
-        x
+        &x.data
     } else {
-        &*store.insert(pad_rows(x, target))
+        debug_assert!(target > x.rows);
+        let mut s = Scratch::take(target * x.cols);
+        s[..x.rows * x.cols].copy_from_slice(&x.data);
+        &store.insert(s)[..]
     }
+}
+
+/// Gather the batch columns listed in `kept` and zero-pad the rows up to
+/// `target_rows`, in one pass into a scratch-arena buffer — the masked
+/// σ-grad path's replacement for the old select-then-pad clone pair.
+fn gather_cols_padded(x: &Mat, kept: &[usize], target_rows: usize) -> Scratch {
+    let b = kept.len();
+    let mut s = Scratch::take(target_rows * b);
+    for r in 0..x.rows {
+        let src = x.row(r);
+        let dst = &mut s[r * b..(r + 1) * b];
+        for (j, &c) in kept.iter().enumerate() {
+            dst[j] = src[c];
+        }
+    }
+    s
 }
 
 /// Zero-pad a matrix's rows up to `target_rows`.
@@ -506,26 +614,6 @@ pub fn crop_rows(x: &Mat, rows: usize) -> Mat {
         return x.clone();
     }
     Mat::from_slice(rows, x.cols, &x.data[..rows * x.cols])
-}
-
-/// Select a subset of batch columns by mask (None = all).
-fn select_cols(x: &Mat, keep: Option<&[bool]>) -> Mat {
-    match keep {
-        None => x.clone(),
-        Some(mask) => {
-            assert_eq!(mask.len(), x.cols);
-            let kept: Vec<usize> = (0..x.cols).filter(|&c| mask[c]).collect();
-            let mut out = Mat::zeros(x.rows, kept.len());
-            for r in 0..x.rows {
-                let src = x.row(r);
-                let dst = out.row_mut(r);
-                for (j, &c) in kept.iter().enumerate() {
-                    dst[j] = src[c];
-                }
-            }
-            out
-        }
-    }
 }
 
 #[cfg(test)]

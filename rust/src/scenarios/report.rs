@@ -7,6 +7,7 @@
 //!   "schema": 1,
 //!   "tier": "quick",
 //!   "threads": 4,
+//!   "simd": "avx2",
 //!   "rows": [
 //!     {
 //!       "name": "l2ight/mlp-vowel/vowel/quant8/aw0.6-ac1-ad0",
@@ -28,7 +29,7 @@
 //!
 //! Everything under `metrics` is deterministic per row (independent of
 //! thread count and execution order) and is what `golden` compares;
-//! `threads`, `wall_secs`, and `stage_secs` are diagnostics and are
+//! `threads`, `simd`, `wall_secs`, and `stage_secs` are diagnostics and are
 //! ignored by the gate. Metrics that a protocol does not produce (e.g.
 //! `ic_mse` for baselines) are emitted as `null` so presence itself is
 //! golden-checked.
@@ -89,12 +90,16 @@ pub fn row_json(r: &RowResult) -> Json {
     row
 }
 
-/// Assemble the full report document.
-pub fn report_json(tier: Tier, threads: usize, results: &[RowResult]) -> Json {
+/// Assemble the full report document. `simd` records the kernel dispatch
+/// level the run executed at (`linalg::simd::active().name()`) — like
+/// `threads` it is a diagnostic, ignored by the golden gate, but it tells
+/// a reader which numerics family (scalar vs FMA) an artifact carries.
+pub fn report_json(tier: Tier, threads: usize, simd: &str, results: &[RowResult]) -> Json {
     let mut root = Json::obj();
     root.set("schema", Json::Num(SCHEMA))
         .set("tier", Json::Str(tier.name().into()))
         .set("threads", Json::Num(threads as f64))
+        .set("simd", Json::Str(simd.to_string()))
         .set("rows", Json::Arr(results.iter().map(row_json).collect()));
     root
 }
@@ -143,7 +148,7 @@ mod tests {
     #[test]
     fn report_roundtrips_through_json() {
         let results = vec![fake_result("a", 0.75), fake_result("b", 0.5)];
-        let rep = report_json(Tier::Quick, 4, &results);
+        let rep = report_json(Tier::Quick, 4, "scalar", &results);
         let back = Json::parse(&rep.pretty()).unwrap();
         assert_eq!(back, rep);
         assert_eq!(back.get("tier").unwrap().as_str(), Some("quick"));
@@ -162,7 +167,7 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("l2ight_report_{}", std::process::id()));
         let path = dir.join("nested").join("out.json");
-        let rep = report_json(Tier::Quick, 1, &[fake_result("a", 0.1)]);
+        let rep = report_json(Tier::Quick, 1, "scalar", &[fake_result("a", 0.1)]);
         write_report(&path, &rep).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(Json::parse(text.trim()).unwrap(), rep);

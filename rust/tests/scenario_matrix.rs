@@ -39,8 +39,8 @@ fn quick_rows_are_bitwise_thread_invariant() {
     // Wide outer pool: rows concurrent, inner parallelism inlined.
     let wide = run_matrix(&rows, &ThreadPool::new(4));
 
-    let rep_serial = report_json(Tier::Quick, 1, &serial);
-    let rep_wide = report_json(Tier::Quick, 4, &wide);
+    let rep_serial = report_json(Tier::Quick, 1, "scalar", &serial);
+    let rep_wide = report_json(Tier::Quick, 4, "scalar", &wide);
     match diff_reports(&rep_wide, &rep_serial, &Tolerances::STRICT) {
         GoldenOutcome::Match { rows } => assert_eq!(rows, 3),
         GoldenOutcome::Mismatch(ds) => {
@@ -97,7 +97,7 @@ fn one_cheap_result() -> Vec<RowResult> {
 #[test]
 fn golden_roundtrip_bless_then_gate() {
     let results = one_cheap_result();
-    let report = report_json(Tier::Quick, 1, &results);
+    let report = report_json(Tier::Quick, 1, "scalar", &results);
     let path = tmp("golden.json");
     write_report(&path, &report).unwrap();
 
@@ -132,7 +132,7 @@ fn golden_roundtrip_bless_then_gate() {
 #[test]
 fn placeholder_golden_reports_unblessed() {
     let results = one_cheap_result();
-    let report = report_json(Tier::Quick, 1, &results);
+    let report = report_json(Tier::Quick, 1, "scalar", &results);
     let mut placeholder = Json::obj();
     placeholder.set("placeholder", Json::Bool(true));
     assert!(matches!(
