@@ -47,6 +47,7 @@ fn main() {
                 alpha_d: 0.0,
                 zo_budget: 0.2,
                 seed: 17,
+                robustness: None,
             };
             let mut sink = MetricSink::memory();
             let s = run_job(&cfg, &mut sink);

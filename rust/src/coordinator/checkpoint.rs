@@ -96,27 +96,58 @@ fn collect_state(model: &mut Model) -> (Vec<Vec<f64>>, Vec<Vec<f32>>) {
 }
 
 /// Save the complete chip + electronic state of `model` to `path`.
+///
+/// Crash-safe: the bytes are written to a temporary sibling file
+/// (`<path>.tmp-<pid>`), fsynced, and atomically renamed over `path`, so a
+/// crash mid-save can never leave a truncated checkpoint under the final
+/// name — readers see either the old complete file or the new one.
 pub fn save_model_state(model: &mut Model, path: &Path) -> IoResult<()> {
     let (phases, floats) = collect_state(model);
-    let mut w = BufWriter::new(File::create(path)?);
-    w.write_all(MAGIC)?;
-    w.write_all(&(phases.len() as u64).to_le_bytes())?;
-    for p in &phases {
-        write_f64s(&mut w, p)?;
+    let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
+    let result = (|| -> IoResult<()> {
+        let file = File::create(&tmp)?;
+        let mut w = BufWriter::new(file);
+        w.write_all(MAGIC)?;
+        w.write_all(&(phases.len() as u64).to_le_bytes())?;
+        for p in &phases {
+            write_f64s(&mut w, p)?;
+        }
+        w.write_all(&(floats.len() as u64).to_le_bytes())?;
+        for f in &floats {
+            write_f32s(&mut w, f)?;
+        }
+        w.flush()?;
+        // Durability before visibility: the rename must not land before
+        // the payload does.
+        w.get_ref().sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        std::fs::remove_file(&tmp).ok();
     }
-    w.write_all(&(floats.len() as u64).to_le_bytes())?;
-    for f in &floats {
-        write_f32s(&mut w, f)?;
+    result
+}
+
+/// Map the `UnexpectedEof` a short read produces into an `InvalidData`
+/// error that names the actual problem: a truncated/corrupt checkpoint.
+fn truncation(e: std::io::Error) -> std::io::Error {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "checkpoint truncated or corrupt (unexpected end of file)",
+        )
+    } else {
+        e
     }
-    w.flush()
 }
 
 /// Restore state saved by [`save_model_state`] into a model of identical
-/// topology. Errors if section counts or lengths disagree.
+/// topology. Errors if section counts or lengths disagree, or if the file
+/// ends early (truncation is reported as `InvalidData`, not a raw EOF).
 pub fn load_model_state(model: &mut Model, path: &Path) -> IoResult<()> {
     let mut r = BufReader::new(File::open(path)?);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic).map_err(truncation)?;
     if &magic != MAGIC {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -124,17 +155,17 @@ pub fn load_model_state(model: &mut Model, path: &Path) -> IoResult<()> {
         ));
     }
     let mut cnt = [0u8; 8];
-    r.read_exact(&mut cnt)?;
+    r.read_exact(&mut cnt).map_err(truncation)?;
     let n_phases = u64::from_le_bytes(cnt) as usize;
     let mut phases = Vec::with_capacity(n_phases);
     for _ in 0..n_phases {
-        phases.push(read_f64s(&mut r)?);
+        phases.push(read_f64s(&mut r).map_err(truncation)?);
     }
-    r.read_exact(&mut cnt)?;
+    r.read_exact(&mut cnt).map_err(truncation)?;
     let n_floats = u64::from_le_bytes(cnt) as usize;
     let mut floats = Vec::with_capacity(n_floats);
     for _ in 0..n_floats {
-        floats.push(read_f32s(&mut r)?);
+        floats.push(read_f32s(&mut r).map_err(truncation)?);
     }
 
     // Walk the model in the same order, consuming sections.
@@ -313,6 +344,48 @@ mod tests {
         let mut m2 = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 1.0, &mut rng);
         assert!(load_model_state(&mut m2, &path).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_rejected_with_clear_error() {
+        let mut rng = Rng::new(56);
+        let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::quant_only(8) };
+        let mut m = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut rng);
+        let path = tmp("truncated");
+        save_model_state(&mut m, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Cut the file at several depths: inside the header, inside a phase
+        // section, and just shy of the end. Every cut must fail loudly as
+        // InvalidData (never a bare EOF panic or a silent partial restore).
+        for cut in [4, 12, full.len() / 2, full.len() - 3] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let err = load_model_state(&mut m, &path)
+                .expect_err(&format!("cut at {cut} bytes was accepted"));
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "cut at {cut}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_files() {
+        let mut rng = Rng::new(57);
+        let mut m = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 0.5, &mut rng);
+        let dir = std::env::temp_dir().join(format!("l2ight_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        // Pre-existing (old) checkpoint gets replaced wholesale.
+        std::fs::write(&path, b"stale").unwrap();
+        save_model_state(&mut m, &path).unwrap();
+        let mut m2 = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 0.5, &mut rng);
+        load_model_state(&mut m2, &path).unwrap();
+        // No temp droppings next to the final file.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n != "state.ckpt")
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use crate::data::DatasetKind;
 use crate::nn::ModelArch;
 use crate::photonics::NoiseModel;
+use crate::robustness::RobustnessConfig;
 use crate::util::json::Json;
 
 /// Which training protocol to run.
@@ -80,6 +81,9 @@ pub struct JobConfig {
     /// IC/PM ZO iteration budget multiplier (1.0 = paper-like default).
     pub zo_budget: f32,
     pub seed: u64,
+    /// Lifecycle robustness (drift/fault injection + watchdog); `None`
+    /// keeps every existing metric bitwise-unchanged.
+    pub robustness: Option<RobustnessConfig>,
 }
 
 impl Default for JobConfig {
@@ -101,6 +105,7 @@ impl Default for JobConfig {
             alpha_d: 0.0,
             zo_budget: 1.0,
             seed: 42,
+            robustness: None,
         }
     }
 }
@@ -143,6 +148,11 @@ impl JobConfig {
         .set("crosstalk", Json::Num(self.noise.crosstalk))
         .set("phase_bias", Json::Bool(self.noise.phase_bias));
         o.set("noise", n);
+        // Omitted entirely when None so baseline config dumps (which the
+        // golden gate compares byte-for-byte) are unchanged.
+        if let Some(rc) = &self.robustness {
+            o.set("robustness", rc.to_json());
+        }
         o
     }
 
@@ -190,6 +200,7 @@ impl JobConfig {
             alpha_d: num("alpha_d", d.alpha_d as f64) as f32,
             zo_budget: num("zo_budget", d.zo_budget as f64) as f32,
             seed: num("seed", d.seed as f64) as u64,
+            robustness: j.get("robustness").and_then(RobustnessConfig::from_json),
         })
     }
 }
@@ -217,6 +228,7 @@ mod tests {
             alpha_d: 0.5,
             zo_budget: 0.2,
             seed: 7,
+            robustness: Some(RobustnessConfig::lifecycle_row(true, true)),
         };
         let j = cfg.to_json();
         let back = JobConfig::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
@@ -228,6 +240,15 @@ mod tests {
         assert_eq!(back.width, cfg.width);
         assert_eq!(back.alpha_d, cfg.alpha_d);
         assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.robustness, cfg.robustness);
+    }
+
+    #[test]
+    fn robustness_key_absent_when_disabled() {
+        let cfg = JobConfig::default();
+        assert!(!cfg.to_json().dump().contains("robustness"));
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.robustness, None);
     }
 
     #[test]

@@ -21,9 +21,10 @@ use crate::coordinator::metrics::MetricSink;
 use crate::data::{Augment, Dataset, DatasetKind, SynthSpec};
 use crate::nn::{build_model, EngineKind};
 use crate::profiler::CostBreakdown;
+use crate::robustness::{LifecycleReport, LifecycleRuntime};
 use crate::stages::ic::{calibrate_model, IcConfig};
 use crate::stages::pm::{copy_aux_params, map_model, PmConfig};
-use crate::stages::sl::{train, OptKind, SlConfig, SlReport};
+use crate::stages::sl::{train, train_with_lifecycle, OptKind, SlConfig, SlReport};
 use crate::util::json::Json;
 use crate::util::Rng;
 use crate::zoo::ZoConfig;
@@ -65,6 +66,11 @@ pub struct JobSummary {
     pub zo_queries: u64,
     /// Per-epoch record of the (final) training phase.
     pub sl: Option<SlReport>,
+    /// Lifecycle outcome when a `RobustnessConfig` supervised the run.
+    pub lifecycle: Option<LifecycleReport>,
+    /// Stages the protocol skipped (e.g. `"pretrain"` when
+    /// `pretrain_epochs == 0`; baselines skip `"pretrain"/"ic"/"pm"`).
+    pub skipped_stages: Vec<&'static str>,
     /// Wall time per executed stage, in run order (`("ic", secs)`, …).
     /// Diagnostic only — excluded from golden-metric comparisons.
     pub stage_secs: Vec<(&'static str, f64)>,
@@ -137,6 +143,32 @@ fn mark_stage(summary: &mut JobSummary, clock: &mut std::time::Instant, stage: &
     *clock = std::time::Instant::now();
 }
 
+/// Fold a finished lifecycle runtime into the summary: recovery/probe
+/// queries join the ZO budget, recovery wall time joins the stage timings
+/// (never the golden-gated metrics — it's nondeterministic).
+fn finish_lifecycle(
+    summary: &mut JobSummary,
+    sink: &mut MetricSink,
+    lifecycle: Option<LifecycleRuntime>,
+) {
+    let Some(rt) = lifecycle else { return };
+    let rep = rt.finish();
+    summary.zo_queries += rep.recovery_queries + rep.probe_queries;
+    summary.stage_secs.push(("recovery", rep.recovery_secs));
+    sink.emit_nums(
+        "lifecycle_done",
+        &[
+            ("trigger_step", rep.trigger_step.map(|t| t as f64).unwrap_or(-1.0)),
+            ("recoveries", rep.recoveries as f64),
+            ("recovered_blocks", rep.recovered_blocks as f64),
+            ("dead_blocks", rep.dead_blocks as f64),
+            ("recovery_queries", rep.recovery_queries as f64),
+            ("probe_queries", rep.probe_queries as f64),
+        ],
+    );
+    summary.lifecycle = Some(rep);
+}
+
 /// Run one experiment end to end, emitting progress into `sink`.
 pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
     let (train_set, test_set) = build_datasets(cfg);
@@ -171,6 +203,8 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
         cost: CostBreakdown::default(),
         zo_queries: 0,
         sl: None,
+        lifecycle: None,
+        skipped_stages: Vec::new(),
         stage_secs: Vec::new(),
     };
     let mut clock = std::time::Instant::now();
@@ -193,6 +227,8 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
                 summary.pretrain_acc = Some(pre.final_test_acc);
                 sink.emit_nums("pretrain_done", &[("acc", pre.final_test_acc as f64)]);
                 mark_stage(&mut summary, &mut clock, "pretrain");
+            } else {
+                summary.skipped_stages.push("pretrain");
             }
             // Stage 1: identity calibration.
             let ic = calibrate_model(&mut model, &ic_config(cfg));
@@ -228,14 +264,23 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
                 &base_sl(cfg, true),
             );
             model.reset_mesh_stats();
-            let r = train(&mut model, &train_set, &test_set, &sl_cfg);
+            // Lifecycle references are captured *after* IC/PM — the healthy
+            // deployed state is what the watchdog defends.
+            let mut lifecycle = cfg
+                .robustness
+                .as_ref()
+                .filter(|rc| rc.active())
+                .map(|rc| LifecycleRuntime::new(rc, &mut model, cfg.seed));
+            let r = train_with_lifecycle(&mut model, &train_set, &test_set, &sl_cfg, lifecycle.as_mut());
             summary.final_acc = r.final_test_acc;
             summary.best_acc = r.best_test_acc.max(mapped_acc);
             summary.cost = r.cost;
             summary.sl = Some(r);
             mark_stage(&mut summary, &mut clock, "sl");
+            finish_lifecycle(&mut summary, sink, lifecycle);
         }
         Protocol::L2ightSlScratch | Protocol::Rad | Protocol::SwatU => {
+            summary.skipped_stages.extend(["pretrain", "ic", "pm"]);
             let base = base_sl(cfg, false);
             let sl_cfg = match cfg.protocol {
                 Protocol::L2ightSlScratch => {
@@ -248,7 +293,17 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
                 }
                 _ => unreachable!(),
             };
-            let r = train(&mut model, &train_set, &test_set, &sl_cfg);
+            // Lifecycle supervision covers the subspace-learning scratch
+            // protocol too; the mask-juggling baselines (SWAT-U) run clean.
+            let mut lifecycle = if cfg.protocol == Protocol::L2ightSlScratch {
+                cfg.robustness
+                    .as_ref()
+                    .filter(|rc| rc.active())
+                    .map(|rc| LifecycleRuntime::new(rc, &mut model, cfg.seed))
+            } else {
+                None
+            };
+            let r = train_with_lifecycle(&mut model, &train_set, &test_set, &sl_cfg, lifecycle.as_mut());
             if cfg.protocol == Protocol::SwatU {
                 baselines::clear_forward_masks(&mut model);
                 summary.final_acc = test_set.evaluate(&mut model, cfg.batch);
@@ -259,8 +314,10 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
             summary.cost = r.cost;
             summary.sl = Some(r);
             mark_stage(&mut summary, &mut clock, "sl");
+            finish_lifecycle(&mut summary, sink, lifecycle);
         }
         Protocol::Flops | Protocol::MixedTrn => {
+            summary.skipped_stages.extend(["pretrain", "ic", "pm"]);
             let zo_cfg = baselines::ZoTrainConfig {
                 epochs: cfg.epochs,
                 batch: cfg.batch,
@@ -317,6 +374,7 @@ mod tests {
             alpha_d: 0.0,
             zo_budget: 0.15,
             seed: 3,
+            robustness: None,
         }
     }
 
@@ -332,14 +390,98 @@ mod tests {
         assert!(s.cost.total_energy() > 0.0);
         assert!(s.zo_queries > 0);
         // Mapping should land close to the pretrained model: mapped acc is
-        // within reach of pretrain acc.
-        let (pre, mapped) = (s.pretrain_acc.unwrap(), s.mapped_acc.unwrap());
+        // within reach of pretrain acc. Stages that didn't run are recorded
+        // as skipped rather than panicking on a missing metric.
+        let (Some(pre), Some(mapped)) = (s.pretrain_acc, s.mapped_acc) else {
+            panic!("stage metrics missing; skipped stages: {:?}", s.skipped_stages);
+        };
         assert!(mapped > pre - 0.25, "mapping destroyed the model: {pre} -> {mapped}");
+        assert!(s.skipped_stages.is_empty());
+        assert!(s.lifecycle.is_none(), "no robustness config, no lifecycle report");
         assert!(sink.last("job_done").is_some());
         assert!(sink.last("ic_done").is_some());
         let stages: Vec<&str> = s.stage_secs.iter().map(|(n, _)| *n).collect();
         assert_eq!(stages, vec!["pretrain", "ic", "pm", "sl"]);
         assert!(s.stage_secs.iter().all(|(_, t)| *t >= 0.0));
+    }
+
+    #[test]
+    fn skipped_pretrain_is_recorded_not_a_panic() {
+        let mut sink = MetricSink::memory();
+        let mut cfg = tiny_cfg(Protocol::L2ight);
+        cfg.pretrain_epochs = 0;
+        let s = run_job(&cfg, &mut sink);
+        assert_eq!(s.pretrain_acc, None);
+        assert!(s.mapped_acc.is_some());
+        assert_eq!(s.skipped_stages, vec!["pretrain"]);
+        let stages: Vec<&str> = s.stage_secs.iter().map(|(n, _)| *n).collect();
+        assert_eq!(stages, vec!["ic", "pm", "sl"]);
+    }
+
+    #[test]
+    fn baselines_record_skipped_stages() {
+        let mut sink = MetricSink::memory();
+        let mut cfg = tiny_cfg(Protocol::Rad);
+        cfg.epochs = 1;
+        let s = run_job(&cfg, &mut sink);
+        assert_eq!(s.skipped_stages, vec!["pretrain", "ic", "pm"]);
+        assert_eq!(s.pretrain_acc, None);
+    }
+
+    #[test]
+    fn lifecycle_closes_the_loop_and_disabled_config_is_neutral() {
+        use crate::robustness::RobustnessConfig;
+        let mut sink = MetricSink::memory();
+        let base = {
+            let mut c = tiny_cfg(Protocol::L2ight);
+            c.pretrain_epochs = 2;
+            c.epochs = 2;
+            c
+        };
+        let plain = run_job(&base, &mut sink);
+
+        // An explicitly-empty robustness config must not perturb a single
+        // metric (no RNG streams or stat counters are touched).
+        let mut empty = base.clone();
+        empty.robustness = Some(RobustnessConfig::default());
+        let neutral = run_job(&empty, &mut sink);
+        assert_eq!(plain.final_acc, neutral.final_acc);
+        assert_eq!(plain.best_acc, neutral.best_acc);
+        assert_eq!(plain.cost, neutral.cost);
+        assert_eq!(plain.zo_queries, neutral.zo_queries);
+        assert!(neutral.lifecycle.is_none());
+
+        // Faults + watchdog: the loop closes — detection fires and the
+        // recovery budget is spent and accounted.
+        let mut hostile = base.clone();
+        hostile.robustness = Some(RobustnessConfig::lifecycle_row(true, true));
+        let s = run_job(&hostile, &mut sink);
+        let rep = s.lifecycle.expect("lifecycle report");
+        assert_eq!(rep.faults, 2);
+        assert!(rep.drift);
+        assert!(rep.trigger_step.is_some(), "watchdog never fired");
+        assert!(rep.probe_queries > 0);
+        assert!(rep.recoveries > 0, "recovery budget unspent");
+        assert!(s.zo_queries > plain.zo_queries, "recovery queries not folded in");
+        assert!(s.stage_secs.iter().any(|(n, _)| *n == "recovery"));
+        assert!(sink.last("lifecycle_done").is_some());
+
+        // Same hostile config, same seed ⇒ identical deterministic outcome.
+        let s2 = run_job(&hostile, &mut sink);
+        assert_eq!(s.final_acc, s2.final_acc);
+        assert_eq!(s.cost, s2.cost);
+        let rep2 = s2.lifecycle.unwrap();
+        assert_eq!(rep.trigger_step, rep2.trigger_step);
+        assert_eq!(rep.recovery_queries, rep2.recovery_queries);
+
+        // Recovery-off: detection still reported, budget untouched.
+        let mut detect_only = base.clone();
+        detect_only.robustness = Some(RobustnessConfig::lifecycle_row(true, false));
+        let d = run_job(&detect_only, &mut sink);
+        let drep = d.lifecycle.expect("lifecycle report");
+        assert_eq!(drep.recoveries, 0);
+        assert_eq!(drep.recovery_queries, 0);
+        assert!(drep.trigger_step.is_some());
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub mod optim;
 pub mod zoo;
 pub mod sampling;
 pub mod stages;
+pub mod robustness;
 pub mod baselines;
 pub mod profiler;
 pub mod data;

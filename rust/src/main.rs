@@ -17,6 +17,7 @@ use l2ight::data::DatasetKind;
 use l2ight::linalg::Mat;
 use l2ight::nn::ModelArch;
 use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::robustness::{DriftConfig, FaultKind, FaultSpec, RobustnessConfig, WatchdogConfig};
 use l2ight::runtime::{default_artifact_dir, Runtime};
 use l2ight::scenarios::{
     diff_reports, expand, golden, report_json, run_matrix, write_report, GoldenOutcome,
@@ -113,6 +114,9 @@ fn cmd_run(args: &[String]) -> i32 {
         .opt("zo-budget", "1.0", "IC/PM ZO iteration budget multiplier")
         .opt("seed", "42", "PRNG seed")
         .opt("metrics", "", "JSONL metrics output path")
+        .opt("faults", "", "scheduled faults as kind@step, e.g. stuck@8,dead@12")
+        .flag("drift", "inject thermal phase drift + γ aging during SL")
+        .flag("recovery", "enable watchdog probes + in-situ ZO recovery")
         .flag("verbose", "per-epoch progress");
     let a = parse_or_exit(&spec, args);
 
@@ -171,6 +175,31 @@ fn cmd_run(args: &[String]) -> i32 {
     cfg.alpha_d = a.f64("alpha-d") as f32;
     cfg.zo_budget = a.f64("zo-budget") as f32;
     cfg.seed = a.usize("seed") as u64;
+    // Lifecycle flags build a RobustnessConfig; absent flags leave whatever
+    // the JSON config carried (including none) untouched.
+    if a.bool("drift") || a.bool("recovery") || !a.str("faults").is_empty() {
+        let mut faults = Vec::new();
+        for part in a.str("faults").split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let parsed = part
+                .split_once('@')
+                .and_then(|(k, s)| Some((FaultKind::parse(k)?, s.parse::<u64>().ok()?)));
+            match parsed {
+                Some((kind, step)) => faults.push(FaultSpec { step, kind }),
+                None => {
+                    eprintln!("bad fault spec {part:?} (want kind@step, kind in stuck|dead)");
+                    return 2;
+                }
+            }
+        }
+        cfg.robustness = Some(RobustnessConfig {
+            drift: a.bool("drift").then(DriftConfig::default),
+            faults,
+            watchdog: Some(WatchdogConfig {
+                max_recoveries: if a.bool("recovery") { 4 } else { 0 },
+                ..WatchdogConfig::default()
+            }),
+        });
+    }
     if a.bool("verbose") {
         l2ight::util::set_log_level(l2ight::util::Level::Debug);
     }
@@ -224,6 +253,24 @@ fn cmd_run(args: &[String]) -> i32 {
     );
     println!("steps             {}", fmt_sig(s.cost.total_steps(), 4));
     println!("ZO queries        {}", s.zo_queries);
+    if !s.skipped_stages.is_empty() {
+        println!("skipped stages    {}", s.skipped_stages.join(", "));
+    }
+    if let Some(l) = &s.lifecycle {
+        println!(
+            "lifecycle         drift={} faults={} trigger={} latency={} \
+             recoveries={} recovered={} dead={} queries={}+{} probe",
+            l.drift,
+            l.faults,
+            l.trigger_step.map_or("-".into(), |t| t.to_string()),
+            l.detect_latency_steps.map_or("-".into(), |t| t.to_string()),
+            l.recoveries,
+            l.recovered_blocks,
+            l.dead_blocks,
+            l.recovery_queries,
+            l.probe_queries
+        );
+    }
     0
 }
 

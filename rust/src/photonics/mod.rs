@@ -17,5 +17,5 @@ pub mod mesh;
 
 pub use mesh::PtcMesh;
 pub use noise::NoiseModel;
-pub use ptc::Ptc;
+pub use ptc::{PhaseOverlay, Ptc};
 pub use unitary::ReckMesh;

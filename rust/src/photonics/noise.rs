@@ -16,6 +16,14 @@
 //!
 //! Γ and Φ_b are frozen per device instance (they model *manufacturing*
 //! outcomes); Q and Ω are deterministic functions of the programmed phases.
+//!
+//! **Lifecycle effects** (thermal drift, aging, stuck/dead devices) are *not*
+//! part of this static model: they evolve over training steps and are
+//! injected through the [`crate::photonics::PhaseOverlay`] hook on `Ptc`,
+//! which perturbs the effective phases *after* this pipeline runs (i.e.
+//! post-quantization, like any analog disturbance). See `crate::robustness`
+//! for the drift processes, fault schedules, and the watchdog that detects
+//! and recovers from them in situ.
 
 use crate::util::Rng;
 

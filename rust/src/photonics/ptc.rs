@@ -19,6 +19,46 @@ pub enum Which {
     V,
 }
 
+/// A lifecycle perturbation applied to one mesh's *effective* phases at
+/// realization time (robustness subsystem). The overlay acts after the
+/// static non-idealities (Q, Γ, Ω, Φ_b): each effective phase becomes
+/// `φ·gain + delta`, then stuck entries are forced to their frozen value.
+/// Stuck entries model failed devices — re-programming cannot move them,
+/// so recovery has to compensate through the *other* phases.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseOverlay {
+    /// Additive phase drift per device (thermal walk + ambient).
+    pub delta: Vec<f64>,
+    /// Multiplicative gain per device (γ aging); 1.0 = no aging.
+    pub gain: Vec<f64>,
+    /// (device index, frozen phase) for stuck-at/dead devices.
+    pub stuck: Vec<(usize, f64)>,
+}
+
+impl PhaseOverlay {
+    /// Identity overlay for `m` devices.
+    pub fn identity(m: usize) -> PhaseOverlay {
+        PhaseOverlay { delta: vec![0.0; m], gain: vec![1.0; m], stuck: Vec::new() }
+    }
+
+    /// Whether the overlay perturbs anything at all.
+    pub fn is_identity(&self) -> bool {
+        self.stuck.is_empty()
+            && self.delta.iter().all(|&d| d == 0.0)
+            && self.gain.iter().all(|&g| g == 1.0)
+    }
+
+    /// Apply in place to a slice of effective phases.
+    pub fn apply(&self, phases: &mut [f64]) {
+        for (i, p) in phases.iter_mut().enumerate() {
+            *p = *p * self.gain[i] + self.delta[i];
+        }
+        for &(idx, val) in &self.stuck {
+            phases[idx] = val;
+        }
+    }
+}
+
 /// One photonic tensor core.
 #[derive(Clone, Debug)]
 pub struct Ptc {
@@ -37,6 +77,9 @@ pub struct Ptc {
     v_dev: DeviceInstance,
     u_real: Option<Mat>,
     v_real: Option<Mat>,
+    /// Lifecycle overlays (drift/faults) applied at realization time.
+    u_overlay: Option<PhaseOverlay>,
+    v_overlay: Option<PhaseOverlay>,
     /// Scratch for effective-phase realization.
     scratch: Vec<f64>,
 }
@@ -58,8 +101,24 @@ impl Ptc {
             v_dev: DeviceInstance::sample(m, &noise, rng),
             u_real: None,
             v_real: None,
+            u_overlay: None,
+            v_overlay: None,
             scratch: Vec::with_capacity(m),
         }
+    }
+
+    /// Install (or clear) lifecycle overlays for both meshes and invalidate
+    /// the realization caches. `None` restores the pristine device.
+    pub fn set_overlays(&mut self, u: Option<PhaseOverlay>, v: Option<PhaseOverlay>) {
+        self.u_overlay = u;
+        self.v_overlay = v;
+        self.u_real = None;
+        self.v_real = None;
+    }
+
+    /// Currently installed overlays, if any.
+    pub fn overlays(&self) -> (Option<&PhaseOverlay>, Option<&PhaseOverlay>) {
+        (self.u_overlay.as_ref(), self.v_overlay.as_ref())
     }
 
     /// Number of programmable phases (both meshes): k(k−1).
@@ -123,6 +182,11 @@ impl Ptc {
     pub fn realized_u(&mut self) -> &Mat {
         if self.u_real.is_none() {
             self.u_dev.effective_phases(&self.u_mesh.phases, &self.noise, &mut self.scratch);
+            // Lifecycle overlay: analog drift/faults act *after* quantization
+            // and the static non-idealities, on the effective phases.
+            if let Some(ov) = &self.u_overlay {
+                ov.apply(&mut self.scratch);
+            }
             self.u_real = Some(self.u_mesh.synthesize_with(&self.scratch.clone()));
         }
         self.u_real.as_ref().unwrap()
@@ -132,6 +196,9 @@ impl Ptc {
     pub fn realized_v(&mut self) -> &Mat {
         if self.v_real.is_none() {
             self.v_dev.effective_phases(&self.v_mesh.phases, &self.noise, &mut self.scratch);
+            if let Some(ov) = &self.v_overlay {
+                ov.apply(&mut self.scratch);
+            }
             self.v_real = Some(self.v_mesh.synthesize_with(&self.scratch.clone()));
         }
         self.v_real.as_ref().unwrap()
@@ -362,6 +429,47 @@ mod tests {
         for &s in &ptc.sigma {
             assert!((s / step - (s / step).round()).abs() < 1e-5, "{s} not on grid");
         }
+    }
+
+    #[test]
+    fn identity_overlay_is_bitwise_neutral() {
+        let mut rng = Rng::new(9);
+        let mut ptc = Ptc::new(5, NoiseModel::PAPER, &mut rng);
+        let before = ptc.realized_matrix();
+        let m = num_phases(5);
+        ptc.set_overlays(Some(PhaseOverlay::identity(m)), Some(PhaseOverlay::identity(m)));
+        let with_identity = ptc.realized_matrix();
+        assert_close(&before.data, &with_identity.data, 0.0, 0.0).unwrap();
+        ptc.set_overlays(None, None);
+        let cleared = ptc.realized_matrix();
+        assert_close(&before.data, &cleared.data, 0.0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn overlay_perturbs_and_stuck_resists_programming() {
+        let mut rng = Rng::new(10);
+        let mut ptc = Ptc::new(4, NoiseModel::IDEAL, &mut rng);
+        let m = num_phases(4);
+        let mut ov = PhaseOverlay::identity(m);
+        ov.delta[0] = 0.3;
+        assert!(!ov.is_identity());
+        ptc.set_overlays(Some(ov), None);
+        let drifted = ptc.realized_u().clone();
+        assert!(drifted.sub(&Mat::eye(4)).fro_norm() > 1e-3, "drift had no effect");
+
+        // A stuck device ignores re-programming: changing the programmed
+        // phase of the stuck index leaves the realized matrix unchanged.
+        let mut stuck_ov = PhaseOverlay::identity(m);
+        stuck_ov.stuck.push((1, 0.7));
+        ptc.set_overlays(Some(stuck_ov), None);
+        let a = ptc.realized_u().clone();
+        ptc.set_phase(Which::U, 1, 2.0);
+        let b = ptc.realized_u().clone();
+        assert_close(&a.data, &b.data, 0.0, 0.0).unwrap();
+        // ...while a non-stuck phase still responds.
+        ptc.set_phase(Which::U, 0, 1.0);
+        let c = ptc.realized_u().clone();
+        assert!(b.sub(&c).fro_norm() > 1e-3);
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! Deterministic lifecycle fault injection: thermal phase drift and scheduled
+//! device failures, both pure functions of `(seed, block, step)`.
+//!
+//! The determinism contract matters more than the physics here: every draw is
+//! taken from a **fresh** RNG stream keyed by `(seed, block, step)` in a fixed
+//! per-device order, so the injected state at step *t* is identical whether
+//! the process was advanced in one call or across a run/resume boundary, and
+//! is untouched by thread count or SIMD level (all scalar f64 math, no shared
+//! RNG state). `Rng::normal()` caches a Box–Muller spare, which is exactly why
+//! a fresh RNG per `(block, step)` is required for purity.
+
+use crate::photonics::ptc::PhaseOverlay;
+use crate::util::Rng;
+
+/// Stream tags for the injection RNG families (xor'ed into the job seed).
+const DRIFT_TAG: u64 = 0xd21f7;
+const AMBIENT_TAG: u64 = 0xa3b1e;
+const FAULT_TAG: u64 = 0xfa17;
+
+/// Knobs of the per-device drift process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftConfig {
+    /// Std of the per-step thermal phase random walk (rad).
+    pub walk_std: f64,
+    /// Amplitude of the sinusoidal ambient (e.g. HVAC) phase term (rad).
+    pub ambient_amp: f64,
+    /// Period of the ambient term, in training steps.
+    pub ambient_period: f64,
+    /// Std of the per-step multiplicative γ aging increment.
+    pub aging_std: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { walk_std: 0.01, ambient_amp: 0.05, ambient_period: 16.0, aging_std: 0.001 }
+    }
+}
+
+/// Seed-derived drift state for one mesh of one block (U or V).
+///
+/// `advance_to(t)` is idempotent and resume-safe: the cumulative walk at
+/// step *t* is the same bitwise f64 no matter how the interval `[0, t]` was
+/// split across calls, because each step's increments come from a fresh
+/// `(seed, stream, step)` RNG and are accumulated in device order.
+#[derive(Clone, Debug)]
+pub struct DriftProcess {
+    pub cfg: DriftConfig,
+    seed: u64,
+    /// Stream id: `2*block` for the U mesh, `2*block + 1` for V.
+    stream: u64,
+    /// Devices per mesh.
+    m: usize,
+    /// Last step the walk/gain state was advanced to.
+    pub step: u64,
+    /// Cumulative random-walk phase offset per device (rad).
+    pub walk: Vec<f64>,
+    /// Cumulative multiplicative γ aging per device.
+    pub gain: Vec<f64>,
+    /// Per-device phase offset of the ambient sinusoid (frozen at init).
+    ambient_phase: Vec<f64>,
+}
+
+impl DriftProcess {
+    pub fn new(cfg: DriftConfig, seed: u64, stream: u64, m: usize) -> DriftProcess {
+        let mut init = Rng::with_stream(seed ^ AMBIENT_TAG, stream);
+        let ambient_phase =
+            (0..m).map(|_| init.uniform_range(0.0, std::f64::consts::TAU)).collect();
+        DriftProcess {
+            cfg,
+            seed,
+            stream,
+            m,
+            step: 0,
+            walk: vec![0.0; m],
+            gain: vec![1.0; m],
+            ambient_phase,
+        }
+    }
+
+    /// Advance the walk/gain state to step `t` (no-op if already there).
+    pub fn advance_to(&mut self, t: u64) {
+        while self.step < t {
+            self.step += 1;
+            // Fresh RNG per (block-mesh, step): draws are a pure function of
+            // (seed, stream, step) — the resume-safety linchpin.
+            let mut rng =
+                Rng::with_stream(self.seed ^ DRIFT_TAG, (self.stream << 32) ^ self.step);
+            for i in 0..self.m {
+                self.walk[i] += self.cfg.walk_std * rng.normal();
+                self.gain[i] *= 1.0 + self.cfg.aging_std * rng.normal();
+            }
+        }
+    }
+
+    /// Build the overlay for the current step: cumulative walk plus the
+    /// analytic ambient sinusoid (no RNG — exact at any t).
+    pub fn overlay(&self) -> PhaseOverlay {
+        let t = self.step as f64;
+        let omega = std::f64::consts::TAU / self.cfg.ambient_period;
+        let delta = (0..self.m)
+            .map(|i| self.walk[i] + self.cfg.ambient_amp * (omega * t + self.ambient_phase[i]).sin())
+            .collect();
+        PhaseOverlay { delta, gain: self.gain.clone(), stuck: Vec::new() }
+    }
+}
+
+/// What breaks when a scheduled fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Phase shifter frozen at a random phase (heater driver latch-up).
+    StuckPhase,
+    /// MZI dead: phase stuck at 0 — the device passes light unmodulated.
+    DeadMzi,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::StuckPhase => "stuck",
+            FaultKind::DeadMzi => "dead",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "stuck" => Some(FaultKind::StuckPhase),
+            "dead" => Some(FaultKind::DeadMzi),
+            _ => None,
+        }
+    }
+}
+
+/// A scheduled fault: *what* fails and *when*; *where* is seed-derived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Training step at which the fault fires.
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// A resolved fault: concrete placement of a `FaultSpec`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub step: u64,
+    /// Flat block index into the mesh's row-major [p][q] PTC array.
+    pub block: usize,
+    /// Struck mesh: false = U, true = V.
+    pub which_v: bool,
+    /// Device (phase) index within the mesh.
+    pub device: usize,
+    /// Frozen phase value.
+    pub value: f64,
+    /// Whether the device is dead (unrecoverable by definition).
+    pub dead: bool,
+}
+
+/// The resolved fault schedule for one photonic mesh.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Place each spec onto a (block, mesh, device) drawn from a fresh
+    /// per-spec RNG stream — deterministic in `(specs, seed, n_blocks, m)`.
+    pub fn resolve(specs: &[FaultSpec], seed: u64, n_blocks: usize, m: usize) -> FaultPlan {
+        let events = specs
+            .iter()
+            .enumerate()
+            .map(|(idx, spec)| {
+                let mut rng = Rng::with_stream(seed ^ FAULT_TAG, idx as u64);
+                let block = rng.below(n_blocks);
+                let which_v = rng.bernoulli(0.5);
+                let device = rng.below(m);
+                let (value, dead) = match spec.kind {
+                    FaultKind::StuckPhase => {
+                        (rng.uniform_range(-std::f64::consts::PI, std::f64::consts::PI), false)
+                    }
+                    FaultKind::DeadMzi => (0.0, true),
+                };
+                FaultEvent { step: spec.step, block, which_v, device, value, dead }
+            })
+            .collect();
+        FaultPlan { events }
+    }
+
+    /// Faults active on `(block, mesh)` at or before step `t`, as overlay
+    /// stuck entries, in schedule order.
+    pub fn stuck_at(&self, block: usize, which_v: bool, t: u64) -> Vec<(usize, f64)> {
+        self.events
+            .iter()
+            .filter(|e| e.block == block && e.which_v == which_v && e.step <= t)
+            .map(|e| (e.device, e.value))
+            .collect()
+    }
+
+    /// First scheduled fault step at or before `t`, if any fired yet.
+    pub fn first_fired(&self, t: u64) -> Option<u64> {
+        self.events.iter().map(|e| e.step).filter(|&s| s <= t).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quickcheck;
+
+    #[test]
+    fn prop_drift_split_advance_is_bitwise_identical() {
+        quickcheck(
+            "drift: advance in pieces == advance in one go",
+            |rng, size| {
+                let t = 1 + size as u64;
+                let split = 1 + (rng.below(t as usize)) as u64;
+                let m = 1 + size % 12;
+                (t, split, m, rng.next_u64())
+            },
+            |&(t, split, m, seed)| {
+                let cfg = DriftConfig::default();
+                let mut one = DriftProcess::new(cfg, seed, 7, m);
+                one.advance_to(t);
+                let mut two = DriftProcess::new(cfg, seed, 7, m);
+                two.advance_to(split);
+                two.advance_to(t); // resume boundary
+                if one.walk != two.walk {
+                    return Err(format!("walk diverged: {:?} vs {:?}", one.walk, two.walk));
+                }
+                if one.gain != two.gain {
+                    return Err(format!("gain diverged: {:?} vs {:?}", one.gain, two.gain));
+                }
+                let (oa, ob) = (one.overlay(), two.overlay());
+                if oa != ob {
+                    return Err("overlay diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn drift_streams_are_independent_per_mesh() {
+        let cfg = DriftConfig::default();
+        let mut u = DriftProcess::new(cfg, 42, 0, 6);
+        let mut v = DriftProcess::new(cfg, 42, 1, 6);
+        u.advance_to(5);
+        v.advance_to(5);
+        assert_ne!(u.walk, v.walk, "U and V meshes must drift independently");
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_in_range() {
+        let specs = [
+            FaultSpec { step: 8, kind: FaultKind::StuckPhase },
+            FaultSpec { step: 8, kind: FaultKind::DeadMzi },
+            FaultSpec { step: 20, kind: FaultKind::StuckPhase },
+        ];
+        let a = FaultPlan::resolve(&specs, 42, 4, 6);
+        let b = FaultPlan::resolve(&specs, 42, 4, 6);
+        assert_eq!(a, b);
+        for e in &a.events {
+            assert!(e.block < 4);
+            assert!(e.device < 6);
+            assert!(e.value.abs() <= std::f64::consts::PI);
+        }
+        assert!(a.events[1].dead && a.events[1].value == 0.0);
+        assert_eq!(a.first_fired(7), None);
+        assert_eq!(a.first_fired(8), Some(8));
+        assert_eq!(a.first_fired(100), Some(8));
+        // Different seed ⇒ (almost surely) different placement.
+        let c = FaultPlan::resolve(&specs, 43, 4, 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn stuck_at_respects_schedule_and_location() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent { step: 3, block: 1, which_v: false, device: 2, value: 0.5, dead: false },
+                FaultEvent { step: 9, block: 1, which_v: true, device: 0, value: 0.0, dead: true },
+            ],
+        };
+        assert!(plan.stuck_at(1, false, 2).is_empty());
+        assert_eq!(plan.stuck_at(1, false, 3), vec![(2, 0.5)]);
+        assert!(plan.stuck_at(1, true, 3).is_empty());
+        assert_eq!(plan.stuck_at(1, true, 9), vec![(0, 0.0)]);
+        assert!(plan.stuck_at(0, false, 100).is_empty());
+    }
+
+    #[test]
+    fn fault_kind_name_parse_roundtrip() {
+        for k in [FaultKind::StuckPhase, FaultKind::DeadMzi] {
+            assert_eq!(FaultKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FaultKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,184 @@
+//! Lifecycle robustness: drift & fault injection with closed-loop in-situ
+//! recalibration and graceful degradation.
+//!
+//! The paper's three-stage flow calibrates once and assumes the chip then
+//! holds still. Real photonic hardware does not: phases drift thermally,
+//! devices age, and phase shifters die mid-run. This subsystem makes that
+//! lifecycle a first-class, *deterministic* part of a job:
+//!
+//! * [`inject`] — seed-derived [`DriftProcess`] (thermal random walk +
+//!   sinusoidal ambient term + γ aging) and [`FaultPlan`] (stuck-at-phase and
+//!   dead-MZI events at scheduled steps), applied through the
+//!   `PhaseOverlay` realization hook on [`crate::photonics::Ptc`]. Same seed
+//!   + same step ⇒ bitwise-identical injected state at every thread count
+//!   and SIMD level.
+//! * [`watchdog`] — [`LifecycleRuntime`]: detection from in-situ observables
+//!   only (loss spikes + periodic Σ-independent intensity probes), scoped
+//!   per-block ZO recovery with budget accounting, and masking of
+//!   beyond-repair blocks via the engine's masked-forward path.
+//!
+//! Wire-up: set [`crate::coordinator::JobConfig::robustness`]; the SL stage
+//! drives the runtime via `stages::sl::train_with_lifecycle`. With the
+//! config absent every existing metric is bitwise-unchanged — the hooks are
+//! `Option` checks and no RNG stream is touched.
+
+pub mod inject;
+pub mod watchdog;
+
+pub use inject::{DriftConfig, DriftProcess, FaultKind, FaultPlan, FaultSpec};
+pub use watchdog::{LifecycleReport, LifecycleRuntime, WatchdogConfig};
+
+use crate::util::json::Json;
+
+/// Optional per-job lifecycle configuration: what to inject and whether the
+/// watchdog supervises the run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RobustnessConfig {
+    /// Continuous drift injection; `None` = phases hold still.
+    pub drift: Option<DriftConfig>,
+    /// Scheduled fault events (placement is seed-derived).
+    pub faults: Vec<FaultSpec>,
+    /// Detection/recovery supervision; `None` = nothing watches the chip.
+    pub watchdog: Option<WatchdogConfig>,
+}
+
+impl RobustnessConfig {
+    /// Whether the config does anything at all.
+    pub fn active(&self) -> bool {
+        self.drift.is_some() || !self.faults.is_empty() || self.watchdog.is_some()
+    }
+
+    /// The scenario-matrix lifecycle row family: faults always fire and the
+    /// watchdog always observes (so detection metrics exist on every row);
+    /// the axes are drift on/off and recovery budget on/off.
+    pub fn lifecycle_row(drift: bool, recovery: bool) -> RobustnessConfig {
+        RobustnessConfig {
+            drift: drift.then(DriftConfig::default),
+            faults: vec![
+                FaultSpec { step: 8, kind: FaultKind::StuckPhase },
+                FaultSpec { step: 8, kind: FaultKind::DeadMzi },
+            ],
+            watchdog: Some(WatchdogConfig {
+                probe_every: 2,
+                probe_tol: 1e-3,
+                max_recoveries: if recovery { 4 } else { 0 },
+                ..WatchdogConfig::default()
+            }),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        if let Some(d) = &self.drift {
+            let mut dj = Json::obj();
+            dj.set("walk_std", Json::Num(d.walk_std))
+                .set("ambient_amp", Json::Num(d.ambient_amp))
+                .set("ambient_period", Json::Num(d.ambient_period))
+                .set("aging_std", Json::Num(d.aging_std));
+            o.set("drift", dj);
+        }
+        let faults: Vec<Json> = self
+            .faults
+            .iter()
+            .map(|f| {
+                let mut fj = Json::obj();
+                fj.set("step", Json::Num(f.step as f64))
+                    .set("kind", Json::Str(f.kind.name().to_string()));
+                fj
+            })
+            .collect();
+        o.set("faults", Json::Arr(faults));
+        if let Some(w) = &self.watchdog {
+            let mut wj = Json::obj();
+            wj.set("probe_every", Json::Num(w.probe_every as f64))
+                .set("spike_factor", Json::Num(w.spike_factor))
+                .set("loss_window", Json::Num(w.loss_window as f64))
+                .set("probe_tol", Json::Num(w.probe_tol))
+                .set("dead_tol", Json::Num(w.dead_tol))
+                .set("recovery_iters", Json::Num(w.recovery_iters as f64))
+                .set("max_recoveries", Json::Num(w.max_recoveries as f64));
+            o.set("watchdog", wj);
+        }
+        o
+    }
+
+    /// Parse back; `None` on a malformed object (missing fields fall back to
+    /// the documented defaults, like `JobConfig::from_json`).
+    pub fn from_json(j: &Json) -> Option<RobustnessConfig> {
+        j.as_obj()?;
+        let drift = j.get("drift").and_then(|dj| {
+            dj.as_obj()?;
+            let d = DriftConfig::default();
+            let num = |k: &str, dflt: f64| dj.get(k).and_then(Json::as_f64).unwrap_or(dflt);
+            Some(DriftConfig {
+                walk_std: num("walk_std", d.walk_std),
+                ambient_amp: num("ambient_amp", d.ambient_amp),
+                ambient_period: num("ambient_period", d.ambient_period),
+                aging_std: num("aging_std", d.aging_std),
+            })
+        });
+        let faults = match j.get("faults").and_then(Json::as_arr) {
+            Some(arr) => arr
+                .iter()
+                .map(|fj| {
+                    let step = fj.get("step")?.as_f64()? as u64;
+                    let kind = FaultKind::parse(fj.get("kind")?.as_str()?)?;
+                    Some(FaultSpec { step, kind })
+                })
+                .collect::<Option<Vec<FaultSpec>>>()?,
+            None => Vec::new(),
+        };
+        let watchdog = j.get("watchdog").and_then(|wj| {
+            wj.as_obj()?;
+            let w = WatchdogConfig::default();
+            let num = |k: &str, dflt: f64| wj.get(k).and_then(Json::as_f64).unwrap_or(dflt);
+            Some(WatchdogConfig {
+                probe_every: num("probe_every", w.probe_every as f64) as u64,
+                spike_factor: num("spike_factor", w.spike_factor),
+                loss_window: num("loss_window", w.loss_window as f64) as usize,
+                probe_tol: num("probe_tol", w.probe_tol),
+                dead_tol: num("dead_tol", w.dead_tol),
+                recovery_iters: num("recovery_iters", w.recovery_iters as f64) as usize,
+                max_recoveries: num("max_recoveries", w.max_recoveries as f64) as usize,
+            })
+        });
+        Some(RobustnessConfig { drift, faults, watchdog })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        for (drift, recovery) in [(false, false), (false, true), (true, false), (true, true)] {
+            let rc = RobustnessConfig::lifecycle_row(drift, recovery);
+            let j = rc.to_json();
+            let back = RobustnessConfig::from_json(&j).expect("parses back");
+            assert_eq!(rc, back);
+            // Canonical dump is stable (the golden gate compares configs
+            // by exact dump equality).
+            assert_eq!(j.dump(), back.to_json().dump());
+        }
+    }
+
+    #[test]
+    fn empty_config_is_inactive_and_roundtrips() {
+        let rc = RobustnessConfig::default();
+        assert!(!rc.active());
+        let back = RobustnessConfig::from_json(&rc.to_json()).unwrap();
+        assert_eq!(rc, back);
+        assert!(RobustnessConfig::lifecycle_row(true, true).active());
+    }
+
+    #[test]
+    fn malformed_json_is_rejected() {
+        assert_eq!(RobustnessConfig::from_json(&Json::Num(3.0)), None);
+        let mut bad = Json::obj();
+        let mut f = Json::obj();
+        f.set("step", Json::Num(3.0)).set("kind", Json::Str("gremlin".into()));
+        bad.set("faults", Json::Arr(vec![f]));
+        assert_eq!(RobustnessConfig::from_json(&bad), None);
+    }
+}

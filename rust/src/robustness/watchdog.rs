@@ -1,0 +1,537 @@
+//! Closed-loop lifecycle supervision: detect degradation from in-situ
+//! observables only, recover flagged blocks by re-calibrating against
+//! deployment-time intensity references, and mask blocks that stay broken.
+//!
+//! The watchdog never peeks at oracle weights. Its two signals are
+//!
+//! * the training loss stream (a spike vs the trailing window), and
+//! * periodic cheap *intensity probes*: shine the k basis vectors through
+//!   each mesh and compare |U| / |V| magnitudes against references captured
+//!   at deployment (post-IC/PM). Magnitudes are Σ-independent, so ordinary
+//!   subspace learning — which only moves Σ — never trips the probe.
+//!
+//! Recovery re-runs ZO calibration per flagged block with the *deviation
+//! from the reference magnitudes* as the loss: the same restricted hardware
+//! measurement IC uses, so the loop stays physically in-situ. Blocks whose
+//! post-recovery probe still exceeds `dead_tol` are remapped around via the
+//! engine's masked-forward path instead of crashing the run.
+//!
+//! All probe and recovery hardware queries are charged to the mesh's op
+//! counters, so they fold into the existing `CostBreakdown` epoch deltas.
+
+use super::inject::{DriftProcess, FaultPlan};
+use super::RobustnessConfig;
+use crate::nn::{Model, ProjEngine};
+use crate::photonics::ptc::{PhaseOverlay, Ptc, Which};
+use crate::photonics::PtcMesh;
+use crate::util::Rng;
+use crate::zoo::{ZoConfig, ZoKind, ZoProblem};
+
+/// Stream tag for the recovery ZO optimizer RNG.
+const RECOVERY_TAG: u64 = 0x7ec0;
+
+/// Watchdog thresholds and recovery budget.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WatchdogConfig {
+    /// Probe the mesh every this many training steps (0 = loss spikes only).
+    pub probe_every: u64,
+    /// Loss spike trigger: loss > factor × mean(trailing window).
+    pub spike_factor: f64,
+    /// Trailing-loss window length (steps) for the spike baseline.
+    pub loss_window: usize,
+    /// Per-block |U|/|V| probe-MSE threshold that flags a block for recovery.
+    pub probe_tol: f64,
+    /// Post-recovery probe MSE above which a block is declared dead.
+    pub dead_tol: f64,
+    /// ZO iterations per flagged block per recovery round.
+    pub recovery_iters: usize,
+    /// Maximum recovery rounds per run (0 = detect only, never recover).
+    pub max_recoveries: usize,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            probe_every: 4,
+            spike_factor: 2.5,
+            loss_window: 8,
+            probe_tol: 0.01,
+            dead_tol: 0.25,
+            recovery_iters: 40,
+            max_recoveries: 4,
+        }
+    }
+}
+
+/// End-of-run lifecycle outcome, folded into `JobSummary` and the scenario
+/// report. Everything except `recovery_secs` is a deterministic counter.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LifecycleReport {
+    /// Whether drift injection was enabled.
+    pub drift: bool,
+    /// Number of scheduled fault events.
+    pub faults: u64,
+    /// Step at which the watchdog first fired, if it did.
+    pub trigger_step: Option<u64>,
+    /// Steps from the first fired fault to the first trigger.
+    pub detect_latency_steps: Option<u64>,
+    /// Recovery rounds executed.
+    pub recoveries: u64,
+    /// Successful block recoveries (a marginal block re-flagged in a later
+    /// round counts each time it is brought back under `dead_tol`).
+    pub recovered_blocks: u64,
+    /// Blocks masked out as beyond repair.
+    pub dead_blocks: u64,
+    /// Extra ZO hardware queries spent on recovery.
+    pub recovery_queries: u64,
+    /// Hardware queries spent on watchdog probes.
+    pub probe_queries: u64,
+    /// Wall time spent in recovery (nondeterministic; reported via
+    /// stage timings, never golden-gated metrics).
+    pub recovery_secs: f64,
+}
+
+/// Per-block lifecycle state: deployment references + drift processes.
+#[derive(Clone, Debug)]
+struct BlockState {
+    /// Index of the owning photonic mesh in model traversal order.
+    mesh_idx: usize,
+    /// Flat [p][q] block index within that mesh.
+    local: usize,
+    /// Programmable phases per constituent mesh (k(k−1)/2).
+    m: usize,
+    k: usize,
+    /// |realized U| captured at deployment (post-IC/PM), the probe reference.
+    ref_u_abs: Vec<f32>,
+    ref_v_abs: Vec<f32>,
+    drift_u: Option<DriftProcess>,
+    drift_v: Option<DriftProcess>,
+    dead: bool,
+}
+
+/// Recovery objective: magnitude deviation from the deployment references,
+/// measured through the (possibly faulted) hardware — overlays included.
+struct RefCalProblem<'a> {
+    ptc: &'a mut Ptc,
+    ref_u: &'a [f32],
+    ref_v: &'a [f32],
+    m: usize,
+}
+
+impl ZoProblem for RefCalProblem<'_> {
+    fn dim(&self) -> usize {
+        2 * self.m
+    }
+
+    fn eval(&mut self, phases: &[f64]) -> f64 {
+        self.ptc.set_phases(Which::U, &phases[..self.m]);
+        self.ptc.set_phases(Which::V, &phases[self.m..]);
+        probe_mse(self.ptc, self.ref_u, self.ref_v)
+    }
+}
+
+/// Intensity-probe MSE: mean squared |·| deviation over both unitaries.
+fn probe_mse(ptc: &mut Ptc, ref_u: &[f32], ref_v: &[f32]) -> f64 {
+    let (u, v) = ptc.realized_uv();
+    let du: f64 = u
+        .data
+        .iter()
+        .zip(ref_u)
+        .map(|(&a, &r)| {
+            let d = (a.abs() - r) as f64;
+            d * d
+        })
+        .sum();
+    let dv: f64 = v
+        .data
+        .iter()
+        .zip(ref_v)
+        .map(|(&a, &r)| {
+            let d = (a.abs() - r) as f64;
+            d * d
+        })
+        .sum();
+    (du + dv) / (ref_u.len() + ref_v.len()) as f64
+}
+
+/// Visit every photonic mesh of the model in stable traversal order.
+fn for_each_photonic<F>(model: &mut Model, mut f: F)
+where
+    F: FnMut(usize, &mut PtcMesh, &mut Option<(Vec<bool>, f32)>),
+{
+    let mut idx = 0usize;
+    model.for_each_layer(|l| {
+        if let Some(ProjEngine::Photonic { mesh, fwd_mask, .. }) = l.engine_mut() {
+            f(idx, mesh, fwd_mask);
+            idx += 1;
+        }
+    });
+}
+
+/// The closed-loop lifecycle supervisor driving injection, detection, and
+/// recovery across a training run. Owned by the SL loop via
+/// `stages::sl::train_with_lifecycle`; all of its work is serial scalar
+/// math, so it cannot perturb thread/SIMD determinism.
+pub struct LifecycleRuntime {
+    seed: u64,
+    drift_on: bool,
+    watchdog: Option<WatchdogConfig>,
+    plan: FaultPlan,
+    blocks: Vec<BlockState>,
+    /// Executed training steps (skipped data-sampler iterations excluded).
+    step: u64,
+    /// Trailing losses for spike detection.
+    losses: Vec<f64>,
+    trigger_step: Option<u64>,
+    detect_latency: Option<u64>,
+    recoveries: u64,
+    recovered_blocks: u64,
+    dead_blocks: u64,
+    recovery_queries: u64,
+    probe_queries: u64,
+    recovery_secs: f64,
+}
+
+impl LifecycleRuntime {
+    /// Capture deployment references and resolve the fault schedule.
+    /// Call after IC/PM (or initial programming) so references describe the
+    /// healthy deployed state.
+    pub fn new(cfg: &RobustnessConfig, model: &mut Model, seed: u64) -> LifecycleRuntime {
+        let mut blocks = Vec::new();
+        for_each_photonic(model, |mi, mesh, _| {
+            for local in 0..mesh.ptcs.len() {
+                let gi = blocks.len();
+                let ptc = &mut mesh.ptcs[local];
+                let m = ptc.n_phases() / 2;
+                let k = ptc.k;
+                let (u, v) = ptc.realized_uv();
+                let ref_u_abs = u.data.iter().map(|a| a.abs()).collect();
+                let ref_v_abs = v.data.iter().map(|a| a.abs()).collect();
+                let (drift_u, drift_v) = match cfg.drift {
+                    Some(dc) => (
+                        Some(DriftProcess::new(dc, seed, 2 * gi as u64, m)),
+                        Some(DriftProcess::new(dc, seed, 2 * gi as u64 + 1, m)),
+                    ),
+                    None => (None, None),
+                };
+                blocks.push(BlockState {
+                    mesh_idx: mi,
+                    local,
+                    m,
+                    k,
+                    ref_u_abs,
+                    ref_v_abs,
+                    drift_u,
+                    drift_v,
+                    dead: false,
+                });
+            }
+        });
+        let m = blocks.first().map(|b| b.m).unwrap_or(1);
+        let plan = FaultPlan::resolve(&cfg.faults, seed, blocks.len().max(1), m);
+        LifecycleRuntime {
+            seed,
+            drift_on: cfg.drift.is_some(),
+            watchdog: cfg.watchdog,
+            plan,
+            blocks,
+            step: 0,
+            losses: Vec::new(),
+            trigger_step: None,
+            detect_latency: None,
+            recoveries: 0,
+            recovered_blocks: 0,
+            dead_blocks: 0,
+            recovery_queries: 0,
+            probe_queries: 0,
+            recovery_secs: 0.0,
+        }
+    }
+
+    /// Advance lifecycle time by one executed training step and install the
+    /// step-t overlays. With drift off, overlays only change at fault steps
+    /// (installed once; they persist on the PTC), so quiet steps are a no-op
+    /// and the caches stay warm.
+    pub fn begin_step(&mut self, model: &mut Model) {
+        self.step += 1;
+        let t = self.step;
+        let new_faults = self.plan.events.iter().any(|e| e.step == t);
+        if !self.drift_on && !new_faults {
+            return;
+        }
+        let blocks = &mut self.blocks;
+        let plan = &self.plan;
+        for_each_photonic(model, |mi, mesh, _| {
+            let mut touched = false;
+            for (gi, blk) in blocks.iter_mut().enumerate() {
+                if blk.mesh_idx != mi {
+                    continue;
+                }
+                let mut u_ov = match &mut blk.drift_u {
+                    Some(d) => {
+                        d.advance_to(t);
+                        d.overlay()
+                    }
+                    None => PhaseOverlay::identity(blk.m),
+                };
+                let mut v_ov = match &mut blk.drift_v {
+                    Some(d) => {
+                        d.advance_to(t);
+                        d.overlay()
+                    }
+                    None => PhaseOverlay::identity(blk.m),
+                };
+                u_ov.stuck = plan.stuck_at(gi, false, t);
+                v_ov.stuck = plan.stuck_at(gi, true, t);
+                mesh.ptcs[blk.local].set_overlays(Some(u_ov), Some(v_ov));
+                touched = true;
+            }
+            if touched {
+                mesh.invalidate();
+            }
+        });
+    }
+
+    /// Feed the post-step training loss; run detection and (budget allowing)
+    /// recovery when a probe is due or the loss spikes.
+    pub fn observe(&mut self, model: &mut Model, loss: f64) {
+        let Some(wd) = self.watchdog else { return };
+        let spike = self.losses.len() >= wd.loss_window && {
+            let mean: f64 = self.losses.iter().sum::<f64>() / self.losses.len() as f64;
+            mean.is_finite() && loss > wd.spike_factor * mean
+        };
+        self.losses.push(loss);
+        if self.losses.len() > wd.loss_window.max(1) {
+            self.losses.remove(0);
+        }
+        let probe_due = wd.probe_every > 0 && self.step % wd.probe_every == 0;
+        if !spike && !probe_due {
+            return;
+        }
+
+        // Probe pass: flag live blocks whose magnitudes left the reference.
+        let mut flagged: Vec<usize> = Vec::new();
+        {
+            let blocks = &self.blocks;
+            let probe_queries = &mut self.probe_queries;
+            for_each_photonic(model, |mi, mesh, _| {
+                for (gi, blk) in blocks.iter().enumerate() {
+                    if blk.mesh_idx != mi || blk.dead {
+                        continue;
+                    }
+                    let mse = probe_mse(&mut mesh.ptcs[blk.local], &blk.ref_u_abs, &blk.ref_v_abs);
+                    mesh.stats.fwd_block_cols += 2 * blk.k as u64;
+                    mesh.stats.fwd_steps += 2;
+                    *probe_queries += 2 * blk.k as u64;
+                    if mse > wd.probe_tol {
+                        flagged.push(gi);
+                    }
+                }
+            });
+        }
+        if flagged.is_empty() {
+            return;
+        }
+        if self.trigger_step.is_none() {
+            self.trigger_step = Some(self.step);
+            self.detect_latency = self.plan.first_fired(self.step).map(|f| self.step - f);
+        }
+        if self.recoveries >= wd.max_recoveries as u64 {
+            return;
+        }
+        self.recoveries += 1;
+        let round = self.recoveries;
+
+        // Recovery pass: per flagged block, re-calibrate toward the
+        // deployment references through the faulted hardware, then either
+        // accept the block back or mask it out of the forward path.
+        let t0 = std::time::Instant::now();
+        let seed = self.seed;
+        let blocks = &mut self.blocks;
+        let recovery_queries = &mut self.recovery_queries;
+        let recovered_blocks = &mut self.recovered_blocks;
+        let dead_blocks = &mut self.dead_blocks;
+        for_each_photonic(model, |mi, mesh, fwd_mask| {
+            let mut touched = false;
+            for &gi in &flagged {
+                if blocks[gi].mesh_idx != mi {
+                    continue;
+                }
+                let (local, m, k) = (blocks[gi].local, blocks[gi].m, blocks[gi].k);
+                let queries;
+                let healed;
+                {
+                    let blk = &blocks[gi];
+                    let ptc = &mut mesh.ptcs[local];
+                    let mut init = Vec::with_capacity(2 * m);
+                    init.extend_from_slice(&ptc.u_mesh.phases);
+                    init.extend_from_slice(&ptc.v_mesh.phases);
+                    let mut prob =
+                        RefCalProblem { ptc, ref_u: &blk.ref_u_abs, ref_v: &blk.ref_v_abs, m };
+                    let zcfg = ZoConfig {
+                        iters: wd.recovery_iters,
+                        step: 0.1,
+                        decay: 0.97,
+                        step_floor: 2e-3,
+                        best_recording: true,
+                    };
+                    let mut rng =
+                        Rng::with_stream(seed ^ RECOVERY_TAG, ((gi as u64) << 32) ^ round);
+                    let rep = ZoKind::Zcd.run(&mut prob, &init, zcfg, &mut rng);
+                    prob.ptc.set_phases(Which::U, &rep.best_phases[..m]);
+                    prob.ptc.set_phases(Which::V, &rep.best_phases[m..]);
+                    queries = rep.queries;
+                    // +1 query: the post-recovery acceptance probe.
+                    healed = probe_mse(prob.ptc, &blk.ref_u_abs, &blk.ref_v_abs) <= wd.dead_tol;
+                }
+                mesh.stats.fwd_block_cols += (queries + 1) * 2 * k as u64;
+                mesh.stats.fwd_steps += queries + 1;
+                *recovery_queries += queries + 1;
+                if healed {
+                    *recovered_blocks += 1;
+                } else {
+                    // Graceful degradation: mask the block out of the
+                    // forward path instead of letting a dead device poison
+                    // every inference.
+                    blocks[gi].dead = true;
+                    *dead_blocks += 1;
+                    let nb = mesh.ptcs.len();
+                    let (keep, _) = fwd_mask.get_or_insert((vec![true; nb], 1.0));
+                    keep[local] = false;
+                }
+                touched = true;
+            }
+            if touched {
+                mesh.invalidate();
+            }
+        });
+        self.recovery_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Executed lifecycle steps so far.
+    pub fn steps(&self) -> u64 {
+        self.step
+    }
+
+    /// Fold the run into a report.
+    pub fn finish(&self) -> LifecycleReport {
+        LifecycleReport {
+            drift: self.drift_on,
+            faults: self.plan.events.len() as u64,
+            trigger_step: self.trigger_step,
+            detect_latency_steps: self.detect_latency,
+            recoveries: self.recoveries,
+            recovered_blocks: self.recovered_blocks,
+            dead_blocks: self.dead_blocks,
+            recovery_queries: self.recovery_queries,
+            probe_queries: self.probe_queries,
+            recovery_secs: self.recovery_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{build_model, EngineKind, ModelArch};
+    use crate::photonics::NoiseModel;
+    use crate::robustness::inject::{DriftConfig, FaultKind, FaultSpec};
+    use crate::util::Rng;
+
+    fn tiny_photonic_model() -> Model {
+        let mut rng = Rng::new(77);
+        build_model(
+            ModelArch::MlpVowel,
+            EngineKind::Photonic { k: 4, noise: NoiseModel::quant_only(8) },
+            4,
+            0.5,
+            &mut rng,
+        )
+    }
+
+    fn cfg(drift: bool, faults: bool, wd: Option<WatchdogConfig>) -> RobustnessConfig {
+        RobustnessConfig {
+            drift: drift.then(DriftConfig::default),
+            faults: if faults {
+                vec![FaultSpec { step: 2, kind: FaultKind::StuckPhase }]
+            } else {
+                Vec::new()
+            },
+            watchdog: wd,
+        }
+    }
+
+    #[test]
+    fn quiet_runtime_is_a_no_op() {
+        let mut model = tiny_photonic_model();
+        let mut rt = LifecycleRuntime::new(&cfg(false, false, None), &mut model, 42);
+        let x = crate::linalg::Mat::randn(8, 3, 1.0, &mut Rng::new(1));
+        let a = crate::nn::Act::from_features(x, 3);
+        let before = model.forward(&a, false);
+        for _ in 0..4 {
+            rt.begin_step(&mut model);
+            rt.observe(&mut model, 1.0);
+        }
+        let after = model.forward(&a, false);
+        crate::util::prop::assert_close(&before.mat.data, &after.mat.data, 0.0, 0.0).unwrap();
+        let rep = rt.finish();
+        assert_eq!(rep, LifecycleReport::default());
+        assert_eq!(rt.steps(), 4);
+    }
+
+    #[test]
+    fn fault_trips_probe_and_watchdog_recovers() {
+        let wd = WatchdogConfig { probe_every: 1, probe_tol: 1e-4, ..Default::default() };
+        let mut model = tiny_photonic_model();
+        let mut rt = LifecycleRuntime::new(&cfg(false, true, Some(wd)), &mut model, 42);
+        for _ in 0..4 {
+            rt.begin_step(&mut model);
+            rt.observe(&mut model, 1.0);
+        }
+        let rep = rt.finish();
+        assert_eq!(rep.faults, 1);
+        assert_eq!(rep.trigger_step, Some(2), "probe missed the step-2 fault");
+        assert_eq!(rep.detect_latency_steps, Some(0));
+        assert!(rep.recoveries >= 1);
+        assert!(rep.recovery_queries > 0);
+        assert!(rep.probe_queries > 0);
+        assert!(rep.recovered_blocks + rep.dead_blocks >= 1, "flagged block unaccounted");
+    }
+
+    #[test]
+    fn detection_only_when_recovery_budget_is_zero() {
+        let wd = WatchdogConfig {
+            probe_every: 1,
+            probe_tol: 1e-4,
+            max_recoveries: 0,
+            ..Default::default()
+        };
+        let mut model = tiny_photonic_model();
+        let mut rt = LifecycleRuntime::new(&cfg(false, true, Some(wd)), &mut model, 42);
+        for _ in 0..4 {
+            rt.begin_step(&mut model);
+            rt.observe(&mut model, 1.0);
+        }
+        let rep = rt.finish();
+        assert_eq!(rep.trigger_step, Some(2));
+        assert_eq!(rep.recoveries, 0);
+        assert_eq!(rep.recovery_queries, 0);
+    }
+
+    #[test]
+    fn lifecycle_is_deterministic_across_instances() {
+        let run = || {
+            let mut model = tiny_photonic_model();
+            let wd = WatchdogConfig { probe_every: 2, probe_tol: 1e-4, ..Default::default() };
+            let mut rt = LifecycleRuntime::new(&cfg(true, true, Some(wd)), &mut model, 42);
+            for _ in 0..6 {
+                rt.begin_step(&mut model);
+                rt.observe(&mut model, 1.0);
+            }
+            let mut rep = rt.finish();
+            rep.recovery_secs = 0.0; // wall time is the one nondeterministic field
+            rep
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -24,6 +24,7 @@ use crate::coordinator::driver::job_seed;
 use crate::data::DatasetKind;
 use crate::nn::ModelArch;
 use crate::photonics::NoiseModel;
+use crate::robustness::RobustnessConfig;
 
 /// Which slice of the scenario space to enumerate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,6 +89,20 @@ fn noise_tag(n: &NoiseModel) -> &'static str {
 }
 
 fn row_name(cfg: &JobConfig) -> String {
+    // Lifecycle rows get their own family prefix (deliberately NOT the
+    // protocol name, so protocol-substring filters keep selecting exactly
+    // the clean-chip rows they always did).
+    if let Some(rc) = &cfg.robustness {
+        let recovery = rc.watchdog.map(|w| w.max_recoveries > 0).unwrap_or(false);
+        return format!(
+            "lifecycle/{}/{}/{}/drift{}-rec{}",
+            cfg.arch.name(),
+            cfg.dataset.name(),
+            noise_tag(&cfg.noise),
+            rc.drift.is_some() as u8,
+            recovery as u8,
+        );
+    }
     format!(
         "{}/{}/{}/{}/aw{}-ac{}-ad{}",
         cfg.protocol.name(),
@@ -120,6 +135,7 @@ fn quick_base() -> JobConfig {
         alpha_d: 0.0,
         zo_budget: 0.1,
         seed: 0, // assigned by expand()
+        robustness: None,
     }
 }
 
@@ -142,6 +158,7 @@ fn full_base() -> JobConfig {
         alpha_d: 0.0,
         zo_budget: 1.0,
         seed: 0,
+        robustness: None,
     }
 }
 
@@ -195,6 +212,16 @@ fn quick_rows() -> Vec<JobConfig> {
     cnn.pretrain_epochs = 2;
     cnn.epochs = 2;
     rows.push(cnn);
+    // Lifecycle axis: the L2ight flow on an aging chip — drift on/off ×
+    // recovery on/off. Appended last so the seeds of every pre-existing row
+    // are untouched. A slightly longer SL run (4 epochs = 24 steps) gives
+    // the step-8 fault schedule room to fire, be detected, and recover.
+    for (drift, recovery) in [(false, false), (false, true), (true, false), (true, true)] {
+        let mut c = base.clone();
+        c.epochs = 4;
+        c.robustness = Some(RobustnessConfig::lifecycle_row(drift, recovery));
+        rows.push(c);
+    }
     rows
 }
 
@@ -319,6 +346,31 @@ mod tests {
         assert!(rows.iter().any(|r| r.cfg.arch == ModelArch::CnnS));
         // A sparsified row appears.
         assert!(rows.iter().any(|r| r.cfg.alpha_c < 1.0 && r.cfg.alpha_w < 1.0));
+        // The lifecycle family appears: all four drift × recovery corners.
+        for tag in ["drift0-rec0", "drift0-rec1", "drift1-rec0", "drift1-rec1"] {
+            assert!(
+                rows.iter().any(|r| r.name.starts_with("lifecycle/") && r.name.ends_with(tag)),
+                "lifecycle corner {tag} missing"
+            );
+        }
+    }
+
+    #[test]
+    fn lifecycle_rows_do_not_collide_with_protocol_filters() {
+        // The CI determinism leg filters by protocol-name substrings and
+        // asserts an exact row count; lifecycle names must stay invisible
+        // to those filters.
+        let rows = expand(&MatrixSpec::new(Tier::Quick));
+        for r in rows.iter().filter(|r| r.name.starts_with("lifecycle/")) {
+            assert!(r.cfg.robustness.is_some(), "{}: lifecycle row lost its config", r.name);
+            for f in ["l2ight/", "rad/", "flops/", "swat-u/", "mixedtrn/"] {
+                assert!(!r.name.contains(f), "{} matches protocol filter {f}", r.name);
+            }
+        }
+        // And conversely: protocol rows never carry a robustness config.
+        for r in rows.iter().filter(|r| !r.name.starts_with("lifecycle/")) {
+            assert!(r.cfg.robustness.is_none(), "{}: unexpected robustness config", r.name);
+        }
     }
 
     #[test]

@@ -18,8 +18,13 @@
 //!         "ic_mse": 1.2e-3, "pm_err": 4.0e-2,
 //!         "zo_queries": 96, "trainable_params": 128, "total_params": 420,
 //!         "cost": {"fwd_energy": ..., "wgrad_energy": ..., "fbk_energy": ...,
-//!                  "fwd_steps": ..., "wgrad_steps": ..., "fbk_steps": ...}
+//!                  "fwd_steps": ..., "wgrad_steps": ..., "fbk_steps": ...},
+//!         "lifecycle": null | {"drift": 1, "faults": 2, "trigger_step": 8,
+//!                              "detect_latency_steps": 0, "recoveries": 1,
+//!                              "recovered_blocks": 1, "dead_blocks": 0,
+//!                              "recovery_queries": 40, "probe_queries": 16}
 //!       },
+//!       "skipped_stages": [],
 //!       "stage_secs": {"pretrain": 0.1, "ic": 0.2, "pm": 0.3, "sl": 0.4},
 //!       "wall_secs": 1.0
 //!     }
@@ -72,6 +77,30 @@ fn metrics_json(r: &RowResult) -> Json {
         .set("wgrad_steps", Json::Num(c.wgrad_steps))
         .set("fbk_steps", Json::Num(c.fbk_steps));
     m.set("cost", cost);
+    // Lifecycle counters (robustness rows): deterministic only — recovery
+    // wall time is reported through `stage_secs` instead.
+    m.set(
+        "lifecycle",
+        match &s.lifecycle {
+            None => Json::Null,
+            Some(l) => {
+                let mut lj = Json::obj();
+                lj.set("drift", Json::Num(if l.drift { 1.0 } else { 0.0 }))
+                    .set("faults", Json::Num(l.faults as f64))
+                    .set("trigger_step", opt_num(l.trigger_step.map(|t| t as f64)))
+                    .set(
+                        "detect_latency_steps",
+                        opt_num(l.detect_latency_steps.map(|t| t as f64)),
+                    )
+                    .set("recoveries", Json::Num(l.recoveries as f64))
+                    .set("recovered_blocks", Json::Num(l.recovered_blocks as f64))
+                    .set("dead_blocks", Json::Num(l.dead_blocks as f64))
+                    .set("recovery_queries", Json::Num(l.recovery_queries as f64))
+                    .set("probe_queries", Json::Num(l.probe_queries as f64));
+                lj
+            }
+        },
+    );
     m
 }
 
@@ -85,6 +114,12 @@ pub fn row_json(r: &RowResult) -> Json {
     row.set("name", Json::Str(r.row.name.clone()))
         .set("config", r.row.cfg.to_json())
         .set("metrics", metrics_json(r))
+        .set(
+            "skipped_stages",
+            Json::Arr(
+                r.summary.skipped_stages.iter().map(|s| Json::Str((*s).into())).collect(),
+            ),
+        )
         .set("stage_secs", stages)
         .set("wall_secs", Json::Num(r.wall_secs));
     row
@@ -139,6 +174,8 @@ mod tests {
                 cost: CostBreakdown::default(),
                 zo_queries: 7,
                 sl: None,
+                lifecycle: None,
+                skipped_stages: Vec::new(),
                 stage_secs: vec![("ic", 0.25)],
             },
             wall_secs: 1.5,
@@ -159,6 +196,9 @@ mod tests {
         assert_eq!(m.get("mapped_acc"), Some(&Json::Null));
         assert_eq!(m.get("zo_queries").unwrap().as_f64(), Some(7.0));
         assert!(m.get("cost").unwrap().get("fwd_energy").is_some());
+        // Lifecycle is null (presence golden-checked) on non-robustness rows.
+        assert_eq!(m.get("lifecycle"), Some(&Json::Null));
+        assert_eq!(rows[0].get("skipped_stages").unwrap().as_arr().unwrap().len(), 0);
         assert_eq!(rows[0].get("stage_secs").unwrap().get("ic").unwrap().as_f64(), Some(0.25));
     }
 

@@ -68,6 +68,7 @@ mod tests {
                 alpha_d: 0.0,
                 zo_budget: 0.1,
                 seed,
+                robustness: None,
             },
         }
     }

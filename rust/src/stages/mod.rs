@@ -19,4 +19,4 @@ pub mod sl;
 
 pub use ic::{calibrate_mesh, calibrate_model, IcConfig, IcReport};
 pub use pm::{map_mesh, map_model, PmConfig, PmReport};
-pub use sl::{train, SlConfig, SlReport};
+pub use sl::{train, train_with_lifecycle, SlConfig, SlReport};

@@ -139,6 +139,23 @@ pub fn train(
     test_set: &Dataset,
     cfg: &SlConfig,
 ) -> SlReport {
+    train_with_lifecycle(model, train_set, test_set, cfg, None)
+}
+
+/// `train` with an optional lifecycle supervisor (robustness subsystem).
+///
+/// Per executed iteration the runtime first advances injected drift/faults
+/// (`begin_step` — lifecycle time is *executed* steps; SMD-skipped
+/// iterations don't age the chip), then observes the post-step loss for
+/// detection/recovery (`observe`). With `None` the loop is byte-for-byte
+/// the plain `train` — no extra RNG draws, no stat traffic.
+pub fn train_with_lifecycle(
+    model: &mut Model,
+    train_set: &Dataset,
+    test_set: &Dataset,
+    cfg: &SlConfig,
+    mut lifecycle: Option<&mut crate::robustness::LifecycleRuntime>,
+) -> SlReport {
     let mut rng = Rng::with_stream(cfg.seed, 0xda7a);
     let mut opt: Box<dyn Optimizer> = match cfg.opt {
         OptKind::AdamW { lr, weight_decay } => Box::new(AdamW::new(lr, weight_decay)),
@@ -176,6 +193,9 @@ pub fn train(
             if cfg.data.skip(&mut rng) {
                 continue;
             }
+            if let Some(rt) = &mut lifecycle {
+                rt.begin_step(model);
+            }
             let aug = if cfg.augment.is_none() { None } else { Some((&cfg.augment, &mut rng)) };
             let (x, labels) = train_set.gather(&idx, aug);
             let logits = model.forward(&x, true);
@@ -191,6 +211,9 @@ pub fn train(
             let dy = Act { mat: dlogits, ..logits };
             model.backward(&dy, &mut ctx);
             model.step(opt.as_mut());
+            if let Some(rt) = &mut lifecycle {
+                rt.observe(model, loss as f64);
+            }
             iters_run += 1;
         }
         let denom = iters_run.max(1) as f64;

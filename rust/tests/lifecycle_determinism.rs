@@ -1,0 +1,200 @@
+//! Lifecycle-injection determinism: drift, faults, and the recovery loop
+//! must be a pure function of (seed, step) — bitwise identical at every
+//! thread count, under split/resume advancement, and across whole-job
+//! re-runs. Extends the `parallel_equivalence` patterns to the robustness
+//! layer.
+
+use l2ight::coordinator::{run_job, JobConfig, MetricSink, Protocol};
+use l2ight::data::DatasetKind;
+use l2ight::linalg::Mat;
+use l2ight::nn::ModelArch;
+use l2ight::photonics::{NoiseModel, PhaseOverlay, PtcMesh};
+use l2ight::robustness::{DriftConfig, DriftProcess, FaultKind, FaultPlan, FaultSpec, RobustnessConfig};
+use l2ight::util::pool::ThreadPool;
+use l2ight::util::prop::{assert_close, quickcheck};
+use l2ight::util::Rng;
+
+#[test]
+fn prop_drift_resume_is_bitwise_identical_to_straight_run() {
+    // Advancing a drift process to step T in one shot vs in arbitrary
+    // chunks (simulating checkpoint/resume) must land on the exact same
+    // state — the per-step RNG stream is keyed by (stream, step), never by
+    // call history.
+    quickcheck(
+        "drift: split advance == straight advance",
+        |rng: &mut Rng, size: usize| {
+            let m = 1 + size % 24;
+            let seed = rng.next_u64();
+            let stream = rng.next_u64() % 64;
+            let total = 1 + size % 40;
+            let split = 1 + rng.below(total.max(1));
+            (m, seed, stream, total as u64, split as u64)
+        },
+        |case| {
+            let &(m, seed, stream, total, split) = case;
+            let cfg = DriftConfig::default();
+            let mut straight = DriftProcess::new(cfg, seed, stream, m);
+            straight.advance_to(total);
+            let mut resumed = DriftProcess::new(cfg, seed, stream, m);
+            resumed.advance_to(split.min(total));
+            resumed.advance_to(total);
+            if straight.walk != resumed.walk {
+                return Err("walk diverged under split advance".to_string());
+            }
+            if straight.gain != resumed.gain {
+                return Err("gain diverged under split advance".to_string());
+            }
+            if straight.overlay() != resumed.overlay() {
+                return Err("overlay diverged under split advance".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fault_plan_is_a_pure_function_of_seed() {
+    let specs = [
+        FaultSpec { step: 3, kind: FaultKind::StuckPhase },
+        FaultSpec { step: 7, kind: FaultKind::DeadMzi },
+        FaultSpec { step: 7, kind: FaultKind::StuckPhase },
+    ];
+    let a = FaultPlan::resolve(&specs, 0xfeed, 4, 12);
+    let b = FaultPlan::resolve(&specs, 0xfeed, 4, 12);
+    assert_eq!(a.events, b.events, "same seed must give identical plans");
+    let c = FaultPlan::resolve(&specs, 0xbeef, 4, 12);
+    assert_ne!(a.events, c.events, "different seed should move the faults");
+    // Schedule semantics: nothing before the first step, everything at/after.
+    assert_eq!(a.first_fired(2), None);
+    assert_eq!(a.first_fired(3), Some(3));
+    assert_eq!(a.first_fired(100), Some(3));
+}
+
+#[test]
+fn overlaid_mesh_forward_is_thread_count_invariant() {
+    // A mesh carrying drift overlays + stuck devices must stay bitwise
+    // thread-invariant: injection mutates per-block programmed state before
+    // the fan-out, never inside it.
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(5);
+    quickcheck(
+        "overlaid forward: threads=1 == threads=N",
+        |rng: &mut Rng, size: usize| {
+            let k = 2 + size % 5;
+            let rows = k + 1 + size % 17;
+            let cols = k + 1 + (size / 2) % 13;
+            let b = 1 + size % 9;
+            let w = Mat::randn(rows, cols, 0.5, rng);
+            let mut mesh = PtcMesh::new(rows, cols, k, NoiseModel::quant_only(8), rng);
+            mesh.program_from_dense(&w);
+            let seed = rng.next_u64();
+            let t = 1 + (size as u64) % 11;
+            // Install drift + one stuck device per block, as the runtime does.
+            let n_blocks = mesh.ptcs.len();
+            for (gi, ptc) in mesh.ptcs.iter_mut().enumerate() {
+                let m = ptc.u_mesh.phases.len();
+                let mut du = DriftProcess::new(DriftConfig::default(), seed, (2 * gi) as u64, m);
+                let mut dv =
+                    DriftProcess::new(DriftConfig::default(), seed, (2 * gi + 1) as u64, m);
+                du.advance_to(t);
+                dv.advance_to(t);
+                let mut ou = du.overlay();
+                let ov = dv.overlay();
+                ou.stuck.push((gi % m, 0.25));
+                ptc.set_overlays(Some(ou), Some(ov));
+            }
+            mesh.invalidate();
+            assert_eq!(n_blocks, mesh.ptcs.len());
+            let x = Mat::randn(cols, b, 1.0, rng);
+            (mesh, x)
+        },
+        |case| {
+            let (mesh, x) = case;
+            let mut m1 = mesh.clone();
+            let mut m2 = mesh.clone();
+            let y1 = m1.forward_masked_on(&serial, x, None, 1.0);
+            let y2 = m2.forward_masked_on(&wide, x, None, 1.0);
+            assert_close(&y1.data, &y2.data, 0.0, 0.0)
+                .map_err(|e| format!("threads=1 vs threads=N: {e}"))
+        },
+    );
+}
+
+#[test]
+fn identity_overlay_leaves_forward_bitwise_unchanged() {
+    let pool = ThreadPool::new(2);
+    let mut rng = Rng::new(0x11fe);
+    let w = Mat::randn(8, 8, 0.5, &mut rng);
+    let mut mesh = PtcMesh::new(8, 8, 4, NoiseModel::PAPER, &mut rng);
+    mesh.program_from_dense(&w);
+    let x = Mat::randn(8, 5, 1.0, &mut rng);
+    let y_plain = mesh.clone().forward_masked_on(&pool, &x, None, 1.0);
+    let mut overlaid = mesh.clone();
+    for ptc in &mut overlaid.ptcs {
+        let mu = ptc.u_mesh.phases.len();
+        let mv = ptc.v_mesh.phases.len();
+        ptc.set_overlays(Some(PhaseOverlay::identity(mu)), Some(PhaseOverlay::identity(mv)));
+    }
+    overlaid.invalidate();
+    let y_overlaid = overlaid.forward_masked_on(&pool, &x, None, 1.0);
+    assert_close(&y_plain.data, &y_overlaid.data, 0.0, 0.0).unwrap();
+}
+
+fn lifecycle_cfg() -> JobConfig {
+    JobConfig {
+        arch: ModelArch::MlpVowel,
+        dataset: DatasetKind::VowelLike,
+        protocol: Protocol::L2ight,
+        k: 4,
+        noise: NoiseModel::quant_only(8),
+        width: 0.5,
+        n_train: 96,
+        n_test: 48,
+        pretrain_epochs: 2,
+        epochs: 3,
+        batch: 16,
+        alpha_w: 0.6,
+        alpha_c: 1.0,
+        alpha_d: 0.0,
+        zo_budget: 0.1,
+        seed: 1234,
+        robustness: Some(RobustnessConfig::lifecycle_row(true, true)),
+    }
+}
+
+#[test]
+fn lifecycle_job_is_reproducible_across_runs() {
+    let cfg = lifecycle_cfg();
+    let mut s1 = MetricSink::memory();
+    let mut s2 = MetricSink::memory();
+    let a = run_job(&cfg, &mut s1);
+    let b = run_job(&cfg, &mut s2);
+    assert_eq!(a.final_acc, b.final_acc);
+    assert_eq!(a.best_acc, b.best_acc);
+    assert_eq!(a.zo_queries, b.zo_queries);
+    assert_eq!(a.cost.total_energy(), b.cost.total_energy());
+    let (mut la, mut lb) = (a.lifecycle.expect("lifecycle report"), b.lifecycle.expect("lifecycle report"));
+    // Wall time is the one legitimately nondeterministic field.
+    la.recovery_secs = 0.0;
+    lb.recovery_secs = 0.0;
+    assert_eq!(la, lb, "lifecycle counters must be seed-deterministic");
+}
+
+#[test]
+fn disabled_robustness_config_is_bitwise_neutral() {
+    // robustness: Some(empty) and robustness: None must produce identical
+    // metrics — the hooks may not perturb any RNG stream or counter.
+    let mut plain_cfg = lifecycle_cfg();
+    plain_cfg.robustness = None;
+    let mut empty_cfg = plain_cfg.clone();
+    empty_cfg.robustness = Some(RobustnessConfig::default());
+    let mut s1 = MetricSink::memory();
+    let mut s2 = MetricSink::memory();
+    let plain = run_job(&plain_cfg, &mut s1);
+    let empty = run_job(&empty_cfg, &mut s2);
+    assert_eq!(plain.final_acc, empty.final_acc);
+    assert_eq!(plain.best_acc, empty.best_acc);
+    assert_eq!(plain.zo_queries, empty.zo_queries);
+    assert_eq!(plain.cost.total_energy(), empty.cost.total_energy());
+    assert!(empty.lifecycle.is_none(), "inactive config must not emit a report");
+}
