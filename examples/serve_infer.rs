@@ -1,26 +1,101 @@
-//! Batched inference service over the PJRT artifacts: the runtime path
-//! alone, exercised the way a deployment would — concurrent clients submit
-//! single samples, the dispatch batcher coalesces them into fixed-size
-//! panels, and the compiled executable serves them. Reports latency and
-//! throughput percentiles.
+//! Batched inference serving, exercised the way a deployment would:
+//! concurrent clients submit single samples, the admission queue coalesces
+//! them into panels, replicas execute them, and the client sees latency
+//! percentiles.
 //!
-//!   make artifacts && cargo run --release --example serve_infer
+//! Default path — the native batched serving engine (`l2ight::serve`),
+//! no artifacts required:
+//!
+//!   cargo run --release --example serve_infer
+//!
+//! Legacy PJRT path — the same service shape over the compiled artifacts
+//! and the `coordinator::Batcher` (PJRT client is thread-affine, so the
+//! Runtime lives on the batcher's worker thread):
+//!
+//!   make artifacts && cargo run --release --example serve_infer -- --pjrt
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-
 use l2ight::coordinator::{Batcher, BatcherConfig};
 use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::nn::{build_model, EngineKind, ModelArch};
 use l2ight::photonics::unitary::ReckMesh;
+use l2ight::photonics::NoiseModel;
 use l2ight::runtime::{default_artifact_dir, ArgValue, Runtime};
+use l2ight::serve::{ServeConfig, ServeEngine};
 use l2ight::util::Rng;
 
 const DIMS: [usize; 4] = [8, 16, 16, 4];
 const K: usize = 4;
 const BATCH: usize = 16;
+const CLIENTS: usize = 8;
+const PER_CLIENT: usize = 64;
 
 fn main() {
+    if std::env::args().any(|a| a == "--pjrt") {
+        run_pjrt();
+    } else {
+        run_native();
+    }
+}
+
+/// Native path: photonic model clones behind the serve engine.
+fn run_native() {
+    println!("== native batched serving (l2ight::serve) ==");
+    let kind = EngineKind::Photonic { k: K, noise: NoiseModel::PAPER };
+    let model = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut Rng::new(21));
+    let engine = ServeEngine::start(
+        model,
+        (8, 1, 1),
+        ServeConfig {
+            replicas: 2,
+            max_batch: BATCH,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 4096,
+            reload: None,
+        },
+    );
+
+    let (ds, _) = SynthSpec::quick(DatasetKind::VowelLike, 512, 1).generate();
+    let ds = Arc::new(ds);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let engine = &engine;
+            let ds = Arc::clone(&ds);
+            scope.spawn(move || {
+                for i in 0..PER_CLIENT {
+                    let sample = ds.sample((t * PER_CLIENT + i) % ds.n).to_vec();
+                    let resp = engine.infer(sample).expect("serve");
+                    assert_eq!(resp.output.len(), 4);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let stats = engine.shutdown();
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    println!("\nserved {} requests in {:.1} ms", stats.served, wall.as_secs_f64() * 1e3);
+    println!("throughput     : {:.0} req/s", stats.served as f64 / wall.as_secs_f64());
+    println!(
+        "batches        : {} (mean size {:.1}, {} coalesced >1 request)",
+        stats.batches,
+        stats.mean_batch(),
+        stats.multi_request_batches()
+    );
+    println!("latency p50    : {:.2} ms", stats.percentile_ms(50.0));
+    println!("latency p90    : {:.2} ms", stats.percentile_ms(90.0));
+    println!("latency p99    : {:.2} ms", stats.percentile_ms(99.0));
+    assert_eq!(stats.served, total, "a request went unanswered");
+    assert_eq!(stats.shed, 0, "ample queue_cap must not shed");
+    assert!(stats.mean_batch() > 1.5, "batching never coalesced");
+    println!("done.");
+}
+
+/// Legacy path: the PJRT artifacts behind the coordinator batcher.
+fn run_pjrt() {
     // Probe the artifacts up front for a friendly error; the serving
     // Runtime itself is created on the batcher's worker thread (the PJRT
     // client is thread-affine — not Send).
@@ -88,19 +163,19 @@ fn main() {
         init,
     );
 
-    // Load: 8 client threads, 64 requests each.
+    // Load: CLIENTS client threads, PER_CLIENT requests each.
     let (ds, _) = SynthSpec::quick(DatasetKind::VowelLike, 512, 1).generate();
     let ds = Arc::new(ds);
     let latencies = Arc::new(Mutex::new(Vec::<Duration>::new()));
     let t0 = Instant::now();
     std::thread::scope(|scope| {
-        for t in 0..8usize {
+        for t in 0..CLIENTS {
             let batcher = &batcher;
             let ds = Arc::clone(&ds);
             let latencies = Arc::clone(&latencies);
             scope.spawn(move || {
-                for i in 0..64usize {
-                    let sample = ds.sample((t * 64 + i) % ds.n).to_vec();
+                for i in 0..PER_CLIENT {
+                    let sample = ds.sample((t * PER_CLIENT + i) % ds.n).to_vec();
                     let start = Instant::now();
                     let logits = batcher.infer(sample);
                     let dt = start.elapsed();
@@ -119,7 +194,12 @@ fn main() {
     let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
     println!("\nserved {} requests in {:.1} ms", stats.requests, wall.as_secs_f64() * 1e3);
     println!("throughput     : {:.0} req/s", stats.requests as f64 / wall.as_secs_f64());
-    println!("batches        : {} (mean size {:.1}, max {})", stats.batches, stats.mean_batch(), stats.max_observed_batch);
+    println!(
+        "batches        : {} (mean size {:.1}, max {})",
+        stats.batches,
+        stats.mean_batch(),
+        stats.max_observed_batch
+    );
     println!("latency p50    : {:.2} ms", pct(0.50));
     println!("latency p90    : {:.2} ms", pct(0.90));
     println!("latency p99    : {:.2} ms", pct(0.99));

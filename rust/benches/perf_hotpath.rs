@@ -25,7 +25,7 @@ use l2ight::linalg::{conv2d_forward_packed, im2col, matmul, matmul_into, simd, C
 use l2ight::photonics::{NoiseModel, PtcMesh};
 use l2ight::runtime::{default_artifact_dir, ArgValue, Runtime};
 use l2ight::sampling::{FeedbackSampler, FeedbackStrategy, Normalization};
-use l2ight::util::bench::{black_box, fmt_ns, Bencher, Table};
+use l2ight::util::bench::{black_box, fmt_ns, git_rev, unix_time, Bencher, Table};
 use l2ight::util::json::Json;
 use l2ight::util::{pool, Rng};
 
@@ -267,26 +267,4 @@ fn emit_json(
     root.set("schema", Json::Num(1.0));
     root.set("runs", Json::Arr(runs));
     std::fs::write(path, root.pretty() + "\n")
-}
-
-fn git_rev() -> String {
-    if let Ok(rev) = std::env::var("GITHUB_SHA") {
-        if !rev.is_empty() {
-            return rev.chars().take(12).collect();
-        }
-    }
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short", "HEAD"])
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
-        .unwrap_or_else(|| "unknown".to_string())
-}
-
-fn unix_time() -> f64 {
-    std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs_f64())
-        .unwrap_or(0.0)
 }

@@ -1,0 +1,44 @@
+//! Serving latency/throughput under open-loop load: the deployment-facing
+//! companion to `perf_hotpath` (kernel medians) — this measures what a
+//! client of the batched serving engine actually sees: p50/p95/p99
+//! admission→response latency, the batch-occupancy histogram, and (full
+//! mode) the saturation throughput from a 1×/2×/4×/8× QPS ladder.
+//!
+//! Environment:
+//!   * `L2IGHT_BENCH_QUICK=1` — the CI smoke preset (~2 s of load, no
+//!     sweep; the serve-smoke leg asserts loop closure on the output).
+//!   * `L2IGHT_SERVE_BENCH_JSON` — output path (default `BENCH_serve.json`).
+//!   * `L2IGHT_THREADS` / `L2IGHT_SIMD` — compute pool + kernel dispatch,
+//!     recorded per run like every other bench.
+//!
+//! Same history schema as `BENCH_perf_hotpath.json`: `{bench, schema,
+//! runs: [...]}`, last 50 runs kept, each stamped with the git revision.
+
+use std::path::Path;
+
+use l2ight::serve::bench::{
+    append_history, bench_run_json, print_summary, run_serve_bench, ServeBenchConfig,
+};
+
+fn main() {
+    let quick = std::env::var("L2IGHT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let cfg = if quick {
+        ServeBenchConfig::quick()
+    } else {
+        ServeBenchConfig { sweep: true, ..ServeBenchConfig::default() }
+    };
+    println!(
+        "serve_latency: {} requests at {:.0} qps (quick={quick}, sweep={})",
+        cfg.requests, cfg.qps, cfg.sweep
+    );
+
+    let res = run_serve_bench(&cfg);
+    print_summary(&cfg, &res);
+
+    let json_path = std::env::var("L2IGHT_SERVE_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    match append_history(Path::new(&json_path), bench_run_json(&cfg, &res)) {
+        Ok(()) => println!("\nwrote {json_path}"),
+        Err(e) => eprintln!("WARN: could not write {json_path}: {e}"),
+    }
+}

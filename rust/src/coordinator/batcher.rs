@@ -2,14 +2,22 @@
 //!
 //! Photonic meshes amortize programming cost over WDM column groups, so the
 //! runtime wants requests batched. `Batcher` owns a worker thread draining a
-//! channel: requests accumulate until `max_batch` or `max_wait` and are
-//! executed together by the user-supplied batch function; each caller gets
-//! its own column back. FIFO order within the queue is preserved (a
-//! coordinator invariant property-tested below).
+//! [`serve::admission::AdmissionQueue`](crate::serve::admission) — the same
+//! deadline-aware coalescing the serving engine uses, run single-worker and
+//! unbounded here (the legacy contract: callers block, nothing sheds):
+//! requests accumulate until `max_batch` or `max_wait` and are executed
+//! together by the user-supplied batch function; each caller gets its own
+//! column back. FIFO order within the queue is preserved (a coordinator
+//! invariant property-tested below).
+//!
+//! For a bounded, multi-replica, hot-reloading front door, use
+//! [`serve::ServeEngine`](crate::serve::ServeEngine) instead.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::serve::admission::{AdmissionConfig, AdmissionQueue};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -50,15 +58,14 @@ impl BatcherStats {
     }
 }
 
-struct Request {
+struct BatchItem {
     input: Vec<f32>,
-    enqueued: Instant,
     resp: Sender<Vec<f32>>,
 }
 
 /// A batched-inference front door over any `Fn(batch of inputs) -> outputs`.
 pub struct Batcher {
-    tx: Option<Sender<Request>>,
+    queue: AdmissionQueue<BatchItem>,
     worker: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<BatcherStats>>,
 }
@@ -81,36 +88,21 @@ impl Batcher {
         I: FnOnce() -> F + Send + 'static,
         F: FnMut(&[Vec<f32>]) -> Vec<Vec<f32>>,
     {
-        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let queue: AdmissionQueue<BatchItem> = AdmissionQueue::new(AdmissionConfig {
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            // Legacy contract: callers block on their response instead of
+            // being shed, so admission is unbounded here.
+            queue_cap: usize::MAX,
+        });
         let stats = Arc::new(Mutex::new(BatcherStats::default()));
         let wstats = Arc::clone(&stats);
+        let wqueue = queue.clone();
         let worker = std::thread::spawn(move || {
             let mut run_batch = init();
-            let mut pending: Vec<Request> = Vec::new();
-            loop {
-                // Wait for the first request (or shutdown).
-                if pending.is_empty() {
-                    match rx.recv() {
-                        Ok(r) => pending.push(r),
-                        Err(_) => break, // all senders gone
-                    }
-                }
-                // Accumulate until full or the deadline passes.
-                let deadline = pending[0].enqueued + cfg.max_wait;
-                while pending.len() < cfg.max_batch {
-                    let now = Instant::now();
-                    let left = deadline.saturating_duration_since(now);
-                    if left.is_zero() {
-                        break;
-                    }
-                    match rx.recv_timeout(left) {
-                        Ok(r) => pending.push(r),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                let batch: Vec<Request> = std::mem::take(&mut pending);
-                let inputs: Vec<Vec<f32>> = batch.iter().map(|r| r.input.clone()).collect();
+            while let Some(batch) = wqueue.next_batch() {
+                let inputs: Vec<Vec<f32>> =
+                    batch.iter().map(|r| r.payload.input.clone()).collect();
                 let outputs = run_batch(&inputs);
                 assert_eq!(outputs.len(), batch.len(), "run_batch arity");
                 let now = Instant::now();
@@ -125,32 +117,23 @@ impl Batcher {
                 }
                 for (r, out) in batch.into_iter().zip(outputs) {
                     // Receiver may have hung up; that's the caller's choice.
-                    let _ = r.resp.send(out);
+                    let _ = r.payload.resp.send(out);
                 }
             }
         });
-        Batcher { tx: Some(tx), worker: Some(worker), stats }
+        Batcher { queue, worker: Some(worker), stats }
     }
 
     /// Submit one request and block for its result.
     pub fn infer(&self, input: Vec<f32>) -> Vec<f32> {
-        let (resp_tx, resp_rx) = channel();
-        self.tx
-            .as_ref()
-            .expect("batcher running")
-            .send(Request { input, enqueued: Instant::now(), resp: resp_tx })
-            .expect("batcher worker alive");
-        resp_rx.recv().expect("batcher response")
+        self.submit(input).recv().expect("batcher response")
     }
 
     /// Async-style submit: returns the response receiver immediately.
     pub fn submit(&self, input: Vec<f32>) -> Receiver<Vec<f32>> {
         let (resp_tx, resp_rx) = channel();
-        self.tx
-            .as_ref()
-            .expect("batcher running")
-            .send(Request { input, enqueued: Instant::now(), resp: resp_tx })
-            .expect("batcher worker alive");
+        let admitted = self.queue.try_submit(BatchItem { input, resp: resp_tx }).is_ok();
+        assert!(admitted, "batcher running");
         resp_rx
     }
 
@@ -158,9 +141,10 @@ impl Batcher {
         *self.stats.lock().unwrap()
     }
 
-    /// Stop the worker and return final stats.
+    /// Stop the worker and return final stats. Queued requests are still
+    /// served before the worker exits.
     pub fn shutdown(mut self) -> BatcherStats {
-        self.tx.take(); // close the channel; worker drains and exits
+        self.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -170,7 +154,7 @@ impl Batcher {
 
 impl Drop for Batcher {
     fn drop(&mut self) {
-        self.tx.take();
+        self.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -252,5 +236,18 @@ mod tests {
         let s = b.shutdown();
         assert_eq!(s.requests, 64);
         assert!(s.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn shutdown_serves_already_queued_requests() {
+        // Submissions that landed before shutdown still get answers.
+        let cfg = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(200) };
+        let b = echo_batcher(cfg);
+        let rxs: Vec<_> = (0..6).map(|i| b.submit(vec![i as f32])).collect();
+        let s = b.shutdown();
+        assert_eq!(s.requests, 6);
+        for (i, r) in rxs.into_iter().enumerate() {
+            assert_eq!(r.recv().unwrap()[0], i as f32);
+        }
     }
 }

@@ -34,6 +34,15 @@
 //! is diffed against golden fixtures with per-metric tolerances
 //! (`l2ight matrix --tier quick`).
 //!
+//! ## Serving
+//!
+//! [`serve`] is the deployment-shaped front door: a bounded admission
+//! queue coalesces concurrent single-sample requests into column panels
+//! for `ProjEngine::forward_packed`, N model replicas drain it on the
+//! shared pool, checkpoints hot-reload between batches, and saturation
+//! sheds instead of blocking (`l2ight serve-bench` drives open-loop load
+//! and emits `BENCH_serve.json`).
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index.
 
 pub mod util;
@@ -51,3 +60,4 @@ pub mod data;
 pub mod runtime;
 pub mod coordinator;
 pub mod scenarios;
+pub mod serve;

@@ -142,6 +142,33 @@ impl ProjEngine {
         }
     }
 
+    /// Serving entry: y = W·X where X's columns are externally-held
+    /// single-sample slices (the serve admission layer's coalesced batch).
+    /// Routed through [`ProjEngine::forward_packed`], so the samples are
+    /// gathered straight into the GEMM packing buffers and never
+    /// materialize as a `[in, batch]` matrix. Because every kernel
+    /// accumulates each output element in a fixed k-order independent of
+    /// the panel's column count, the result is bitwise identical to
+    /// `forward` on the gathered matrix — and each output column is
+    /// bitwise identical to a single-sample `forward` of that column —
+    /// within one SIMD dispatch level, at every thread count.
+    pub fn forward_gathered(&mut self, cols: &[&[f32]]) -> Mat {
+        let inp = self.in_features();
+        for c in cols {
+            assert_eq!(c.len(), inp, "forward_gathered column length");
+        }
+        self.forward_packed(cols.len(), &|c0: usize, c1: usize, dst: &mut [f32]| {
+            // dst is a pre-zeroed row-major [rows, c1 - c0] panel; rows
+            // beyond `inp` (mesh padding) must stay zero.
+            let wpan = c1 - c0;
+            for (j, col) in cols[c0..c1].iter().enumerate() {
+                for (r, &v) in col.iter().enumerate() {
+                    dst[r * wpan + j] = v;
+                }
+            }
+        })
+    }
+
     /// Backward: given cached input x and upstream dy, accumulate weight/Σ
     /// gradients and return dx. `fb` optionally masks the feedback matrix;
     /// `col_keep` optionally masks gradient-evaluation columns (CS).
@@ -287,6 +314,36 @@ mod tests {
         eng.zero_grad();
         if let ProjEngine::Photonic { grad_sigma, .. } = &eng {
             assert!(grad_sigma.iter().all(|&g| g == 0.0));
+        }
+    }
+
+    #[test]
+    fn forward_gathered_is_bitwise_forward() {
+        // The serving entry must equal the matrix forward bitwise, and
+        // each column must equal its own single-sample forward bitwise —
+        // the foundation of tests/serve_equivalence.rs.
+        let mut rng = Rng::new(7);
+        for kind in [EngineKind::Digital, EngineKind::Photonic { k: 4, noise: NoiseModel::PAPER }]
+        {
+            let mut eng = ProjEngine::new(kind, 10, 6, &mut rng);
+            let x = Mat::randn(6, 9, 1.0, &mut rng);
+            let cols: Vec<Vec<f32>> = (0..x.cols)
+                .map(|c| (0..x.rows).map(|r| x.data[r * x.cols + c]).collect())
+                .collect();
+            let views: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+            let y_ref = eng.forward(&x);
+            let y_gat = eng.forward_gathered(&views);
+            assert_eq!(y_ref.data, y_gat.data, "{kind:?}: gathered != matrix forward");
+            for (c, col) in views.iter().enumerate() {
+                let y1 = eng.forward_gathered(&[col]);
+                for r in 0..y_ref.rows {
+                    assert_eq!(
+                        y_ref.data[r * y_ref.cols + c],
+                        y1.data[r],
+                        "{kind:?}: column {c} not batch-size invariant"
+                    );
+                }
+            }
         }
     }
 

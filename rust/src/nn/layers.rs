@@ -115,6 +115,22 @@ impl Linear {
         Act::from_features(y, x.batch)
     }
 
+    /// Serving fast path: forward a coalesced panel of single-sample
+    /// columns without materializing the `[features, batch]` input
+    /// (`ProjEngine::forward_gathered` packs them straight into GEMM
+    /// panels). Eval-only — nothing is cached for backward. Bitwise
+    /// identical to `forward` on the gathered activation within a SIMD
+    /// dispatch level.
+    pub fn forward_gathered(&mut self, cols: &[&[f32]]) -> Act {
+        let mut y = self.engine.forward_gathered(cols);
+        for (r, &b) in self.bias.iter().enumerate() {
+            for v in y.row_mut(r) {
+                *v += b;
+            }
+        }
+        Act::from_features(y, cols.len())
+    }
+
     pub fn backward(&mut self, dy: &Act, ctx: &mut BackwardCtx) -> Act {
         for (r, g) in self.grad_bias.iter_mut().enumerate() {
             *g += dy.mat.row(r).iter().sum::<f32>();

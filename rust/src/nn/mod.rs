@@ -22,5 +22,5 @@ pub use act::Act;
 pub use engine::{EngineKind, ProjEngine};
 pub use layers::Layer;
 pub use loss::{accuracy, softmax_cross_entropy};
-pub use model::{BackwardCtx, Model, Node, ParamKey};
+pub use model::{forward_nodes, BackwardCtx, Model, Node, ParamKey};
 pub use models::{build_model, ModelArch};

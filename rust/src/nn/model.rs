@@ -204,7 +204,10 @@ impl Model {
     }
 }
 
-fn forward_nodes(nodes: &mut [Node], x: &Act, train: bool) -> Act {
+/// Run a node slice as a sub-network. Public because the serve replica
+/// substitutes a packed-panel first layer (`Linear::forward_gathered`)
+/// and then continues through the remainder of the graph with this.
+pub fn forward_nodes(nodes: &mut [Node], x: &Act, train: bool) -> Act {
     let mut cur = x.clone();
     for n in nodes.iter_mut() {
         cur = match n {

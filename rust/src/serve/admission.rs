@@ -1,0 +1,280 @@
+//! Request admission: the bounded, deadline-aware batching queue at the
+//! front door of the serving engine.
+//!
+//! `AdmissionQueue` is the generalization of the original
+//! `coordinator::Batcher` channel loop into a standalone primitive:
+//!
+//! * **Bounded** — `try_submit` never blocks. When the queue holds
+//!   `queue_cap` requests the submission is *shed* (the 429 of this API)
+//!   and the payload handed back to the caller, so saturation degrades
+//!   into explicit rejects instead of unbounded memory growth or client
+//!   head-of-line stalls.
+//! * **Deadline-aware coalescing** — a consumer calling `next_batch`
+//!   collects requests until either `max_batch` are queued or the *oldest*
+//!   queued request has waited `max_wait`. The deadline belongs to the
+//!   request, not the poll: a request admitted under light load leaves
+//!   after at most `max_wait`, while a burst flushes immediately.
+//! * **Multi-consumer** — any number of workers (serve replicas) may call
+//!   `next_batch` concurrently; the mutex serializes drains so each
+//!   request is handed to exactly one worker and FIFO order is preserved
+//!   within a batch.
+//!
+//! `coordinator::Batcher` now runs its single worker over this queue with
+//! an unbounded cap (its legacy contract); the serving engine runs N
+//! replica workers over a bounded one.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Admission policy.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Flush a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// …or when the oldest queued request has waited this long.
+    pub max_wait: Duration,
+    /// Queue depth at which new submissions are shed. `usize::MAX`
+    /// effectively disables backpressure (the legacy `Batcher` contract).
+    pub queue_cap: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// One admitted request: the caller's payload plus its admission time
+/// (the batching deadline and latency accounting both key off it).
+#[derive(Debug)]
+pub struct Request<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Admission-side counters, folded into `ServeStats` at snapshot time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueCounters {
+    /// Requests accepted into the queue.
+    pub submitted: u64,
+    /// Requests rejected because the queue was at capacity.
+    pub shed: u64,
+    /// Deepest the queue ever got.
+    pub depth_high_water: usize,
+}
+
+struct QState<T> {
+    queue: VecDeque<Request<T>>,
+    closed: bool,
+    counters: QueueCounters,
+}
+
+struct Inner<T> {
+    state: Mutex<QState<T>>,
+    /// Signaled on submit and close; batching workers also use it as the
+    /// deadline timer via `wait_timeout`.
+    nonempty: Condvar,
+    cfg: AdmissionConfig,
+}
+
+/// A cloneable handle to one shared admission queue.
+pub struct AdmissionQueue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for AdmissionQueue<T> {
+    fn clone(&self) -> Self {
+        AdmissionQueue { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionQueue<T> {
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        AdmissionQueue {
+            inner: Arc::new(Inner {
+                state: Mutex::new(QState {
+                    queue: VecDeque::new(),
+                    closed: false,
+                    counters: QueueCounters::default(),
+                }),
+                nonempty: Condvar::new(),
+                cfg,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> AdmissionConfig {
+        self.inner.cfg
+    }
+
+    /// Admit one request, or shed it. Never blocks: a full (or closed)
+    /// queue returns the payload to the caller immediately.
+    pub fn try_submit(&self, payload: T) -> Result<(), T> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.closed || st.queue.len() >= self.inner.cfg.queue_cap {
+            if !st.closed {
+                st.counters.shed += 1;
+            }
+            return Err(payload);
+        }
+        st.queue.push_back(Request { payload, enqueued: Instant::now() });
+        st.counters.submitted += 1;
+        let depth = st.queue.len();
+        st.counters.depth_high_water = st.counters.depth_high_water.max(depth);
+        drop(st);
+        // notify_all, not _one: besides idle workers, a worker mid-
+        // accumulation must wake to notice the batch just filled up.
+        self.inner.nonempty.notify_all();
+        Ok(())
+    }
+
+    /// Block until a batch is ready and hand it over (FIFO within the
+    /// batch). Returns `None` once the queue is closed *and* drained —
+    /// requests admitted before `close` are still served.
+    pub fn next_batch(&self) -> Option<Vec<Request<T>>> {
+        let cfg = &self.inner.cfg;
+        let mut st = self.inner.state.lock().unwrap();
+        'refill: loop {
+            while st.queue.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.inner.nonempty.wait(st).unwrap();
+            }
+            // Accumulate until the batch is full, the oldest request's
+            // deadline passes, or the queue closes. The condvar wait
+            // releases the lock, so submissions (and rival workers)
+            // proceed while we wait.
+            while st.queue.len() < cfg.max_batch && !st.closed {
+                let deadline = st.queue.front().unwrap().enqueued + cfg.max_wait;
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) =
+                    self.inner.nonempty.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+                if st.queue.is_empty() {
+                    // Another worker drained the queue while we waited.
+                    continue 'refill;
+                }
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            let take = st.queue.len().min(cfg.max_batch);
+            return Some(st.queue.drain(..take).collect());
+        }
+    }
+
+    /// Stop admitting. Queued requests are still handed out by
+    /// `next_batch`; once drained, workers see `None` and exit.
+    pub fn close(&self) {
+        self.inner.state.lock().unwrap().closed = true;
+        self.inner.nonempty.notify_all();
+    }
+
+    pub fn counters(&self) -> QueueCounters {
+        self.inner.state.lock().unwrap().counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, max_wait_ms: u64, cap: usize) -> AdmissionConfig {
+        AdmissionConfig {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap: cap,
+        }
+    }
+
+    #[test]
+    fn full_queue_sheds_immediately() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(cfg(4, 1, 4));
+        let t0 = Instant::now();
+        for i in 0..4 {
+            assert!(q.try_submit(i).is_ok());
+        }
+        // Fifth must be shed, returning the payload, without blocking.
+        assert_eq!(q.try_submit(99), Err(99));
+        assert!(t0.elapsed() < Duration::from_secs(2), "submit blocked");
+        let c = q.counters();
+        assert_eq!(c.submitted, 4);
+        assert_eq!(c.shed, 1);
+        assert_eq!(c.depth_high_water, 4);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch_fifo() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(cfg(8, 30, 64));
+        for i in 0..5 {
+            q.try_submit(i).unwrap();
+        }
+        let batch = q.next_batch().unwrap();
+        let got: Vec<u32> = batch.into_iter().map(|r| r.payload).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4], "FIFO order broken");
+    }
+
+    #[test]
+    fn full_batch_flushes_without_waiting() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(cfg(4, 5_000, 64));
+        for i in 0..10 {
+            q.try_submit(i).unwrap();
+        }
+        // max_wait is 5 s, but a full batch must not wait for it.
+        let t0 = Instant::now();
+        assert_eq!(q.next_batch().unwrap().len(), 4);
+        assert_eq!(q.next_batch().unwrap().len(), 4);
+        assert!(t0.elapsed() < Duration::from_secs(4), "full batches waited on deadline");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(cfg(4, 1, 64));
+        for i in 0..6 {
+            q.try_submit(i).unwrap();
+        }
+        q.close();
+        assert_eq!(q.try_submit(7), Err(7), "closed queue must not admit");
+        assert_eq!(q.next_batch().unwrap().len(), 4);
+        assert_eq!(q.next_batch().unwrap().len(), 2);
+        assert!(q.next_batch().is_none());
+        // A shed on a closed queue is not counted as saturation.
+        assert_eq!(q.counters().shed, 0);
+    }
+
+    #[test]
+    fn concurrent_workers_partition_the_stream() {
+        // Every request is handed to exactly one of two workers.
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(cfg(4, 1, 1024));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut seen = Vec::new();
+                    while let Some(batch) = q.next_batch() {
+                        seen.extend(batch.into_iter().map(|r| r.payload));
+                    }
+                    seen
+                })
+            })
+            .collect();
+        for i in 0..200u32 {
+            q.try_submit(i).unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> =
+            workers.into_iter().flat_map(|w| w.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,329 @@
+//! Open-loop load generator for the serving engine, shared by the
+//! `l2ight serve-bench` subcommand and `benches/serve_latency.rs`.
+//!
+//! Arrivals are *open-loop*: request i is submitted at `t0 + i/qps`
+//! regardless of how fast responses come back (a closed loop would hide
+//! queueing collapse — the coordinated-omission trap). Latency is
+//! measured admission → response-ready inside the engine, so percentiles
+//! include queueing, batching wait, and execution.
+//!
+//! Results append to `BENCH_serve.json` with the same history/git-rev
+//! schema as `BENCH_perf_hotpath.json`: `{bench, schema, runs: [...]}`,
+//! last 50 runs kept, each run stamped with git rev, thread count, SIMD
+//! level, and wall-clock time.
+
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use super::engine::{ServeConfig, ServeEngine, ServeResponse};
+use super::stats::ServeStats;
+use crate::data::{Dataset, DatasetKind, SynthSpec};
+use crate::linalg::simd;
+use crate::nn::{build_model, Act, EngineKind, Model, ModelArch};
+use crate::photonics::NoiseModel;
+use crate::util::bench::{git_rev, unix_time};
+use crate::util::json::Json;
+use crate::util::{pool, Rng};
+
+/// Everything one bench run needs: the model under load + the load shape.
+#[derive(Clone, Debug)]
+pub struct ServeBenchConfig {
+    pub arch: ModelArch,
+    pub engine: EngineKind,
+    /// Human-readable engine descriptor recorded in the JSON run
+    /// (e.g. `photonic-k4/paper`).
+    pub engine_label: String,
+    pub width: f32,
+    pub seed: u64,
+    pub replicas: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+    /// Open-loop arrival rate at the primary level.
+    pub qps: f64,
+    /// Requests per level.
+    pub requests: usize,
+    /// Also run a 1×/2×/4×/8× QPS ladder to find saturation throughput.
+    pub sweep: bool,
+    pub quick: bool,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        ServeBenchConfig {
+            arch: ModelArch::MlpVowel,
+            engine: EngineKind::Photonic { k: 4, noise: NoiseModel::PAPER },
+            engine_label: "photonic-k4/paper".to_string(),
+            width: 1.0,
+            seed: 42,
+            replicas: 2,
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 1024,
+            qps: 1500.0,
+            requests: 3000,
+            sweep: false,
+            quick: false,
+        }
+    }
+}
+
+impl ServeBenchConfig {
+    /// The CI smoke preset (~2 s of load): low QPS, a generous queue (the
+    /// serve-smoke leg asserts zero shed), and a batching window wide
+    /// enough that coalescing demonstrably happens.
+    pub fn quick() -> ServeBenchConfig {
+        ServeBenchConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            queue_cap: 8192,
+            qps: 500.0,
+            requests: 1000,
+            sweep: false,
+            quick: true,
+            ..ServeBenchConfig::default()
+        }
+    }
+}
+
+/// The synthetic dataset whose sample shape feeds `arch`.
+pub fn dataset_kind_for(arch: ModelArch) -> DatasetKind {
+    match arch {
+        ModelArch::MlpVowel => DatasetKind::VowelLike,
+        ModelArch::CnnS => DatasetKind::MnistLike,
+        ModelArch::CnnL => DatasetKind::FashionLike,
+        ModelArch::Vgg8 | ModelArch::ResNet18 => DatasetKind::Cifar10Like,
+    }
+}
+
+/// One rung of the saturation ladder.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub qps: f64,
+    pub served_rps: f64,
+    pub shed_frac: f64,
+    pub p99_ms: f64,
+}
+
+/// Outcome of `run_serve_bench`.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Final stats of the primary (target-QPS) level.
+    pub stats: ServeStats,
+    pub target_qps: f64,
+    /// Served throughput actually achieved at the primary level.
+    pub achieved_rps: f64,
+    /// Submit attempts at the primary level (admitted + shed).
+    pub sent: u64,
+    pub sweep: Vec<SweepPoint>,
+    /// Peak served throughput observed across the ladder (None w/o sweep).
+    pub saturation_rps: Option<f64>,
+}
+
+/// Build the model, warm its realization + the pool, then drive the load.
+pub fn run_serve_bench(cfg: &ServeBenchConfig) -> BenchResult {
+    let kind = dataset_kind_for(cfg.arch);
+    let (ds, _) = SynthSpec::quick(kind, 256, 1).generate();
+    let mut rng = Rng::new(cfg.seed);
+    let mut template = build_model(cfg.arch, cfg.engine, ds.classes, cfg.width, &mut rng);
+    // One untimed forward realizes the mesh caches and spins up the pool,
+    // so replica clones start warm and the clock measures serving only.
+    let x0 = Act::from_nchw(ds.sample(0), 1, ds.c, ds.h, ds.w);
+    let _ = template.forward(&x0, false);
+    template.clear_caches();
+
+    let (stats, wall, sent) = run_level(&template, &ds, cfg, cfg.qps);
+    let achieved_rps = if wall > 0.0 { stats.served as f64 / wall } else { 0.0 };
+
+    let mut sweep = Vec::new();
+    let mut saturation_rps = None;
+    if cfg.sweep {
+        for mult in [1.0, 2.0, 4.0, 8.0] {
+            let qps = cfg.qps * mult;
+            let (s, w, _) = run_level(&template, &ds, cfg, qps);
+            let served_rps = if w > 0.0 { s.served as f64 / w } else { 0.0 };
+            let attempts = (s.submitted + s.shed).max(1);
+            let shed_frac = s.shed as f64 / attempts as f64;
+            sweep.push(SweepPoint { qps, served_rps, shed_frac, p99_ms: s.percentile_ms(99.0) });
+            if served_rps > saturation_rps.unwrap_or(0.0) {
+                saturation_rps = Some(served_rps);
+            }
+            if shed_frac > 0.5 {
+                break; // far past the knee; higher rungs only shed more
+            }
+        }
+    }
+
+    BenchResult { stats, target_qps: cfg.qps, achieved_rps, sent, sweep, saturation_rps }
+}
+
+/// Drive one open-loop level against a fresh engine; returns (final
+/// stats, wall seconds over submit+drain, submit attempts).
+fn run_level(
+    template: &Model,
+    ds: &Dataset,
+    cfg: &ServeBenchConfig,
+    qps: f64,
+) -> (ServeStats, f64, u64) {
+    let engine = ServeEngine::start(
+        template.clone(),
+        (ds.c, ds.h, ds.w),
+        ServeConfig {
+            replicas: cfg.replicas,
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            queue_cap: cfg.queue_cap,
+            reload: None,
+        },
+    );
+    // The drainer owns every response channel so the pacer never waits on
+    // results (open loop); it just counts completions.
+    let (hand_tx, hand_rx) = channel::<Receiver<ServeResponse>>();
+    let drainer = std::thread::spawn(move || {
+        let mut served = 0u64;
+        while let Ok(rx) = hand_rx.recv() {
+            if rx.recv().is_ok() {
+                served += 1;
+            }
+        }
+        served
+    });
+
+    let t0 = Instant::now();
+    for i in 0..cfg.requests {
+        let target = t0 + Duration::from_secs_f64(i as f64 / qps);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        // Behind schedule: submit immediately (open-loop catch-up).
+        let sample = ds.sample(i % ds.n).to_vec();
+        if let Ok(rx) = engine.submit(sample) {
+            hand_tx.send(rx).expect("drainer alive");
+        }
+    }
+    drop(hand_tx);
+    let drained = drainer.join().expect("drainer");
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = engine.shutdown();
+    assert_eq!(stats.served, drained, "every admitted request must be drained");
+    (stats, wall, cfg.requests as u64)
+}
+
+/// Assemble one `runs[]` entry (perf_hotpath schema: git rev, threads,
+/// SIMD level, quick flag, unix time + config/results objects).
+pub fn bench_run_json(cfg: &ServeBenchConfig, res: &BenchResult) -> Json {
+    let mut run = Json::obj();
+    run.set("git_rev", Json::Str(git_rev()));
+    run.set("threads", Json::Num(pool::global().threads() as f64));
+    run.set("simd", Json::Str(simd::active().name().to_string()));
+    run.set("quick", Json::Bool(cfg.quick));
+    run.set("unix_time", Json::Num(unix_time()));
+
+    let mut c = Json::obj();
+    c.set("arch", Json::Str(cfg.arch.name().to_string()));
+    c.set("engine", Json::Str(cfg.engine_label.clone()));
+    c.set("width", Json::Num(cfg.width as f64));
+    c.set("seed", Json::Num(cfg.seed as f64));
+    c.set("replicas", Json::Num(cfg.replicas as f64));
+    c.set("max_batch", Json::Num(cfg.max_batch as f64));
+    c.set("max_wait_ms", Json::Num(cfg.max_wait.as_secs_f64() * 1e3));
+    c.set("queue_cap", Json::Num(cfg.queue_cap as f64));
+    c.set("qps", Json::Num(cfg.qps));
+    c.set("requests", Json::Num(cfg.requests as f64));
+    run.set("config", c);
+
+    let mut results = res.stats.to_json();
+    results.set("target_qps", Json::Num(res.target_qps));
+    results.set("achieved_rps", Json::Num(res.achieved_rps));
+    results.set("sent", Json::Num(res.sent as f64));
+    results.set(
+        "saturation_rps",
+        res.saturation_rps.map(Json::Num).unwrap_or(Json::Null),
+    );
+    let sweep = res
+        .sweep
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("qps", Json::Num(p.qps));
+            o.set("served_rps", Json::Num(p.served_rps));
+            o.set("shed_frac", Json::Num(p.shed_frac));
+            o.set("p99_ms", if p.p99_ms.is_finite() { Json::Num(p.p99_ms) } else { Json::Null });
+            o
+        })
+        .collect();
+    results.set("sweep", Json::Arr(sweep));
+    run.set("results", results);
+    run
+}
+
+/// Append `run` to the history file at `path` (creating it if needed),
+/// keeping the last 50 runs — same mechanics as `BENCH_perf_hotpath.json`.
+pub fn append_history(path: &Path, run: Json) -> std::io::Result<()> {
+    let mut runs: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|src| Json::parse(&src).ok())
+        .and_then(|root| root.get("runs").and_then(|r| r.as_arr()).map(|r| r.to_vec()))
+        .unwrap_or_default();
+    runs.push(run);
+    let keep = runs.len().saturating_sub(50);
+    let runs = runs.split_off(keep);
+    let mut root = Json::obj();
+    root.set("bench", Json::Str("serve".to_string()));
+    root.set("schema", Json::Num(1.0));
+    root.set("runs", Json::Arr(runs));
+    std::fs::write(path, root.pretty() + "\n")
+}
+
+/// Human-readable report, shared by the CLI and the bench binary.
+pub fn print_summary(cfg: &ServeBenchConfig, res: &BenchResult) {
+    let s = &res.stats;
+    println!(
+        "\nserve-bench: {} / {} · {} replicas · max_batch {} · max_wait {:.1} ms",
+        cfg.arch.name(),
+        cfg.engine_label,
+        cfg.replicas,
+        cfg.max_batch,
+        cfg.max_wait.as_secs_f64() * 1e3
+    );
+    println!(
+        "load           : target {:.0} qps open-loop, {} sent, {} admitted, {} shed",
+        res.target_qps, res.sent, s.submitted, s.shed
+    );
+    println!(
+        "served         : {} in {:.2} s  ({:.0} req/s achieved)",
+        s.served, s.wall_secs, res.achieved_rps
+    );
+    println!(
+        "batches        : {} (mean size {:.2}, {} multi-request, queue high-water {})",
+        s.batches,
+        s.mean_batch(),
+        s.multi_request_batches(),
+        s.queue_high_water
+    );
+    let occ: Vec<String> = s
+        .occupancy
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > 0)
+        .map(|(i, &n)| format!("{}×{}", i + 1, n))
+        .collect();
+    println!("occupancy      : {}", occ.join("  "));
+    println!("latency p50    : {:.2} ms", s.percentile_ms(50.0));
+    println!("latency p95    : {:.2} ms", s.percentile_ms(95.0));
+    println!("latency p99    : {:.2} ms", s.percentile_ms(99.0));
+    for p in &res.sweep {
+        println!(
+            "sweep {:>7.0} qps: {:>7.0} served/s  shed {:>5.1}%  p99 {:.2} ms",
+            p.qps,
+            p.served_rps,
+            p.shed_frac * 100.0,
+            p.p99_ms
+        );
+    }
+    if let Some(sat) = res.saturation_rps {
+        println!("saturation     : {sat:.0} req/s");
+    }
+}

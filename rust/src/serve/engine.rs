@@ -1,0 +1,312 @@
+//! The batched async serving engine: admission queue → replica workers →
+//! tagged responses, with checkpoint hot-reload and graceful shutdown.
+//!
+//! ```text
+//!   clients ──try_submit──▶ AdmissionQueue (bounded, deadline-batching)
+//!                               │ next_batch (N workers contend)
+//!                    ┌──────────┴──────────┐
+//!               Replica 0   …         Replica N-1      (model clones)
+//!                    │   forward_packed panels  │       on util::pool
+//!                    └──────────┬──────────────┘
+//!                        ServeResponse {output, version, batch_seq}
+//!
+//!   poller thread: fingerprints the checkpoint file; workers reload
+//!   *between* batches, so one batch serves exactly one parameter version.
+//! ```
+//!
+//! Backpressure is explicit: a full queue sheds (`ServeError::Saturated`,
+//! the 429 of this API) instead of blocking the caller or growing without
+//! bound. Shutdown is graceful: admitted requests are served before the
+//! workers exit.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant, SystemTime};
+
+use super::admission::{AdmissionConfig, AdmissionQueue};
+use super::replica::Replica;
+use super::stats::{ServeStats, StatsCollector};
+use crate::coordinator::checkpoint::load_model_state;
+use crate::nn::Model;
+
+/// Serving policy.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Model replicas (= concurrent batch executors).
+    pub replicas: usize,
+    /// Flush a batch at this many requests…
+    pub max_batch: usize,
+    /// …or when the oldest admitted request has waited this long.
+    pub max_wait: Duration,
+    /// Admission-queue depth beyond which submissions are shed.
+    pub queue_cap: usize,
+    /// Optional checkpoint hot-reload.
+    pub reload: Option<ReloadConfig>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            replicas: 2,
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+            reload: None,
+        }
+    }
+}
+
+/// Poll `path` every `poll`; on any metadata change, bump the published
+/// parameter version. Checkpoints are written via atomic rename
+/// (`coordinator::checkpoint::save_model_state`), so the path never holds
+/// a partial file.
+#[derive(Clone, Debug)]
+pub struct ReloadConfig {
+    pub path: PathBuf,
+    pub poll: Duration,
+}
+
+/// One served inference, tagged with enough provenance to audit batching
+/// and hot-reload behavior (`tests/serve_equivalence.rs` leans on this).
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    /// Logits column for this request.
+    pub output: Vec<f32>,
+    /// Parameter version that produced it (0 = starting parameters).
+    pub version: u64,
+    /// Globally unique id of the executed batch.
+    pub batch_seq: u64,
+    /// How many requests shared that batch.
+    pub batch_size: usize,
+    /// Which replica executed it.
+    pub replica: usize,
+}
+
+/// Why a request got no response.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission queue at capacity — request shed. Retry later.
+    Saturated,
+    /// Engine shut down before the response was produced.
+    Closed,
+    /// Input length does not match the model's input shape.
+    BadRequest { got: usize, want: usize },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Saturated => write!(f, "admission queue saturated (shed)"),
+            ServeError::Closed => write!(f, "serving engine closed"),
+            ServeError::BadRequest { got, want } => {
+                write!(f, "bad request: {got} input values, model expects {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+struct Pending {
+    input: Vec<f32>,
+    resp: Sender<ServeResponse>,
+}
+
+struct ReloadShared {
+    path: PathBuf,
+    /// Versions published by the poller; replicas catch up between batches.
+    published: AtomicU64,
+}
+
+/// The running engine. Dropping (or `shutdown`) closes admission, drains
+/// queued requests, and joins every thread.
+pub struct ServeEngine {
+    queue: AdmissionQueue<Pending>,
+    workers: Vec<JoinHandle<()>>,
+    poller: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    stats: Arc<StatsCollector>,
+    input_len: usize,
+}
+
+impl ServeEngine {
+    /// Spin up replicas (clones of `template`) and, if configured, the
+    /// hot-reload poller. `shape` is the per-sample (channels, height,
+    /// width). If the reload checkpoint already exists it is loaded into
+    /// the template first, so a restarted engine serves the latest
+    /// parameters as version 0.
+    pub fn start(template: Model, shape: (usize, usize, usize), cfg: ServeConfig) -> ServeEngine {
+        let mut template = template;
+        let reload = cfg.reload.as_ref().map(|rl| {
+            if rl.path.exists() {
+                if let Err(e) = load_model_state(&mut template, &rl.path) {
+                    crate::warn!(
+                        "serve: could not load initial checkpoint {}: {e}; serving the template",
+                        rl.path.display()
+                    );
+                }
+            }
+            Arc::new(ReloadShared { path: rl.path.clone(), published: AtomicU64::new(0) })
+        });
+
+        let queue: AdmissionQueue<Pending> = AdmissionQueue::new(AdmissionConfig {
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            queue_cap: cfg.queue_cap,
+        });
+        let stats = Arc::new(StatsCollector::new(cfg.max_batch));
+        let batch_seq = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let input_len = shape.0 * shape.1 * shape.2;
+
+        let workers = (0..cfg.replicas.max(1))
+            .map(|id| {
+                let queue = queue.clone();
+                let stats = Arc::clone(&stats);
+                let batch_seq = Arc::clone(&batch_seq);
+                let reload = reload.clone();
+                let replica = Replica::new(id, template.clone(), shape);
+                std::thread::Builder::new()
+                    .name(format!("l2ight-serve-{id}"))
+                    .spawn(move || worker_loop(replica, queue, stats, batch_seq, reload))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+
+        let poller = cfg.reload.as_ref().map(|rl| {
+            let shared = reload.as_ref().expect("reload shared state").clone();
+            let stop = Arc::clone(&stop);
+            let poll = rl.poll;
+            std::thread::Builder::new()
+                .name("l2ight-serve-reload".to_string())
+                .spawn(move || poll_loop(shared, poll, stop))
+                .expect("spawn reload poller")
+        });
+
+        ServeEngine { queue, workers, poller, stop, stats, input_len }
+    }
+
+    /// Async submit: returns the response channel immediately, or the
+    /// shed/validation error. Never blocks on a saturated queue.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<ServeResponse>, ServeError> {
+        if input.len() != self.input_len {
+            return Err(ServeError::BadRequest { got: input.len(), want: self.input_len });
+        }
+        let (tx, rx) = channel();
+        match self.queue.try_submit(Pending { input, resp: tx }) {
+            Ok(()) => Ok(rx),
+            Err(_) => Err(ServeError::Saturated),
+        }
+    }
+
+    /// Submit one request and block for its response.
+    pub fn infer(&self, input: Vec<f32>) -> Result<ServeResponse, ServeError> {
+        let rx = self.submit(input)?;
+        rx.recv().map_err(|_| ServeError::Closed)
+    }
+
+    /// Live snapshot (admission counters + replica-side telemetry).
+    pub fn stats(&self) -> ServeStats {
+        self.stats.snapshot(&self.queue.counters())
+    }
+
+    /// Close admission, serve everything already queued, join all
+    /// threads, and return the final stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.stop_threads();
+        self.stats.snapshot(&self.queue.counters())
+    }
+
+    fn stop_threads(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(p) = self.poller.take() {
+            let _ = p.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+fn worker_loop(
+    mut replica: Replica,
+    queue: AdmissionQueue<Pending>,
+    stats: Arc<StatsCollector>,
+    batch_seq: Arc<AtomicU64>,
+    reload: Option<Arc<ReloadShared>>,
+) {
+    while let Some(batch) = queue.next_batch() {
+        // Hot-reload strictly between batches: the version is read once
+        // per batch, so its requests cannot mix parameter versions.
+        if let Some(shared) = &reload {
+            let published = shared.published.load(Ordering::SeqCst);
+            if published != replica.version {
+                match replica.reload(&shared.path) {
+                    Ok(()) => {
+                        replica.version = published;
+                        stats.note_reload();
+                    }
+                    Err(e) => crate::warn!(
+                        "serve replica {}: hot-reload of {} failed: {e}; keeping version {}",
+                        replica.id,
+                        shared.path.display(),
+                        replica.version
+                    ),
+                }
+            }
+        }
+        let seq = batch_seq.fetch_add(1, Ordering::SeqCst);
+        let inputs: Vec<&[f32]> = batch.iter().map(|r| r.payload.input.as_slice()).collect();
+        let outputs = replica.infer_batch(&inputs);
+        let done = Instant::now();
+        stats.note_batch(batch.len(), batch.iter().map(|r| done.duration_since(r.enqueued)));
+        let size = batch.len();
+        for (req, output) in batch.into_iter().zip(outputs) {
+            // The receiver may have hung up; that's the caller's choice.
+            let _ = req.payload.resp.send(ServeResponse {
+                output,
+                version: replica.version,
+                batch_seq: seq,
+                batch_size: size,
+                replica: replica.id,
+            });
+        }
+    }
+}
+
+/// Cheap change detector for the checkpoint path. Atomic-rename writes
+/// mean the file is always complete; (len, mtime) changes on every swap
+/// (tmpfs/ext4 keep nanosecond mtimes, and a same-length same-instant
+/// rewrite is not a case the trainer can produce between poll ticks).
+fn fingerprint(path: &Path) -> Option<(u64, Option<SystemTime>)> {
+    std::fs::metadata(path).ok().map(|m| (m.len(), m.modified().ok()))
+}
+
+fn poll_loop(shared: Arc<ReloadShared>, poll: Duration, stop: Arc<AtomicBool>) {
+    let mut last = fingerprint(&shared.path);
+    let tick = poll.min(Duration::from_millis(20)).max(Duration::from_millis(1));
+    let mut since_poll = Duration::ZERO;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(tick);
+        since_poll += tick;
+        if since_poll < poll {
+            continue;
+        }
+        since_poll = Duration::ZERO;
+        let now = fingerprint(&shared.path);
+        if now.is_some() && now != last {
+            last = now;
+            shared.published.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}

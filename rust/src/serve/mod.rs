@@ -1,0 +1,35 @@
+//! Batched async inference serving over the native engine.
+//!
+//! L2ight's deployment pitch is latency (photonic cores execute a
+//! projection in near-constant optical time), and latency is judged at
+//! the *service* boundary: concurrent single-sample requests, not offline
+//! batches. This module turns the simulator into that service:
+//!
+//! * [`admission`] — bounded, deadline-aware batching queue (generalizes
+//!   `coordinator::Batcher`). Saturation sheds instead of blocking.
+//! * [`replica`] — N model clones executing coalesced batches; feature
+//!   inputs take a packed fast path straight into
+//!   `ProjEngine::forward_packed` panels, bitwise identical to per-sample
+//!   forwards within a SIMD dispatch level.
+//! * [`engine`] — the worker/reload orchestration: responses tagged with
+//!   parameter version + batch id; checkpoint hot-reload between batches
+//!   (atomic-rename checkpoints are safe to poll).
+//! * [`stats`] — latency percentiles, batch-occupancy histogram, and
+//!   loop-closure counters (`submitted == served + in-flight`, shed
+//!   accounted).
+//! * [`bench`] — open-loop load generator behind `l2ight serve-bench`
+//!   and `benches/serve_latency.rs`, emitting `BENCH_serve.json`.
+//!
+//! See `rust/README.md` § "Serving" for the architecture sketch and
+//! `tests/serve_equivalence.rs` for the determinism contract.
+
+pub mod admission;
+pub mod bench;
+pub mod engine;
+pub mod replica;
+pub mod stats;
+
+pub use admission::{AdmissionConfig, AdmissionQueue, QueueCounters, Request};
+pub use engine::{ReloadConfig, ServeConfig, ServeEngine, ServeError, ServeResponse};
+pub use replica::Replica;
+pub use stats::{ServeStats, StatsCollector};

@@ -1,0 +1,97 @@
+//! A serving replica: one private `Model` clone executing coalesced
+//! batches on the shared compute pool.
+//!
+//! Replicas share nothing mutable: each owns its model (and therefore its
+//! realized-mesh caches), while all heavy math lands on the global
+//! `util::pool` — per-replica *work* is serialized inside one batch, but
+//! GEMM/mesh panels still band across every pool thread, and the pool's
+//! per-thread scratch arenas double as the per-replica packing buffers
+//! (a panel is packed and consumed on the same pool thread).
+//!
+//! **Determinism contract.** Feature-shaped requests (`h == w == 1`) whose
+//! model opens with a `Linear` layer take the packed fast path: the
+//! admitted single-sample columns are gathered straight into
+//! `ProjEngine::forward_packed` GEMM panels without materializing the
+//! `[features, batch]` matrix. Because every kernel accumulates each
+//! output element in a fixed k-order independent of the panel's column
+//! count (see `linalg::simd`), a coalesced batch is **bitwise identical**
+//! to per-sample forwards — at every batch size, replica count, thread
+//! count, and partition, within one SIMD dispatch level. Image-shaped
+//! requests gather into a normal NCHW activation and run the fused conv
+//! path, which carries the same per-element invariance.
+
+use std::path::Path;
+
+use crate::coordinator::checkpoint::load_model_state;
+use crate::nn::model::forward_nodes;
+use crate::nn::{Act, Layer, Model, Node};
+
+/// One model replica plus the parameter-version tag it is serving.
+pub struct Replica {
+    pub id: usize,
+    /// Monotone checkpoint version: 0 = the engine's starting parameters,
+    /// bumped once per applied hot-reload. Read once per batch, so a batch
+    /// can never mix parameter versions.
+    pub version: u64,
+    model: Model,
+    /// Input sample shape (channels, height, width).
+    shape: (usize, usize, usize),
+}
+
+impl Replica {
+    pub fn new(id: usize, model: Model, shape: (usize, usize, usize)) -> Replica {
+        Replica { id, version: 0, model, shape }
+    }
+
+    /// Values per input sample.
+    pub fn input_len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    /// Run one coalesced batch in eval mode; returns one logits vector per
+    /// input, in order.
+    pub fn infer_batch(&mut self, inputs: &[&[f32]]) -> Vec<Vec<f32>> {
+        let b = inputs.len();
+        let (c, h, w) = self.shape;
+        for x in inputs {
+            assert_eq!(x.len(), self.input_len(), "replica input length");
+        }
+        let linear_first =
+            matches!(self.model.nodes.first(), Some(Node::Plain(Layer::Linear(_))));
+        let y = if h == 1 && w == 1 && linear_first {
+            // Packed fast path: admitted columns go straight into the
+            // first projection's GEMM panels; the rest of the graph runs
+            // on the resulting feature activation.
+            let (head, rest) = self.model.nodes.split_at_mut(1);
+            let a = match &mut head[0] {
+                Node::Plain(Layer::Linear(lin)) => lin.forward_gathered(inputs),
+                _ => unreachable!("guarded by the matches! above"),
+            };
+            forward_nodes(rest, &a, false)
+        } else {
+            // Image-shaped (or non-Linear-first) models: gather into one
+            // NCHW activation and run the normal fused forward.
+            let mut flat = Vec::with_capacity(b * c * h * w);
+            for x in inputs {
+                flat.extend_from_slice(x);
+            }
+            let x = Act::from_nchw(&flat, b, c, h, w);
+            self.model.forward(&x, false)
+        };
+        // Eval-mode forwards still stash activation caches in some layers;
+        // a serving replica never runs backward, so drop them.
+        self.model.clear_caches();
+        assert_eq!(y.mat.cols, b, "logits column count");
+        let (rows, cols) = (y.mat.rows, y.mat.cols);
+        (0..b)
+            .map(|j| (0..rows).map(|r| y.mat.data[r * cols + j]).collect())
+            .collect()
+    }
+
+    /// Swap in a checkpoint (atomic-rename files from
+    /// `coordinator::checkpoint`, so a partial write is never visible).
+    /// On error the previous parameters stay live.
+    pub fn reload(&mut self, path: &Path) -> std::io::Result<()> {
+        load_model_state(&mut self.model, path)
+    }
+}

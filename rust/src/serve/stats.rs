@@ -1,0 +1,199 @@
+//! Serving telemetry: per-request latency percentiles, batch-occupancy
+//! histogram, and loop-closure counters.
+//!
+//! The collector is written to by every replica worker (batch completion)
+//! and read by `ServeEngine::stats`/`shutdown`, which folds in the
+//! admission queue's counters so one snapshot closes the loop:
+//! `submitted == served` (+ every shed accounted) when the stream drained.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::admission::QueueCounters;
+use crate::util::json::Json;
+
+/// One snapshot of the serving loop.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Requests accepted into the admission queue.
+    pub submitted: u64,
+    /// Requests that received a response.
+    pub served: u64,
+    /// Requests rejected at admission (queue full).
+    pub shed: u64,
+    /// Batches executed across all replicas.
+    pub batches: u64,
+    /// Successful checkpoint hot-reloads across all replicas.
+    pub reloads: u64,
+    /// Deepest the admission queue ever got.
+    pub queue_high_water: usize,
+    /// `occupancy[i]` = number of executed batches of size `i + 1`.
+    pub occupancy: Vec<u64>,
+    /// Per-request latency (admission → response ready), sorted, ms.
+    pub latency_ms: Vec<f64>,
+    /// Wall time since the engine started, seconds.
+    pub wall_secs: f64,
+}
+
+impl ServeStats {
+    /// Latency percentile in ms (`NaN` when nothing was served yet).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.latency_ms.is_empty() {
+            return f64::NAN;
+        }
+        let idx = (p / 100.0 * (self.latency_ms.len() - 1) as f64).round() as usize;
+        self.latency_ms[idx.min(self.latency_ms.len() - 1)]
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.served as f64 / self.batches.max(1) as f64
+    }
+
+    /// Batches that actually coalesced more than one request.
+    pub fn multi_request_batches(&self) -> u64 {
+        self.occupancy.iter().skip(1).sum()
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.served as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// The `results` object of a `BENCH_serve.json` run. Non-finite
+    /// percentiles (nothing served) become `null`, keeping the file
+    /// machine-parseable.
+    pub fn to_json(&self) -> Json {
+        fn num_or_null(v: f64) -> Json {
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                Json::Null
+            }
+        }
+        let mut o = Json::obj();
+        o.set("submitted", Json::Num(self.submitted as f64));
+        o.set("served", Json::Num(self.served as f64));
+        o.set("shed", Json::Num(self.shed as f64));
+        o.set("batches", Json::Num(self.batches as f64));
+        o.set("reloads", Json::Num(self.reloads as f64));
+        o.set("queue_high_water", Json::Num(self.queue_high_water as f64));
+        o.set("p50_ms", num_or_null(self.percentile_ms(50.0)));
+        o.set("p95_ms", num_or_null(self.percentile_ms(95.0)));
+        o.set("p99_ms", num_or_null(self.percentile_ms(99.0)));
+        o.set("mean_batch", Json::Num(self.mean_batch()));
+        o.set(
+            "occupancy",
+            Json::Arr(self.occupancy.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        o.set("throughput_rps", Json::Num(self.throughput_rps()));
+        o.set("wall_secs", Json::Num(self.wall_secs));
+        o
+    }
+}
+
+struct CollectorState {
+    served: u64,
+    batches: u64,
+    reloads: u64,
+    occupancy: Vec<u64>,
+    latency_ms: Vec<f64>,
+}
+
+/// Shared, thread-safe accumulator behind `ServeStats`.
+pub struct StatsCollector {
+    start: Instant,
+    state: Mutex<CollectorState>,
+}
+
+impl StatsCollector {
+    /// `max_batch` sizes the occupancy histogram (one bin per batch size).
+    pub fn new(max_batch: usize) -> StatsCollector {
+        StatsCollector {
+            start: Instant::now(),
+            state: Mutex::new(CollectorState {
+                served: 0,
+                batches: 0,
+                reloads: 0,
+                occupancy: vec![0; max_batch.max(1)],
+                latency_ms: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record one executed batch and its per-request latencies.
+    pub fn note_batch<I: IntoIterator<Item = Duration>>(&self, size: usize, latencies: I) {
+        let mut st = self.state.lock().unwrap();
+        st.served += size as u64;
+        st.batches += 1;
+        let bin = size.saturating_sub(1).min(st.occupancy.len() - 1);
+        st.occupancy[bin] += 1;
+        st.latency_ms.extend(latencies.into_iter().map(|d| d.as_secs_f64() * 1e3));
+    }
+
+    pub fn note_reload(&self) {
+        self.state.lock().unwrap().reloads += 1;
+    }
+
+    /// Fold in the admission counters and produce a sorted snapshot.
+    pub fn snapshot(&self, counters: &QueueCounters) -> ServeStats {
+        let st = self.state.lock().unwrap();
+        let mut latency_ms = st.latency_ms.clone();
+        latency_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ServeStats {
+            submitted: counters.submitted,
+            served: st.served,
+            shed: counters.shed,
+            batches: st.batches,
+            reloads: st.reloads,
+            queue_high_water: counters.depth_high_water,
+            occupancy: st.occupancy.clone(),
+            latency_ms,
+            wall_secs: self.start.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_and_percentiles() {
+        let c = StatsCollector::new(4);
+        c.note_batch(1, [Duration::from_millis(1)]);
+        c.note_batch(3, (0..3).map(|i| Duration::from_millis(2 + i)));
+        c.note_reload();
+        let s = c.snapshot(&QueueCounters { submitted: 4, shed: 2, depth_high_water: 3 });
+        assert_eq!(s.served, 4);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.reloads, 1);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.occupancy, vec![1, 0, 1, 0]);
+        assert_eq!(s.multi_request_batches(), 1);
+        assert!((s.mean_batch() - 2.0).abs() < 1e-12);
+        assert!(s.percentile_ms(0.0) <= s.percentile_ms(99.0));
+        assert!(s.percentile_ms(99.0) <= 4.5);
+    }
+
+    #[test]
+    fn empty_snapshot_is_null_safe() {
+        let c = StatsCollector::new(8);
+        let s = c.snapshot(&QueueCounters::default());
+        assert!(s.percentile_ms(50.0).is_nan());
+        let j = s.to_json();
+        assert!(matches!(j.get("p99_ms"), Some(Json::Null)));
+        // The JSON text must stay parseable even with no traffic.
+        assert!(Json::parse(&j.pretty()).is_ok());
+    }
+
+    #[test]
+    fn oversize_batches_clamp_into_last_bin() {
+        let c = StatsCollector::new(2);
+        c.note_batch(5, std::iter::empty());
+        let s = c.snapshot(&QueueCounters::default());
+        assert_eq!(s.occupancy, vec![0, 1]);
+    }
+}

@@ -117,6 +117,32 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Short git revision for bench/report provenance: `GITHUB_SHA` when set
+/// (CI), else `git rev-parse --short HEAD`, else `"unknown"`. Shared by
+/// every `BENCH_*.json` emitter so runs are diffable across commits.
+pub fn git_rev() -> String {
+    if let Ok(rev) = std::env::var("GITHUB_SHA") {
+        if !rev.is_empty() {
+            return rev.chars().take(12).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Seconds since the Unix epoch (0.0 if the clock is unavailable).
+pub fn unix_time() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
 /// Markdown-style table printer for paper-table reproductions.
 pub struct Table {
     header: Vec<String>,

@@ -33,7 +33,9 @@ fn unknown_subcommand_fails() {
 
 #[test]
 fn help_flags_work_per_subcommand() {
-    for sub in ["run", "matrix", "matrix-diff", "calibrate", "map", "infer", "artifacts"] {
+    let subs =
+        ["run", "matrix", "matrix-diff", "calibrate", "map", "infer", "serve-bench", "artifacts"];
+    for sub in subs {
         let out = Command::new(bin()).args([sub, "--help"]).output().unwrap();
         let text = String::from_utf8_lossy(&out.stderr).to_string()
             + &String::from_utf8_lossy(&out.stdout);
@@ -110,6 +112,26 @@ fn matrix_rejects_unknown_tier_and_empty_filter() {
     assert!(!ok);
     let (_, _, ok) = run(&["matrix", "--tier", "quick", "--list", "--filter", "zzz-no-row"]);
     assert!(!ok);
+}
+
+#[test]
+fn serve_bench_closes_the_loop_and_writes_history() {
+    let path = std::env::temp_dir().join(format!("l2ight_serve_{}.json", std::process::id()));
+    std::fs::remove_file(&path).ok();
+    let (stdout, stderr, ok) = run(&[
+        "serve-bench",
+        "--engine", "digital",
+        "--qps", "2000",
+        "--requests", "200",
+        "--max-wait-ms", "2",
+        "--out", path.to_str().unwrap(),
+    ]);
+    assert!(ok, "serve-bench failed: {stderr}");
+    assert!(stdout.contains("latency p99"), "{stdout}");
+    let text = std::fs::read_to_string(&path).expect("history written");
+    assert!(text.contains("\"bench\": \"serve\""), "{text}");
+    assert!(text.contains("\"served\""), "{text}");
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

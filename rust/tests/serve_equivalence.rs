@@ -1,0 +1,283 @@
+//! Serving-path determinism and backpressure contracts.
+//!
+//! The batched serving engine coalesces concurrent single-sample requests
+//! into column panels for `ProjEngine::forward_packed`. These tests pin
+//! the three properties the engine advertises:
+//!
+//! 1. **Bitwise batching equivalence** — a coalesced batch produces the
+//!    same bits as per-sample forwards, at every batch size, partition,
+//!    and replica count (within one SIMD dispatch level). This holds
+//!    because every kernel accumulates each output element in a fixed
+//!    k-order independent of the panel's column count (`linalg::simd`).
+//! 2. **Version atomicity under hot-reload** — a batch serves exactly one
+//!    parameter version; outputs always match the version they are
+//!    tagged with, bit for bit.
+//! 3. **Shed-not-block** — a full admission queue rejects immediately;
+//!    everything admitted is served; the accounting loop closes
+//!    (`submitted == served`, every shed counted).
+//!
+//! Thread-count coverage: the serve path runs on `util::pool::global()`,
+//! which is sized once per process from `L2IGHT_THREADS`. CI therefore
+//! runs this whole binary twice — `L2IGHT_THREADS=1` and `=4` — rather
+//! than varying the pool in-process (see `.github/workflows/ci.yml`,
+//! serve-smoke job).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use l2ight::coordinator::save_model_state;
+use l2ight::data::{DatasetKind, SynthSpec};
+use l2ight::nn::{build_model, EngineKind, Model, ModelArch};
+use l2ight::photonics::NoiseModel;
+use l2ight::serve::{
+    AdmissionConfig, AdmissionQueue, ReloadConfig, Replica, ServeConfig, ServeEngine, ServeError,
+};
+use l2ight::util::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn feature_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..len).map(|_| rng.normal() as f32).collect()).collect()
+}
+
+/// Per-sample reference forwards through a private replica.
+fn per_sample(model: &Model, shape: (usize, usize, usize), inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let mut r = Replica::new(0, model.clone(), shape);
+    inputs.iter().map(|x| r.infer_batch(&[x.as_slice()]).remove(0)).collect()
+}
+
+#[test]
+fn batched_panel_forward_is_bitwise_per_sample() {
+    let engines = [
+        ("digital", EngineKind::Digital),
+        ("photonic-k4", EngineKind::Photonic { k: 4, noise: NoiseModel::PAPER }),
+    ];
+    for (name, kind) in engines {
+        let model = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut Rng::new(31));
+        let shape = (8, 1, 1);
+        let inputs = feature_inputs(32, 8, 0xfeed);
+        let reference = per_sample(&model, shape, &inputs);
+
+        // One big batch, and two uneven partitions of the same stream:
+        // every split must reproduce the per-sample bits.
+        for chunk in [32usize, 8, 5] {
+            let mut r = Replica::new(0, model.clone(), shape);
+            let mut got = Vec::new();
+            for block in inputs.chunks(chunk) {
+                let refs: Vec<&[f32]> = block.iter().map(|v| v.as_slice()).collect();
+                got.extend(r.infer_batch(&refs));
+            }
+            for (i, (g, want)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    bits(g),
+                    bits(want),
+                    "{name}: request {i} diverged under batch chunk {chunk}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn image_batches_match_per_sample_bitwise() {
+    let (ds, _) = SynthSpec::quick(DatasetKind::MnistLike, 8, 1).generate();
+    let model =
+        build_model(ModelArch::CnnS, EngineKind::Digital, ds.classes, 0.5, &mut Rng::new(7));
+    let shape = (ds.c, ds.h, ds.w);
+    let inputs: Vec<Vec<f32>> = (0..6).map(|i| ds.sample(i).to_vec()).collect();
+    let reference = per_sample(&model, shape, &inputs);
+
+    let mut r = Replica::new(0, model.clone(), shape);
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let got = r.infer_batch(&refs);
+    for (i, (g, want)) in got.iter().zip(&reference).enumerate() {
+        assert_eq!(bits(g), bits(want), "image request {i} diverged when batched");
+    }
+}
+
+#[test]
+fn engine_responses_are_bitwise_per_sample_at_every_replica_count() {
+    let kind = EngineKind::Photonic { k: 4, noise: NoiseModel::PAPER };
+    let model = build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut Rng::new(31));
+    let shape = (8, 1, 1);
+    let inputs = feature_inputs(32, 8, 0xfeed);
+    let reference = per_sample(&model, shape, &inputs);
+
+    for replicas in [1usize, 2, 3] {
+        let engine = ServeEngine::start(
+            model.clone(),
+            shape,
+            ServeConfig {
+                replicas,
+                max_batch: 8,
+                max_wait: Duration::from_millis(25),
+                queue_cap: 1024,
+                reload: None,
+            },
+        );
+        // Burst-submit everything, then drain: the queue coalesces what it
+        // can, and every response must still carry per-sample bits.
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|x| engine.submit(x.clone()).expect("queue_cap is ample"))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().expect("engine dropped a response");
+            assert_eq!(
+                bits(&resp.output),
+                bits(&reference[i]),
+                "request {i} diverged with {replicas} replica(s), \
+                 batch_seq {} size {}",
+                resp.batch_seq,
+                resp.batch_size
+            );
+        }
+        let stats = engine.shutdown();
+        assert_eq!(stats.submitted, 32);
+        assert_eq!(stats.served, 32);
+        assert_eq!(stats.shed, 0);
+    }
+}
+
+#[test]
+fn hot_reload_never_mixes_versions_within_a_batch() {
+    // Digital engine: checkpoint restore is exact, so every response must
+    // be bitwise one of the two known parameter sets — selected purely by
+    // its version tag, never half-and-half.
+    let m0 = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 0.5, &mut Rng::new(11));
+    let mut m1 = build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 0.5, &mut Rng::new(77));
+    let shape = (8, 1, 1);
+    let input: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin()).collect();
+    let y0 = per_sample(&m0, shape, std::slice::from_ref(&input)).remove(0);
+    let y1 = per_sample(&m1, shape, std::slice::from_ref(&input)).remove(0);
+    assert_ne!(bits(&y0), bits(&y1), "the two parameter sets must be distinguishable");
+
+    let ckpt = std::env::temp_dir()
+        .join(format!("l2ight_serve_reload_{}.ckpt", std::process::id()));
+    std::fs::remove_file(&ckpt).ok();
+
+    let engine = ServeEngine::start(
+        m0,
+        shape,
+        ServeConfig {
+            replicas: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 4096,
+            reload: Some(ReloadConfig { path: ckpt.clone(), poll: Duration::from_millis(5) }),
+        },
+    );
+
+    // Keep traffic flowing; swap the checkpoint mid-stream.
+    let mut swapped = false;
+    let mut responses = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        let rxs: Vec<_> = (0..8)
+            .map(|_| engine.submit(input.clone()).expect("queue_cap is ample"))
+            .collect();
+        responses.extend(rxs.into_iter().map(|rx| rx.recv().expect("response")));
+        if !swapped {
+            save_model_state(&mut m1, &ckpt).unwrap();
+            swapped = true;
+        }
+        if engine.stats().reloads >= 1 && responses.iter().any(|r| r.version >= 1) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let stats = engine.shutdown();
+    std::fs::remove_file(&ckpt).ok();
+    assert!(stats.reloads >= 1, "hot-reload never happened within the deadline");
+    assert!(responses.iter().any(|r| r.version == 0), "no pre-reload responses observed");
+    assert!(responses.iter().any(|r| r.version >= 1), "no post-reload responses observed");
+
+    // (a) Output bits always match the tagged version; (b) one batch id
+    // never spans two versions.
+    let mut batch_version: HashMap<u64, u64> = HashMap::new();
+    for r in &responses {
+        let want = if r.version == 0 { &y0 } else { &y1 };
+        assert_eq!(
+            bits(&r.output),
+            bits(want),
+            "batch {} (version {}) served bits from the wrong parameter set",
+            r.batch_seq,
+            r.version
+        );
+        let prev = batch_version.entry(r.batch_seq).or_insert(r.version);
+        assert_eq!(*prev, r.version, "batch {} mixed parameter versions", r.batch_seq);
+    }
+}
+
+#[test]
+fn full_admission_queue_sheds_rather_than_blocks() {
+    // Deterministic shed contract at the queue level: no workers draining,
+    // so the seventh submission *must* be rejected, immediately.
+    let q: AdmissionQueue<usize> = AdmissionQueue::new(AdmissionConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 6,
+    });
+    let t0 = Instant::now();
+    for i in 0..6 {
+        assert!(q.try_submit(i).is_ok());
+    }
+    assert_eq!(q.try_submit(6), Err(6), "submission over capacity must be shed");
+    assert!(t0.elapsed() < Duration::from_secs(2), "try_submit blocked");
+    let c = q.counters();
+    assert_eq!((c.submitted, c.shed), (6, 1));
+}
+
+#[test]
+fn engine_accounting_closes_under_a_shedding_burst() {
+    // Engine level: with a tiny queue the burst may or may not shed
+    // (workers race the submitter), but whatever happens must be
+    // accounted — every Ok(submit) yields a response, every Err was a
+    // Saturated shed, and the final counters close the loop.
+    let model =
+        build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 0.5, &mut Rng::new(3));
+    let shape = (8, 1, 1);
+    let engine = ServeEngine::start(
+        model,
+        shape,
+        ServeConfig {
+            replicas: 1,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 8,
+            reload: None,
+        },
+    );
+    let input: Vec<f32> = vec![0.25; 8];
+    let mut oks = Vec::new();
+    let mut sheds = 0u64;
+    for _ in 0..200 {
+        match engine.submit(input.clone()) {
+            Ok(rx) => oks.push(rx),
+            Err(ServeError::Saturated) => sheds += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let admitted = oks.len() as u64;
+    for rx in oks {
+        rx.recv().expect("admitted request must be served");
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.submitted, admitted);
+    assert_eq!(stats.served, admitted);
+    assert_eq!(stats.shed, sheds);
+    assert!(stats.queue_high_water <= 8, "queue grew past its cap");
+
+    // Malformed input is rejected before admission.
+    let model2 =
+        build_model(ModelArch::MlpVowel, EngineKind::Digital, 4, 0.5, &mut Rng::new(3));
+    let engine2 = ServeEngine::start(model2, shape, ServeConfig::default());
+    assert_eq!(
+        engine2.submit(vec![0.0; 3]).err(),
+        Some(ServeError::BadRequest { got: 3, want: 8 })
+    );
+}
