@@ -48,6 +48,7 @@ fn main() {
                 zo_budget: 0.2,
                 seed: 17,
                 robustness: None,
+                sharding: None,
             };
             let mut sink = MetricSink::memory();
             let s = run_job(&cfg, &mut sink);

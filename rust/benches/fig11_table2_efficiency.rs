@@ -132,6 +132,7 @@ fn bench_model(arch: ModelArch) {
         zo_budget: 0.05,
         seed: 0x7ab2,
         robustness: None,
+        sharding: None,
     };
     // Same 16x16 side for the driver-built datasets: rebuild by hand.
     let mut sink = MetricSink::memory();

@@ -78,8 +78,8 @@ impl PhaseSpace {
         use crate::photonics::ptc::Which;
         let mut coords = Vec::new();
         let mut ei = 0usize;
-        model.for_each_layer(|l| {
-            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+        model.for_each_layer(|l| match l.engine_mut() {
+            Some(ProjEngine::Photonic { mesh, .. }) => {
                 for (pi, ptc) in mesh.ptcs.iter().enumerate() {
                     let m = ptc.u_mesh.phases.len();
                     for which in [Which::U, Which::V] {
@@ -90,6 +90,22 @@ impl PhaseSpace {
                 }
                 ei += 1;
             }
+            Some(ProjEngine::PhotonicSharded { mesh, .. }) => {
+                // Logical block order — the same coordinate space as the
+                // unsharded twin, whatever the shard layout.
+                let mut pi = 0usize;
+                mesh.for_each_ptc_logical(|ptc| {
+                    let m = ptc.u_mesh.phases.len();
+                    for which in [Which::U, Which::V] {
+                        for i in 0..m {
+                            coords.push((ei, pi, which, i));
+                        }
+                    }
+                    pi += 1;
+                });
+                ei += 1;
+            }
+            _ => {}
         });
         PhaseSpace { coords }
     }
@@ -103,8 +119,8 @@ impl PhaseSpace {
         use crate::photonics::ptc::Which;
         // Group by engine to minimize invalidations.
         let mut ei = 0usize;
-        model.for_each_layer(|l| {
-            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+        model.for_each_layer(|l| match l.engine_mut() {
+            Some(ProjEngine::Photonic { mesh, .. }) => {
                 let mut touched = false;
                 for (&ix, &d) in idx.iter().zip(delta) {
                     let (e, pi, which, i) = self.coords[ix];
@@ -122,6 +138,20 @@ impl PhaseSpace {
                 }
                 ei += 1;
             }
+            Some(ProjEngine::PhotonicSharded { mesh, .. }) => {
+                for (&ix, &d) in idx.iter().zip(delta) {
+                    let (e, pi, which, i) = self.coords[ix];
+                    if e != ei {
+                        continue;
+                    }
+                    // ptc_logical_mut invalidates the owning shard's cache.
+                    let ptc = mesh.ptc_logical_mut(pi);
+                    let cur = ptc.phase(which, i);
+                    ptc.set_phase(which, i, cur + d);
+                }
+                ei += 1;
+            }
+            _ => {}
         });
     }
 }
@@ -138,8 +168,8 @@ fn batch_loss(model: &mut Model, ds: &Dataset, idx: &[usize]) -> f32 {
 /// Per-query forward cost of the model (ZO protocols pay this per eval).
 fn model_forward_cost(model: &mut Model, batch: usize) -> CostBreakdown {
     let mut layers: Vec<LayerCost> = Vec::new();
-    model.for_each_layer(|l| {
-        if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
+    model.for_each_layer(|l| match l.engine_mut() {
+        Some(ProjEngine::Photonic { mesh, .. }) => {
             layers.push(LayerCost {
                 p: mesh.p,
                 q: mesh.q,
@@ -148,6 +178,16 @@ fn model_forward_cost(model: &mut Model, batch: usize) -> CostBreakdown {
                 in_cols: 1,
             });
         }
+        Some(ProjEngine::PhotonicSharded { mesh, .. }) => {
+            layers.push(LayerCost {
+                p: mesh.p,
+                q: mesh.q,
+                k: mesh.k,
+                out_cols: 1,
+                in_cols: 1,
+            });
+        }
+        _ => {}
     });
     forward_cost(&layers, batch)
 }
@@ -348,6 +388,20 @@ pub fn apply_swat_forward_masks(model: &mut Model, alpha_w: f32) {
                     }
                     *fwd_mask = Some((mask, 1.0 / alpha_w));
                 }
+                ProjEngine::PhotonicSharded { mesh, fwd_mask, .. } => {
+                    // Logical-order block norms → the mask is bitwise the
+                    // same as the unsharded engine's at any shard count.
+                    let norms = mesh.block_norms_sq();
+                    let n = norms.len();
+                    let keep = ((n as f32 * alpha_w).ceil() as usize).clamp(1, n);
+                    let mut order: Vec<usize> = (0..n).collect();
+                    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+                    let mut mask = vec![false; n];
+                    for &i in order.iter().take(keep) {
+                        mask[i] = true;
+                    }
+                    *fwd_mask = Some((mask, 1.0 / alpha_w));
+                }
             }
         }
     });
@@ -360,6 +414,7 @@ pub fn clear_forward_masks(model: &mut Model) {
             match e {
                 ProjEngine::Digital { fwd_mask, .. } => *fwd_mask = None,
                 ProjEngine::Photonic { fwd_mask, .. } => *fwd_mask = None,
+                ProjEngine::PhotonicSharded { fwd_mask, .. } => *fwd_mask = None,
             }
         }
     });

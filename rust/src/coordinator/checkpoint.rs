@@ -78,6 +78,19 @@ fn collect_state(model: &mut Model) -> (Vec<Vec<f64>>, Vec<Vec<f32>>) {
                         floats.push(vec![ptc.sigma_scale]);
                     }
                 }
+                ProjEngine::PhotonicSharded { mesh, .. } => {
+                    // Logical block order — byte-identical to the unsharded
+                    // engine's serialization, so checkpoints are
+                    // interchangeable across shard counts.
+                    mesh.for_each_ptc_logical(|ptc| {
+                        phases.push(ptc.u_mesh.phases.clone());
+                        phases.push(ptc.v_mesh.phases.clone());
+                        phases.push(ptc.u_mesh.d.iter().map(|&v| v as f64).collect());
+                        phases.push(ptc.v_mesh.d.iter().map(|&v| v as f64).collect());
+                        floats.push(ptc.sigma.clone());
+                        floats.push(vec![ptc.sigma_scale]);
+                    });
+                }
             }
         }
         match l {
@@ -200,6 +213,49 @@ pub fn load_model_state(model: &mut Model, path: &Path) -> IoResult<()> {
                 }
                 ProjEngine::Photonic { mesh, .. } => {
                     for ptc in &mut mesh.ptcs {
+                        let (u, v) = (phases.get(pi).cloned(), phases.get(pi + 1).cloned());
+                        let (du, dv) = (phases.get(pi + 2).cloned(), phases.get(pi + 3).cloned());
+                        pi += 4;
+                        match (u, v, du, dv) {
+                            (Some(u), Some(v), Some(du), Some(dv))
+                                if u.len() == ptc.u_mesh.phases.len()
+                                    && v.len() == ptc.v_mesh.phases.len()
+                                    && du.len() == ptc.u_mesh.d.len()
+                                    && dv.len() == ptc.v_mesh.d.len() =>
+                            {
+                                ptc.set_phases(Which::U, &u);
+                                ptc.set_phases(Which::V, &v);
+                                for (dst, &sv) in ptc.u_mesh.d.iter_mut().zip(&du) {
+                                    *dst = sv as f32;
+                                }
+                                for (dst, &sv) in ptc.v_mesh.d.iter_mut().zip(&dv) {
+                                    *dst = sv as f32;
+                                }
+                            }
+                            _ => {
+                                err = Some("phase section mismatch".into());
+                                return;
+                            }
+                        }
+                        if let Some(s) = take_f32(ptc.sigma.len(), "sigma") {
+                            ptc.sigma.copy_from_slice(&s);
+                        }
+                        if let Some(sc) = take_f32(1, "sigma scale") {
+                            ptc.set_sigma_scale(sc[0]);
+                        }
+                    }
+                    mesh.invalidate();
+                }
+                ProjEngine::PhotonicSharded { mesh, .. } => {
+                    // Consume the same logical-order sections the unsharded
+                    // arm writes; only the owning shard's cache is touched
+                    // per block, and everything is invalidated at the end.
+                    let nb = mesh.p * mesh.q;
+                    for bi in 0..nb {
+                        if err.is_some() {
+                            break;
+                        }
+                        let ptc = mesh.ptc_logical_mut(bi);
                         let (u, v) = (phases.get(pi).cloned(), phases.get(pi + 1).cloned());
                         let (du, dv) = (phases.get(pi + 2).cloned(), phases.get(pi + 3).cloned());
                         pi += 4;

@@ -8,7 +8,7 @@
 
 use crate::data::DatasetKind;
 use crate::nn::ModelArch;
-use crate::photonics::NoiseModel;
+use crate::photonics::{NoiseModel, ShardingConfig};
 use crate::robustness::RobustnessConfig;
 use crate::util::json::Json;
 
@@ -84,6 +84,9 @@ pub struct JobConfig {
     /// Lifecycle robustness (drift/fault injection + watchdog); `None`
     /// keeps every existing metric bitwise-unchanged.
     pub robustness: Option<RobustnessConfig>,
+    /// Multi-chiplet sharding of every photonic layer; `None` (and
+    /// `shards <= 1` at build time) keeps the single-mesh engine.
+    pub sharding: Option<ShardingConfig>,
 }
 
 impl Default for JobConfig {
@@ -106,6 +109,7 @@ impl Default for JobConfig {
             zo_budget: 1.0,
             seed: 42,
             robustness: None,
+            sharding: None,
         }
     }
 }
@@ -152,6 +156,9 @@ impl JobConfig {
         // golden gate compares byte-for-byte) are unchanged.
         if let Some(rc) = &self.robustness {
             o.set("robustness", rc.to_json());
+        }
+        if let Some(sc) = &self.sharding {
+            o.set("sharding", sc.to_json());
         }
         o
     }
@@ -201,6 +208,7 @@ impl JobConfig {
             zo_budget: num("zo_budget", d.zo_budget as f64) as f32,
             seed: num("seed", d.seed as f64) as u64,
             robustness: j.get("robustness").and_then(RobustnessConfig::from_json),
+            sharding: j.get("sharding").and_then(ShardingConfig::from_json),
         })
     }
 }
@@ -229,6 +237,10 @@ mod tests {
             zo_budget: 0.2,
             seed: 7,
             robustness: Some(RobustnessConfig::lifecycle_row(true, true)),
+            sharding: Some(ShardingConfig {
+                shards: 4,
+                policy: crate::photonics::ShardPolicy::Grid,
+            }),
         };
         let j = cfg.to_json();
         let back = JobConfig::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
@@ -241,6 +253,7 @@ mod tests {
         assert_eq!(back.alpha_d, cfg.alpha_d);
         assert_eq!(back.seed, cfg.seed);
         assert_eq!(back.robustness, cfg.robustness);
+        assert_eq!(back.sharding, cfg.sharding);
     }
 
     #[test]
@@ -249,6 +262,14 @@ mod tests {
         assert!(!cfg.to_json().dump().contains("robustness"));
         let back = JobConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.robustness, None);
+    }
+
+    #[test]
+    fn sharding_key_absent_when_disabled() {
+        let cfg = JobConfig::default();
+        assert!(!cfg.to_json().dump().contains("sharding"));
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.sharding, None);
     }
 
     #[test]

@@ -178,7 +178,17 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
     // streams (see ic_config/pm_config/base_sl), so a job is a pure
     // function of its config.
     let mut model_rng = Rng::with_stream(cfg.seed, 0x10b);
-    let kind = EngineKind::Photonic { k: cfg.k, noise: cfg.noise };
+    // `shards <= 1` stays on the single-mesh engine; the sharded engine is
+    // bitwise-identical anyway, but only one of them should own the goldens.
+    let kind = match cfg.sharding {
+        Some(sc) if sc.shards > 1 => EngineKind::PhotonicSharded {
+            k: cfg.k,
+            noise: cfg.noise,
+            shards: sc.shards,
+            policy: sc.policy,
+        },
+        _ => EngineKind::Photonic { k: cfg.k, noise: cfg.noise },
+    };
     let mut model = build_model(cfg.arch, kind, classes, cfg.width, &mut model_rng);
     let (trainable, total) = model.param_counts();
     sink.emit(
@@ -375,6 +385,7 @@ mod tests {
             zo_budget: 0.15,
             seed: 3,
             robustness: None,
+            sharding: None,
         }
     }
 

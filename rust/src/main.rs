@@ -17,7 +17,7 @@ use l2ight::coordinator::{run_job, JobConfig, MetricSink, Protocol};
 use l2ight::data::DatasetKind;
 use l2ight::linalg::Mat;
 use l2ight::nn::{EngineKind, ModelArch};
-use l2ight::photonics::{NoiseModel, PtcMesh};
+use l2ight::photonics::{NoiseModel, PtcMesh, ShardPolicy, ShardingConfig};
 use l2ight::robustness::{DriftConfig, FaultKind, FaultSpec, RobustnessConfig, WatchdogConfig};
 use l2ight::runtime::{default_artifact_dir, Runtime};
 use l2ight::scenarios::{
@@ -119,6 +119,8 @@ fn cmd_run(args: &[String]) -> i32 {
         .opt("alpha-d", "0.0", "SMD skip probability α_D")
         .opt("zo-budget", "1.0", "IC/PM ZO iteration budget multiplier")
         .opt("seed", "42", "PRNG seed")
+        .opt("shards", "0", "photonic mesh shards per layer (0|1 = unsharded)")
+        .opt("shard-policy", "row", "shard placement: row|col|grid")
         .opt("metrics", "", "JSONL metrics output path")
         .opt("faults", "", "scheduled faults as kind@step, e.g. stuck@8,dead@12")
         .flag("drift", "inject thermal phase drift + γ aging during SL")
@@ -181,6 +183,17 @@ fn cmd_run(args: &[String]) -> i32 {
     cfg.alpha_d = a.f64("alpha-d") as f32;
     cfg.zo_budget = a.f64("zo-budget") as f32;
     cfg.seed = a.usize("seed") as u64;
+    // Sharding flags override the JSON config only when given (> 0 shards).
+    if a.usize("shards") > 0 {
+        let policy = match ShardPolicy::parse(a.str("shard-policy")) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown shard policy (want row|col|grid)");
+                return 2;
+            }
+        };
+        cfg.sharding = Some(ShardingConfig { shards: a.usize("shards"), policy });
+    }
     // Lifecycle flags build a RobustnessConfig; absent flags leave whatever
     // the JSON config carried (including none) untouched.
     if a.bool("drift") || a.bool("recovery") || !a.str("faults").is_empty() {

@@ -13,7 +13,7 @@
 //! forward/backward parallelize without any threading code here.
 
 use crate::linalg::{gemm_packed_panels, matmul, matmul_a_bt, matmul_a_bt_acc, matmul_at_b, Mat};
-use crate::photonics::{NoiseModel, PtcMesh};
+use crate::photonics::{NoiseModel, PtcMesh, ShardPolicy, ShardedMesh};
 use crate::sampling::feedback::FeedbackMask;
 use crate::util::pool;
 use crate::util::Rng;
@@ -24,6 +24,10 @@ pub enum EngineKind {
     Digital,
     /// Photonic with block size k and a noise model.
     Photonic { k: usize, noise: NoiseModel },
+    /// Photonic partitioned across several chiplet shards. Bitwise-identical
+    /// to `Photonic` at every shard count (see `photonics::shard`); only the
+    /// per-shard hardware accounting differs.
+    PhotonicSharded { k: usize, noise: NoiseModel, shards: usize, policy: ShardPolicy },
 }
 
 /// A projection engine computing y = W·x with engine-specific training.
@@ -41,6 +45,15 @@ pub enum ProjEngine {
         grad_sigma: Vec<f32>,
         /// Optional forward block keep-mask [p][q] + scale (SWAT-U baseline
         /// shares one mask between forward and feedback).
+        fwd_mask: Option<(Vec<bool>, f32)>,
+    },
+    /// Sharded photonic backing: same training semantics as `Photonic`
+    /// (logical-order Σ subspace, logical [p][q] masks), executed across
+    /// several independently owned mesh shards.
+    PhotonicSharded {
+        mesh: ShardedMesh,
+        grad_sigma: Vec<f32>,
+        /// Logical-grid forward block keep-mask [p][q] + scale.
         fwd_mask: Option<(Vec<bool>, f32)>,
     },
 }
@@ -68,6 +81,18 @@ impl ProjEngine {
                     fwd_mask: None,
                 }
             }
+            EngineKind::PhotonicSharded { k, noise, shards, policy } => {
+                // Same RNG stream + same per-block programming as the
+                // unsharded engine — device state is bit-identical to
+                // `Photonic` at any shard count.
+                let mut mesh = ShardedMesh::new(out, inp, k, noise, shards, policy, rng);
+                mesh.program_from_dense(&w);
+                ProjEngine::PhotonicSharded {
+                    grad_sigma: vec![0.0; mesh.n_sigma()],
+                    mesh,
+                    fwd_mask: None,
+                }
+            }
         }
     }
 
@@ -75,6 +100,7 @@ impl ProjEngine {
         match self {
             ProjEngine::Digital { w, .. } => w.rows,
             ProjEngine::Photonic { mesh, .. } => mesh.rows,
+            ProjEngine::PhotonicSharded { mesh, .. } => mesh.rows,
         }
     }
 
@@ -82,6 +108,7 @@ impl ProjEngine {
         match self {
             ProjEngine::Digital { w, .. } => w.cols,
             ProjEngine::Photonic { mesh, .. } => mesh.cols,
+            ProjEngine::PhotonicSharded { mesh, .. } => mesh.cols,
         }
     }
 
@@ -102,6 +129,10 @@ impl ProjEngine {
                 }
             },
             ProjEngine::Photonic { mesh, fwd_mask, .. } => match fwd_mask {
+                None => mesh.forward(x),
+                Some((keep, scale)) => mesh.forward_masked(x, Some(keep), *scale),
+            },
+            ProjEngine::PhotonicSharded { mesh, fwd_mask, .. } => match fwd_mask {
                 None => mesh.forward(x),
                 Some((keep, scale)) => mesh.forward_masked(x, Some(keep), *scale),
             },
@@ -134,6 +165,12 @@ impl ProjEngine {
                 }
             },
             ProjEngine::Photonic { mesh, fwd_mask, .. } => match fwd_mask {
+                None => mesh.forward_packed_on(pool::global(), total_cols, pack, None, 1.0),
+                Some((keep, scale)) => {
+                    mesh.forward_packed_on(pool::global(), total_cols, pack, Some(keep), *scale)
+                }
+            },
+            ProjEngine::PhotonicSharded { mesh, fwd_mask, .. } => match fwd_mask {
                 None => mesh.forward_packed_on(pool::global(), total_cols, pack, None, 1.0),
                 Some((keep, scale)) => {
                     mesh.forward_packed_on(pool::global(), total_cols, pack, Some(keep), *scale)
@@ -223,6 +260,16 @@ impl ProjEngine {
                     Some(m) => mesh.feedback(dy, Some(&m.keep), m.scale),
                 }
             }
+            ProjEngine::PhotonicSharded { mesh, grad_sigma, .. } => {
+                let g = mesh.sigma_grad(x, dy, col_keep, col_scale);
+                for (acc, gi) in grad_sigma.iter_mut().zip(&g) {
+                    *acc += gi;
+                }
+                match fb {
+                    None => mesh.feedback(dy, None, 1.0),
+                    Some(m) => mesh.feedback(dy, Some(&m.keep), m.scale),
+                }
+            }
         }
     }
 
@@ -231,6 +278,7 @@ impl ProjEngine {
         match self {
             ProjEngine::Digital { grad_w, .. } => grad_w.data.fill(0.0),
             ProjEngine::Photonic { grad_sigma, .. } => grad_sigma.fill(0.0),
+            ProjEngine::PhotonicSharded { grad_sigma, .. } => grad_sigma.fill(0.0),
         }
     }
 
@@ -239,6 +287,7 @@ impl ProjEngine {
         match self {
             ProjEngine::Digital { w, .. } => w.clone(),
             ProjEngine::Photonic { mesh, .. } => mesh.to_dense(),
+            ProjEngine::PhotonicSharded { mesh, .. } => mesh.to_dense(),
         }
     }
 
@@ -248,6 +297,7 @@ impl ProjEngine {
         match self {
             ProjEngine::Digital { w, .. } => (1, 1, vec![w.fro_norm_sq()]),
             ProjEngine::Photonic { mesh, .. } => (mesh.p, mesh.q, mesh.block_norms_sq()),
+            ProjEngine::PhotonicSharded { mesh, .. } => (mesh.p, mesh.q, mesh.block_norms_sq()),
         }
     }
 }

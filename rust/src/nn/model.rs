@@ -117,6 +117,12 @@ impl Model {
                         opt.step(key, &mut sigma, grad_sigma, true);
                         mesh.set_sigma_flat(&sigma);
                     }
+                    ProjEngine::PhotonicSharded { mesh, grad_sigma, .. } => {
+                        // Logical-order Σ: same param key layout as unsharded.
+                        let mut sigma = mesh.sigma_flat();
+                        opt.step(key, &mut sigma, grad_sigma, true);
+                        mesh.set_sigma_flat(&sigma);
+                    }
                 }
                 key += 1;
             }
@@ -157,6 +163,10 @@ impl Model {
                         trainable += mesh.n_sigma();
                         total += mesh.rows * mesh.cols;
                     }
+                    ProjEngine::PhotonicSharded { mesh, .. } => {
+                        trainable += mesh.n_sigma();
+                        total += mesh.rows * mesh.cols;
+                    }
                 }
             }
             match l {
@@ -186,20 +196,20 @@ impl Model {
     /// Sum of hardware-op statistics over all photonic meshes.
     pub fn mesh_stats(&mut self) -> crate::photonics::mesh::MeshStats {
         let mut acc = crate::photonics::mesh::MeshStats::default();
-        self.for_each_layer(|l| {
-            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
-                acc.add(&mesh.stats);
-            }
+        self.for_each_layer(|l| match l.engine_mut() {
+            Some(ProjEngine::Photonic { mesh, .. }) => acc.add(&mesh.stats),
+            Some(ProjEngine::PhotonicSharded { mesh, .. }) => acc.add(&mesh.stats()),
+            _ => {}
         });
         acc
     }
 
     /// Reset hardware-op statistics.
     pub fn reset_mesh_stats(&mut self) {
-        self.for_each_layer(|l| {
-            if let Some(ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
-                mesh.stats = Default::default();
-            }
+        self.for_each_layer(|l| match l.engine_mut() {
+            Some(ProjEngine::Photonic { mesh, .. }) => mesh.stats = Default::default(),
+            Some(ProjEngine::PhotonicSharded { mesh, .. }) => mesh.reset_stats(),
+            _ => {}
         });
     }
 }

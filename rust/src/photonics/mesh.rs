@@ -98,6 +98,23 @@ impl PtcMesh {
         PtcMesh { rows, cols, k, p, q, ptcs, noise, stats: MeshStats::default(), w_cache: None }
     }
 
+    /// Assemble a mesh from pre-built PTCs (row-major [p][q] order). The
+    /// sharding layer partitions one logical mesh's PTC array into sub-mesh
+    /// shards with this, so every shard's device state is bit-identical to
+    /// the unsharded mesh it was carved from.
+    pub(crate) fn from_ptcs(
+        rows: usize,
+        cols: usize,
+        k: usize,
+        ptcs: Vec<Ptc>,
+        noise: NoiseModel,
+    ) -> PtcMesh {
+        let p = rows.div_ceil(k);
+        let q = cols.div_ceil(k);
+        assert_eq!(ptcs.len(), p * q, "from_ptcs block count");
+        PtcMesh { rows, cols, k, p, q, ptcs, noise, stats: MeshStats::default(), w_cache: None }
+    }
+
     #[inline]
     pub fn ptc(&self, pi: usize, qi: usize) -> &Ptc {
         &self.ptcs[pi * self.q + qi]
@@ -158,7 +175,7 @@ impl PtcMesh {
     /// Batch-realize all PTC blocks (phases → noisy matrices) across the
     /// pool. This is the ZOO/noise-sim dominant cost — each block is
     /// independent.
-    fn ensure_cache(&mut self, pool: &ThreadPool) {
+    pub(crate) fn ensure_cache(&mut self, pool: &ThreadPool) {
         if self.w_cache.is_some() {
             return;
         }
@@ -177,6 +194,12 @@ impl PtcMesh {
             self.ptcs.iter_mut().map(|ptc| ptc.realized_matrix()).collect()
         };
         self.w_cache = Some(blocks);
+    }
+
+    /// The realized block matrices (call `ensure_cache` first). Used by the
+    /// sharding layer, which drives the block loop itself.
+    pub(crate) fn cached_blocks(&self) -> &[Mat] {
+        self.w_cache.as_ref().expect("cached_blocks: ensure_cache not called")
     }
 
     /// Blocked forward Y = W̃ · X for X of shape [cols, B].
@@ -203,7 +226,7 @@ impl PtcMesh {
         assert_eq!(x.rows, self.cols, "mesh forward input rows");
         let (k, p, q, b) = (self.k, self.p, self.q, x.cols);
         self.ensure_cache(pool);
-        let mut yp = Mat::zeros(p * k, b);
+        let mut y = Mat::zeros(self.rows, b);
         {
             let cache = self.w_cache.as_ref().unwrap();
             // Borrow X when already k-aligned; pad into scratch otherwise
@@ -211,7 +234,15 @@ impl PtcMesh {
             // pad buffer comes from the per-thread arena — no allocation).
             let mut xp_store: Option<Scratch> = None;
             let xp: &[f32] = padded_panel(x, q * k, &mut xp_store);
-            let ypp = SendPtr(yp.data.as_mut_ptr());
+            // Ragged row counts accumulate into a scratch-arena panel and
+            // crop in one copy-out; aligned ones write Y directly (§Perf:
+            // the old Mat::zeros(p·k, b) + crop_rows clone pair is gone).
+            let mut yp_store: Option<Scratch> = None;
+            let ypp = if p * k == self.rows {
+                SendPtr(y.data.as_mut_ptr())
+            } else {
+                SendPtr(yp_store.insert(Scratch::take(p * k * b)).as_mut_ptr())
+            };
             // One task per output row strip; each strip accumulates its q
             // block products directly into its disjoint rows of Y.
             pool.parallel_for_sized(p, 2 * p * q * k * k * b, |pi| {
@@ -233,13 +264,12 @@ impl PtcMesh {
                     }
                 }
             });
+            if let Some(yp) = &yp_store {
+                y.data.copy_from_slice(&yp[..self.rows * b]);
+            }
         }
         self.note_forward_stats(b, block_keep);
-        if yp.rows == self.rows {
-            yp
-        } else {
-            crop_rows(&yp, self.rows)
-        }
+        y
     }
 
     /// Fused packed-panel forward Y = W̃ · X for an X that is never
@@ -317,7 +347,7 @@ impl PtcMesh {
 
     /// Appendix-G forward accounting, shared by the eager and packed paths —
     /// one formula keeps the cost model independent of execution strategy.
-    fn note_forward_stats(&mut self, b: usize, block_keep: Option<&[bool]>) {
+    pub(crate) fn note_forward_stats(&mut self, b: usize, block_keep: Option<&[bool]>) {
         let (p, q) = (self.p, self.q);
         let kept = match block_keep {
             None => (p * q) as u64,
@@ -450,12 +480,18 @@ impl PtcMesh {
         assert_eq!(dy.rows, self.rows, "feedback dy rows");
         let (k, p, q, b) = (self.k, self.p, self.q, dy.cols);
         self.ensure_cache(pool);
-        let mut dxp = Mat::zeros(q * k, b);
+        let mut dx = Mat::zeros(self.cols, b);
         {
             let cache = self.w_cache.as_ref().unwrap();
             let mut dyp_store: Option<Scratch> = None;
             let dyp: &[f32] = padded_panel(dy, p * k, &mut dyp_store);
-            let dpp = SendPtr(dxp.data.as_mut_ptr());
+            // Same arena-backed crop fusion as `forward_masked_on`.
+            let mut dxp_store: Option<Scratch> = None;
+            let dpp = if q * k == self.cols {
+                SendPtr(dx.data.as_mut_ptr())
+            } else {
+                SendPtr(dxp_store.insert(Scratch::take(q * k * b)).as_mut_ptr())
+            };
             // One task per input-side strip qi: accumulates its p block
             // products W̃ᵀ·dy_p directly into its disjoint rows of dX.
             pool.parallel_for_sized(q, 2 * p * q * k * k * b, |qi| {
@@ -487,6 +523,9 @@ impl PtcMesh {
                     }
                 }
             });
+            if let Some(dxp) = &dxp_store {
+                dx.data.copy_from_slice(&dxp[..self.cols * b]);
+            }
         }
         let kept_products = match block_keep {
             None => (p * q) as u64,
@@ -504,11 +543,7 @@ impl PtcMesh {
             .max()
             .unwrap_or(0) as u64;
         self.stats.feedback_steps += groups * (1 + critical);
-        if dxp.rows == self.cols {
-            dxp
-        } else {
-            crop_rows(&dxp, self.cols)
-        }
+        dx
     }
 
     /// Per-block squared Frobenius norms estimated the on-chip way:
@@ -563,7 +598,11 @@ impl PtcMesh {
 /// zero-pad into a scratch-arena buffer held by `store` and borrow that
 /// (§Perf: the one unavoidable copy for ragged shapes reuses the arena —
 /// no per-call allocation on the per-block-per-step masked paths).
-fn padded_panel<'a>(x: &'a Mat, target: usize, store: &'a mut Option<Scratch>) -> &'a [f32] {
+pub(crate) fn padded_panel<'a>(
+    x: &'a Mat,
+    target: usize,
+    store: &'a mut Option<Scratch>,
+) -> &'a [f32] {
     if x.rows == target {
         &x.data
     } else {
@@ -577,7 +616,7 @@ fn padded_panel<'a>(x: &'a Mat, target: usize, store: &'a mut Option<Scratch>) -
 /// Gather the batch columns listed in `kept` and zero-pad the rows up to
 /// `target_rows`, in one pass into a scratch-arena buffer — the masked
 /// σ-grad path's replacement for the old select-then-pad clone pair.
-fn gather_cols_padded(x: &Mat, kept: &[usize], target_rows: usize) -> Scratch {
+pub(crate) fn gather_cols_padded(x: &Mat, kept: &[usize], target_rows: usize) -> Scratch {
     let b = kept.len();
     let mut s = Scratch::take(target_rows * b);
     for r in 0..x.rows {
@@ -591,6 +630,12 @@ fn gather_cols_padded(x: &Mat, kept: &[usize], target_rows: usize) -> Scratch {
 }
 
 /// Zero-pad a matrix's rows up to `target_rows`.
+///
+/// Reference/test helper: the hot paths no longer call this (or
+/// `crop_rows`) per step — their shard-boundary pad/crop copies go through
+/// the per-thread scratch arena (`padded_panel` + the fused crop-on-copy-out
+/// in `forward_masked_on`/`feedback_on`), so nothing is freshly allocated
+/// beyond the exact-size result.
 pub fn pad_rows(x: &Mat, target_rows: usize) -> Mat {
     if x.rows == target_rows {
         return x.clone();

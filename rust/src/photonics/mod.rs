@@ -14,8 +14,10 @@ pub mod unitary;
 pub mod noise;
 pub mod ptc;
 pub mod mesh;
+pub mod shard;
 
 pub use mesh::PtcMesh;
 pub use noise::NoiseModel;
 pub use ptc::{PhaseOverlay, Ptc};
+pub use shard::{ShardPolicy, ShardedMesh, ShardingConfig};
 pub use unitary::ReckMesh;

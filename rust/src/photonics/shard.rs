@@ -1,0 +1,813 @@
+//! Sharded multi-chiplet mesh execution: one logical P×Q blocked mesh
+//! partitioned across several independently owned `PtcMesh` shards — the
+//! multi-core photonic fabrics of the related hardware work (the
+//! butterfly-style chip of arXiv:2111.06705, the single-chip trained system
+//! of arXiv:2208.01623), where a layer too large for one chiplet is split
+//! over many small meshes with an electronic reduction network between them.
+//!
+//! Design contract — **sharding never changes a single bit**:
+//!
+//! * Construction carves the shards out of one logical `PtcMesh` built with
+//!   the exact same RNG stream as the unsharded engine, so every PTC's
+//!   device state is bit-identical to its unsharded twin at any shard count.
+//! * Every hot path (forward, packed forward, feedback, σ-grad) walks the
+//!   *logical* block grid in the exact order the unsharded mesh does and
+//!   issues the identical kernel-call sequence — the owner table only
+//!   redirects each block lookup to (shard, local index). Parallel work is
+//!   partitioned by output region (row strips / column strips / column
+//!   panels), never by shard, so no cross-shard partial sums are ever
+//!   re-associated.
+//!
+//! Together those give: sharded == unsharded bitwise at every shard count,
+//! every thread count, within each SIMD dispatch level — pinned by
+//! `tests/shard_equivalence.rs`.
+//!
+//! What *does* change is the hardware accounting: each shard's `MeshStats`
+//! is charged for its own blocks (energy) and its own sub-grid reduction
+//! depth (latency), so total energy closes exactly against the unsharded
+//! mesh while total latency grows with the extra cross-shard reductions —
+//! the quantity a multi-chiplet placement study actually wants to see.
+
+use super::mesh::{gather_cols_padded, padded_panel, MeshStats, PtcMesh};
+use super::noise::NoiseModel;
+use super::ptc::Ptc;
+use crate::linalg::{gemm_acc_slices, gemm_at_b_acc_band, sigma_grad_block_slices, Mat, PANEL_COLS};
+use crate::util::json::Json;
+use crate::util::pool::{self, Scratch, SendPtr, ThreadPool};
+use crate::util::Rng;
+
+/// How the logical block grid is placed onto shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Split the P block rows across shards (each shard spans all Q).
+    Row,
+    /// Split the Q block columns across shards (each shard spans all P).
+    Col,
+    /// Near-square factorization of the shard count over (P, Q).
+    Grid,
+}
+
+impl ShardPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPolicy::Row => "row",
+            ShardPolicy::Col => "col",
+            ShardPolicy::Grid => "grid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShardPolicy> {
+        match s {
+            "row" => Some(ShardPolicy::Row),
+            "col" => Some(ShardPolicy::Col),
+            "grid" => Some(ShardPolicy::Grid),
+            _ => None,
+        }
+    }
+}
+
+/// Per-job sharding configuration (absent = classic single-mesh engine).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardingConfig {
+    /// Requested shard count (clamped to the block grid at construction).
+    pub shards: usize,
+    pub policy: ShardPolicy,
+}
+
+impl ShardingConfig {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("shards", Json::Num(self.shards as f64))
+            .set("policy", Json::Str(self.policy.name().to_string()));
+        o
+    }
+
+    /// Parse back; `None` on a malformed object (like
+    /// `RobustnessConfig::from_json`).
+    pub fn from_json(j: &Json) -> Option<ShardingConfig> {
+        j.as_obj()?;
+        let shards = j.get("shards")?.as_f64()? as usize;
+        let policy = ShardPolicy::parse(j.get("policy")?.as_str()?)?;
+        Some(ShardingConfig { shards, policy })
+    }
+}
+
+/// One chiplet: a sub-mesh plus its offset in the logical block grid.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub mesh: PtcMesh,
+    /// First logical block row owned by this shard.
+    pub p0: usize,
+    /// First logical block column owned by this shard.
+    pub q0: usize,
+}
+
+/// A logical `rows`×`cols` mesh executed across several `PtcMesh` shards.
+#[derive(Clone, Debug)]
+pub struct ShardedMesh {
+    pub rows: usize,
+    pub cols: usize,
+    pub k: usize,
+    /// Logical block grid: ceil(rows/k) × ceil(cols/k).
+    pub p: usize,
+    pub q: usize,
+    pub policy: ShardPolicy,
+    pub shards: Vec<Shard>,
+    /// Logical block index → (shard index, shard-local block index).
+    owners: Vec<(u32, u32)>,
+}
+
+/// Contiguous even split of `n` items into `parts` non-empty ranges.
+fn ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    (0..parts).map(|i| (i * n / parts, (i + 1) * n / parts)).collect()
+}
+
+/// Near-square factorization gr×gc = s with gr ≤ gc.
+fn grid_dims(s: usize) -> (usize, usize) {
+    let mut gr = (s as f64).sqrt() as usize;
+    gr = gr.max(1);
+    while gr > 1 && s % gr != 0 {
+        gr -= 1;
+    }
+    (gr, s / gr)
+}
+
+impl ShardedMesh {
+    /// Build a sharded mesh consuming the RNG exactly like
+    /// `PtcMesh::new(rows, cols, k, noise, rng)` — the shards are carved out
+    /// of that logical mesh, so device state is bit-identical to the
+    /// unsharded engine regardless of shard count or policy.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        k: usize,
+        noise: NoiseModel,
+        shards: usize,
+        policy: ShardPolicy,
+        rng: &mut Rng,
+    ) -> ShardedMesh {
+        let mesh = PtcMesh::new(rows, cols, k, noise, rng);
+        ShardedMesh::from_mesh(mesh, shards, policy)
+    }
+
+    /// Partition an existing logical mesh into shards (PTCs move, nothing is
+    /// re-realized). The requested shard count is clamped to the block grid;
+    /// `shards == 1` yields a single shard covering the whole grid.
+    pub fn from_mesh(mut mesh: PtcMesh, shards: usize, policy: ShardPolicy) -> ShardedMesh {
+        let (rows, cols, k, p, q) = (mesh.rows, mesh.cols, mesh.k, mesh.p, mesh.q);
+        let noise = mesh.noise;
+        let want = shards.max(1);
+        let (prs, qrs) = match policy {
+            ShardPolicy::Row => (ranges(p, want.min(p)), vec![(0, q)]),
+            ShardPolicy::Col => (vec![(0, p)], ranges(q, want.min(q))),
+            ShardPolicy::Grid => {
+                let (gr, gc) = grid_dims(want);
+                (ranges(p, gr.min(p)), ranges(q, gc.min(q)))
+            }
+        };
+        let mut slots: Vec<Option<Ptc>> =
+            std::mem::take(&mut mesh.ptcs).into_iter().map(Some).collect();
+        let mut out = Vec::with_capacity(prs.len() * qrs.len());
+        let mut owners = vec![(0u32, 0u32); p * q];
+        for &(pa, pb) in &prs {
+            for &(qa, qb) in &qrs {
+                let si = out.len();
+                let mut ptcs = Vec::with_capacity((pb - pa) * (qb - qa));
+                for pi in pa..pb {
+                    for qi in qa..qb {
+                        let bi = pi * q + qi;
+                        owners[bi] = (si as u32, ptcs.len() as u32);
+                        ptcs.push(slots[bi].take().expect("block owned twice"));
+                    }
+                }
+                let srows = (pb * k).min(rows) - pa * k;
+                let scols = (qb * k).min(cols) - qa * k;
+                out.push(Shard {
+                    mesh: PtcMesh::from_ptcs(srows, scols, k, ptcs, noise),
+                    p0: pa,
+                    q0: qa,
+                });
+            }
+        }
+        ShardedMesh { rows, cols, k, p, q, policy, shards: out, owners }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// (shard index, shard-local block index) owning logical block `bi`.
+    #[inline]
+    pub fn owner(&self, bi: usize) -> (usize, usize) {
+        let (s, l) = self.owners[bi];
+        (s as usize, l as usize)
+    }
+
+    /// Logical block index of shard `si`'s local block `lbi` — the identity
+    /// that keys per-block ZO RNG streams so per-shard PM mapping and IC
+    /// calibration are bitwise-equal to the unsharded stages.
+    #[inline]
+    pub fn logical_index(&self, si: usize, lbi: usize) -> usize {
+        let s = &self.shards[si];
+        let (lp, lq) = (lbi / s.mesh.q, lbi % s.mesh.q);
+        (s.p0 + lp) * self.q + (s.q0 + lq)
+    }
+
+    /// Visit every PTC in logical block order (checkpoint serialization,
+    /// phase-space baselines) — the same order `PtcMesh.ptcs` has, so state
+    /// files are interchangeable with the unsharded engine.
+    pub fn for_each_ptc_logical<F: FnMut(&Ptc)>(&self, mut f: F) {
+        for bi in 0..self.p * self.q {
+            let (si, lbi) = self.owner(bi);
+            f(&self.shards[si].mesh.ptcs[lbi]);
+        }
+    }
+
+    /// Mutable logical-order visitor; invalidates every shard's cache.
+    pub fn for_each_ptc_logical_mut<F: FnMut(&mut Ptc)>(&mut self, mut f: F) {
+        for bi in 0..self.p * self.q {
+            let (si, lbi) = self.owner(bi);
+            f(&mut self.shards[si].mesh.ptcs[lbi]);
+        }
+        self.invalidate();
+    }
+
+    /// Mutable access to one logical block's PTC, invalidating only the
+    /// owning shard — the scoped-repair entry the lifecycle watchdog uses.
+    pub fn ptc_logical_mut(&mut self, bi: usize) -> &mut Ptc {
+        let (si, lbi) = self.owner(bi);
+        self.shards[si].mesh.invalidate();
+        &mut self.shards[si].mesh.ptcs[lbi]
+    }
+
+    /// Extract shard `si`'s [p_s][q_s] slice of a logical [p][q] mask.
+    pub fn local_mask_pq(&self, si: usize, mask: &[bool]) -> Vec<bool> {
+        let s = &self.shards[si];
+        let (ps, qs) = (s.mesh.p, s.mesh.q);
+        let mut local = Vec::with_capacity(ps * qs);
+        for lp in 0..ps {
+            for lq in 0..qs {
+                local.push(mask[(s.p0 + lp) * self.q + (s.q0 + lq)]);
+            }
+        }
+        local
+    }
+
+    /// Write shard `si`'s [p_s][q_s] mask slice back into the logical mask.
+    pub fn store_local_mask_pq(&self, si: usize, local: &[bool], mask: &mut [bool]) {
+        let s = &self.shards[si];
+        let (ps, qs) = (s.mesh.p, s.mesh.q);
+        assert_eq!(local.len(), ps * qs);
+        for lp in 0..ps {
+            for lq in 0..qs {
+                mask[(s.p0 + lp) * self.q + (s.q0 + lq)] = local[lp * qs + lq];
+            }
+        }
+    }
+
+    /// Program every shard from one logical dense weight — bitwise the same
+    /// per-block SVD + Reck decomposition as `PtcMesh::program_from_dense`.
+    pub fn program_from_dense(&mut self, w: &Mat) {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols), "program_from_dense shape");
+        let k = self.k;
+        for s in self.shards.iter_mut() {
+            let sub = sub_matrix(w, s.p0 * k, s.mesh.rows, s.q0 * k, s.mesh.cols);
+            s.mesh.program_from_dense(&sub);
+        }
+    }
+
+    /// The realized dense weight W̃, assembled across shards.
+    pub fn to_dense(&mut self) -> Mat {
+        let k = self.k;
+        let mut w = Mat::zeros(self.rows, self.cols);
+        for s in self.shards.iter_mut() {
+            s.mesh.ensure_cache(pool::global());
+        }
+        for s in &self.shards {
+            let cache = s.mesh.cached_blocks();
+            for lp in 0..s.mesh.p {
+                for lq in 0..s.mesh.q {
+                    w.set_block((s.p0 + lp) * k, (s.q0 + lq) * k, &cache[lp * s.mesh.q + lq]);
+                }
+            }
+        }
+        w
+    }
+
+    /// Relative realized error against a dense target (see
+    /// `PtcMesh::rel_error`).
+    pub fn rel_error(&mut self, target: &Mat) -> f32 {
+        self.to_dense().rel_dist_sq(target)
+    }
+
+    /// Invalidate every shard's realized-weight cache.
+    pub fn invalidate(&mut self) {
+        for s in self.shards.iter_mut() {
+            s.mesh.invalidate();
+        }
+    }
+
+    /// Aggregate hardware-op statistics: the sum of every shard's counters.
+    /// Energy closes exactly against the unsharded mesh (each block is
+    /// charged once, by its owner); steps are ≥ the unsharded mesh's (each
+    /// shard reduces over its own sub-grid, then the cross-shard reduction
+    /// adds sequential depth).
+    pub fn stats(&self) -> MeshStats {
+        let mut acc = MeshStats::default();
+        for s in &self.shards {
+            acc.add(&s.mesh.stats);
+        }
+        acc
+    }
+
+    /// Reset every shard's statistics.
+    pub fn reset_stats(&mut self) {
+        for s in self.shards.iter_mut() {
+            s.mesh.stats = MeshStats::default();
+        }
+    }
+
+    /// Number of trainable subspace parameters (logical P·Q·k).
+    pub fn n_sigma(&self) -> usize {
+        self.p * self.q * self.k
+    }
+
+    /// Total number of MZI phases across all shards.
+    pub fn n_phases(&self) -> usize {
+        self.shards.iter().map(|s| s.mesh.n_phases()).sum()
+    }
+
+    /// Per-block squared Frobenius norms in *logical* block order (the
+    /// btopk feedback sampler indexes this [p][q]).
+    pub fn block_norms_sq(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.p * self.q);
+        self.for_each_ptc_logical(|ptc| v.push(ptc.sigma.iter().map(|s| s * s).sum()));
+        v
+    }
+
+    /// Flattened Σ view [p*q*k] in logical block order — same layout as
+    /// `PtcMesh::sigma_flat`, so optimizer state is shard-count-invariant.
+    pub fn sigma_flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.n_sigma());
+        self.for_each_ptc_logical(|ptc| v.extend_from_slice(&ptc.sigma));
+        v
+    }
+
+    /// Program Σ from a flattened logical-order vector (inverse of
+    /// `sigma_flat`), with the same attenuator rescale rule as
+    /// `PtcMesh::set_sigma_flat`.
+    pub fn set_sigma_flat(&mut self, sigma: &[f32]) {
+        assert_eq!(sigma.len(), self.n_sigma());
+        let k = self.k;
+        let mut bi = 0usize;
+        self.for_each_ptc_logical_mut(|ptc| {
+            let blk = &sigma[bi * k..(bi + 1) * k];
+            let maxabs = blk.iter().fold(0.0f32, |m, s| m.max(s.abs()));
+            if maxabs > ptc.sigma_scale {
+                ptc.set_sigma_scale(maxabs);
+            }
+            ptc.set_sigma(blk);
+            bi += 1;
+        });
+    }
+
+    /// Blocked forward Y = W̃ · X for X of shape [cols, B].
+    pub fn forward(&mut self, x: &Mat) -> Mat {
+        self.forward_masked(x, None, 1.0)
+    }
+
+    /// Forward with an optional logical [p][q] block keep-mask.
+    pub fn forward_masked(&mut self, x: &Mat, block_keep: Option<&[bool]>, scale: f32) -> Mat {
+        self.forward_masked_on(pool::global(), x, block_keep, scale)
+    }
+
+    /// Sharded `forward_masked` on an explicit pool. The strip loop is the
+    /// unsharded one verbatim — logical pi strips in parallel, qi ascending
+    /// inside each strip — with each block's realized matrix fetched from
+    /// its owning shard, so the kernel-call sequence (and therefore every
+    /// bit of Y) matches `PtcMesh::forward_masked_on`.
+    pub fn forward_masked_on(
+        &mut self,
+        pool: &ThreadPool,
+        x: &Mat,
+        block_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Mat {
+        assert_eq!(x.rows, self.cols, "sharded forward input rows");
+        let (k, p, q, b) = (self.k, self.p, self.q, x.cols);
+        for s in self.shards.iter_mut() {
+            s.mesh.ensure_cache(pool);
+        }
+        let mut y = Mat::zeros(self.rows, b);
+        {
+            let owners = &self.owners;
+            let caches: Vec<&[Mat]> =
+                self.shards.iter().map(|s| s.mesh.cached_blocks()).collect();
+            let mut xp_store: Option<Scratch> = None;
+            let xp: &[f32] = padded_panel(x, q * k, &mut xp_store);
+            let mut yp_store: Option<Scratch> = None;
+            let ypp = if p * k == self.rows {
+                SendPtr(y.data.as_mut_ptr())
+            } else {
+                SendPtr(yp_store.insert(Scratch::take(p * k * b)).as_mut_ptr())
+            };
+            pool.parallel_for_sized(p, 2 * p * q * k * k * b, |pi| {
+                // Safety: strip pi writes rows [pi·k, (pi+1)·k) only.
+                let strip =
+                    unsafe { std::slice::from_raw_parts_mut(ypp.0.add(pi * k * b), k * b) };
+                for qi in 0..q {
+                    if let Some(mask) = block_keep {
+                        if !mask[pi * q + qi] {
+                            continue;
+                        }
+                    }
+                    let (si, lbi) = owners[pi * q + qi];
+                    let w = &caches[si as usize][lbi as usize];
+                    gemm_acc_slices(&w.data, k, k, &xp[qi * k * b..(qi + 1) * k * b], b, strip);
+                }
+                if scale != 1.0 {
+                    for v in strip.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+            });
+            if let Some(yp) = &yp_store {
+                y.data.copy_from_slice(&yp[..self.rows * b]);
+            }
+        }
+        self.note_forward_stats(b, block_keep);
+        y
+    }
+
+    /// Fused packed-panel forward across shards — see
+    /// `PtcMesh::forward_packed_on`; the panel loop (pi then qi ascending
+    /// inside each fixed-width column panel) is identical, block lookups go
+    /// through the owner table.
+    pub fn forward_packed_on<P>(
+        &mut self,
+        pool: &ThreadPool,
+        total_cols: usize,
+        pack: &P,
+        block_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Mat
+    where
+        P: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        let (k, p, q) = (self.k, self.p, self.q);
+        for s in self.shards.iter_mut() {
+            s.mesh.ensure_cache(pool);
+        }
+        let mut y = Mat::zeros(self.rows, total_cols);
+        {
+            let owners = &self.owners;
+            let caches: Vec<&[Mat]> =
+                self.shards.iter().map(|s| s.mesh.cached_blocks()).collect();
+            let rows = self.rows;
+            let yptr = SendPtr(y.data.as_mut_ptr());
+            let panels = total_cols.div_ceil(PANEL_COLS);
+            pool.parallel_for_sized(panels, 2 * p * q * k * k * total_cols, |ti| {
+                let c0 = ti * PANEL_COLS;
+                let c1 = (c0 + PANEL_COLS).min(total_cols);
+                let wpan = c1 - c0;
+                let mut xbuf = Scratch::take(q * k * wpan);
+                pack(c0, c1, &mut xbuf);
+                let mut ybuf = Scratch::take(p * k * wpan);
+                for pi in 0..p {
+                    let strip = &mut ybuf[pi * k * wpan..(pi + 1) * k * wpan];
+                    for qi in 0..q {
+                        if let Some(mask) = block_keep {
+                            if !mask[pi * q + qi] {
+                                continue;
+                            }
+                        }
+                        let (si, lbi) = owners[pi * q + qi];
+                        let w = &caches[si as usize][lbi as usize];
+                        gemm_acc_slices(
+                            &w.data,
+                            k,
+                            k,
+                            &xbuf[qi * k * wpan..(qi + 1) * k * wpan],
+                            wpan,
+                            strip,
+                        );
+                    }
+                    if scale != 1.0 {
+                        for v in strip.iter_mut() {
+                            *v *= scale;
+                        }
+                    }
+                }
+                // Safety: panel ti owns columns [c0, c1) of every row of Y.
+                unsafe {
+                    crate::linalg::conv::scatter_panel(yptr, total_cols, c0, wpan, rows, &ybuf)
+                };
+            });
+        }
+        self.note_forward_stats(total_cols, block_keep);
+        y
+    }
+
+    /// Per-shard forward accounting: each shard is charged for its own kept
+    /// blocks (energy sums exactly to the unsharded figure) and its own
+    /// sub-grid accumulation depth (latency, using the
+    /// `PtcMesh::note_forward_stats` formula on the shard's sub-grid).
+    fn note_forward_stats(&mut self, b: usize, block_keep: Option<&[bool]>) {
+        match block_keep {
+            None => {
+                for s in self.shards.iter_mut() {
+                    s.mesh.note_forward_stats(b, None);
+                }
+            }
+            Some(mask) => {
+                for si in 0..self.shards.len() {
+                    let local = self.local_mask_pq(si, mask);
+                    self.shards[si].mesh.note_forward_stats(b, Some(&local));
+                }
+            }
+        }
+    }
+
+    /// In-situ subspace gradient (Eq. 5) across shards; logical block order,
+    /// identical kernel sequence to `PtcMesh::sigma_grad_on`.
+    pub fn sigma_grad(
+        &mut self,
+        x: &Mat,
+        dy: &Mat,
+        col_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Vec<f32> {
+        self.sigma_grad_on(pool::global(), x, dy, col_keep, scale)
+    }
+
+    /// `sigma_grad` on an explicit pool.
+    pub fn sigma_grad_on(
+        &mut self,
+        pool: &ThreadPool,
+        x: &Mat,
+        dy: &Mat,
+        col_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Vec<f32> {
+        assert_eq!(x.rows, self.cols);
+        assert_eq!(dy.rows, self.rows);
+        assert_eq!(x.cols, dy.cols);
+        let (k, p, q) = (self.k, self.p, self.q);
+        let mut xp_store: Option<Scratch> = None;
+        let mut dyp_store: Option<Scratch> = None;
+        let (xp, dyp, b): (&[f32], &[f32], usize) = match col_keep {
+            None => (
+                padded_panel(x, q * k, &mut xp_store),
+                padded_panel(dy, p * k, &mut dyp_store),
+                x.cols,
+            ),
+            Some(mask) => {
+                assert_eq!(mask.len(), x.cols);
+                let kept: Vec<usize> = (0..x.cols).filter(|&c| mask[c]).collect();
+                let b = kept.len();
+                xp_store = Some(gather_cols_padded(x, &kept, q * k));
+                dyp_store = Some(gather_cols_padded(dy, &kept, p * k));
+                (
+                    &xp_store.as_ref().unwrap()[..],
+                    &dyp_store.as_ref().unwrap()[..],
+                    b,
+                )
+            }
+        };
+        let mut grad = vec![0.0f32; p * q * k];
+        {
+            let gptr = SendPtr(grad.as_mut_ptr());
+            let owners = &self.owners;
+            let pptrs: Vec<SendPtr<Ptc>> =
+                self.shards.iter_mut().map(|s| SendPtr(s.mesh.ptcs.as_mut_ptr())).collect();
+            pool.parallel_for_sized(p * q, 2 * p * q * k * k * b, |bi| {
+                // Safety: block bi owns exactly one PTC (the owner table is a
+                // bijection) and grad[bi·k .. bi·k+k].
+                let (si, lbi) = owners[bi];
+                let ptc = unsafe { &mut *pptrs[si as usize].0.add(lbi as usize) };
+                let g = unsafe { std::slice::from_raw_parts_mut(gptr.0.add(bi * k), k) };
+                let (pi, qi) = (bi / q, bi % q);
+                let (u, v) = ptc.realized_uv();
+                let mut scratch = Scratch::take(2 * k * b);
+                let (ut_y, vx) = scratch.split_at_mut(k * b);
+                sigma_grad_block_slices(
+                    u,
+                    v,
+                    &dyp[pi * k * b..(pi + 1) * k * b],
+                    &xp[qi * k * b..(qi + 1) * k * b],
+                    b,
+                    scale,
+                    ut_y,
+                    vx,
+                    g,
+                );
+            });
+        }
+        // Each shard runs its own two reciprocal passes over its own blocks.
+        let groups = b.div_ceil(k).max(1) as u64;
+        for s in self.shards.iter_mut() {
+            let owned = (s.mesh.p * s.mesh.q) as u64;
+            s.mesh.stats.grad_block_cols += 2 * owned * groups;
+            s.mesh.stats.grad_steps += 2 * groups + 1;
+        }
+        grad
+    }
+
+    /// Masked error feedback dX = Σ W̃ᵀ dY across shards (§3.4.2);
+    /// `block_keep` is the logical [q][p] mask.
+    pub fn feedback(&mut self, dy: &Mat, block_keep: Option<&[bool]>, scale: f32) -> Mat {
+        self.feedback_on(pool::global(), dy, block_keep, scale)
+    }
+
+    /// `feedback` on an explicit pool — logical qi strips in parallel, pi
+    /// ascending inside each strip, exactly like `PtcMesh::feedback_on`.
+    pub fn feedback_on(
+        &mut self,
+        pool: &ThreadPool,
+        dy: &Mat,
+        block_keep: Option<&[bool]>,
+        scale: f32,
+    ) -> Mat {
+        assert_eq!(dy.rows, self.rows, "sharded feedback dy rows");
+        let (k, p, q, b) = (self.k, self.p, self.q, dy.cols);
+        for s in self.shards.iter_mut() {
+            s.mesh.ensure_cache(pool);
+        }
+        let mut dx = Mat::zeros(self.cols, b);
+        {
+            let owners = &self.owners;
+            let caches: Vec<&[Mat]> =
+                self.shards.iter().map(|s| s.mesh.cached_blocks()).collect();
+            let mut dyp_store: Option<Scratch> = None;
+            let dyp: &[f32] = padded_panel(dy, p * k, &mut dyp_store);
+            let mut dxp_store: Option<Scratch> = None;
+            let dpp = if q * k == self.cols {
+                SendPtr(dx.data.as_mut_ptr())
+            } else {
+                SendPtr(dxp_store.insert(Scratch::take(q * k * b)).as_mut_ptr())
+            };
+            pool.parallel_for_sized(q, 2 * p * q * k * k * b, |qi| {
+                // Safety: strip qi writes rows [qi·k, (qi+1)·k) only.
+                let strip =
+                    unsafe { std::slice::from_raw_parts_mut(dpp.0.add(qi * k * b), k * b) };
+                for pi in 0..p {
+                    if let Some(mask) = block_keep {
+                        if !mask[qi * p + pi] {
+                            continue;
+                        }
+                    }
+                    let (si, lbi) = owners[pi * q + qi];
+                    let wt = &caches[si as usize][lbi as usize];
+                    gemm_at_b_acc_band(
+                        &wt.data,
+                        k,
+                        k,
+                        &dyp[pi * k * b..(pi + 1) * k * b],
+                        b,
+                        0,
+                        k,
+                        strip,
+                    );
+                }
+                if scale != 1.0 {
+                    for v in strip.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+            });
+            if let Some(dxp) = &dxp_store {
+                dx.data.copy_from_slice(&dxp[..self.cols * b]);
+            }
+        }
+        // Per-shard accounting with the unsharded formulas on each sub-grid.
+        let groups = b.div_ceil(k).max(1) as u64;
+        for si in 0..self.shards.len() {
+            let (sp0, sq0) = (self.shards[si].p0, self.shards[si].q0);
+            let (ps, qs) = (self.shards[si].mesh.p, self.shards[si].mesh.q);
+            let kept = |lqi: usize, lpi: usize| match block_keep {
+                None => true,
+                Some(m) => m[(sq0 + lqi) * p + (sp0 + lpi)],
+            };
+            let mut kept_products = 0u64;
+            let mut critical = 0u64;
+            for lqi in 0..qs {
+                let row_kept = (0..ps).filter(|&lpi| kept(lqi, lpi)).count() as u64;
+                kept_products += row_kept;
+                critical = critical.max(row_kept);
+            }
+            let st = &mut self.shards[si].mesh.stats;
+            st.feedback_block_cols += kept_products * groups;
+            st.feedback_steps += groups * (1 + critical);
+        }
+        dx
+    }
+}
+
+/// Copy a rectangular sub-matrix (fully in bounds).
+fn sub_matrix(w: &Mat, r0: usize, rows: usize, c0: usize, cols: usize) -> Mat {
+    let mut out = Mat::zeros(rows, cols);
+    for r in 0..rows {
+        out.row_mut(r).copy_from_slice(&w.row(r0 + r)[c0..c0 + cols]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_close;
+
+    #[test]
+    fn partition_is_a_bijection_over_every_policy() {
+        let mut rng = Rng::new(11);
+        for policy in [ShardPolicy::Row, ShardPolicy::Col, ShardPolicy::Grid] {
+            for shards in [1, 2, 3, 4, 7] {
+                let sm =
+                    ShardedMesh::new(22, 17, 4, NoiseModel::PAPER, shards, policy, &mut rng);
+                let mut seen = vec![false; sm.p * sm.q];
+                for bi in 0..sm.p * sm.q {
+                    let (si, lbi) = sm.owner(bi);
+                    assert!(si < sm.num_shards());
+                    assert!(lbi < sm.shards[si].mesh.ptcs.len());
+                    assert_eq!(sm.logical_index(si, lbi), bi);
+                    assert!(!seen[bi]);
+                    seen[bi] = true;
+                }
+                let total: usize = sm.shards.iter().map(|s| s.mesh.ptcs.len()).collect::<Vec<_>>().iter().sum();
+                assert_eq!(total, sm.p * sm.q, "{policy:?}/{shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn construction_matches_unsharded_device_state() {
+        // Same RNG stream in, bit-identical PTC sigma/dense weight out —
+        // regardless of shard count.
+        let w = {
+            let mut rng = Rng::new(5);
+            Mat::randn(18, 14, 0.5, &mut rng)
+        };
+        let mut rng1 = Rng::new(21);
+        let mut mesh = PtcMesh::new(18, 14, 4, NoiseModel::PAPER, &mut rng1);
+        mesh.program_from_dense(&w);
+        let mut rng2 = Rng::new(21);
+        let mut sm = ShardedMesh::new(18, 14, 4, NoiseModel::PAPER, 3, ShardPolicy::Grid, &mut rng2);
+        sm.program_from_dense(&w);
+        assert_eq!(mesh.sigma_flat(), sm.sigma_flat());
+        assert_eq!(mesh.to_dense().data, sm.to_dense().data);
+        assert_eq!(mesh.block_norms_sq(), sm.block_norms_sq());
+        assert_eq!(mesh.n_sigma(), sm.n_sigma());
+        assert_eq!(mesh.n_phases(), sm.n_phases());
+    }
+
+    #[test]
+    fn sigma_roundtrip_is_logical_order() {
+        let mut rng = Rng::new(31);
+        let mut sm = ShardedMesh::new(12, 12, 4, NoiseModel::IDEAL, 4, ShardPolicy::Grid, &mut rng);
+        let mut sig = sm.sigma_flat();
+        for (i, s) in sig.iter_mut().enumerate() {
+            *s = (i as f32) * 0.05 - 0.4;
+        }
+        sm.set_sigma_flat(&sig);
+        assert_close(&sm.sigma_flat(), &sig, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn local_mask_roundtrip() {
+        let mut rng = Rng::new(41);
+        let sm = ShardedMesh::new(16, 16, 4, NoiseModel::IDEAL, 2, ShardPolicy::Row, &mut rng);
+        let mask: Vec<bool> = (0..sm.p * sm.q).map(|i| i % 3 != 0).collect();
+        let mut back = vec![false; sm.p * sm.q];
+        for si in 0..sm.num_shards() {
+            let local = sm.local_mask_pq(si, &mask);
+            sm.store_local_mask_pq(si, &local, &mut back);
+        }
+        assert_eq!(mask, back);
+    }
+
+    #[test]
+    fn sharding_config_json_roundtrip() {
+        for policy in [ShardPolicy::Row, ShardPolicy::Col, ShardPolicy::Grid] {
+            let sc = ShardingConfig { shards: 4, policy };
+            let j = sc.to_json();
+            let back = ShardingConfig::from_json(&j).expect("parses back");
+            assert_eq!(sc, back);
+            // Canonical dump stability (golden gate compares exact dumps).
+            assert_eq!(j.dump(), back.to_json().dump());
+        }
+        assert_eq!(ShardingConfig::from_json(&Json::Num(1.0)), None);
+        let mut bad = Json::obj();
+        bad.set("shards", Json::Num(2.0)).set("policy", Json::Str("diagonal".into()));
+        assert_eq!(ShardingConfig::from_json(&bad), None);
+    }
+
+    #[test]
+    fn grid_dims_are_near_square() {
+        assert_eq!(grid_dims(1), (1, 1));
+        assert_eq!(grid_dims(2), (1, 2));
+        assert_eq!(grid_dims(4), (2, 2));
+        assert_eq!(grid_dims(6), (2, 3));
+        assert_eq!(grid_dims(7), (1, 7));
+        assert_eq!(grid_dims(12), (3, 4));
+    }
+}

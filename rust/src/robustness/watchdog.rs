@@ -155,16 +155,37 @@ fn probe_mse(ptc: &mut Ptc, ref_u: &[f32], ref_v: &[f32]) -> f64 {
 }
 
 /// Visit every photonic mesh of the model in stable traversal order.
+///
+/// A sharded engine is visited once per shard — each shard is its own
+/// physical chiplet with its own probe references, recalibration scope, and
+/// op counters. The callback sees the shard's *local* forward-mask view;
+/// changes are folded back into the engine's logical [p][q] mask so masked
+/// inference stays shard-count-agnostic.
 fn for_each_photonic<F>(model: &mut Model, mut f: F)
 where
     F: FnMut(usize, &mut PtcMesh, &mut Option<(Vec<bool>, f32)>),
 {
     let mut idx = 0usize;
-    model.for_each_layer(|l| {
-        if let Some(ProjEngine::Photonic { mesh, fwd_mask, .. }) = l.engine_mut() {
+    model.for_each_layer(|l| match l.engine_mut() {
+        Some(ProjEngine::Photonic { mesh, fwd_mask, .. }) => {
             f(idx, mesh, fwd_mask);
             idx += 1;
         }
+        Some(ProjEngine::PhotonicSharded { mesh, fwd_mask, .. }) => {
+            for si in 0..mesh.num_shards() {
+                let mut local: Option<(Vec<bool>, f32)> =
+                    fwd_mask.as_ref().map(|(m, s)| (mesh.local_mask_pq(si, m), *s));
+                f(idx, &mut mesh.shards[si].mesh, &mut local);
+                if let Some((lm, s)) = local {
+                    let nb = mesh.p * mesh.q;
+                    let (keep, scale) = fwd_mask.get_or_insert((vec![true; nb], 1.0));
+                    *scale = s;
+                    mesh.store_local_mask_pq(si, &lm, keep);
+                }
+                idx += 1;
+            }
+        }
+        _ => {}
     });
 }
 

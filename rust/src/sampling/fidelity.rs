@@ -37,10 +37,12 @@ pub fn normalized_distance(truth: &[f32], approx: &[f32]) -> f64 {
 /// Flatten all Σ-gradient accumulators of a model.
 fn collect_sigma_grads(model: &mut Model) -> Vec<f32> {
     let mut out = Vec::new();
-    model.for_each_layer(|l| {
-        if let Some(ProjEngine::Photonic { grad_sigma, .. }) = l.engine_mut() {
+    model.for_each_layer(|l| match l.engine_mut() {
+        Some(ProjEngine::Photonic { grad_sigma, .. })
+        | Some(ProjEngine::PhotonicSharded { grad_sigma, .. }) => {
             out.extend_from_slice(grad_sigma);
         }
+        _ => {}
     });
     out
 }

@@ -23,7 +23,7 @@ use crate::coordinator::config::{JobConfig, Protocol};
 use crate::coordinator::driver::job_seed;
 use crate::data::DatasetKind;
 use crate::nn::ModelArch;
-use crate::photonics::NoiseModel;
+use crate::photonics::{NoiseModel, ShardPolicy, ShardingConfig};
 use crate::robustness::RobustnessConfig;
 
 /// Which slice of the scenario space to enumerate.
@@ -103,6 +103,18 @@ fn row_name(cfg: &JobConfig) -> String {
             recovery as u8,
         );
     }
+    // Sharded rows likewise get their own family prefix, invisible to the
+    // protocol-substring filters.
+    if let Some(sc) = &cfg.sharding {
+        return format!(
+            "shard/{}/{}/{}/{}{}",
+            cfg.arch.name(),
+            cfg.dataset.name(),
+            noise_tag(&cfg.noise),
+            sc.policy.name(),
+            sc.shards,
+        );
+    }
     format!(
         "{}/{}/{}/{}/aw{}-ac{}-ad{}",
         cfg.protocol.name(),
@@ -136,6 +148,7 @@ fn quick_base() -> JobConfig {
         zo_budget: 0.1,
         seed: 0, // assigned by expand()
         robustness: None,
+        sharding: None,
     }
 }
 
@@ -159,6 +172,7 @@ fn full_base() -> JobConfig {
         zo_budget: 1.0,
         seed: 0,
         robustness: None,
+        sharding: None,
     }
 }
 
@@ -220,6 +234,16 @@ fn quick_rows() -> Vec<JobConfig> {
         let mut c = base.clone();
         c.epochs = 4;
         c.robustness = Some(RobustnessConfig::lifecycle_row(drift, recovery));
+        rows.push(c);
+    }
+    // Sharding axis: the L2ight flow partitioned across chiplets — shard
+    // count × placement policy. Appended after everything above so the
+    // seeds of every pre-existing row are untouched.
+    for (shards, policy) in
+        [(2, ShardPolicy::Row), (2, ShardPolicy::Col), (4, ShardPolicy::Grid)]
+    {
+        let mut c = base.clone();
+        c.sharding = Some(ShardingConfig { shards, policy });
         rows.push(c);
     }
     rows
@@ -297,6 +321,12 @@ fn full_rows() -> Vec<JobConfig> {
     c100.n_test = 100;
     c100.epochs = 2;
     rows.push(c100);
+    // Sharding axis at paper scale (appended last; see quick_rows).
+    for (shards, policy) in [(2, ShardPolicy::Row), (4, ShardPolicy::Grid)] {
+        let mut c = base.clone();
+        c.sharding = Some(ShardingConfig { shards, policy });
+        rows.push(c);
+    }
     rows
 }
 
@@ -352,6 +382,31 @@ mod tests {
                 rows.iter().any(|r| r.name.starts_with("lifecycle/") && r.name.ends_with(tag)),
                 "lifecycle corner {tag} missing"
             );
+        }
+        // The shard family appears: both counts and all three policies.
+        for tag in ["row2", "col2", "grid4"] {
+            assert!(
+                rows.iter().any(|r| r.name.starts_with("shard/") && r.name.ends_with(tag)),
+                "shard corner {tag} missing"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_rows_do_not_collide_with_other_families() {
+        let rows = expand(&MatrixSpec::new(Tier::Quick));
+        let shard: Vec<_> = rows.iter().filter(|r| r.name.starts_with("shard/")).collect();
+        assert!(!shard.is_empty());
+        for r in &shard {
+            let sc = r.cfg.sharding.expect("shard row lost its config");
+            assert!(sc.shards > 1, "{}: trivial shard count", r.name);
+            for f in ["l2ight/", "rad/", "flops/", "swat-u/", "mixedtrn/", "lifecycle/"] {
+                assert!(!r.name.contains(f), "{} matches filter {f}", r.name);
+            }
+        }
+        // And conversely: no other row carries a sharding config.
+        for r in rows.iter().filter(|r| !r.name.starts_with("shard/")) {
+            assert!(r.cfg.sharding.is_none(), "{}: unexpected sharding config", r.name);
         }
     }
 

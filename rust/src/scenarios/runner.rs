@@ -69,6 +69,7 @@ mod tests {
                 zo_budget: 0.1,
                 seed,
                 robustness: None,
+                sharding: None,
             },
         }
     }

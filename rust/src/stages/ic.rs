@@ -17,7 +17,7 @@
 
 use crate::photonics::ptc::{Ptc, Which};
 use crate::photonics::unitary::num_phases;
-use crate::photonics::PtcMesh;
+use crate::photonics::{PtcMesh, ShardedMesh};
 use crate::util::pool;
 use crate::util::{mean, Rng};
 use crate::zoo::{ZoConfig, ZoKind, ZoProblem, ZoReport};
@@ -160,22 +160,60 @@ pub fn calibrate_mesh(mesh: &mut PtcMesh, cfg: &IcConfig) -> IcReport {
     agg
 }
 
+/// Calibrate all blocks of a sharded mesh. Each shard is calibrated on its
+/// own (the scoped-recalibration unit), but every block's ZO RNG stream is
+/// keyed by its *logical* block index — so the post-IC device state is
+/// bitwise-identical to `calibrate_mesh` on the unsharded twin, at every
+/// shard count, policy, and thread count.
+pub fn calibrate_sharded_mesh(sm: &mut ShardedMesh, cfg: &IcConfig) -> IcReport {
+    let q_total = sm.q;
+    let mut results: Vec<(usize, (ZoReport, (f64, f64)))> =
+        Vec::with_capacity(sm.p * sm.q);
+    for s in sm.shards.iter_mut() {
+        let (p0, q0, qs) = (s.p0, s.q0, s.mesh.q);
+        let shard_results: Vec<(usize, (ZoReport, (f64, f64)))> =
+            pool::global().parallel_map_chunked(&mut s.mesh.ptcs, cfg.threads, |lbi, ptc| {
+                let bi = (p0 + lbi / qs) * q_total + (q0 + lbi % qs);
+                let mut rng = Rng::with_stream(cfg.seed, bi as u64);
+                (bi, calibrate_ptc(ptc, cfg, &mut rng))
+            });
+        results.extend(shard_results);
+        s.mesh.invalidate();
+    }
+    // Absorb in logical block order so the report sums associate exactly
+    // like `calibrate_mesh`'s.
+    results.sort_by_key(|r| r.0);
+    let mut agg = IcReport::default();
+    for (_, r) in &results {
+        agg.absorb(&r.0, r.1);
+    }
+    agg.finalize();
+    agg
+}
+
 /// Calibrate every photonic engine in a model; aggregates across meshes.
 pub fn calibrate_model(model: &mut crate::nn::Model, cfg: &IcConfig) -> IcReport {
     let mut agg = IcReport::default();
     let mut traces: Vec<Vec<f64>> = Vec::new();
     let mut mesh_idx = 0u64;
     model.for_each_layer(|l| {
-        if let Some(crate::nn::ProjEngine::Photonic { mesh, .. }) = l.engine_mut() {
-            let sub_cfg = IcConfig { seed: cfg.seed.wrapping_add(mesh_idx), ..*cfg };
-            let r = calibrate_mesh(mesh, &sub_cfg);
-            agg.mse_u += r.mse_u * r.blocks as f64;
-            agg.mse_v += r.mse_v * r.blocks as f64;
-            agg.queries += r.queries;
-            agg.blocks += r.blocks;
-            traces.push(r.trace);
-            mesh_idx += 1;
-        }
+        let r = match l.engine_mut() {
+            Some(crate::nn::ProjEngine::Photonic { mesh, .. }) => {
+                let sub_cfg = IcConfig { seed: cfg.seed.wrapping_add(mesh_idx), ..*cfg };
+                calibrate_mesh(mesh, &sub_cfg)
+            }
+            Some(crate::nn::ProjEngine::PhotonicSharded { mesh, .. }) => {
+                let sub_cfg = IcConfig { seed: cfg.seed.wrapping_add(mesh_idx), ..*cfg };
+                calibrate_sharded_mesh(mesh, &sub_cfg)
+            }
+            _ => return,
+        };
+        agg.mse_u += r.mse_u * r.blocks as f64;
+        agg.mse_v += r.mse_v * r.blocks as f64;
+        agg.queries += r.queries;
+        agg.blocks += r.blocks;
+        traces.push(r.trace);
+        mesh_idx += 1;
     });
     let n = agg.blocks.max(1) as f64;
     agg.mse_u /= n;

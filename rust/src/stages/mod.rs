@@ -17,6 +17,6 @@ pub mod ic;
 pub mod pm;
 pub mod sl;
 
-pub use ic::{calibrate_mesh, calibrate_model, IcConfig, IcReport};
-pub use pm::{map_mesh, map_model, PmConfig, PmReport};
+pub use ic::{calibrate_mesh, calibrate_model, calibrate_sharded_mesh, IcConfig, IcReport};
+pub use pm::{map_mesh, map_model, map_sharded_mesh, PmConfig, PmReport};
 pub use sl::{train, train_with_lifecycle, SlConfig, SlReport};

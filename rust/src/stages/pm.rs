@@ -20,7 +20,7 @@ use crate::linalg::Mat;
 use crate::nn::{Model, ProjEngine};
 use crate::photonics::ptc::{Ptc, Which};
 use crate::photonics::unitary::num_phases;
-use crate::photonics::PtcMesh;
+use crate::photonics::{PtcMesh, ShardedMesh};
 #[cfg(test)]
 use crate::photonics::NoiseModel;
 use crate::util::pool;
@@ -180,6 +180,62 @@ pub fn map_mesh(mesh: &mut PtcMesh, target: &Mat, cfg: &PmConfig) -> PmReport {
     report
 }
 
+/// Map a sharded mesh onto a dense target. Each shard is mapped
+/// independently (its own PM job, as on real multi-chiplet hardware), but
+/// every block's ZO RNG stream is keyed by its *logical* block index, and
+/// the report is absorbed in logical block order — so both the programmed
+/// device state and the report are bitwise-identical to `map_mesh` on the
+/// unsharded twin at every shard count, policy, and thread count.
+pub fn map_sharded_mesh(sm: &mut ShardedMesh, target: &Mat, cfg: &PmConfig) -> PmReport {
+    assert_eq!((target.rows, target.cols), (sm.rows, sm.cols), "map_sharded_mesh shape");
+    sm.program_from_dense(target);
+    let err_init = sm.rel_error(target) as f64;
+
+    let (k, p, q) = (sm.k, sm.p, sm.q);
+    let padded = {
+        let mut w = Mat::zeros(p * k, q * k);
+        for r in 0..target.rows {
+            w.row_mut(r)[..target.cols].copy_from_slice(target.row(r));
+        }
+        w
+    };
+    let targets: Vec<Mat> =
+        (0..p * q).map(|i| padded.block((i / q) * k, (i % q) * k, k)).collect();
+
+    let blocks = p * q;
+    let mut results: Vec<(usize, (Vec<f64>, u64))> = Vec::with_capacity(blocks);
+    for s in sm.shards.iter_mut() {
+        let (p0, q0, qs) = (s.p0, s.q0, s.mesh.q);
+        let targets = &targets;
+        let shard_results: Vec<(usize, (Vec<f64>, u64))> =
+            pool::global().parallel_map_chunked(&mut s.mesh.ptcs, cfg.threads, |lbi, ptc| {
+                let bi = (p0 + lbi / qs) * q + (q0 + lbi % qs);
+                let mut rng = Rng::with_stream(cfg.seed, bi as u64);
+                (bi, map_ptc(ptc, &targets[bi], cfg, &mut rng))
+            });
+        results.extend(shard_results);
+        s.mesh.invalidate();
+    }
+    results.sort_by_key(|r| r.0);
+
+    let mut report = PmReport { err_init, blocks, ..Default::default() };
+    for (_, r) in &results {
+        if report.trace.len() < r.0.len() {
+            report.trace.resize(r.0.len(), 0.0);
+        }
+        for (t, &v) in report.trace.iter_mut().zip(&r.0) {
+            *t += v;
+        }
+        report.queries += r.1;
+    }
+    for t in &mut report.trace {
+        *t /= blocks as f64;
+    }
+    report.err_zo = report.trace.last().copied().unwrap_or(err_init);
+    report.err_osp = sm.rel_error(target) as f64;
+    report
+}
+
 /// Map every photonic engine in `dst` onto the dense weights of the
 /// corresponding engine in `src` (a pretrained digital model of identical
 /// topology). Returns the aggregate report (block-weighted means).
@@ -198,9 +254,18 @@ pub fn map_model(dst: &mut Model, src: &mut Model, cfg: &PmConfig) -> PmReport {
         if let Some(e) = l.engine_mut() {
             let w = &weights[wi];
             wi += 1;
-            if let ProjEngine::Photonic { mesh, .. } = e {
-                let sub = PmConfig { seed: cfg.seed.wrapping_add(mesh_idx), ..*cfg };
-                let r = map_mesh(mesh, w, &sub);
+            let r = match e {
+                ProjEngine::Photonic { mesh, .. } => {
+                    let sub = PmConfig { seed: cfg.seed.wrapping_add(mesh_idx), ..*cfg };
+                    Some(map_mesh(mesh, w, &sub))
+                }
+                ProjEngine::PhotonicSharded { mesh, .. } => {
+                    let sub = PmConfig { seed: cfg.seed.wrapping_add(mesh_idx), ..*cfg };
+                    Some(map_sharded_mesh(mesh, w, &sub))
+                }
+                _ => None,
+            };
+            if let Some(r) = r {
                 let b = r.blocks as f64;
                 agg.err_init += r.err_init * b;
                 agg.err_zo += r.err_zo * b;

@@ -159,6 +159,7 @@ fn lifecycle_cfg() -> JobConfig {
         zo_budget: 0.1,
         seed: 1234,
         robustness: Some(RobustnessConfig::lifecycle_row(true, true)),
+        sharding: None,
     }
 }
 

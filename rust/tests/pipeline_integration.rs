@@ -32,6 +32,7 @@ fn tiny_cfg(protocol: Protocol) -> JobConfig {
         zo_budget: 0.2,
         seed: 11,
         robustness: None,
+        sharding: None,
     }
 }
 

@@ -233,3 +233,243 @@ fn prop_augment_preserves_shape_and_finiteness() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// Serving-layer properties: admission coalescing/FIFO and stats percentiles.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_admission_max_wait_bounds_coalescing() {
+    // ∀ (max_batch, n): a consumer facing a partial batch flushes once the
+    // *oldest* request has waited max_wait — it never hangs waiting for the
+    // batch to fill — and a full batch flushes without touching the
+    // deadline at all. Timing-sensitive, so few cases and a generous slack
+    // on the upper bound (the property is "bounded", not "exact").
+    use l2ight::serve::{AdmissionConfig, AdmissionQueue};
+    use l2ight::util::prop::{check, PropConfig};
+    use std::time::{Duration, Instant};
+    check(
+        "admission: max_wait bounds partial-batch latency",
+        PropConfig { cases: 10, ..PropConfig::default() },
+        |rng: &mut Rng, _size: usize| {
+            let max_batch = 2 + rng.below(15);
+            let n = 1 + rng.below(max_batch - 1); // strictly partial
+            (max_batch, n)
+        },
+        |&(max_batch, n): &(usize, usize)| {
+            let max_wait = Duration::from_millis(15);
+            let q: AdmissionQueue<usize> = AdmissionQueue::new(AdmissionConfig {
+                max_batch,
+                max_wait,
+                queue_cap: 1024,
+            });
+            for i in 0..n {
+                q.try_submit(i).map_err(|_| "shed under capacity".to_string())?;
+            }
+            let t0 = Instant::now();
+            let batch = q.next_batch().ok_or("queue reported closed")?;
+            let waited = t0.elapsed();
+            if waited > max_wait + Duration::from_millis(1500) {
+                return Err(format!("partial batch held {waited:?} (max_wait {max_wait:?})"));
+            }
+            let got: Vec<usize> = batch.into_iter().map(|r| r.payload).collect();
+            if got != (0..n).collect::<Vec<usize>>() {
+                return Err(format!("partial flush not FIFO-complete: {got:?}"));
+            }
+            // Full batch: deadline is irrelevant, flush must be immediate
+            // even with an effectively-infinite max_wait.
+            let q: AdmissionQueue<usize> = AdmissionQueue::new(AdmissionConfig {
+                max_batch,
+                max_wait: Duration::from_secs(3600),
+                queue_cap: 1024,
+            });
+            for i in 0..max_batch {
+                q.try_submit(i).map_err(|_| "shed under capacity".to_string())?;
+            }
+            let t0 = Instant::now();
+            let batch = q.next_batch().ok_or("queue reported closed")?;
+            if t0.elapsed() > Duration::from_secs(60) {
+                return Err("full batch waited on the deadline".into());
+            }
+            if batch.len() != max_batch {
+                return Err(format!("full flush took {} of {max_batch}", batch.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_admission_fifo_within_batch_under_multi_consumer_drain() {
+    // ∀ (workers, n): with several replica workers racing on next_batch,
+    // every request is delivered exactly once, and *within* each batch the
+    // submission order is preserved (payloads are submitted in increasing
+    // order, so each batch must be strictly increasing).
+    use l2ight::serve::{AdmissionConfig, AdmissionQueue};
+    use l2ight::util::prop::{check, PropConfig};
+    use std::time::Duration;
+    check(
+        "admission: exactly-once + FIFO within batch, multi-consumer",
+        PropConfig { cases: 12, ..PropConfig::default() },
+        |rng: &mut Rng, size: usize| {
+            let workers = 2 + rng.below(3);
+            let n = 20 + rng.below(10 * size + 1);
+            let max_batch = 1 + rng.below(8);
+            (workers, n, max_batch)
+        },
+        |&(workers, n, max_batch): &(usize, usize, usize)| {
+            let q: AdmissionQueue<usize> = AdmissionQueue::new(AdmissionConfig {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+                queue_cap: usize::MAX,
+            });
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let mut batches: Vec<Vec<usize>> = Vec::new();
+                        while let Some(batch) = q.next_batch() {
+                            batches.push(batch.into_iter().map(|r| r.payload).collect());
+                        }
+                        batches
+                    })
+                })
+                .collect();
+            for i in 0..n {
+                q.try_submit(i).map_err(|_| "unbounded queue shed".to_string())?;
+            }
+            q.close();
+            let mut all = Vec::new();
+            for h in handles {
+                for batch in h.join().map_err(|_| "worker panicked".to_string())? {
+                    if batch.len() > max_batch {
+                        return Err(format!("batch of {} > max_batch {max_batch}", batch.len()));
+                    }
+                    if !batch.windows(2).all(|w| w[0] < w[1]) {
+                        return Err(format!("batch not FIFO: {batch:?}"));
+                    }
+                    all.extend(batch);
+                }
+            }
+            all.sort_unstable();
+            if all != (0..n).collect::<Vec<usize>>() {
+                return Err(format!("not exactly-once: {} of {n} delivered", all.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_serve_percentiles_monotone_bounded_and_null_safe() {
+    // ∀ latency sets: percentile_ms is monotone in p and bounded by
+    // [min, max]; a single sample answers every percentile; an empty set is
+    // NaN everywhere and serializes as JSON null (machine-parseable file
+    // even with zero traffic); injected non-finite samples also degrade to
+    // null rather than emitting bare `NaN` into the JSON text.
+    use l2ight::serve::ServeStats;
+    quickcheck(
+        "serve stats percentiles",
+        |rng: &mut Rng, size: usize| {
+            let n = rng.below(size + 2);
+            let mut lat: Vec<f64> = (0..n).map(|_| rng.below(100_000) as f64 / 97.0).collect();
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            lat
+        },
+        |lat: &Vec<f64>| {
+            let s = ServeStats { latency_ms: lat.clone(), ..ServeStats::default() };
+            if lat.is_empty() {
+                if !s.percentile_ms(50.0).is_nan() {
+                    return Err("empty set must be NaN".into());
+                }
+                let j = s.to_json();
+                for key in ["p50_ms", "p95_ms", "p99_ms"] {
+                    if !matches!(j.get(key), Some(Json::Null)) {
+                        return Err(format!("{key} not null for empty set"));
+                    }
+                }
+                if Json::parse(&j.pretty()).is_err() {
+                    return Err("empty snapshot JSON unparseable".into());
+                }
+                return Ok(());
+            }
+            let (lo, hi) = (lat[0], lat[lat.len() - 1]);
+            let mut prev = f64::NEG_INFINITY;
+            for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+                let v = s.percentile_ms(p);
+                if !(lo..=hi).contains(&v) {
+                    return Err(format!("p{p} = {v} outside [{lo}, {hi}]"));
+                }
+                if v < prev {
+                    return Err(format!("p{p} = {v} < previous {prev}: not monotone"));
+                }
+                prev = v;
+            }
+            if lat.len() == 1 {
+                for p in [0.0, 50.0, 100.0] {
+                    if s.percentile_ms(p) != lat[0] {
+                        return Err("single sample must answer every percentile".into());
+                    }
+                }
+            }
+            // Non-finite samples (e.g. a corrupted snapshot) must still
+            // produce valid JSON: null, never a bare NaN token.
+            let poisoned = ServeStats {
+                latency_ms: vec![f64::NAN; lat.len()],
+                ..ServeStats::default()
+            };
+            let j = poisoned.to_json();
+            if !matches!(j.get("p50_ms"), Some(Json::Null)) {
+                return Err("NaN percentile must serialize as null".into());
+            }
+            if Json::parse(&j.pretty()).is_err() {
+                return Err("poisoned snapshot JSON unparseable".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_serve_collector_accounting_closes() {
+    // ∀ batch sequences: served == Σ sizes, batches == Σ occupancy, and
+    // every latency sample survives into the (sorted) snapshot.
+    use l2ight::serve::{QueueCounters, StatsCollector};
+    use std::time::Duration;
+    quickcheck(
+        "serve stats accounting closure",
+        |rng: &mut Rng, size: usize| {
+            let max_batch = 1 + rng.below(8);
+            let sizes: Vec<usize> =
+                (0..rng.below(size + 1)).map(|_| 1 + rng.below(max_batch + 2)).collect();
+            (max_batch, sizes)
+        },
+        |(max_batch, sizes): &(usize, Vec<usize>)| {
+            let c = StatsCollector::new(*max_batch);
+            for (i, &sz) in sizes.iter().enumerate() {
+                c.note_batch(sz, (0..sz).map(|j| Duration::from_micros((i * 7 + j) as u64)));
+            }
+            let s = c.snapshot(&QueueCounters::default());
+            let total: usize = sizes.iter().sum();
+            if s.served != total as u64 {
+                return Err(format!("served {} != Σ sizes {total}", s.served));
+            }
+            if s.batches != sizes.len() as u64 {
+                return Err(format!("batches {} != {}", s.batches, sizes.len()));
+            }
+            if s.occupancy.iter().sum::<u64>() != sizes.len() as u64 {
+                return Err("occupancy histogram does not sum to batches".into());
+            }
+            if s.occupancy.len() != (*max_batch).max(1) {
+                return Err("occupancy bin count drifted from max_batch".into());
+            }
+            if s.latency_ms.len() != total {
+                return Err("latency samples lost".into());
+            }
+            if !s.latency_ms.windows(2).all(|w| w[0] <= w[1]) {
+                return Err("snapshot latencies not sorted".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,470 @@
+//! Cross-shard equivalence: a logical layer partitioned across several
+//! independently-mapped chiplet meshes must be *bitwise* indistinguishable
+//! from the single-mesh engine — for every hot path (forward, feedback,
+//! sigma_grad; masked, packed), at every shard count and placement policy,
+//! at every thread count (within one SIMD dispatch level). On top of the
+//! numerics, `MeshStats` accounting must close: energy (block-column
+//! products) is partition-invariant, and latency (steps) can only go up
+//! when a shard's critical path is shorter than the logical mesh's.
+//!
+//! The bitwise claim works because `ShardedMesh::from_mesh` carves shards
+//! out of a logical `PtcMesh` by *moving* its PTCs (identical device
+//! state), and every hot path walks the logical block grid in unsharded
+//! order through the owner table — the kernel-call sequence is identical,
+//! so within a SIMD dispatch level the floats are too.
+
+use l2ight::coordinator::{load_model_state, save_model_state};
+use l2ight::linalg::Mat;
+use l2ight::nn::{build_model, Act, EngineKind, ModelArch, ProjEngine};
+use l2ight::photonics::{NoiseModel, PtcMesh, ShardPolicy, ShardedMesh};
+use l2ight::profiler::CostBreakdown;
+use l2ight::sampling::FeedbackMask;
+use l2ight::stages::{
+    calibrate_mesh, calibrate_sharded_mesh, map_mesh, map_sharded_mesh, IcConfig, PmConfig,
+};
+use l2ight::util::pool::ThreadPool;
+use l2ight::util::prop::{assert_close, quickcheck};
+use l2ight::util::Rng;
+
+/// Shard-count × policy corners exercised by every property. `(1, Row)` is
+/// the degenerate case that must reproduce the unsharded engine exactly
+/// (including stats); counts above p or q clamp inside `from_mesh`.
+const CONFIGS: [(usize, ShardPolicy); 6] = [
+    (1, ShardPolicy::Row),
+    (2, ShardPolicy::Row),
+    (2, ShardPolicy::Col),
+    (3, ShardPolicy::Grid),
+    (4, ShardPolicy::Grid),
+    (4, ShardPolicy::Col),
+];
+
+/// Same generator shape as `parallel_equivalence.rs`: block size, mesh
+/// dims, and batch all sweep with `size` so block-grid edge cases (ragged
+/// last row/col, single-column batches) come up quickly.
+fn random_mesh(rng: &mut Rng, size: usize) -> (PtcMesh, Mat, Mat) {
+    let k = 2 + size % 5;
+    let rows = k + 1 + size % 37;
+    let cols = k + 1 + (size / 2) % 29;
+    let b = 1 + size % 21;
+    let w = Mat::randn(rows, cols, 0.5, rng);
+    let mut mesh = PtcMesh::new(rows, cols, k, NoiseModel::PAPER, rng);
+    mesh.program_from_dense(&w);
+    let x = Mat::randn(cols, b, 1.0, rng);
+    let dy = Mat::randn(rows, b, 1.0, rng);
+    (mesh, x, dy)
+}
+
+/// Deterministic ~70%-keep mask (salted so forward/feedback/column masks
+/// within one case differ from each other).
+fn pseudo_mask(n: usize, salt: usize) -> Vec<bool> {
+    (0..n).map(|i| (i.wrapping_mul(2654435761) + salt.wrapping_mul(40503)) % 7 < 5).collect()
+}
+
+#[test]
+fn prop_sharded_forward_is_bitwise_equal_to_unsharded() {
+    let pool = ThreadPool::new(4);
+    quickcheck(
+        "forward/forward_masked: sharded == unsharded, bitwise",
+        |rng: &mut Rng, size: usize| random_mesh(rng, size),
+        |case| {
+            let (mesh, x, _) = case;
+            let (p, q) = (mesh.p, mesh.q);
+            let mut reference = mesh.clone();
+            let y_dense = reference.forward_masked_on(&pool, x, None, 1.0);
+            let mask = pseudo_mask(p * q, 1); // logical [p][q]
+            let y_masked = reference.forward_masked_on(&pool, x, Some(&mask), 1.75);
+            for &(shards, policy) in &CONFIGS {
+                let mut sm = ShardedMesh::from_mesh(mesh.clone(), shards, policy);
+                let ys = sm.forward_masked_on(&pool, x, None, 1.0);
+                assert_close(&ys.data, &y_dense.data, 0.0, 0.0).map_err(|e| {
+                    format!("unmasked, shards={shards} {}: {e}", policy.name())
+                })?;
+                let ysm = sm.forward_masked_on(&pool, x, Some(&mask), 1.75);
+                assert_close(&ysm.data, &y_masked.data, 0.0, 0.0).map_err(|e| {
+                    format!("masked, shards={shards} {}: {e}", policy.name())
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_feedback_is_bitwise_equal_to_unsharded() {
+    let pool = ThreadPool::new(4);
+    quickcheck(
+        "feedback: sharded == unsharded, bitwise",
+        |rng: &mut Rng, size: usize| random_mesh(rng, size),
+        |case| {
+            let (mesh, _, dy) = case;
+            let (p, q) = (mesh.p, mesh.q);
+            let mut reference = mesh.clone();
+            let dx_dense = reference.feedback_on(&pool, dy, None, 1.0);
+            let mask = pseudo_mask(q * p, 2); // logical [q][p] (transposed grid)
+            let dx_masked = reference.feedback_on(&pool, dy, Some(&mask), 0.6);
+            for &(shards, policy) in &CONFIGS {
+                let mut sm = ShardedMesh::from_mesh(mesh.clone(), shards, policy);
+                let dxs = sm.feedback_on(&pool, dy, None, 1.0);
+                assert_close(&dxs.data, &dx_dense.data, 0.0, 0.0).map_err(|e| {
+                    format!("unmasked, shards={shards} {}: {e}", policy.name())
+                })?;
+                let dxm = sm.feedback_on(&pool, dy, Some(&mask), 0.6);
+                assert_close(&dxm.data, &dx_masked.data, 0.0, 0.0).map_err(|e| {
+                    format!("masked, shards={shards} {}: {e}", policy.name())
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_sigma_grad_is_bitwise_equal_to_unsharded() {
+    let pool = ThreadPool::new(4);
+    quickcheck(
+        "sigma_grad: sharded == unsharded, bitwise",
+        |rng: &mut Rng, size: usize| random_mesh(rng, size),
+        |case| {
+            let (mesh, x, dy) = case;
+            let b = x.cols;
+            let mut reference = mesh.clone();
+            let g_dense = reference.sigma_grad_on(&pool, x, dy, None, 1.0);
+            let col_keep = pseudo_mask(b, 3);
+            let g_masked = reference.sigma_grad_on(&pool, x, dy, Some(&col_keep), 2.5);
+            for &(shards, policy) in &CONFIGS {
+                let mut sm = ShardedMesh::from_mesh(mesh.clone(), shards, policy);
+                let gs = sm.sigma_grad_on(&pool, x, dy, None, 1.0);
+                assert_close(&gs, &g_dense, 0.0, 0.0).map_err(|e| {
+                    format!("dense cols, shards={shards} {}: {e}", policy.name())
+                })?;
+                let gm = sm.sigma_grad_on(&pool, x, dy, Some(&col_keep), 2.5);
+                assert_close(&gm, &g_masked, 0.0, 0.0).map_err(|e| {
+                    format!("masked cols, shards={shards} {}: {e}", policy.name())
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_packed_forward_is_bitwise_equal_to_unsharded() {
+    // The packed (im2col-fused conv) entry point: the pack closure writes a
+    // [q·k, panel] tile; rows past x.rows stay zero (pre-zeroed scratch).
+    let pool = ThreadPool::new(4);
+    quickcheck(
+        "forward_packed: sharded == unsharded, bitwise",
+        |rng: &mut Rng, size: usize| random_mesh(rng, size),
+        |case| {
+            let (mesh, x, _) = case;
+            let (p, q) = (mesh.p, mesh.q);
+            let b = x.cols;
+            let pack = |c0: usize, c1: usize, dst: &mut [f32]| {
+                let wpan = c1 - c0;
+                for r in 0..x.rows {
+                    for (j, c) in (c0..c1).enumerate() {
+                        dst[r * wpan + j] = x[(r, c)];
+                    }
+                }
+            };
+            let mask = pseudo_mask(p * q, 4);
+            let mut reference = mesh.clone();
+            let y_ref = reference.forward_packed_on(&pool, b, &pack, Some(&mask), 1.25);
+            for &(shards, policy) in &CONFIGS {
+                let mut sm = ShardedMesh::from_mesh(mesh.clone(), shards, policy);
+                let ys = sm.forward_packed_on(&pool, b, &pack, Some(&mask), 1.25);
+                assert_close(&ys.data, &y_ref.data, 0.0, 0.0).map_err(|e| {
+                    format!("shards={shards} {}: {e}", policy.name())
+                })?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_paths_are_thread_count_invariant_and_deterministic() {
+    // threads=1 vs threads=4 bitwise on the *sharded* mesh (parallelism is
+    // partitioned by output region, never by shard), and running the same
+    // op twice on clones is bitwise-repeatable within a dispatch level.
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(4);
+    quickcheck(
+        "sharded hot paths: threads=1 == threads=4 == repeat run",
+        |rng: &mut Rng, size: usize| random_mesh(rng, size),
+        |case| {
+            let (mesh, x, dy) = case;
+            let (p, q) = (mesh.p, mesh.q);
+            let fmask = pseudo_mask(p * q, 5);
+            let bmask = pseudo_mask(q * p, 6);
+            for &(shards, policy) in &[(2, ShardPolicy::Row), (4, ShardPolicy::Grid)] {
+                let sm0 = ShardedMesh::from_mesh(mesh.clone(), shards, policy);
+                let (mut a, mut b, mut c) = (sm0.clone(), sm0.clone(), sm0.clone());
+                let y1 = a.forward_masked_on(&serial, x, Some(&fmask), 1.1);
+                let y4 = b.forward_masked_on(&wide, x, Some(&fmask), 1.1);
+                let y4r = c.forward_masked_on(&wide, x, Some(&fmask), 1.1);
+                assert_close(&y1.data, &y4.data, 0.0, 0.0)
+                    .map_err(|e| format!("forward 1-vs-4 ({shards}): {e}"))?;
+                assert_close(&y4.data, &y4r.data, 0.0, 0.0)
+                    .map_err(|e| format!("forward repeat ({shards}): {e}"))?;
+                let d1 = a.feedback_on(&serial, dy, Some(&bmask), 1.0);
+                let d4 = b.feedback_on(&wide, dy, Some(&bmask), 1.0);
+                assert_close(&d1.data, &d4.data, 0.0, 0.0)
+                    .map_err(|e| format!("feedback 1-vs-4 ({shards}): {e}"))?;
+                let g1 = a.sigma_grad_on(&serial, x, dy, None, 1.0);
+                let g4 = b.sigma_grad_on(&wide, x, dy, None, 1.0);
+                assert_close(&g1, &g4, 0.0, 0.0)
+                    .map_err(|e| format!("sigma_grad 1-vs-4 ({shards}): {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mesh_stats_accounting_closes_across_shards() {
+    let pool = ThreadPool::new(3);
+    let mut rng = Rng::new(0x57a7);
+    let (mesh, x, dy) = random_mesh(&mut rng, 23);
+    let (p, q) = (mesh.p, mesh.q);
+    let fmask = pseudo_mask(p * q, 7);
+    let bmask = pseudo_mask(q * p, 8);
+    let col_keep = pseudo_mask(x.cols, 9);
+
+    // Unsharded reference ledger.
+    let mut m = mesh.clone();
+    let s_ref = {
+        let _ = m.forward_masked_on(&pool, &x, None, 1.0);
+        let _ = m.forward_masked_on(&pool, &x, Some(&fmask), 1.5);
+        let _ = m.feedback_on(&pool, &dy, Some(&bmask), 1.0);
+        let _ = m.sigma_grad_on(&pool, &x, &dy, Some(&col_keep), 1.0);
+        m.stats
+    };
+
+    for &(shards, policy) in &CONFIGS {
+        let mut sm = ShardedMesh::from_mesh(mesh.clone(), shards, policy);
+        let _ = sm.forward_masked_on(&pool, &x, None, 1.0);
+        let _ = sm.forward_masked_on(&pool, &x, Some(&fmask), 1.5);
+        let _ = sm.feedback_on(&pool, &dy, Some(&bmask), 1.0);
+        let _ = sm.sigma_grad_on(&pool, &x, &dy, Some(&col_keep), 1.0);
+        let s = sm.stats();
+        // Energy (block-column products) is partition-invariant: the same
+        // logical blocks fire on the same columns no matter who owns them.
+        assert_eq!(s.fwd_block_cols, s_ref.fwd_block_cols, "{shards} {}", policy.name());
+        assert_eq!(s.feedback_block_cols, s_ref.feedback_block_cols, "{shards} {}", policy.name());
+        assert_eq!(s.grad_block_cols, s_ref.grad_block_cols, "{shards} {}", policy.name());
+        // Steps (latency) can only grow: each chiplet's sequential chain is
+        // a subset of the logical mesh's, but fixed per-group costs repeat.
+        assert!(s.fwd_steps >= s_ref.fwd_steps, "{shards} {}", policy.name());
+        assert!(s.feedback_steps >= s_ref.feedback_steps, "{shards} {}", policy.name());
+        assert!(s.grad_steps >= s_ref.grad_steps, "{shards} {}", policy.name());
+        // And the profiler's energy roll-up closes exactly.
+        assert_eq!(
+            CostBreakdown::from_stats(&s).total_energy(),
+            CostBreakdown::from_stats(&s_ref).total_energy()
+        );
+        if sm.num_shards() == 1 {
+            // Degenerate sharding is the unsharded ledger, bit for bit.
+            assert_eq!(s.fwd_steps, s_ref.fwd_steps);
+            assert_eq!(s.feedback_steps, s_ref.feedback_steps);
+            assert_eq!(s.grad_steps, s_ref.grad_steps);
+        }
+        // reset_stats must zero the whole fleet.
+        sm.reset_stats();
+        assert_eq!(sm.stats().total_energy(), 0);
+        assert_eq!(sm.stats().total_steps(), 0);
+    }
+}
+
+#[test]
+fn engine_level_sharded_matches_photonic_bitwise() {
+    // ProjEngine construction consumes the RNG identically for both kinds,
+    // so same seed → same device; then every engine entry point must agree.
+    let noise = NoiseModel::PAPER;
+    let (out, inp) = (19, 14);
+    for &(shards, policy) in &CONFIGS {
+        let mut r1 = Rng::new(0xe4a1);
+        let mut r2 = Rng::new(0xe4a1);
+        let mut e1 = ProjEngine::new(EngineKind::Photonic { k: 4, noise }, out, inp, &mut r1);
+        let mut e2 = ProjEngine::new(
+            EngineKind::PhotonicSharded { k: 4, noise, shards, policy },
+            out,
+            inp,
+            &mut r2,
+        );
+        assert_eq!(e1.out_features(), e2.out_features());
+        assert_eq!(e1.in_features(), e2.in_features());
+
+        let x = Mat::randn(inp, 9, 1.0, &mut Rng::new(11));
+        let dy = Mat::randn(out, 9, 1.0, &mut Rng::new(12));
+        let y1 = e1.forward(&x);
+        let y2 = e2.forward(&x);
+        assert_eq!(y1.data, y2.data, "forward, shards={shards} {}", policy.name());
+
+        // Gathered (sampled-column) forward rides the packed path.
+        let cols: Vec<Vec<f32>> = (0..x.cols)
+            .step_by(2)
+            .map(|c| (0..x.rows).map(|r| x.data[r * x.cols + c]).collect())
+            .collect();
+        let views: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        let yg1 = e1.forward_gathered(&views);
+        let yg2 = e2.forward_gathered(&views);
+        assert_eq!(yg1.data, yg2.data, "gathered, shards={shards}");
+
+        // Backward: feedback mask + sampled columns, then compare dx and
+        // the accumulated subspace gradient.
+        let (p, q, _) = e1.block_norms();
+        let fb = FeedbackMask { keep: pseudo_mask(q * p, 10), p, q, scale: 1.3 };
+        let col_keep = pseudo_mask(x.cols, 11);
+        let dx1 = e1.backward(&x, &dy, Some(&fb), Some(&col_keep), 2.0);
+        let dx2 = e2.backward(&x, &dy, Some(&fb), Some(&col_keep), 2.0);
+        assert_eq!(dx1.data, dx2.data, "backward dx, shards={shards}");
+        let g1 = match &e1 {
+            ProjEngine::Photonic { grad_sigma, .. } => grad_sigma.clone(),
+            _ => unreachable!(),
+        };
+        let g2 = match &e2 {
+            ProjEngine::PhotonicSharded { grad_sigma, .. } => grad_sigma.clone(),
+            _ => unreachable!(),
+        };
+        assert_eq!(g1, g2, "grad_sigma, shards={shards}");
+
+        // Realized weight and btopk norms are logical-order invariants.
+        assert_eq!(e1.dense_weight().data, e2.dense_weight().data);
+        assert_eq!(e1.block_norms(), e2.block_norms());
+    }
+}
+
+#[test]
+fn model_level_sharded_matches_photonic_bitwise() {
+    // Whole-model check: photonic projections (sharded vs not) mixed with
+    // the digital layers of the zoo must produce identical activations and
+    // identical stats energy.
+    let noise = NoiseModel::quant_only(8);
+    let mut m1 = build_model(
+        ModelArch::MlpVowel,
+        EngineKind::Photonic { k: 4, noise },
+        4,
+        0.5,
+        &mut Rng::new(0x30de1),
+    );
+    let mut m2 = build_model(
+        ModelArch::MlpVowel,
+        EngineKind::PhotonicSharded { k: 4, noise, shards: 4, policy: ShardPolicy::Grid },
+        4,
+        0.5,
+        &mut Rng::new(0x30de1),
+    );
+    let x = Act::from_features(Mat::randn(10, 6, 1.0, &mut Rng::new(21)), 6);
+    let y1 = m1.forward(&x, false);
+    let y2 = m2.forward(&x, false);
+    assert_eq!(y1.mat.data, y2.mat.data, "model forward diverged under sharding");
+    let s1 = m1.mesh_stats();
+    let s2 = m2.mesh_stats();
+    assert_eq!(s1.fwd_block_cols, s2.fwd_block_cols);
+    assert_eq!(s1.total_energy(), s2.total_energy());
+    assert_eq!(m1.param_counts(), m2.param_counts());
+}
+
+#[test]
+fn checkpoints_are_interchangeable_between_sharded_and_unsharded() {
+    // Serialization walks PTCs in logical order for both engines, so a
+    // checkpoint written by one is a valid restore target for the other —
+    // shard count is a deployment choice, not a model property. (quant-only
+    // noise: fab randomness is re-sampled per instance, see
+    // checkpoint_resume.rs.)
+    let noise = NoiseModel::quant_only(8);
+    let flat = EngineKind::Photonic { k: 4, noise };
+    let sharded = EngineKind::PhotonicSharded { k: 4, noise, shards: 2, policy: ShardPolicy::Row };
+    let x = Act::from_features(Mat::randn(8, 6, 1.0, &mut Rng::new(31)), 6);
+
+    // Flat → sharded.
+    let mut src = build_model(ModelArch::MlpVowel, flat, 4, 0.5, &mut Rng::new(41));
+    let path = std::env::temp_dir()
+        .join(format!("l2ight_shard_interop_{}.ckpt", std::process::id()));
+    save_model_state(&mut src, &path).unwrap();
+    let mut dst = build_model(ModelArch::MlpVowel, sharded, 4, 0.5, &mut Rng::new(999));
+    load_model_state(&mut dst, &path).unwrap();
+    assert_eq!(
+        src.forward(&x, false).mat.data,
+        dst.forward(&x, false).mat.data,
+        "flat checkpoint restored into sharded model diverged"
+    );
+
+    // Sharded → flat (and sharded → differently-sharded).
+    save_model_state(&mut dst, &path).unwrap();
+    let mut back = build_model(ModelArch::MlpVowel, flat, 4, 0.5, &mut Rng::new(7));
+    load_model_state(&mut back, &path).unwrap();
+    let resharded_kind =
+        EngineKind::PhotonicSharded { k: 4, noise, shards: 4, policy: ShardPolicy::Grid };
+    let mut resharded = build_model(ModelArch::MlpVowel, resharded_kind, 4, 0.5, &mut Rng::new(8));
+    load_model_state(&mut resharded, &path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(src.forward(&x, false).mat.data, back.forward(&x, false).mat.data);
+    assert_eq!(src.forward(&x, false).mat.data, resharded.forward(&x, false).mat.data);
+}
+
+#[test]
+fn ic_stage_is_shard_count_invariant() {
+    // Identity calibration streams ZO randomness per *logical* block, so
+    // the post-IC device state — and the report — are bitwise identical at
+    // any shard count.
+    let cfg = IcConfig::quick();
+    let mut rng = Rng::new(0x1c);
+    let mut reference = PtcMesh::new(8, 8, 4, NoiseModel::PAPER, &mut rng);
+    let r_ref = calibrate_mesh(&mut reference, &cfg);
+    for &(shards, policy) in &CONFIGS {
+        let mut rng = Rng::new(0x1c);
+        let mut sm =
+            ShardedMesh::new(8, 8, 4, NoiseModel::PAPER, shards, policy, &mut rng);
+        let r = calibrate_sharded_mesh(&mut sm, &cfg);
+        assert_eq!(r.mse_u, r_ref.mse_u, "shards={shards} {}", policy.name());
+        assert_eq!(r.mse_v, r_ref.mse_v);
+        assert_eq!(r.queries, r_ref.queries);
+        assert_eq!(r.trace, r_ref.trace);
+        assert_eq!(r.blocks, r_ref.blocks);
+        assert_eq!(sm.sigma_flat(), reference.sigma_flat());
+        assert_eq!(sm.to_dense().data, reference.to_dense().data);
+    }
+}
+
+#[test]
+fn pm_stage_is_shard_count_invariant() {
+    // Parallel mapping: per-logical-block ZO streams + logical-order report
+    // absorption → same programmed chip and same convergence trace.
+    let cfg = PmConfig::quick();
+    let mut wrng = Rng::new(0x9a);
+    let target = Mat::randn(8, 8, 0.5, &mut wrng);
+    let mut rng = Rng::new(0x9b);
+    let mut reference = PtcMesh::new(8, 8, 4, NoiseModel::PAPER, &mut rng);
+    let r_ref = map_mesh(&mut reference, &target, &cfg);
+    for &(shards, policy) in &[(1, ShardPolicy::Row), (2, ShardPolicy::Col), (4, ShardPolicy::Grid)]
+    {
+        let mut rng = Rng::new(0x9b);
+        let mut sm =
+            ShardedMesh::new(8, 8, 4, NoiseModel::PAPER, shards, policy, &mut rng);
+        let r = map_sharded_mesh(&mut sm, &target, &cfg);
+        assert_eq!(r.err_init, r_ref.err_init, "shards={shards} {}", policy.name());
+        assert_eq!(r.err_zo, r_ref.err_zo);
+        assert_eq!(r.err_osp, r_ref.err_osp);
+        assert_eq!(r.queries, r_ref.queries);
+        assert_eq!(r.trace, r_ref.trace);
+        assert_eq!(sm.to_dense().data, reference.to_dense().data);
+        assert_eq!(sm.rel_error(&target), reference.rel_error(&target));
+    }
+}
+
+#[test]
+fn digital_engine_is_untouched_by_sharding_plumbing() {
+    // The sharding axis must be a no-op for digital engines: same seed →
+    // same weights → same forward/backward, with no photonic stats.
+    let mut e = ProjEngine::new(EngineKind::Digital, 12, 10, &mut Rng::new(77));
+    let x = Mat::randn(10, 5, 1.0, &mut Rng::new(78));
+    let dy = Mat::randn(12, 5, 1.0, &mut Rng::new(79));
+    let y = e.forward(&x);
+    assert_eq!(y.rows, 12);
+    let dx = e.backward(&x, &dy, None, None, 1.0);
+    assert_eq!(dx.rows, 10);
+    let (p, q, norms) = e.block_norms();
+    assert_eq!((p, q, norms.len()), (1, 1, 1));
+}
