@@ -20,8 +20,12 @@
 //!   * `L2IGHT_SIMD`      — kernel dispatch level (recorded in the JSON).
 //!   * `L2IGHT_BENCH_QUICK=1` — 1-warmup smoke run for CI (tiny budget).
 //!   * `L2IGHT_BENCH_JSON` — output path (default `BENCH_perf_hotpath.json`).
+//!   * `L2IGHT_TUNE_PROFILE` / `L2IGHT_TUNE=auto` — autotuner profile used
+//!     by GEMM dispatch (the blocking in effect is recorded per run).
 
-use l2ight::linalg::{conv2d_forward_packed, im2col, matmul, matmul_into, simd, Conv2dShape, Mat};
+use l2ight::linalg::{
+    conv2d_forward_packed, im2col, matmul, matmul_into, simd, tune, Conv2dShape, Mat,
+};
 use l2ight::photonics::{NoiseModel, PtcMesh};
 use l2ight::runtime::{default_artifact_dir, ArgValue, Runtime};
 use l2ight::sampling::{FeedbackSampler, FeedbackStrategy, Normalization};
@@ -247,6 +251,17 @@ fn emit_json(
     run.set("simd", Json::Str(simd.to_string()));
     run.set("quick", Json::Bool(quick));
     run.set("unix_time", Json::Num(unix_time()));
+    // The blocking the dispatch layer used for this run — default grid or a
+    // tuned per-host profile — so before/after medians are attributable.
+    let level = simd::active();
+    let blk = tune::gemm_blocking(level);
+    let mut blocking = Json::obj();
+    blocking.set("mc", Json::Num(blk.mc as f64));
+    blocking.set("kc", Json::Num(blk.kc as f64));
+    blocking.set("nc", Json::Num(blk.nc as f64));
+    blocking.set("panel_cols", Json::Num(tune::panel_cols_for(level) as f64));
+    blocking.set("tuned", Json::Bool(tune::installed().level(level).is_some()));
+    run.set("blocking", blocking);
     let mut paths = Vec::new();
     for m in bench.results() {
         let mut o = Json::obj();

@@ -27,9 +27,14 @@ use super::mat::Mat;
 use super::simd::{self, SimdLevel};
 use crate::util::pool::{self, Scratch, SendPtr, ThreadPool};
 
-/// Column-panel width of the fused packed-panel path. A fixed constant —
-/// never derived from the pool width — so the panel partition (and with it
-/// every rounding decision) is identical at every thread count.
+/// Default column-panel width of the fused packed-panel path. The width
+/// actually used may come from the autotuner profile
+/// ([`super::tune::panel_cols_for`]) but is never derived from the pool
+/// width, so the panel partition is identical at every thread count — and
+/// the kernels apply one fused op per element per inner step regardless of
+/// where a panel boundary falls, so *any* width yields bitwise-identical
+/// results within a dispatch level (pinned by
+/// `tests/fused_conv_equivalence.rs`).
 pub const PANEL_COLS: usize = 128;
 
 /// Static shape of a conv2d: NCHW input, OIHW kernel.
@@ -275,16 +280,35 @@ pub fn gemm_packed_panels_at<P>(
 where
     P: Fn(usize, usize, &mut [f32]) + Sync,
 {
+    gemm_packed_panels_with(level, pool, super::tune::panel_cols_for(level), w, total_cols, pack)
+}
+
+/// [`gemm_packed_panels_at`] at an explicit panel width — the forced entry
+/// point the autotuner times candidate widths through (it must not consult
+/// the profile it is producing). Panel width is a pure performance knob:
+/// results are bitwise identical at every width within a dispatch level.
+pub fn gemm_packed_panels_with<P>(
+    level: SimdLevel,
+    pool: &ThreadPool,
+    panel_cols: usize,
+    w: &Mat,
+    total_cols: usize,
+    pack: &P,
+) -> Mat
+where
+    P: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let panel_cols = panel_cols.max(8);
     let (m, kk) = (w.rows, w.cols);
     let mut y = Mat::zeros(m, total_cols);
     if m == 0 || total_cols == 0 {
         return y;
     }
-    let panels = total_cols.div_ceil(PANEL_COLS);
+    let panels = total_cols.div_ceil(panel_cols);
     let yptr = SendPtr(y.data.as_mut_ptr());
     pool.parallel_for_sized(panels, 2 * m * kk * total_cols, |ti| {
-        let c0 = ti * PANEL_COLS;
-        let c1 = (c0 + PANEL_COLS).min(total_cols);
+        let c0 = ti * panel_cols;
+        let c1 = (c0 + panel_cols).min(total_cols);
         let wpan = c1 - c0;
         let mut xbuf = Scratch::take(kk * wpan);
         pack(c0, c1, &mut xbuf);
@@ -316,6 +340,23 @@ pub fn conv2d_forward_packed_at(
     assert_eq!(w.cols, sh.patch_rows(), "conv2d_forward_packed weight cols");
     let ex = PatchExtractor::new(input, sh);
     gemm_packed_panels_at(level, pool, w, sh.patch_cols(), &|c0, c1, dst: &mut [f32]| {
+        ex.pack_into(c0, c1, dst)
+    })
+}
+
+/// Fused conv forward at an explicit dispatch level *and* panel width —
+/// the autotuner's forced entry point for timing candidate widths.
+pub fn conv2d_forward_packed_with(
+    level: SimdLevel,
+    pool: &ThreadPool,
+    panel_cols: usize,
+    w: &Mat,
+    input: &[f32],
+    sh: &Conv2dShape,
+) -> Mat {
+    assert_eq!(w.cols, sh.patch_rows(), "conv2d_forward_packed weight cols");
+    let ex = PatchExtractor::new(input, sh);
+    gemm_packed_panels_with(level, pool, panel_cols, w, sh.patch_cols(), &|c0, c1, dst: &mut [f32]| {
         ex.pack_into(c0, c1, dst)
     })
 }

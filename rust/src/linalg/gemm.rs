@@ -1,32 +1,59 @@
 //! GEMM micro-kernels — the native simulator's compute engine.
 //!
-//! Three layers:
+//! Four layers:
 //!
 //! * **SIMD dispatch** ([`super::simd`]) — every slice kernel resolves to
-//!   an AVX2+FMA 8-lane implementation or the portable scalar one, picked
-//!   once per process from `L2IGHT_SIMD` (`auto`|`avx2`|`scalar`). The
+//!   one of the kernel families (`scalar` | `scalar-fma` | `avx2` |
+//!   `avx512` | `neon`), picked once per process from `L2IGHT_SIMD`. The
 //!   `*_at` variants take an explicit [`SimdLevel`] so tests, benches, and
 //!   CI legs can pin a level; the unsuffixed entry points use
-//!   [`simd::active`].
+//!   [`simd::active`]. Families that the current target architecture
+//!   cannot compile fall through to the scalar kernels (unreachable in
+//!   practice: [`simd::active`] only selects detected levels).
 //! * **Slice kernels** (`gemm_acc_slices*`, `gemm_at_b_acc_band*`,
 //!   `gemm_a_bt_acc_slices*`) — register-tiled inner loops over raw
 //!   row-major storage. The A·B and Aᵀ·B kernels process 4 rows per pass so
 //!   each loaded B row (or C row) is reused 4×, and the inner j-loops are
 //!   independent-lane updates (auto-vectorized in the scalar kernels,
-//!   explicit 8-lane FMA in the AVX2 ones). The A·Bᵀ kernel tiles 4 dot
-//!   products per A-row load (4 independent accumulator chains for ILP) and
-//!   skips all-zero A rows (ReLU-sparse upstream gradients). Operating on
-//!   slices lets the mesh hot paths feed sub-panels of padded activations
-//!   directly — no per-call `Vec<Mat>` panel slicing.
+//!   explicit 8/16/4-lane FMA in the AVX2/AVX-512/NEON ones). The A·Bᵀ
+//!   kernel tiles 4 dot products per A-row load (4 independent accumulator
+//!   chains for ILP) and skips all-zero A rows (ReLU-sparse upstream
+//!   gradients). Operating on slices lets the mesh hot paths feed
+//!   sub-panels of padded activations directly — no per-call `Vec<Mat>`
+//!   panel slicing.
+//! * **Cache blocking** ([`matmul_acc_with_blocking`]) — for operands that
+//!   exceed the per-level [`tune::GemmBlocking`] panels, the A·B wrapper
+//!   packs B into NC-column panels and A into MC×KC blocks so the hot
+//!   inner kernels run on L2-resident operands. Blocking is bitwise-safe
+//!   by construction (see "blocking rules" below), so tile sizes are pure
+//!   performance knobs owned by the autotuner ([`super::tune`]).
 //! * **`Mat` wrappers** (`matmul*`) — shape-checked entry points that band
 //!   the output rows across the shared thread pool (`util::pool`) when the
 //!   product is large enough to amortize a pool wakeup. Banding partitions
 //!   output elements, so per-element accumulation order — and therefore the
 //!   result — is identical at every thread count *within a dispatch level*.
+//!
+//! §Blocking rules (the bitwise contract). Splitting work can never change
+//! per-element accumulation order:
+//!
+//! * **A·B** (`gemm_acc_slices*`): one fused update per element per inner
+//!   step `l`, in body and tail alike — K may split at *any* boundary and
+//!   column panels at any width. Row bands/blocks must be multiples of 4 so
+//!   the 4-row zero-skip quads group rows identically to the unsplit run.
+//! * **Aᵀ·B** (`gemm_at_b_acc_band*`): inner steps are consumed in quads
+//!   whose 4 fused updates chain in fixed order — K may split only at
+//!   multiples of 4 ([`tune::GemmBlocking`] enforces `kc % 4 == 0`).
+//! * **A·Bᵀ** (`gemm_a_bt_acc_slices*`): each output element is one
+//!   whole-K accumulator chain — K must **not** split. Its wrapper keeps
+//!   the M-banded path only (the dW += dy·xᵀ use sites have small K).
+//!
+//! Packing and the C panel gather/scatter are pure copies and never touch
+//! numerics.
 
 use super::mat::Mat;
 use super::simd::{self, SimdLevel};
-use crate::util::pool::{self, SendPtr, PAR_MIN_WORK};
+use super::tune::{self, GemmBlocking};
+use crate::util::pool::{self, par_min_work, Scratch, SendPtr};
 
 // ---------------------------------------------------------------------------
 // Slice kernels — scalar reference implementations
@@ -195,10 +222,11 @@ fn dot_mul_scalar(x: &[f32], y: &[f32], len: usize) -> f32 {
 // Slice kernels — SIMD dispatch
 // ---------------------------------------------------------------------------
 
-/// C[m×n] += A[m×kk] · B[kk×n] at an explicit dispatch level. Pinning
-/// `Avx2` on a CPU without AVX2+FMA is the caller's bug — check
-/// [`simd::avx2_available`] first (the unsuffixed entry points go through
-/// [`simd::active`], which only selects detected levels).
+/// C[m×n] += A[m×kk] · B[kk×n] at an explicit dispatch level. Pinning a
+/// vector level on a CPU without the ISA is the caller's bug — check
+/// [`SimdLevel::available`] first (the unsuffixed entry points go through
+/// [`simd::active`], which only selects detected levels). Levels the
+/// target architecture cannot compile fall through to scalar.
 pub fn gemm_acc_slices_at(
     level: SimdLevel,
     a: &[f32],
@@ -210,12 +238,17 @@ pub fn gemm_acc_slices_at(
 ) {
     match level {
         #[cfg(target_arch = "x86_64")]
-        // Safety: Avx2 is only reachable after runtime feature detection
-        // (see the doc contract above).
+        // Safety: vector levels are only reachable after runtime feature
+        // detection (see the doc contract above).
         SimdLevel::Avx2 => unsafe { simd::avx2::gemm_acc(a, m, kk, b, n, c) },
-        #[cfg(not(target_arch = "x86_64"))]
-        SimdLevel::Avx2 => gemm_acc_slices_scalar(a, m, kk, b, n, c),
-        SimdLevel::Scalar => gemm_acc_slices_scalar(a, m, kk, b, n, c),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: as above (avx512f detected).
+        SimdLevel::Avx512 => unsafe { simd::avx512::gemm_acc(a, m, kk, b, n, c) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: AdvSIMD is mandatory on aarch64.
+        SimdLevel::Neon => unsafe { simd::neon::gemm_acc(a, m, kk, b, n, c) },
+        SimdLevel::ScalarFma => simd::scalar_fma::gemm_acc(a, m, kk, b, n, c),
+        _ => gemm_acc_slices_scalar(a, m, kk, b, n, c),
     }
 }
 
@@ -240,11 +273,16 @@ pub fn gemm_at_b_acc_band_at(
 ) {
     match level {
         #[cfg(target_arch = "x86_64")]
-        // Safety: Avx2 is only reachable after runtime feature detection.
+        // Safety: vector levels are only reachable after runtime feature detection.
         SimdLevel::Avx2 => unsafe { simd::avx2::gemm_at_b_band(a, kk, m, b, n, i0, i1, c_band) },
-        #[cfg(not(target_arch = "x86_64"))]
-        SimdLevel::Avx2 => gemm_at_b_acc_band_scalar(a, kk, m, b, n, i0, i1, c_band),
-        SimdLevel::Scalar => gemm_at_b_acc_band_scalar(a, kk, m, b, n, i0, i1, c_band),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: as above (avx512f detected).
+        SimdLevel::Avx512 => unsafe { simd::avx512::gemm_at_b_band(a, kk, m, b, n, i0, i1, c_band) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: AdvSIMD is mandatory on aarch64.
+        SimdLevel::Neon => unsafe { simd::neon::gemm_at_b_band(a, kk, m, b, n, i0, i1, c_band) },
+        SimdLevel::ScalarFma => simd::scalar_fma::gemm_at_b_band(a, kk, m, b, n, i0, i1, c_band),
+        _ => gemm_at_b_acc_band_scalar(a, kk, m, b, n, i0, i1, c_band),
     }
 }
 
@@ -276,11 +314,16 @@ pub fn gemm_a_bt_acc_slices_at(
 ) {
     match level {
         #[cfg(target_arch = "x86_64")]
-        // Safety: Avx2 is only reachable after runtime feature detection.
+        // Safety: vector levels are only reachable after runtime feature detection.
         SimdLevel::Avx2 => unsafe { simd::avx2::gemm_a_bt(a, m, kk, b, p, c) },
-        #[cfg(not(target_arch = "x86_64"))]
-        SimdLevel::Avx2 => gemm_a_bt_acc_slices_scalar(a, m, kk, b, p, c),
-        SimdLevel::Scalar => gemm_a_bt_acc_slices_scalar(a, m, kk, b, p, c),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: as above (avx512f detected).
+        SimdLevel::Avx512 => unsafe { simd::avx512::gemm_a_bt(a, m, kk, b, p, c) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: AdvSIMD is mandatory on aarch64.
+        SimdLevel::Neon => unsafe { simd::neon::gemm_a_bt(a, m, kk, b, p, c) },
+        SimdLevel::ScalarFma => simd::scalar_fma::gemm_a_bt(a, m, kk, b, p, c),
+        _ => gemm_a_bt_acc_slices_scalar(a, m, kk, b, p, c),
     }
 }
 
@@ -294,11 +337,16 @@ pub fn gemm_a_bt_acc_slices(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize,
 pub fn dot_mul_at(level: SimdLevel, x: &[f32], y: &[f32], len: usize) -> f32 {
     match level {
         #[cfg(target_arch = "x86_64")]
-        // Safety: Avx2 is only reachable after runtime feature detection.
+        // Safety: vector levels are only reachable after runtime feature detection.
         SimdLevel::Avx2 => unsafe { simd::avx2::dot_mul(x, y, len) },
-        #[cfg(not(target_arch = "x86_64"))]
-        SimdLevel::Avx2 => dot_mul_scalar(x, y, len),
-        SimdLevel::Scalar => dot_mul_scalar(x, y, len),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: as above (avx512f detected).
+        SimdLevel::Avx512 => unsafe { simd::avx512::dot_mul(x, y, len) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: AdvSIMD is mandatory on aarch64.
+        SimdLevel::Neon => unsafe { simd::neon::dot_mul(x, y, len) },
+        SimdLevel::ScalarFma => simd::scalar_fma::dot_mul(x, y, len),
+        _ => dot_mul_scalar(x, y, len),
     }
 }
 
@@ -309,7 +357,7 @@ pub fn dot_mul_at(level: SimdLevel, x: &[f32], y: &[f32], len: usize) -> f32 {
 /// results bit-identical at every thread count (including `threads=1`,
 /// where the same bands simply run inline).
 fn band_rows(work_per_row: usize) -> usize {
-    let by_work = (PAR_MIN_WORK / work_per_row.max(1)).max(8);
+    let by_work = (par_min_work() / work_per_row.max(1)).max(8);
     by_work.div_ceil(4) * 4
 }
 
@@ -327,11 +375,17 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 
 /// C += A · B into preallocated storage, pool-banded, at an explicit
 /// dispatch level — the bench/CI hook for before/after SIMD comparisons.
+/// Operands that exceed the level's tuned cache panels take the packed
+/// blocked path (bitwise identical to the banded one — see the blocking
+/// rules in the module doc).
 pub fn matmul_acc_at(level: SimdLevel, a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "matmul_acc inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_acc out shape");
     let (m, kk, n) = (a.rows, a.cols, b.cols);
-    if m > 4 && m * kk * n >= PAR_MIN_WORK {
+    let blk = tune::gemm_blocking(level);
+    if (kk > blk.kc || n > blk.nc) && m * kk * n >= par_min_work() {
+        matmul_acc_with_blocking(level, blk, a, b, c);
+    } else if m > 4 && m * kk * n >= par_min_work() {
         let band = band_rows(kk * n);
         let chunks = m.div_ceil(band);
         let cptr = SendPtr(c.data.as_mut_ptr());
@@ -344,6 +398,98 @@ pub fn matmul_acc_at(level: SimdLevel, a: &Mat, b: &Mat, c: &mut Mat) {
         });
     } else {
         gemm_acc_slices_at(level, &a.data, m, kk, &b.data, n, &mut c.data);
+    }
+}
+
+/// C += A · B through the cache-blocked engine at an explicit blocking —
+/// the autotuner's forced entry point (it must not consult the profile it
+/// is producing). `blk` is clamped onto the determinism-safe grid; any
+/// blocking on that grid yields bitwise-identical results at every thread
+/// count within a dispatch level.
+///
+/// Structure: for each NC-column panel of B, pack the panel once
+/// (serially), then split C's rows into MC bands (multiples of 4) across
+/// the pool; each band gathers its C panel into scratch, walks K in KC
+/// blocks packing the matching A sub-block, runs the register-tiled kernel
+/// on the packed operands, and scatters the C panel back. Every operand
+/// the inner kernel touches is a dense pack sized to stay cache-resident.
+pub fn matmul_acc_with_blocking(level: SimdLevel, blk: GemmBlocking, a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "matmul_acc inner dim");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "matmul_acc out shape");
+    let (m, kk, n) = (a.rows, a.cols, b.cols);
+    if m == 0 || kk == 0 || n == 0 {
+        return;
+    }
+    // No small-product shortcut: this is a forced entry point (dispatch
+    // size-gates before routing here), and tests/the tuner rely on it
+    // always exercising the blocked engine.
+    let blk = blk.validated();
+    let (mc, kc, nc) = (blk.mc, blk.kc, blk.nc);
+    let bands = m.div_ceil(mc);
+    let cptr = SendPtr(c.data.as_mut_ptr());
+    let mut bpack = vec![0.0f32; kk * nc.min(n)];
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + nc).min(n);
+        let wpan = j1 - j0;
+        // Pack B columns [j0, j1) row-major (pure copy; KC sub-ranges of
+        // the pack stay contiguous at row offset l·wpan).
+        for l in 0..kk {
+            bpack[l * wpan..(l + 1) * wpan].copy_from_slice(&b.data[l * n + j0..l * n + j1]);
+        }
+        let bpanel = &bpack[..kk * wpan];
+        pool::global().parallel_for(bands, |bi| {
+            let r0 = bi * mc;
+            let r1 = (r0 + mc).min(m);
+            let rows = r1 - r0;
+            // Gather this band's C panel into scratch (pure copy).
+            // Safety: bands partition C's rows; band bi touches only
+            // rows [r0, r1) within column panel [j0, j1).
+            let mut ybuf = Scratch::take(rows * wpan);
+            for (ri, r) in (r0..r1).enumerate() {
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        cptr.0.add(r * n + j0).cast_const(),
+                        ybuf.as_mut_ptr().add(ri * wpan),
+                        wpan,
+                    );
+                }
+            }
+            // Walk K in KC blocks: one fused update per element per inner
+            // step regardless of where a block boundary falls, so this is
+            // bitwise equal to streaming the whole K extent.
+            let mut abuf = Scratch::take(rows * kc.min(kk));
+            let mut l0 = 0;
+            while l0 < kk {
+                let l1 = (l0 + kc).min(kk);
+                let kcur = l1 - l0;
+                for (ri, r) in (r0..r1).enumerate() {
+                    abuf[ri * kcur..(ri + 1) * kcur]
+                        .copy_from_slice(&a.data[r * kk + l0..r * kk + l1]);
+                }
+                gemm_acc_slices_at(
+                    level,
+                    &abuf,
+                    rows,
+                    kcur,
+                    &bpanel[l0 * wpan..l1 * wpan],
+                    wpan,
+                    &mut ybuf,
+                );
+                l0 = l1;
+            }
+            // Scatter the finished C panel back (pure copy).
+            for (ri, r) in (r0..r1).enumerate() {
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        ybuf.as_ptr().add(ri * wpan),
+                        cptr.0.add(r * n + j0),
+                        wpan,
+                    );
+                }
+            }
+        });
+        j0 = j1;
     }
 }
 
@@ -372,13 +518,39 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// C = Aᵀ · B into preallocated storage (hot path of Eq. 5 — avoids one
-/// allocation per PTC block per iteration).
+/// allocation per PTC block per iteration). When K exceeds the tuned KC
+/// panel, the contraction walks K in KC blocks over naturally contiguous
+/// sub-slices of A's `[kk×m]` and B's `[kk×n]` storage — no packing
+/// needed, and bitwise-safe because KC is a multiple of 4 (the kernel's
+/// inner-step quads stay aligned; see the blocking rules in the module
+/// doc).
 pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.rows, b.rows, "matmul_at_b inner dim");
     assert_eq!((c.rows, c.cols), (a.cols, b.cols), "matmul_at_b out shape");
     let level = simd::active();
     let (kk, m, n) = (a.rows, a.cols, b.cols);
-    if m > 4 && m * kk * n >= PAR_MIN_WORK {
+    let kc = tune::gemm_blocking(level).kc;
+    debug_assert_eq!(kc % 4, 0, "KC must stay on the quad grid");
+    let at_b_blocked = |r0: usize, r1: usize, cb: &mut [f32]| {
+        cb.fill(0.0);
+        let mut l0 = 0;
+        while l0 < kk {
+            let l1 = (l0 + kc).min(kk);
+            gemm_at_b_acc_band_at(
+                level,
+                &a.data[l0 * m..l1 * m],
+                l1 - l0,
+                m,
+                &b.data[l0 * n..l1 * n],
+                n,
+                r0,
+                r1,
+                cb,
+            );
+            l0 = l1;
+        }
+    };
+    if m > 4 && m * kk * n >= par_min_work() {
         let band = band_rows(kk * n);
         let chunks = m.div_ceil(band);
         let cptr = SendPtr(c.data.as_mut_ptr());
@@ -386,12 +558,10 @@ pub fn matmul_at_b_into(a: &Mat, b: &Mat, c: &mut Mat) {
             let r0 = ci * band;
             let r1 = (r0 + band).min(m);
             let cb = unsafe { std::slice::from_raw_parts_mut(cptr.0.add(r0 * n), (r1 - r0) * n) };
-            cb.fill(0.0);
-            gemm_at_b_acc_band_at(level, &a.data, kk, m, &b.data, n, r0, r1, cb);
+            at_b_blocked(r0, r1, cb);
         });
     } else {
-        c.data.fill(0.0);
-        gemm_at_b_acc_band_at(level, &a.data, kk, m, &b.data, n, 0, m, &mut c.data);
+        at_b_blocked(0, m, &mut c.data);
     }
 }
 
@@ -412,13 +582,17 @@ pub fn matmul_a_bt_into(a: &Mat, b: &Mat, c: &mut Mat) {
 }
 
 /// C += A · Bᵀ into preallocated storage — the weight-gradient accumulator
-/// (dW += dy·xᵀ) without the per-step temporary.
+/// (dW += dy·xᵀ) without the per-step temporary. Deliberately *not*
+/// K-blocked: each output element is one whole-K accumulator chain in the
+/// kernel, so splitting K would change the summation order (and the use
+/// sites contract over small batch dimensions anyway). M-banding remains
+/// bitwise-safe.
 pub fn matmul_a_bt_acc(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols, "matmul_a_bt_acc inner dim");
     assert_eq!((c.rows, c.cols), (a.rows, b.rows), "matmul_a_bt_acc out shape");
     let level = simd::active();
     let (m, kk, p) = (a.rows, a.cols, b.rows);
-    if m > 4 && m * kk * p >= PAR_MIN_WORK {
+    if m > 4 && m * kk * p >= par_min_work() {
         let band = band_rows(kk * p);
         let chunks = m.div_ceil(band);
         let cptr = SendPtr(c.data.as_mut_ptr());
@@ -710,54 +884,93 @@ mod tests {
         (Mat::randn(m, k, 1.0, rng), Mat::randn(k, n, 1.0, rng), Mat::randn(n, k, 1.0, rng))
     }
 
+    /// Every level that can run on this host, scalar excluded.
+    fn other_levels() -> Vec<SimdLevel> {
+        SimdLevel::ALL
+            .into_iter()
+            .filter(|l| *l != SimdLevel::Scalar && l.available())
+            .collect()
+    }
+
     #[test]
-    fn prop_avx2_kernels_match_scalar() {
-        if !simd::avx2_available() {
+    fn prop_vector_kernels_match_scalar() {
+        let levels = other_levels();
+        if levels.is_empty() {
             return; // nothing to compare on this CPU
         }
         quickcheck(
-            "avx2 kernels ≈ scalar kernels",
+            "non-scalar kernels ≈ scalar kernels",
             |rng, size| simd_case(rng, size),
             |(a, b, bt)| {
                 let (m, k, n) = (a.rows, a.cols, b.cols);
-                // A·B
-                let mut cs = vec![0.1f32; m * n];
-                let mut cv = vec![0.1f32; m * n];
-                gemm_acc_slices_at(SimdLevel::Scalar, &a.data, m, k, &b.data, n, &mut cs);
-                gemm_acc_slices_at(SimdLevel::Avx2, &a.data, m, k, &b.data, n, &mut cv);
-                assert_close(&cs, &cv, 1e-4, 1e-4).map_err(|e| format!("A·B: {e}"))?;
-                // Aᵀ·B: reinterpret a's [m·k] storage as a [k×m] operand so
-                // it contracts against b's k rows (kk=k, output rows 0..m).
-                let mut ds = vec![0.2f32; m * n];
-                let mut dv = vec![0.2f32; m * n];
-                gemm_at_b_acc_band_at(SimdLevel::Scalar, &a.data, k, m, &b.data, n, 0, m, &mut ds);
-                gemm_at_b_acc_band_at(SimdLevel::Avx2, &a.data, k, m, &b.data, n, 0, m, &mut dv);
-                assert_close(&ds, &dv, 1e-4, 1e-4).map_err(|e| format!("Aᵀ·B: {e}"))?;
-                // A·Bᵀ
-                let p = bt.rows;
-                let mut es = vec![0.3f32; m * p];
-                let mut ev = vec![0.3f32; m * p];
-                gemm_a_bt_acc_slices_at(SimdLevel::Scalar, &a.data, m, k, &bt.data, p, &mut es);
-                gemm_a_bt_acc_slices_at(SimdLevel::Avx2, &a.data, m, k, &bt.data, p, &mut ev);
-                assert_close(&es, &ev, 1e-4, 1e-4).map_err(|e| format!("A·Bᵀ: {e}"))
+                for &level in &other_levels() {
+                    let tag = level.name();
+                    // A·B
+                    let mut cs = vec![0.1f32; m * n];
+                    let mut cv = vec![0.1f32; m * n];
+                    gemm_acc_slices_at(SimdLevel::Scalar, &a.data, m, k, &b.data, n, &mut cs);
+                    gemm_acc_slices_at(level, &a.data, m, k, &b.data, n, &mut cv);
+                    assert_close(&cs, &cv, 1e-4, 1e-4).map_err(|e| format!("[{tag}] A·B: {e}"))?;
+                    // Aᵀ·B: reinterpret a's [m·k] storage as a [k×m] operand
+                    // so it contracts against b's k rows (output rows 0..m).
+                    let mut ds = vec![0.2f32; m * n];
+                    let mut dv = vec![0.2f32; m * n];
+                    gemm_at_b_acc_band_at(
+                        SimdLevel::Scalar,
+                        &a.data,
+                        k,
+                        m,
+                        &b.data,
+                        n,
+                        0,
+                        m,
+                        &mut ds,
+                    );
+                    gemm_at_b_acc_band_at(level, &a.data, k, m, &b.data, n, 0, m, &mut dv);
+                    assert_close(&ds, &dv, 1e-4, 1e-4)
+                        .map_err(|e| format!("[{tag}] Aᵀ·B: {e}"))?;
+                    // A·Bᵀ
+                    let p = bt.rows;
+                    let mut es = vec![0.3f32; m * p];
+                    let mut ev = vec![0.3f32; m * p];
+                    gemm_a_bt_acc_slices_at(
+                        SimdLevel::Scalar,
+                        &a.data,
+                        m,
+                        k,
+                        &bt.data,
+                        p,
+                        &mut es,
+                    );
+                    gemm_a_bt_acc_slices_at(level, &a.data, m, k, &bt.data, p, &mut ev);
+                    assert_close(&es, &ev, 1e-4, 1e-4)
+                        .map_err(|e| format!("[{tag}] A·Bᵀ: {e}"))?;
+                }
+                Ok(())
             },
         );
     }
 
     #[test]
-    fn avx2_preserves_zero_skip_exactness() {
-        if !simd::avx2_available() {
-            return;
-        }
+    fn every_level_preserves_zero_skip_exactness() {
         let mut rng = Rng::new(36);
         let mut a = Mat::randn(6, 9, 1.0, &mut rng);
         for v in a.row_mut(3) {
             *v = 0.0;
         }
         let b = Mat::randn(5, 9, 1.0, &mut rng);
-        let mut c = vec![0.0f32; 6 * 5];
-        gemm_a_bt_acc_slices_at(SimdLevel::Avx2, &a.data, 6, 9, &b.data, 5, &mut c);
-        assert!(c[3 * 5..4 * 5].iter().all(|&v| v == 0.0), "zero row must be skipped");
+        for level in SimdLevel::ALL {
+            if !level.available() {
+                continue;
+            }
+            let mut c = vec![0.0f32; 6 * 5];
+            gemm_a_bt_acc_slices_at(level, &a.data, 6, 9, &b.data, 5, &mut c);
+            assert!(
+                c[3 * 5..4 * 5].iter().all(|&v| v == 0.0),
+                "[{}] zero row must be skipped",
+                level.name()
+            );
+        }
     }
 
     #[test]
@@ -765,9 +978,9 @@ mod tests {
         let x: Vec<f32> = (0..23).map(|i| 0.5 - 0.1 * i as f32).collect();
         let y: Vec<f32> = (0..23).map(|i| 0.2 * i as f32 - 1.0).collect();
         let s = dot_mul_at(SimdLevel::Scalar, &x, &y, 23);
-        if simd::avx2_available() {
-            let v = dot_mul_at(SimdLevel::Avx2, &x, &y, 23);
-            assert!((s - v).abs() < 1e-4 * (1.0 + s.abs()), "{s} vs {v}");
+        for level in other_levels() {
+            let v = dot_mul_at(level, &x, &y, 23);
+            assert!((s - v).abs() < 1e-4 * (1.0 + s.abs()), "[{}] {s} vs {v}", level.name());
         }
         // Scalar path is the exact sequential sum.
         let mut want = 0.0f32;
@@ -775,5 +988,107 @@ mod tests {
             want += a * b;
         }
         assert_eq!(s, want);
+    }
+
+    // ---------------------------------------------------------------
+    // Cache blocking
+    // ---------------------------------------------------------------
+
+    #[test]
+    fn prop_blocked_matmul_is_bitwise_equal_to_direct() {
+        // Deliberately tiny panels so even modest shapes split into many
+        // MC/KC/NC blocks; the packed blocked engine must reproduce the
+        // one-shot kernel bit for bit at every available level.
+        let blockings = [
+            GemmBlocking { mc: 8, kc: 8, nc: 16 },
+            GemmBlocking { mc: 12, kc: 20, nc: 32 },
+            GemmBlocking { mc: 64, kc: 256, nc: 256 },
+        ];
+        quickcheck(
+            "blocked == direct (bitwise)",
+            |rng, size| {
+                let m = 1 + size % 23;
+                let k = 1 + (size / 2) % 37;
+                let n = 1 + (size / 3) % 29;
+                (Mat::randn(m, k, 1.0, rng), Mat::randn(k, n, 1.0, rng))
+            },
+            |(a, b)| {
+                let (m, k, n) = (a.rows, a.cols, b.cols);
+                for level in SimdLevel::ALL {
+                    if !level.available() {
+                        continue;
+                    }
+                    let mut direct = Mat::zeros(m, n);
+                    direct.data.fill(0.25);
+                    gemm_acc_slices_at(level, &a.data, m, k, &b.data, n, &mut direct.data);
+                    for blk in blockings {
+                        let mut blocked = Mat::zeros(m, n);
+                        blocked.data.fill(0.25);
+                        matmul_acc_with_blocking(level, blk, &a, &b, &mut blocked);
+                        if blocked.data != direct.data {
+                            return Err(format!(
+                                "[{}] blocking {blk:?} changed bits at {m}x{k}x{n}",
+                                level.name()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_path_forced_large_is_bitwise_equal() {
+        // Big enough that matmul_acc_with_blocking really takes the packed
+        // parallel path (above par_min_work) and splits on all three axes.
+        let mut rng = Rng::new(41);
+        let (m, k, n) = (70, 90, 110);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let mut direct = Mat::zeros(m, n);
+        gemm_acc_slices_at(SimdLevel::Scalar, &a.data, m, k, &b.data, n, &mut direct.data);
+        let mut blocked = Mat::zeros(m, n);
+        let blk = GemmBlocking { mc: 16, kc: 32, nc: 48 };
+        matmul_acc_with_blocking(SimdLevel::Scalar, blk, &a, &b, &mut blocked);
+        assert_eq!(blocked.data, direct.data, "blocked scalar engine must keep seed numerics");
+    }
+
+    #[test]
+    fn at_b_kc_blocking_is_bitwise_safe() {
+        // matmul_at_b_into walks K in KC blocks when K exceeds the tuned
+        // panel; reassembling from any multiple-of-4 split must reproduce
+        // the unsplit kernel bit for bit (quads stay aligned).
+        let mut rng = Rng::new(42);
+        let (kk, m, n) = (37, 11, 9);
+        let a = Mat::randn(kk, m, 1.0, &mut rng);
+        let b = Mat::randn(kk, n, 1.0, &mut rng);
+        for level in SimdLevel::ALL {
+            if !level.available() {
+                continue;
+            }
+            let mut full = vec![0.0f32; m * n];
+            gemm_at_b_acc_band_at(level, &a.data, kk, m, &b.data, n, 0, m, &mut full);
+            for kc in [4usize, 8, 16, 24] {
+                let mut split = vec![0.0f32; m * n];
+                let mut l0 = 0;
+                while l0 < kk {
+                    let l1 = (l0 + kc).min(kk);
+                    gemm_at_b_acc_band_at(
+                        level,
+                        &a.data[l0 * m..l1 * m],
+                        l1 - l0,
+                        m,
+                        &b.data[l0 * n..l1 * n],
+                        n,
+                        0,
+                        m,
+                        &mut split,
+                    );
+                    l0 = l1;
+                }
+                assert_eq!(split, full, "[{}] kc={kc} changed Aᵀ·B bits", level.name());
+            }
+        }
     }
 }

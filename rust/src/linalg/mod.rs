@@ -1,27 +1,31 @@
 //! Dense linear algebra substrate: a row-major f32 matrix type, a
-//! register-tiled + pool-parallel + SIMD-dispatched GEMM engine (the
-//! native-simulator hot path — see DESIGN.md §8, `gemm`'s and `simd`'s
-//! module docs), one-sided Jacobi SVD for the k×k photonic blocks, and the
+//! register-tiled + cache-blocked + pool-parallel + SIMD-dispatched GEMM
+//! engine (the native-simulator hot path — see DESIGN.md §8, `gemm`'s and
+//! `simd`'s module docs), a per-host autotuner for its blocking (`tune`),
+//! one-sided Jacobi SVD for the k×k photonic blocks, and the
 //! im2col/col2im conv lowering with its fused packed-panel execution path.
 
 pub mod mat;
 pub mod simd;
+pub mod tune;
 pub mod gemm;
 pub mod svd;
 pub mod conv;
 
 pub use conv::{
     col2im, col2im_pooled, col2im_pooled_on, conv2d_forward_packed, conv2d_forward_packed_at,
-    gemm_packed_panels, gemm_packed_panels_at, im2col, im2col_pooled, im2col_pooled_on,
-    Conv2dShape, PatchExtractor, PANEL_COLS,
+    conv2d_forward_packed_with, gemm_packed_panels, gemm_packed_panels_at, gemm_packed_panels_with,
+    im2col, im2col_pooled, im2col_pooled_on, Conv2dShape, PatchExtractor, PANEL_COLS,
 };
 pub use gemm::{
     dot_mul_at, gemm_a_bt_acc_slices, gemm_a_bt_acc_slices_at, gemm_a_bt_acc_slices_scalar,
     gemm_acc_slices, gemm_acc_slices_at, gemm_acc_slices_scalar, gemm_at_b_acc_band,
     gemm_at_b_acc_band_at, gemm_at_b_acc_band_scalar, matmul, matmul_a_bt, matmul_a_bt_acc,
-    matmul_a_bt_into, matmul_acc, matmul_acc_at, matmul_at_b, matmul_at_b_into, matmul_into,
-    matmul_into_at, matvec, sigma_grad_block, sigma_grad_block_slices, sigma_grad_block_slices_at,
+    matmul_a_bt_into, matmul_acc, matmul_acc_at, matmul_acc_with_blocking, matmul_at_b,
+    matmul_at_b_into, matmul_into, matmul_into_at, matvec, sigma_grad_block,
+    sigma_grad_block_slices, sigma_grad_block_slices_at,
 };
 pub use mat::Mat;
 pub use simd::SimdLevel;
 pub use svd::{svd_kxk, Svd};
+pub use tune::GemmBlocking;

@@ -1,30 +1,44 @@
 //! Runtime-dispatched SIMD layer under the GEMM engine.
 //!
-//! Two kernel families sit behind one dispatch switch:
+//! Five kernel families sit behind one dispatch switch (the level lattice):
 //!
-//! * **AVX2 + FMA** (`avx2`, x86_64 only) — 8-lane fused-multiply-add
-//!   versions of every slice microkernel in [`super::gemm`], selected at
-//!   runtime via CPU feature detection.
 //! * **Portable scalar** — the seed-era auto-vectorizable loops in
 //!   [`super::gemm`] itself; always available and bitwise-identical to the
 //!   pre-SIMD engine on every platform.
+//! * **Scalar-FMA** (`scalar_fma`) — the same loop structure with every
+//!   multiply-accumulate contracted through `f32::mul_add`, so hosts
+//!   without a vector family still get the fast-numerics (fused) rounding
+//!   semantics. Always available, but opt-in only: without hardware FMA,
+//!   `mul_add` lowers to a libm call and is *slower* than scalar.
+//! * **AVX2 + FMA** (`avx2`, x86_64 only) — 8-lane fused-multiply-add
+//!   versions of every slice microkernel, runtime feature-detected.
+//! * **AVX-512** (`avx512`, x86_64 only) — 16-lane FMA versions, selected
+//!   when the CPU reports `avx512f`.
+//! * **NEON** (`neon`, aarch64 only) — 4-lane `vfmaq_f32` versions.
+//!   AdvSIMD is architecturally mandatory on aarch64, so this is the
+//!   default level there.
 //!
 //! The level is resolved **once per process** from `L2IGHT_SIMD`
-//! (`auto` | `avx2` | `scalar`, default `auto` = best available) by
-//! [`active`]; every hot-path kernel call dispatches on it.
+//! (`auto` | `scalar` | `scalar-fma` | `avx2` | `avx512` | `neon`, default
+//! `auto` = best available: avx512 → avx2 → neon → scalar) by [`active`];
+//! every hot-path kernel call dispatches on it. Requesting a level the
+//! host lacks warns and falls back to scalar; an unknown value warns and
+//! behaves like `auto` — parsing round-trips with [`SimdLevel::name`].
 //!
 //! ## Determinism contract
 //!
 //! Within one dispatch level, lane order and accumulation order are fixed:
 //! the accumulate-into-memory kernels (`gemm_acc`, `gemm_at_b_band`) apply
-//! one FMA per element per inner step regardless of where the 8-lane body
+//! one FMA per element per inner step regardless of where the vector body
 //! ends and the scalar tail begins, and the reduction kernels (`gemm_a_bt`,
 //! `dot_mul`) split lanes by the (fixed) inner dimension only. Combined
-//! with the pool's partition-by-output-region banding, results are
-//! **bitwise thread-count-invariant at every level**. Across levels the
-//! FMA contraction changes rounding, which is why switching `L2IGHT_SIMD`
-//! moves numerics at the ulp scale (and why the scenario golden carries a
-//! per-level bless — see `rust/README.md` § "SIMD dispatch").
+//! with the pool's partition-by-output-region banding and the cache-blocked
+//! wrappers' tile rules (see `super::gemm`), results are **bitwise
+//! thread-count-, panel-partition-, and blocking-invariant at every
+//! level**. Across levels the FMA contraction (and lane width) changes
+//! rounding, which is why switching `L2IGHT_SIMD` moves numerics at the ulp
+//! scale (and why the scenario golden carries a per-numerics-family bless —
+//! see `rust/README.md` § "SIMD dispatch").
 
 use std::sync::OnceLock;
 
@@ -33,16 +47,62 @@ use std::sync::OnceLock;
 pub enum SimdLevel {
     /// Portable scalar kernels — bitwise identical to the seed-era engine.
     Scalar,
+    /// Portable `f32::mul_add`-contracted kernels (FMA rounding semantics
+    /// without a vector ISA). Always available; never chosen by `auto`.
+    ScalarFma,
     /// AVX2 + FMA 8-lane kernels (x86_64 only, runtime-detected).
     Avx2,
+    /// AVX-512 16-lane kernels (x86_64 only, runtime-detected `avx512f`).
+    Avx512,
+    /// NEON 4-lane `vfmaq_f32` kernels (aarch64 only; AdvSIMD is mandatory
+    /// there).
+    Neon,
 }
 
 impl SimdLevel {
-    /// Stable lowercase name (reports, bench JSON, logs).
+    /// Every level, in lattice order. The dispatch-level axis for tests,
+    /// the autotuner, and CI strategy matrices.
+    pub const ALL: [SimdLevel; 5] = [
+        SimdLevel::Scalar,
+        SimdLevel::ScalarFma,
+        SimdLevel::Avx2,
+        SimdLevel::Avx512,
+        SimdLevel::Neon,
+    ];
+
+    /// Stable lowercase name (reports, bench JSON, logs, `L2IGHT_SIMD`).
+    /// Round-trips through [`SimdLevel::parse`].
     pub fn name(self) -> &'static str {
         match self {
             SimdLevel::Scalar => "scalar",
+            SimdLevel::ScalarFma => "scalar-fma",
             SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Parse a level name (the inverse of [`SimdLevel::name`]; also accepts
+    /// the `scalar_fma` spelling). `auto` is not a level — resolve it via
+    /// [`auto_level`].
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(SimdLevel::Scalar),
+            "scalar-fma" | "scalar_fma" => Some(SimdLevel::ScalarFma),
+            "avx2" => Some(SimdLevel::Avx2),
+            "avx512" => Some(SimdLevel::Avx512),
+            "neon" => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+
+    /// True when this host can execute the level's kernels.
+    pub fn available(self) -> bool {
+        match self {
+            SimdLevel::Scalar | SimdLevel::ScalarFma => true,
+            SimdLevel::Avx2 => avx2_available(),
+            SimdLevel::Avx512 => avx512_available(),
+            SimdLevel::Neon => neon_available(),
         }
     }
 }
@@ -59,37 +119,240 @@ pub fn avx2_available() -> bool {
     }
 }
 
+/// True when the CPU supports the AVX-512 kernels (`avx512f` covers every
+/// intrinsic the kernels use: loads/stores, broadcast, and FMA).
+pub fn avx512_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx512f")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// True when the NEON kernels can run — AdvSIMD is architecturally
+/// mandatory on aarch64, so this is a compile-target fact, not a runtime
+/// detection.
+pub fn neon_available() -> bool {
+    cfg!(target_arch = "aarch64")
+}
+
+/// The best available level on this host: avx512 → avx2 → neon → scalar.
+/// `ScalarFma` is deliberately never auto-selected — without hardware FMA,
+/// `f32::mul_add` is a libm call and loses to the plain scalar loops.
+pub fn auto_level() -> SimdLevel {
+    if avx512_available() {
+        SimdLevel::Avx512
+    } else if avx2_available() {
+        SimdLevel::Avx2
+    } else if neon_available() {
+        SimdLevel::Neon
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
 /// The process-wide dispatch level, resolved once from `L2IGHT_SIMD`.
-/// Requesting `avx2` on a CPU without it warns and falls back to scalar;
-/// an unknown value warns and behaves like `auto`.
+/// Requesting a level this host lacks warns and falls back to scalar; an
+/// unknown value warns and behaves like `auto`.
 pub fn active() -> SimdLevel {
     static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
-    *LEVEL.get_or_init(|| {
-        let auto = if avx2_available() { SimdLevel::Avx2 } else { SimdLevel::Scalar };
-        match std::env::var("L2IGHT_SIMD") {
-            Err(_) => auto,
-            Ok(raw) => match raw.trim().to_ascii_lowercase().as_str() {
-                "" | "auto" => auto,
-                "scalar" => SimdLevel::Scalar,
-                "avx2" => {
-                    if avx2_available() {
-                        SimdLevel::Avx2
-                    } else {
-                        crate::warn!(
-                            "L2IGHT_SIMD=avx2 requested but the CPU lacks AVX2+FMA; using scalar kernels"
-                        );
-                        SimdLevel::Scalar
-                    }
-                }
-                other => {
+    *LEVEL.get_or_init(|| match std::env::var("L2IGHT_SIMD") {
+        Err(_) => auto_level(),
+        Ok(raw) => {
+            let t = raw.trim();
+            if t.is_empty() || t.eq_ignore_ascii_case("auto") {
+                return auto_level();
+            }
+            match SimdLevel::parse(t) {
+                Some(level) if level.available() => level,
+                Some(level) => {
                     crate::warn!(
-                        "ignoring unknown L2IGHT_SIMD={other:?} (want auto|avx2|scalar); using auto"
+                        "L2IGHT_SIMD={} requested but unavailable on this host; using scalar kernels",
+                        level.name()
                     );
-                    auto
+                    SimdLevel::Scalar
                 }
-            },
+                None => {
+                    crate::warn!(
+                        "ignoring unknown L2IGHT_SIMD={t:?} (want auto|scalar|scalar-fma|avx2|avx512|neon); using auto"
+                    );
+                    auto_level()
+                }
+            }
         }
     })
+}
+
+/// Portable FMA-contracted slice kernels: the scalar loop structure with
+/// every multiply-accumulate routed through `f32::mul_add`. Numerics match
+/// the vector families' *semantics* (one fused op per element per step, the
+/// same fixed chain order in the Aᵀ·B quads) while staying lane-free, so
+/// non-x86 hosts get a fast-numerics family with the full determinism
+/// contract. Safe to call everywhere — no ISA requirement.
+pub mod scalar_fma {
+    /// C[m×n] += A[m×kk] · B[kk×n] over raw row-major slices — the
+    /// `mul_add` version of `gemm::gemm_acc_slices_scalar`, same 4-row
+    /// register tiling and all-zero-quad skip. One fused op per element per
+    /// inner step, so the result does not depend on n or panel boundaries.
+    pub fn gemm_acc(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * kk && b.len() >= kk * n && c.len() >= m * n);
+        let mut i = 0;
+        while i + 4 <= m {
+            let rows = &mut c[i * n..(i + 4) * n];
+            let (c0, rows) = rows.split_at_mut(n);
+            let (c1, rows) = rows.split_at_mut(n);
+            let (c2, c3) = rows.split_at_mut(n);
+            let a0 = &a[i * kk..(i + 1) * kk];
+            let a1 = &a[(i + 1) * kk..(i + 2) * kk];
+            let a2 = &a[(i + 2) * kk..(i + 3) * kk];
+            let a3 = &a[(i + 3) * kk..(i + 4) * kk];
+            for l in 0..kk {
+                let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue; // structured-sparsity fast path (masked weights)
+                }
+                let br = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    let v = br[j];
+                    c0[j] = x0.mul_add(v, c0[j]);
+                    c1[j] = x1.mul_add(v, c1[j]);
+                    c2[j] = x2.mul_add(v, c2[j]);
+                    c3[j] = x3.mul_add(v, c3[j]);
+                }
+            }
+            i += 4;
+        }
+        for r in i..m {
+            let ar = &a[r * kk..(r + 1) * kk];
+            let cr = &mut c[r * n..(r + 1) * n];
+            for (l, &x) in ar.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let br = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    cr[j] = x.mul_add(br[j], cr[j]);
+                }
+            }
+        }
+    }
+
+    /// C[i0..i1, n] += (Aᵀ·B)[i0..i1, n] for A [kk×m], B [kk×n] — the
+    /// `mul_add` version of `gemm::gemm_at_b_acc_band_scalar`. The four
+    /// fused ops per element chain in fixed order (x0 first), identical to
+    /// the vector families' tail semantics.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_at_b_band(
+        a: &[f32],
+        kk: usize,
+        m: usize,
+        b: &[f32],
+        n: usize,
+        i0: usize,
+        i1: usize,
+        c_band: &mut [f32],
+    ) {
+        debug_assert!(a.len() >= kk * m && b.len() >= kk * n);
+        debug_assert!(i1 <= m && c_band.len() >= (i1 - i0) * n);
+        let mut l = 0;
+        while l + 4 <= kk {
+            let a0 = &a[l * m..(l + 1) * m];
+            let a1 = &a[(l + 1) * m..(l + 2) * m];
+            let a2 = &a[(l + 2) * m..(l + 3) * m];
+            let a3 = &a[(l + 3) * m..(l + 4) * m];
+            let b0 = &b[l * n..(l + 1) * n];
+            let b1 = &b[(l + 1) * n..(l + 2) * n];
+            let b2 = &b[(l + 2) * n..(l + 3) * n];
+            let b3 = &b[(l + 3) * n..(l + 4) * n];
+            for i in i0..i1 {
+                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue;
+                }
+                let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+                for j in 0..n {
+                    let mut s = cr[j];
+                    s = x0.mul_add(b0[j], s);
+                    s = x1.mul_add(b1[j], s);
+                    s = x2.mul_add(b2[j], s);
+                    s = x3.mul_add(b3[j], s);
+                    cr[j] = s;
+                }
+            }
+            l += 4;
+        }
+        for ll in l..kk {
+            let ar = &a[ll * m..(ll + 1) * m];
+            let br = &b[ll * n..(ll + 1) * n];
+            for i in i0..i1 {
+                let x = ar[i];
+                if x == 0.0 {
+                    continue;
+                }
+                let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+                for j in 0..n {
+                    cr[j] = x.mul_add(br[j], cr[j]);
+                }
+            }
+        }
+    }
+
+    /// C[m×p] += A[m×kk] · B[p×kk]ᵀ (dot-product layout) — the `mul_add`
+    /// version of `gemm::gemm_a_bt_acc_slices_scalar`, same 4-dot tiling
+    /// and all-zero A-row skip. Each dot product is one sequential fused
+    /// chain over kk, identical in the quad and remainder paths.
+    pub fn gemm_a_bt(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * kk && b.len() >= p * kk && c.len() >= m * p);
+        for i in 0..m {
+            let ar = &a[i * kk..(i + 1) * kk];
+            if ar.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let cr = &mut c[i * p..(i + 1) * p];
+            let mut j = 0;
+            while j + 4 <= p {
+                let b0 = &b[j * kk..(j + 1) * kk];
+                let b1 = &b[(j + 1) * kk..(j + 2) * kk];
+                let b2 = &b[(j + 2) * kk..(j + 3) * kk];
+                let b3 = &b[(j + 3) * kk..(j + 4) * kk];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for l in 0..kk {
+                    let av = ar[l];
+                    s0 = av.mul_add(b0[l], s0);
+                    s1 = av.mul_add(b1[l], s1);
+                    s2 = av.mul_add(b2[l], s2);
+                    s3 = av.mul_add(b3[l], s3);
+                }
+                cr[j] += s0;
+                cr[j + 1] += s1;
+                cr[j + 2] += s2;
+                cr[j + 3] += s3;
+                j += 4;
+            }
+            for jj in j..p {
+                let br = &b[jj * kk..(jj + 1) * kk];
+                let mut s = 0.0f32;
+                for (x, y) in ar.iter().zip(br) {
+                    s = x.mul_add(*y, s);
+                }
+                cr[jj] += s;
+            }
+        }
+    }
+
+    /// Σ_j x[j]·y[j] over `len` elements — the Eq. 5 Hadamard reduction as
+    /// one sequential fused chain.
+    pub fn dot_mul(x: &[f32], y: &[f32], len: usize) -> f32 {
+        debug_assert!(x.len() >= len && y.len() >= len);
+        let mut s = 0.0f32;
+        for (p, q) in x[..len].iter().zip(&y[..len]) {
+            s = p.mul_add(*q, s);
+        }
+        s
+    }
 }
 
 /// AVX2+FMA slice kernels. Every function here requires AVX2 **and** FMA at
@@ -394,6 +657,592 @@ pub mod avx2 {
     }
 }
 
+/// AVX-512 slice kernels — the 16-lane siblings of [`avx2`], same tiling,
+/// zero-skips, and per-element FMA semantics. Every function requires
+/// `avx512f` at runtime; the dispatcher only routes here after
+/// [`avx512_available`] (or an explicit, caller-checked level override).
+#[cfg(target_arch = "x86_64")]
+pub mod avx512 {
+    use std::arch::x86_64::{
+        __m512, _mm512_fmadd_ps, _mm512_loadu_ps, _mm512_set1_ps, _mm512_setzero_ps,
+        _mm512_storeu_ps,
+    };
+
+    /// Fixed-order horizontal sum of the 16 lanes: fold lane pairs
+    /// (i, i+8), then the avx2 tree over the 8 partials — deterministic
+    /// regardless of how the compiler schedules the loads.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn hsum(v: __m512) -> f32 {
+        let mut t = [0.0f32; 16];
+        _mm512_storeu_ps(t.as_mut_ptr(), v);
+        let mut u = [0.0f32; 8];
+        for (i, ui) in u.iter_mut().enumerate() {
+            *ui = t[i] + t[i + 8];
+        }
+        ((u[0] + u[4]) + (u[1] + u[5])) + ((u[2] + u[6]) + (u[3] + u[7]))
+    }
+
+    /// C[m×n] += A[m×kk] · B[kk×n] — 16-lane FMA, 4-row register tiling,
+    /// all-zero-quad skip; one FMA per element per inner step (body and
+    /// tail alike), so the result is panel-boundary-independent.
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F (`simd::avx512_available`).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn gemm_acc(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * kk && b.len() >= kk * n && c.len() >= m * n);
+        let mut i = 0;
+        while i + 4 <= m {
+            let rows = &mut c[i * n..(i + 4) * n];
+            let (c0, rows) = rows.split_at_mut(n);
+            let (c1, rows) = rows.split_at_mut(n);
+            let (c2, c3) = rows.split_at_mut(n);
+            let a0 = &a[i * kk..(i + 1) * kk];
+            let a1 = &a[(i + 1) * kk..(i + 2) * kk];
+            let a2 = &a[(i + 2) * kk..(i + 3) * kk];
+            let a3 = &a[(i + 3) * kk..(i + 4) * kk];
+            for l in 0..kk {
+                let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue; // structured-sparsity fast path (masked weights)
+                }
+                let br = &b[l * n..(l + 1) * n];
+                let v0 = _mm512_set1_ps(x0);
+                let v1 = _mm512_set1_ps(x1);
+                let v2 = _mm512_set1_ps(x2);
+                let v3 = _mm512_set1_ps(x3);
+                let mut j = 0;
+                while j + 16 <= n {
+                    let bv = _mm512_loadu_ps(br.as_ptr().add(j));
+                    _mm512_storeu_ps(
+                        c0.as_mut_ptr().add(j),
+                        _mm512_fmadd_ps(v0, bv, _mm512_loadu_ps(c0.as_ptr().add(j))),
+                    );
+                    _mm512_storeu_ps(
+                        c1.as_mut_ptr().add(j),
+                        _mm512_fmadd_ps(v1, bv, _mm512_loadu_ps(c1.as_ptr().add(j))),
+                    );
+                    _mm512_storeu_ps(
+                        c2.as_mut_ptr().add(j),
+                        _mm512_fmadd_ps(v2, bv, _mm512_loadu_ps(c2.as_ptr().add(j))),
+                    );
+                    _mm512_storeu_ps(
+                        c3.as_mut_ptr().add(j),
+                        _mm512_fmadd_ps(v3, bv, _mm512_loadu_ps(c3.as_ptr().add(j))),
+                    );
+                    j += 16;
+                }
+                while j < n {
+                    let v = br[j];
+                    c0[j] = x0.mul_add(v, c0[j]);
+                    c1[j] = x1.mul_add(v, c1[j]);
+                    c2[j] = x2.mul_add(v, c2[j]);
+                    c3[j] = x3.mul_add(v, c3[j]);
+                    j += 1;
+                }
+            }
+            i += 4;
+        }
+        for r in i..m {
+            let ar = &a[r * kk..(r + 1) * kk];
+            let cr = &mut c[r * n..(r + 1) * n];
+            for (l, &x) in ar.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let br = &b[l * n..(l + 1) * n];
+                let xv = _mm512_set1_ps(x);
+                let mut j = 0;
+                while j + 16 <= n {
+                    let bv = _mm512_loadu_ps(br.as_ptr().add(j));
+                    _mm512_storeu_ps(
+                        cr.as_mut_ptr().add(j),
+                        _mm512_fmadd_ps(xv, bv, _mm512_loadu_ps(cr.as_ptr().add(j))),
+                    );
+                    j += 16;
+                }
+                while j < n {
+                    cr[j] = x.mul_add(br[j], cr[j]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// C[i0..i1, n] += (Aᵀ·B)[i0..i1, n] — 16-lane FMA, 4-pair tiling,
+    /// fixed x0-first chain order per element (body and tail alike).
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F (`simd::avx512_available`).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn gemm_at_b_band(
+        a: &[f32],
+        kk: usize,
+        m: usize,
+        b: &[f32],
+        n: usize,
+        i0: usize,
+        i1: usize,
+        c_band: &mut [f32],
+    ) {
+        debug_assert!(a.len() >= kk * m && b.len() >= kk * n);
+        debug_assert!(i1 <= m && c_band.len() >= (i1 - i0) * n);
+        let mut l = 0;
+        while l + 4 <= kk {
+            let a0 = &a[l * m..(l + 1) * m];
+            let a1 = &a[(l + 1) * m..(l + 2) * m];
+            let a2 = &a[(l + 2) * m..(l + 3) * m];
+            let a3 = &a[(l + 3) * m..(l + 4) * m];
+            let b0 = &b[l * n..(l + 1) * n];
+            let b1 = &b[(l + 1) * n..(l + 2) * n];
+            let b2 = &b[(l + 2) * n..(l + 3) * n];
+            let b3 = &b[(l + 3) * n..(l + 4) * n];
+            for i in i0..i1 {
+                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue;
+                }
+                let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+                let v0 = _mm512_set1_ps(x0);
+                let v1 = _mm512_set1_ps(x1);
+                let v2 = _mm512_set1_ps(x2);
+                let v3 = _mm512_set1_ps(x3);
+                let mut j = 0;
+                while j + 16 <= n {
+                    let mut acc = _mm512_loadu_ps(cr.as_ptr().add(j));
+                    acc = _mm512_fmadd_ps(v0, _mm512_loadu_ps(b0.as_ptr().add(j)), acc);
+                    acc = _mm512_fmadd_ps(v1, _mm512_loadu_ps(b1.as_ptr().add(j)), acc);
+                    acc = _mm512_fmadd_ps(v2, _mm512_loadu_ps(b2.as_ptr().add(j)), acc);
+                    acc = _mm512_fmadd_ps(v3, _mm512_loadu_ps(b3.as_ptr().add(j)), acc);
+                    _mm512_storeu_ps(cr.as_mut_ptr().add(j), acc);
+                    j += 16;
+                }
+                while j < n {
+                    let mut s = cr[j];
+                    s = x0.mul_add(b0[j], s);
+                    s = x1.mul_add(b1[j], s);
+                    s = x2.mul_add(b2[j], s);
+                    s = x3.mul_add(b3[j], s);
+                    cr[j] = s;
+                    j += 1;
+                }
+            }
+            l += 4;
+        }
+        for ll in l..kk {
+            let ar = &a[ll * m..(ll + 1) * m];
+            let br = &b[ll * n..(ll + 1) * n];
+            for i in i0..i1 {
+                let x = ar[i];
+                if x == 0.0 {
+                    continue;
+                }
+                let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+                let xv = _mm512_set1_ps(x);
+                let mut j = 0;
+                while j + 16 <= n {
+                    let bv = _mm512_loadu_ps(br.as_ptr().add(j));
+                    _mm512_storeu_ps(
+                        cr.as_mut_ptr().add(j),
+                        _mm512_fmadd_ps(xv, bv, _mm512_loadu_ps(cr.as_ptr().add(j))),
+                    );
+                    j += 16;
+                }
+                while j < n {
+                    cr[j] = x.mul_add(br[j], cr[j]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// C[m×p] += A[m×kk] · B[p×kk]ᵀ — 16-lane FMA dot products, 4-dot
+    /// tiling, all-zero A-row skip; lane split depends only on `kk`.
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F (`simd::avx512_available`).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn gemm_a_bt(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * kk && b.len() >= p * kk && c.len() >= m * p);
+        for i in 0..m {
+            let ar = &a[i * kk..(i + 1) * kk];
+            if ar.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let cr = &mut c[i * p..(i + 1) * p];
+            let mut j = 0;
+            while j + 4 <= p {
+                let b0 = &b[j * kk..(j + 1) * kk];
+                let b1 = &b[(j + 1) * kk..(j + 2) * kk];
+                let b2 = &b[(j + 2) * kk..(j + 3) * kk];
+                let b3 = &b[(j + 3) * kk..(j + 4) * kk];
+                let mut s0 = _mm512_setzero_ps();
+                let mut s1 = _mm512_setzero_ps();
+                let mut s2 = _mm512_setzero_ps();
+                let mut s3 = _mm512_setzero_ps();
+                let mut l = 0;
+                while l + 16 <= kk {
+                    let av = _mm512_loadu_ps(ar.as_ptr().add(l));
+                    s0 = _mm512_fmadd_ps(av, _mm512_loadu_ps(b0.as_ptr().add(l)), s0);
+                    s1 = _mm512_fmadd_ps(av, _mm512_loadu_ps(b1.as_ptr().add(l)), s1);
+                    s2 = _mm512_fmadd_ps(av, _mm512_loadu_ps(b2.as_ptr().add(l)), s2);
+                    s3 = _mm512_fmadd_ps(av, _mm512_loadu_ps(b3.as_ptr().add(l)), s3);
+                    l += 16;
+                }
+                let mut t0 = hsum(s0);
+                let mut t1 = hsum(s1);
+                let mut t2 = hsum(s2);
+                let mut t3 = hsum(s3);
+                while l < kk {
+                    let av = ar[l];
+                    t0 = av.mul_add(b0[l], t0);
+                    t1 = av.mul_add(b1[l], t1);
+                    t2 = av.mul_add(b2[l], t2);
+                    t3 = av.mul_add(b3[l], t3);
+                    l += 1;
+                }
+                cr[j] += t0;
+                cr[j + 1] += t1;
+                cr[j + 2] += t2;
+                cr[j + 3] += t3;
+                j += 4;
+            }
+            for jj in j..p {
+                let br = &b[jj * kk..(jj + 1) * kk];
+                let mut sv = _mm512_setzero_ps();
+                let mut l = 0;
+                while l + 16 <= kk {
+                    sv = _mm512_fmadd_ps(
+                        _mm512_loadu_ps(ar.as_ptr().add(l)),
+                        _mm512_loadu_ps(br.as_ptr().add(l)),
+                        sv,
+                    );
+                    l += 16;
+                }
+                let mut s = hsum(sv);
+                while l < kk {
+                    s = ar[l].mul_add(br[l], s);
+                    l += 1;
+                }
+                cr[jj] += s;
+            }
+        }
+    }
+
+    /// Σ_j x[j]·y[j] over `len` elements — 16-lane FMA body, fixed
+    /// [`hsum`] tree, scalar FMA tail.
+    ///
+    /// # Safety
+    /// The CPU must support AVX-512F (`simd::avx512_available`).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot_mul(x: &[f32], y: &[f32], len: usize) -> f32 {
+        debug_assert!(x.len() >= len && y.len() >= len);
+        let mut acc = _mm512_setzero_ps();
+        let mut l = 0;
+        while l + 16 <= len {
+            acc = _mm512_fmadd_ps(
+                _mm512_loadu_ps(x.as_ptr().add(l)),
+                _mm512_loadu_ps(y.as_ptr().add(l)),
+                acc,
+            );
+            l += 16;
+        }
+        let mut s = hsum(acc);
+        while l < len {
+            s = x[l].mul_add(y[l], s);
+            l += 1;
+        }
+        s
+    }
+}
+
+/// NEON (AdvSIMD) slice kernels — the 4-lane siblings of [`avx2`], same
+/// tiling, zero-skips, and per-element FMA semantics, built on
+/// `vfmaq_f32` (acc + a·b, fused). AdvSIMD is mandatory on aarch64, so no
+/// runtime detection is needed — only the compile target gates this.
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use std::arch::aarch64::{float32x4_t, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32};
+
+    /// Fixed-order horizontal sum of the 4 lanes: (t0+t2) + (t1+t3) — the
+    /// same fold shape as the wider families' trees.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum(v: float32x4_t) -> f32 {
+        let mut t = [0.0f32; 4];
+        vst1q_f32(t.as_mut_ptr(), v);
+        (t[0] + t[2]) + (t[1] + t[3])
+    }
+
+    /// C[m×n] += A[m×kk] · B[kk×n] — 4-lane FMA, 4-row register tiling,
+    /// all-zero-quad skip; one FMA per element per inner step (body and
+    /// tail alike), so the result is panel-boundary-independent.
+    ///
+    /// # Safety
+    /// aarch64 target only (`simd::neon_available`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_acc(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * kk && b.len() >= kk * n && c.len() >= m * n);
+        let mut i = 0;
+        while i + 4 <= m {
+            let rows = &mut c[i * n..(i + 4) * n];
+            let (c0, rows) = rows.split_at_mut(n);
+            let (c1, rows) = rows.split_at_mut(n);
+            let (c2, c3) = rows.split_at_mut(n);
+            let a0 = &a[i * kk..(i + 1) * kk];
+            let a1 = &a[(i + 1) * kk..(i + 2) * kk];
+            let a2 = &a[(i + 2) * kk..(i + 3) * kk];
+            let a3 = &a[(i + 3) * kk..(i + 4) * kk];
+            for l in 0..kk {
+                let (x0, x1, x2, x3) = (a0[l], a1[l], a2[l], a3[l]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue; // structured-sparsity fast path (masked weights)
+                }
+                let br = &b[l * n..(l + 1) * n];
+                let v0 = vdupq_n_f32(x0);
+                let v1 = vdupq_n_f32(x1);
+                let v2 = vdupq_n_f32(x2);
+                let v3 = vdupq_n_f32(x3);
+                let mut j = 0;
+                while j + 4 <= n {
+                    let bv = vld1q_f32(br.as_ptr().add(j));
+                    vst1q_f32(
+                        c0.as_mut_ptr().add(j),
+                        vfmaq_f32(vld1q_f32(c0.as_ptr().add(j)), bv, v0),
+                    );
+                    vst1q_f32(
+                        c1.as_mut_ptr().add(j),
+                        vfmaq_f32(vld1q_f32(c1.as_ptr().add(j)), bv, v1),
+                    );
+                    vst1q_f32(
+                        c2.as_mut_ptr().add(j),
+                        vfmaq_f32(vld1q_f32(c2.as_ptr().add(j)), bv, v2),
+                    );
+                    vst1q_f32(
+                        c3.as_mut_ptr().add(j),
+                        vfmaq_f32(vld1q_f32(c3.as_ptr().add(j)), bv, v3),
+                    );
+                    j += 4;
+                }
+                while j < n {
+                    let v = br[j];
+                    c0[j] = x0.mul_add(v, c0[j]);
+                    c1[j] = x1.mul_add(v, c1[j]);
+                    c2[j] = x2.mul_add(v, c2[j]);
+                    c3[j] = x3.mul_add(v, c3[j]);
+                    j += 1;
+                }
+            }
+            i += 4;
+        }
+        for r in i..m {
+            let ar = &a[r * kk..(r + 1) * kk];
+            let cr = &mut c[r * n..(r + 1) * n];
+            for (l, &x) in ar.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let br = &b[l * n..(l + 1) * n];
+                let xv = vdupq_n_f32(x);
+                let mut j = 0;
+                while j + 4 <= n {
+                    let bv = vld1q_f32(br.as_ptr().add(j));
+                    vst1q_f32(
+                        cr.as_mut_ptr().add(j),
+                        vfmaq_f32(vld1q_f32(cr.as_ptr().add(j)), bv, xv),
+                    );
+                    j += 4;
+                }
+                while j < n {
+                    cr[j] = x.mul_add(br[j], cr[j]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// C[i0..i1, n] += (Aᵀ·B)[i0..i1, n] — 4-lane FMA, 4-pair tiling,
+    /// fixed x0-first chain order per element (body and tail alike).
+    ///
+    /// # Safety
+    /// aarch64 target only (`simd::neon_available`).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_at_b_band(
+        a: &[f32],
+        kk: usize,
+        m: usize,
+        b: &[f32],
+        n: usize,
+        i0: usize,
+        i1: usize,
+        c_band: &mut [f32],
+    ) {
+        debug_assert!(a.len() >= kk * m && b.len() >= kk * n);
+        debug_assert!(i1 <= m && c_band.len() >= (i1 - i0) * n);
+        let mut l = 0;
+        while l + 4 <= kk {
+            let a0 = &a[l * m..(l + 1) * m];
+            let a1 = &a[(l + 1) * m..(l + 2) * m];
+            let a2 = &a[(l + 2) * m..(l + 3) * m];
+            let a3 = &a[(l + 3) * m..(l + 4) * m];
+            let b0 = &b[l * n..(l + 1) * n];
+            let b1 = &b[(l + 1) * n..(l + 2) * n];
+            let b2 = &b[(l + 2) * n..(l + 3) * n];
+            let b3 = &b[(l + 3) * n..(l + 4) * n];
+            for i in i0..i1 {
+                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue;
+                }
+                let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+                let v0 = vdupq_n_f32(x0);
+                let v1 = vdupq_n_f32(x1);
+                let v2 = vdupq_n_f32(x2);
+                let v3 = vdupq_n_f32(x3);
+                let mut j = 0;
+                while j + 4 <= n {
+                    let mut acc = vld1q_f32(cr.as_ptr().add(j));
+                    acc = vfmaq_f32(acc, vld1q_f32(b0.as_ptr().add(j)), v0);
+                    acc = vfmaq_f32(acc, vld1q_f32(b1.as_ptr().add(j)), v1);
+                    acc = vfmaq_f32(acc, vld1q_f32(b2.as_ptr().add(j)), v2);
+                    acc = vfmaq_f32(acc, vld1q_f32(b3.as_ptr().add(j)), v3);
+                    vst1q_f32(cr.as_mut_ptr().add(j), acc);
+                    j += 4;
+                }
+                while j < n {
+                    let mut s = cr[j];
+                    s = x0.mul_add(b0[j], s);
+                    s = x1.mul_add(b1[j], s);
+                    s = x2.mul_add(b2[j], s);
+                    s = x3.mul_add(b3[j], s);
+                    cr[j] = s;
+                    j += 1;
+                }
+            }
+            l += 4;
+        }
+        for ll in l..kk {
+            let ar = &a[ll * m..(ll + 1) * m];
+            let br = &b[ll * n..(ll + 1) * n];
+            for i in i0..i1 {
+                let x = ar[i];
+                if x == 0.0 {
+                    continue;
+                }
+                let cr = &mut c_band[(i - i0) * n..(i - i0 + 1) * n];
+                let xv = vdupq_n_f32(x);
+                let mut j = 0;
+                while j + 4 <= n {
+                    let bv = vld1q_f32(br.as_ptr().add(j));
+                    vst1q_f32(
+                        cr.as_mut_ptr().add(j),
+                        vfmaq_f32(vld1q_f32(cr.as_ptr().add(j)), bv, xv),
+                    );
+                    j += 4;
+                }
+                while j < n {
+                    cr[j] = x.mul_add(br[j], cr[j]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// C[m×p] += A[m×kk] · B[p×kk]ᵀ — 4-lane FMA dot products, 4-dot
+    /// tiling, all-zero A-row skip; lane split depends only on `kk`.
+    ///
+    /// # Safety
+    /// aarch64 target only (`simd::neon_available`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_a_bt(a: &[f32], m: usize, kk: usize, b: &[f32], p: usize, c: &mut [f32]) {
+        debug_assert!(a.len() >= m * kk && b.len() >= p * kk && c.len() >= m * p);
+        for i in 0..m {
+            let ar = &a[i * kk..(i + 1) * kk];
+            if ar.iter().all(|&v| v == 0.0) {
+                continue;
+            }
+            let cr = &mut c[i * p..(i + 1) * p];
+            let mut j = 0;
+            while j + 4 <= p {
+                let b0 = &b[j * kk..(j + 1) * kk];
+                let b1 = &b[(j + 1) * kk..(j + 2) * kk];
+                let b2 = &b[(j + 2) * kk..(j + 3) * kk];
+                let b3 = &b[(j + 3) * kk..(j + 4) * kk];
+                let mut s0 = vdupq_n_f32(0.0);
+                let mut s1 = vdupq_n_f32(0.0);
+                let mut s2 = vdupq_n_f32(0.0);
+                let mut s3 = vdupq_n_f32(0.0);
+                let mut l = 0;
+                while l + 4 <= kk {
+                    let av = vld1q_f32(ar.as_ptr().add(l));
+                    s0 = vfmaq_f32(s0, av, vld1q_f32(b0.as_ptr().add(l)));
+                    s1 = vfmaq_f32(s1, av, vld1q_f32(b1.as_ptr().add(l)));
+                    s2 = vfmaq_f32(s2, av, vld1q_f32(b2.as_ptr().add(l)));
+                    s3 = vfmaq_f32(s3, av, vld1q_f32(b3.as_ptr().add(l)));
+                    l += 4;
+                }
+                let mut t0 = hsum(s0);
+                let mut t1 = hsum(s1);
+                let mut t2 = hsum(s2);
+                let mut t3 = hsum(s3);
+                while l < kk {
+                    let av = ar[l];
+                    t0 = av.mul_add(b0[l], t0);
+                    t1 = av.mul_add(b1[l], t1);
+                    t2 = av.mul_add(b2[l], t2);
+                    t3 = av.mul_add(b3[l], t3);
+                    l += 1;
+                }
+                cr[j] += t0;
+                cr[j + 1] += t1;
+                cr[j + 2] += t2;
+                cr[j + 3] += t3;
+                j += 4;
+            }
+            for jj in j..p {
+                let br = &b[jj * kk..(jj + 1) * kk];
+                let mut sv = vdupq_n_f32(0.0);
+                let mut l = 0;
+                while l + 4 <= kk {
+                    sv = vfmaq_f32(sv, vld1q_f32(ar.as_ptr().add(l)), vld1q_f32(br.as_ptr().add(l)));
+                    l += 4;
+                }
+                let mut s = hsum(sv);
+                while l < kk {
+                    s = ar[l].mul_add(br[l], s);
+                    l += 1;
+                }
+                cr[jj] += s;
+            }
+        }
+    }
+
+    /// Σ_j x[j]·y[j] over `len` elements — 4-lane FMA body, fixed
+    /// [`hsum`] fold, scalar FMA tail.
+    ///
+    /// # Safety
+    /// aarch64 target only (`simd::neon_available`).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_mul(x: &[f32], y: &[f32], len: usize) -> f32 {
+        debug_assert!(x.len() >= len && y.len() >= len);
+        let mut acc = vdupq_n_f32(0.0);
+        let mut l = 0;
+        while l + 4 <= len {
+            acc = vfmaq_f32(acc, vld1q_f32(x.as_ptr().add(l)), vld1q_f32(y.as_ptr().add(l)));
+            l += 4;
+        }
+        let mut s = hsum(acc);
+        while l < len {
+            s = x[l].mul_add(y[l], s);
+            l += 1;
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,15 +1254,37 @@ mod tests {
         let l1 = active();
         let l2 = active();
         assert_eq!(l1, l2);
-        if l1 == SimdLevel::Avx2 {
-            assert!(avx2_available(), "active() picked avx2 on a CPU without it");
-        }
+        assert!(l1.available(), "active() picked {} on a host without it", l1.name());
     }
 
     #[test]
-    fn level_names() {
+    fn level_names_round_trip() {
+        for level in SimdLevel::ALL {
+            assert_eq!(SimdLevel::parse(level.name()), Some(level), "{}", level.name());
+        }
         assert_eq!(SimdLevel::Scalar.name(), "scalar");
+        assert_eq!(SimdLevel::ScalarFma.name(), "scalar-fma");
         assert_eq!(SimdLevel::Avx2.name(), "avx2");
+        assert_eq!(SimdLevel::Avx512.name(), "avx512");
+        assert_eq!(SimdLevel::Neon.name(), "neon");
+        // Ergonomic alias and rejection of junk.
+        assert_eq!(SimdLevel::parse("scalar_fma"), Some(SimdLevel::ScalarFma));
+        assert_eq!(SimdLevel::parse(" AVX512 "), Some(SimdLevel::Avx512));
+        assert_eq!(SimdLevel::parse("auto"), None);
+        assert_eq!(SimdLevel::parse("sse9"), None);
+    }
+
+    #[test]
+    fn auto_never_picks_an_unavailable_or_soft_fma_level() {
+        let auto = auto_level();
+        assert!(auto.available());
+        assert_ne!(auto, SimdLevel::ScalarFma, "scalar-fma is opt-in only");
+    }
+
+    #[test]
+    fn portable_levels_are_always_available() {
+        assert!(SimdLevel::Scalar.available());
+        assert!(SimdLevel::ScalarFma.available());
     }
 
     #[cfg(target_arch = "x86_64")]
@@ -427,6 +1298,15 @@ mod tests {
         let y: Vec<f32> = (0..19).map(|i| 1.0 - 0.125 * i as f32).collect();
         let want: f64 = x.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
         let got = unsafe { avx2::dot_mul(&x, &y, 19) };
+        assert!((got as f64 - want).abs() < 1e-4 * (1.0 + want.abs()), "{got} vs {want}");
+    }
+
+    #[test]
+    fn scalar_fma_dot_matches_exact_sum() {
+        let x: Vec<f32> = (0..23).map(|i| 0.5 - 0.1 * i as f32).collect();
+        let y: Vec<f32> = (0..23).map(|i| 0.2 * i as f32 - 1.0).collect();
+        let got = scalar_fma::dot_mul(&x, &y, 23);
+        let want: f64 = x.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
         assert!((got as f64 - want).abs() < 1e-4 * (1.0 + want.abs()), "{got} vs {want}");
     }
 }

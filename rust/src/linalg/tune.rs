@@ -1,0 +1,496 @@
+//! Per-host autotuner for the GEMM engine's cache-blocking and the fused
+//! conv path's panel width.
+//!
+//! The cache-blocked wrappers in [`super::gemm`] and the packed-panel conv
+//! path in [`super::conv`] are **bitwise invariant to their tile sizes**
+//! within a SIMD dispatch level (see the blocking rules in `gemm`'s module
+//! doc), which makes tile choice a pure performance knob — safe to vary
+//! per host without touching goldens or the determinism suites. This
+//! module owns that knob:
+//!
+//! * [`GemmBlocking`] — the (MC, KC, NC) panel sizes consulted by
+//!   `matmul_acc_at` / `matmul_at_b_into`, clamped to the
+//!   determinism-safe grid (MC and KC multiples of 4).
+//! * A JSON **profile** (`L2IGHT_TUNE_PROFILE`, default
+//!   `l2ight_tune.json` in the working directory) holding one tuning per
+//!   level, loaded lazily at the first dispatch consult. No file → the
+//!   compiled-in defaults. `L2IGHT_TUNE=auto` additionally runs a quick
+//!   tune at first use and saves the profile.
+//! * [`tune_host`] — the tuner itself: times the `perf_hotpath`
+//!   square-GEMM ladder shape and the fused-conv microbench under
+//!   candidate blockings/panel widths per available level (through the
+//!   forced-blocking entry points, so tuning never consults the profile
+//!   it is producing) and returns the winning profile plus a
+//!   machine-readable report for `BENCH_perf_hotpath.json`. Driven by
+//!   `l2ight tune [--quick]`.
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::conv::{conv2d_forward_packed_with, Conv2dShape, PANEL_COLS};
+use super::gemm::matmul_acc_with_blocking;
+use super::mat::Mat;
+use super::simd::{self, SimdLevel};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::Rng;
+
+/// Env var naming the profile file consulted by dispatch.
+pub const PROFILE_ENV: &str = "L2IGHT_TUNE_PROFILE";
+
+/// Default profile file name (working directory) when the env var is unset.
+pub const DEFAULT_PROFILE_FILE: &str = "l2ight_tune.json";
+
+/// Cache-blocking panel sizes for the A·B wrapper: C is computed in
+/// MC-row × NC-column tiles, contracting KC inner steps per packed pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmBlocking {
+    /// Row-band height (A block rows). Multiple of 4 — the kernels tile 4
+    /// C rows per pass, and band starts must stay on tile boundaries.
+    pub mc: usize,
+    /// Inner-dimension panel depth. Multiple of 4 — the Aᵀ·B kernel
+    /// consumes quads of inner steps, and splitting K mid-quad would
+    /// change its accumulation chains.
+    pub kc: usize,
+    /// Column-panel width of packed B. Any positive size: every kernel
+    /// applies one fused op per element per inner step regardless of where
+    /// the vector body ends, so column splits never move numerics.
+    pub nc: usize,
+}
+
+impl Default for GemmBlocking {
+    fn default() -> GemmBlocking {
+        GemmBlocking { mc: 64, kc: 256, nc: 256 }
+    }
+}
+
+impl GemmBlocking {
+    /// Clamp onto the determinism-safe grid: `mc`/`kc` to multiples of 4
+    /// (≥ 8), `nc` ≥ 16. Out-of-grid profile values are usable after this —
+    /// the caller warns, we never reject a profile outright.
+    pub fn validated(self) -> GemmBlocking {
+        GemmBlocking {
+            mc: (self.mc.max(8) / 4) * 4,
+            kc: (self.kc.max(8) / 4) * 4,
+            nc: self.nc.max(16),
+        }
+    }
+
+    /// True when the blocking already sits on the determinism-safe grid.
+    pub fn is_valid(self) -> bool {
+        self == self.validated()
+    }
+}
+
+/// One level's tuning: GEMM blocking plus the packed-conv panel width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LevelTuning {
+    pub blocking: GemmBlocking,
+    pub panel_cols: usize,
+}
+
+impl Default for LevelTuning {
+    fn default() -> LevelTuning {
+        LevelTuning { blocking: GemmBlocking::default(), panel_cols: PANEL_COLS }
+    }
+}
+
+/// A per-host tuning profile: one optional [`LevelTuning`] per
+/// [`SimdLevel`], plus the pool work-split threshold. Untuned levels fall
+/// back to the compiled-in defaults.
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    /// Pool width the profile was tuned at (diagnostic only).
+    pub threads: usize,
+    /// Whether the quick candidate grid produced this profile.
+    pub quick: bool,
+    /// Override for `pool::par_min_work` (None → compiled-in default).
+    pub par_min_work: Option<usize>,
+    levels: [Option<LevelTuning>; SimdLevel::ALL.len()],
+}
+
+fn level_idx(level: SimdLevel) -> usize {
+    SimdLevel::ALL.iter().position(|&l| l == level).expect("level in ALL")
+}
+
+impl Profile {
+    /// The tuning recorded for `level`, if any.
+    pub fn level(&self, level: SimdLevel) -> Option<LevelTuning> {
+        self.levels[level_idx(level)]
+    }
+
+    /// Record a tuning for `level` (clamped to the safe grid).
+    pub fn set_level(&mut self, level: SimdLevel, t: LevelTuning) {
+        let t = LevelTuning { blocking: t.blocking.validated(), panel_cols: t.panel_cols.max(8) };
+        self.levels[level_idx(level)] = Some(t);
+    }
+
+    /// Push process-wide knobs (the pool threshold) from this profile.
+    fn apply_process_knobs(&self) {
+        if let Some(w) = self.par_min_work {
+            pool::set_par_min_work(w);
+        }
+    }
+
+    /// Serialize (stable key order via `util::json`).
+    pub fn to_json(&self) -> Json {
+        let mut levels = Json::obj();
+        for level in SimdLevel::ALL {
+            if let Some(t) = self.level(level) {
+                let mut o = Json::obj();
+                o.set("mc", t.blocking.mc.into())
+                    .set("kc", t.blocking.kc.into())
+                    .set("nc", t.blocking.nc.into())
+                    .set("panel_cols", t.panel_cols.into());
+                levels.set(level.name(), o);
+            }
+        }
+        let mut root = Json::obj();
+        root.set("schema", 1usize.into())
+            .set("tuner", "l2ight tune".into())
+            .set("quick", self.quick.into())
+            .set("threads", self.threads.into())
+            .set("levels", levels);
+        if let Some(w) = self.par_min_work {
+            root.set("par_min_work", w.into());
+        }
+        root
+    }
+
+    /// Deserialize, clamping out-of-grid blockings (with a warning) rather
+    /// than rejecting — a hand-edited profile should degrade gracefully.
+    pub fn from_json(v: &Json) -> Result<Profile, String> {
+        let schema = v.get("schema").and_then(Json::as_usize).unwrap_or(0);
+        if schema != 1 {
+            return Err(format!("unsupported tune profile schema {schema} (want 1)"));
+        }
+        let mut p = Profile {
+            threads: v.get("threads").and_then(Json::as_usize).unwrap_or(0),
+            quick: v.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            par_min_work: v.get("par_min_work").and_then(Json::as_usize),
+            levels: Default::default(),
+        };
+        let levels = v.get("levels").and_then(Json::as_obj).ok_or("missing levels object")?;
+        for (name, o) in levels {
+            let Some(level) = SimdLevel::parse(name) else {
+                crate::warn!("tune profile: ignoring unknown level {name:?}");
+                continue;
+            };
+            let field = |k: &str, dflt: usize| o.get(k).and_then(Json::as_usize).unwrap_or(dflt);
+            let d = GemmBlocking::default();
+            let blocking =
+                GemmBlocking { mc: field("mc", d.mc), kc: field("kc", d.kc), nc: field("nc", d.nc) };
+            if !blocking.is_valid() {
+                crate::warn!(
+                    "tune profile: {} blocking {:?} off the determinism-safe grid; clamping to {:?}",
+                    level.name(),
+                    blocking,
+                    blocking.validated()
+                );
+            }
+            p.set_level(
+                level,
+                LevelTuning { blocking, panel_cols: field("panel_cols", PANEL_COLS) },
+            );
+        }
+        Ok(p)
+    }
+}
+
+/// The profile file consulted by dispatch: `$L2IGHT_TUNE_PROFILE`, else
+/// `l2ight_tune.json` in the working directory.
+pub fn profile_path() -> PathBuf {
+    match std::env::var(PROFILE_ENV) {
+        Ok(p) if !p.trim().is_empty() => PathBuf::from(p),
+        _ => PathBuf::from(DEFAULT_PROFILE_FILE),
+    }
+}
+
+/// Load a profile from `path`.
+pub fn load_profile(path: &Path) -> Result<Profile, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    let v = Json::parse(&text).map_err(|e| format!("parse {path:?}: {e}"))?;
+    Profile::from_json(&v)
+}
+
+/// Save a profile to `path` (pretty-printed, stable key order).
+pub fn save_profile(p: &Profile, path: &Path) -> Result<(), String> {
+    let mut text = p.to_json().pretty();
+    text.push('\n');
+    std::fs::write(path, text).map_err(|e| format!("write {path:?}: {e}"))
+}
+
+/// The process-wide installed profile, resolved once: the profile file if
+/// present, else (with `L2IGHT_TUNE=auto`) a fresh quick tune saved back to
+/// the file, else compiled-in defaults. Every kernel call inside the tuner
+/// goes through the forced-blocking entry points, so first-use tuning never
+/// re-enters this initializer.
+pub fn installed() -> &'static Profile {
+    static PROFILE: OnceLock<Profile> = OnceLock::new();
+    PROFILE.get_or_init(|| {
+        let path = profile_path();
+        if path.exists() {
+            match load_profile(&path) {
+                Ok(p) => {
+                    p.apply_process_knobs();
+                    return p;
+                }
+                Err(e) => {
+                    crate::warn!("ignoring tune profile: {e}; using default blocking");
+                    return Profile::default();
+                }
+            }
+        }
+        let auto = std::env::var("L2IGHT_TUNE")
+            .map(|v| v.trim().eq_ignore_ascii_case("auto"))
+            .unwrap_or(false);
+        if auto {
+            crate::warn!(
+                "L2IGHT_TUNE=auto and no profile at {path:?}: running quick tune (one-time)"
+            );
+            let (p, _report) = tune_host(true);
+            if let Err(e) = save_profile(&p, &path) {
+                crate::warn!("could not save tune profile: {e}");
+            }
+            p.apply_process_knobs();
+            return p;
+        }
+        Profile::default()
+    })
+}
+
+/// GEMM blocking for `level`: the installed profile's choice, or defaults.
+pub fn gemm_blocking(level: SimdLevel) -> GemmBlocking {
+    installed().level(level).map(|t| t.blocking).unwrap_or_default()
+}
+
+/// Packed-path panel width for `level`: profile choice, or [`PANEL_COLS`].
+pub fn panel_cols_for(level: SimdLevel) -> usize {
+    installed().level(level).map(|t| t.panel_cols).unwrap_or(PANEL_COLS)
+}
+
+/// Packed-path panel width at the process-wide dispatch level — the value
+/// the mesh/shard/conv packed paths consume.
+pub fn panel_cols() -> usize {
+    panel_cols_for(simd::active())
+}
+
+// ---------------------------------------------------------------------------
+// The tuner
+// ---------------------------------------------------------------------------
+
+/// The fused-conv microbench shape (`benches/perf_hotpath.rs` "conv fwd
+/// fused b8c16x16 k3").
+fn conv_bench_shape() -> Conv2dShape {
+    Conv2dShape {
+        batch: 8,
+        in_ch: 16,
+        in_h: 16,
+        in_w: 16,
+        out_ch: 32,
+        kernel: 3,
+        stride: 1,
+        padding: 1,
+    }
+}
+
+fn blocking_candidates(quick: bool) -> Vec<GemmBlocking> {
+    let mut c = vec![
+        GemmBlocking { mc: 32, kc: 128, nc: 256 },
+        GemmBlocking { mc: 64, kc: 256, nc: 256 },
+        GemmBlocking { mc: 64, kc: 256, nc: 512 },
+        GemmBlocking { mc: 128, kc: 256, nc: 256 },
+        GemmBlocking { mc: 64, kc: 512, nc: 256 },
+    ];
+    if !quick {
+        c.push(GemmBlocking { mc: 128, kc: 512, nc: 512 });
+        c.push(GemmBlocking { mc: 256, kc: 128, nc: 512 });
+        c.push(GemmBlocking { mc: 32, kc: 512, nc: 128 });
+    }
+    c
+}
+
+fn panel_candidates(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![64, 128, 256]
+    } else {
+        vec![48, 64, 128, 192, 256, 384]
+    }
+}
+
+/// Median wall time of `reps` calls to `f`, after one warm-up call.
+fn median_ns<F: FnMut()>(reps: usize, mut f: F) -> u64 {
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+/// Tune every available level on this host and return the winning profile
+/// plus a report object for `BENCH_perf_hotpath.json`. `quick` shrinks the
+/// ladder shape and candidate grid (CI smoke); the full grid is what
+/// `l2ight tune` runs on a bench host.
+pub fn tune_host(quick: bool) -> (Profile, Json) {
+    let threads = pool::global().threads();
+    let mut profile = Profile {
+        threads,
+        quick,
+        par_min_work: Some(pool::par_min_work()),
+        levels: Default::default(),
+    };
+
+    let s = if quick { 256 } else { 512 };
+    let reps = if quick { 3 } else { 5 };
+    let mut rng = Rng::new(0x7u64);
+    let a = Mat::randn(s, s, 1.0, &mut rng);
+    let b = Mat::randn(s, s, 1.0, &mut rng);
+    let mut c = Mat::zeros(s, s);
+
+    let sh = conv_bench_shape();
+    let n_in = sh.batch * sh.in_ch * sh.in_h * sh.in_w;
+    let input: Vec<f32> = (0..n_in).map(|_| rng.normal() as f32).collect();
+    let w = Mat::randn(sh.out_ch, sh.patch_rows(), 0.5, &mut rng);
+
+    let mut report_levels = Json::obj();
+    let mut hot_paths = Vec::new();
+    for level in SimdLevel::ALL {
+        if !level.available() {
+            continue;
+        }
+        // GEMM: time the default blocking (the "before"), then every
+        // candidate; keep the fastest.
+        let default_ns = median_ns(reps, || {
+            c.data.fill(0.0);
+            matmul_acc_with_blocking(level, GemmBlocking::default(), &a, &b, &mut c);
+        });
+        let mut best = (GemmBlocking::default(), default_ns);
+        for cand in blocking_candidates(quick) {
+            let ns = median_ns(reps, || {
+                c.data.fill(0.0);
+                matmul_acc_with_blocking(level, cand, &a, &b, &mut c);
+            });
+            if ns < best.1 {
+                best = (cand, ns);
+            }
+        }
+
+        // Conv panel width: default first, then candidates.
+        let conv_default_ns = median_ns(reps, || {
+            let _ = conv2d_forward_packed_with(level, pool::global(), PANEL_COLS, &w, &input, &sh);
+        });
+        let mut best_panel = (PANEL_COLS, conv_default_ns);
+        for pc in panel_candidates(quick) {
+            let ns = median_ns(reps, || {
+                let _ = conv2d_forward_packed_with(level, pool::global(), pc, &w, &input, &sh);
+            });
+            if ns < best_panel.1 {
+                best_panel = (pc, ns);
+            }
+        }
+
+        profile.set_level(level, LevelTuning { blocking: best.0, panel_cols: best_panel.0 });
+
+        let mut gemm_rep = Json::obj();
+        gemm_rep
+            .set("default_ns", (default_ns as usize).into())
+            .set("tuned_ns", (best.1 as usize).into())
+            .set("mc", best.0.mc.into())
+            .set("kc", best.0.kc.into())
+            .set("nc", best.0.nc.into());
+        let mut conv_rep = Json::obj();
+        conv_rep
+            .set("default_ns", (conv_default_ns as usize).into())
+            .set("tuned_ns", (best_panel.1 as usize).into())
+            .set("panel_cols", best_panel.0.into());
+        let mut lv = Json::obj();
+        lv.set("gemm", gemm_rep).set("conv", conv_rep);
+        report_levels.set(level.name(), lv);
+
+        for (name, ns) in [
+            (format!("tune gemm {s}x{s}x{s} default [{}]", level.name()), default_ns),
+            (format!("tune gemm {s}x{s}x{s} tuned [{}]", level.name()), best.1),
+            (format!("tune conv fwd fused b8c16x16 k3 default [{}]", level.name()), conv_default_ns),
+            (format!("tune conv fwd fused b8c16x16 k3 tuned [{}]", level.name()), best_panel.1),
+        ] {
+            let mut hp = Json::obj();
+            hp.set("name", name.into()).set("median_ns", (ns as usize).into());
+            hot_paths.push(hp);
+        }
+    }
+
+    let mut report = Json::obj();
+    report
+        .set("event", "tune".into())
+        .set("quick", quick.into())
+        .set("threads", threads.into())
+        .set("simd", simd::active().name().into())
+        .set("gemm_shape", s.into())
+        .set("levels", report_levels)
+        .set("hot_paths", Json::Arr(hot_paths));
+    (profile, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocking_validation_clamps_to_safe_grid() {
+        let b = GemmBlocking { mc: 7, kc: 130, nc: 3 }.validated();
+        assert_eq!(b, GemmBlocking { mc: 8, kc: 128, nc: 16 });
+        assert_eq!(b.mc % 4, 0);
+        assert_eq!(b.kc % 4, 0);
+        assert!(GemmBlocking::default().is_valid());
+    }
+
+    #[test]
+    fn profile_json_round_trips() {
+        let mut p = Profile { threads: 4, quick: true, par_min_work: Some(4096), ..Default::default() };
+        p.set_level(
+            SimdLevel::Avx2,
+            LevelTuning { blocking: GemmBlocking { mc: 128, kc: 512, nc: 256 }, panel_cols: 192 },
+        );
+        p.set_level(SimdLevel::Scalar, LevelTuning::default());
+        let back = Profile::from_json(&Json::parse(&p.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.threads, 4);
+        assert!(back.quick);
+        assert_eq!(back.par_min_work, Some(4096));
+        assert_eq!(back.level(SimdLevel::Avx2), p.level(SimdLevel::Avx2));
+        assert_eq!(back.level(SimdLevel::Scalar), p.level(SimdLevel::Scalar));
+        assert_eq!(back.level(SimdLevel::Neon), None);
+    }
+
+    #[test]
+    fn profile_clamps_bad_values_instead_of_failing() {
+        let text = r#"{"schema": 1, "levels": {"scalar": {"mc": 6, "kc": 10, "nc": 1, "panel_cols": 2}, "not-a-level": {"mc": 4}}}"#;
+        let p = Profile::from_json(&Json::parse(text).unwrap()).unwrap();
+        let t = p.level(SimdLevel::Scalar).unwrap();
+        assert_eq!(t.blocking.mc % 4, 0);
+        assert_eq!(t.blocking.kc % 4, 0);
+        assert!(t.blocking.nc >= 16 && t.panel_cols >= 8);
+    }
+
+    #[test]
+    fn unknown_schema_is_rejected() {
+        let v = Json::parse(r#"{"schema": 9, "levels": {}}"#).unwrap();
+        assert!(Profile::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn untuned_levels_fall_back_to_defaults() {
+        let p = Profile::default();
+        assert_eq!(p.level(SimdLevel::Avx512), None);
+        // Accessors never panic for any level.
+        for level in SimdLevel::ALL {
+            let _ = gemm_blocking(level);
+            let _ = panel_cols_for(level);
+        }
+        assert!(panel_cols() >= 8);
+    }
+}

@@ -8,6 +8,7 @@
 //!   map          parallel-map a random target matrix and report fidelity
 //!   infer        batched-inference smoke over the PJRT artifacts
 //!   serve-bench  open-loop load against the native batched serving engine
+//!   tune         autotune GEMM blocking + conv panel width for this host
 //!   artifacts    list the AOT artifacts the runtime can see
 //!   info         print build + environment info
 
@@ -15,7 +16,7 @@ use std::path::{Path, PathBuf};
 
 use l2ight::coordinator::{run_job, JobConfig, MetricSink, Protocol};
 use l2ight::data::DatasetKind;
-use l2ight::linalg::Mat;
+use l2ight::linalg::{simd::SimdLevel, tune, Mat};
 use l2ight::nn::{EngineKind, ModelArch};
 use l2ight::photonics::{NoiseModel, PtcMesh, ShardPolicy, ShardingConfig};
 use l2ight::robustness::{DriftConfig, FaultKind, FaultSpec, RobustnessConfig, WatchdogConfig};
@@ -29,6 +30,7 @@ use l2ight::serve::bench::{
 };
 use l2ight::stages::ic::{calibrate_mesh, IcConfig};
 use l2ight::stages::pm::{map_mesh, PmConfig};
+use l2ight::util::bench::{git_rev, unix_time};
 use l2ight::util::cli::ArgSpec;
 use l2ight::util::json::Json;
 use l2ight::util::{fmt_sig, Rng};
@@ -44,6 +46,7 @@ fn main() {
         Some("map") => cmd_map(&args[1..]),
         Some("infer") => cmd_infer(&args[1..]),
         Some("serve-bench") => cmd_serve_bench(&args[1..]),
+        Some("tune") => cmd_tune(&args[1..]),
         Some("artifacts") => cmd_artifacts(&args[1..]),
         Some("info") => cmd_info(),
         Some("--help") | Some("-h") | None => {
@@ -71,6 +74,7 @@ fn print_usage() {
          \x20 map          parallel-map a target matrix (stage 2)\n\
          \x20 infer        batched inference through the PJRT artifacts\n\
          \x20 serve-bench  open-loop load against the native batched serving engine\n\
+         \x20 tune         autotune GEMM blocking + conv panel width for this host\n\
          \x20 artifacts    list AOT artifacts\n\
          \x20 info         build + environment info\n\n\
          Run `l2ight <SUBCOMMAND> --help` for options."
@@ -720,6 +724,92 @@ fn cmd_serve_bench(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn cmd_tune(args: &[String]) -> i32 {
+    let spec = ArgSpec::new(
+        "l2ight tune",
+        "time the perf_hotpath GEMM ladder + fused-conv microbench per available SIMD \
+         level, pick cache blocking (MC/KC/NC) and the conv column-panel width, and save \
+         the per-host profile that kernel dispatch consults",
+    )
+    .opt("out", "", "profile output path (default $L2IGHT_TUNE_PROFILE or ./l2ight_tune.json)")
+    .opt(
+        "bench-json",
+        "BENCH_perf_hotpath.json",
+        "perf history file to append the tune report to (empty string skips)",
+    )
+    .flag("quick", "CI smoke preset: smaller shapes, fewer candidates + reps");
+    let a = parse_or_exit(&spec, args);
+
+    let quick = a.bool("quick");
+    let pool = l2ight::util::pool::global();
+    println!(
+        "tuning GEMM blocking + conv panel width on {} threads (active simd={}{})",
+        pool.threads(),
+        l2ight::linalg::simd::active().name(),
+        if quick { ", quick preset" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let (profile, mut report) = tune::tune_host(quick);
+    println!("tuned {:.1}s", t0.elapsed().as_secs_f64());
+    for level in SimdLevel::ALL.iter().filter(|l| l.available()) {
+        if let Some(t) = profile.level(*level) {
+            println!(
+                "  {:<10} mc={:<4} kc={:<4} nc={:<4} panel_cols={}",
+                level.name(),
+                t.blocking.mc,
+                t.blocking.kc,
+                t.blocking.nc,
+                t.panel_cols
+            );
+        }
+    }
+
+    let out = if a.str("out").is_empty() {
+        tune::profile_path()
+    } else {
+        PathBuf::from(a.str("out"))
+    };
+    if let Err(e) = tune::save_profile(&profile, &out) {
+        eprintln!("cannot write profile {}: {e}", out.display());
+        return 1;
+    }
+    println!("wrote profile {}", out.display());
+
+    let bench_json = a.str("bench-json");
+    if !bench_json.is_empty() {
+        // Stamp the report like a perf_hotpath run entry so the perf
+        // trajectory stays one self-describing artifact.
+        report.set("git_rev", Json::Str(git_rev()));
+        report.set("unix_time", Json::Num(unix_time()));
+        match append_bench_run(Path::new(bench_json), report) {
+            Ok(()) => println!("appended tune report to {bench_json}"),
+            Err(e) => {
+                eprintln!("cannot append to {bench_json}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+/// Append one run entry to a `BENCH_perf_hotpath.json`-schema history,
+/// keeping the last 50 runs (same retention as the bench's own emitter).
+fn append_bench_run(path: &Path, run: Json) -> std::io::Result<()> {
+    let mut runs: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|src| Json::parse(&src).ok())
+        .and_then(|root| root.get("runs").and_then(|r| r.as_arr()).map(|r| r.to_vec()))
+        .unwrap_or_default();
+    runs.push(run);
+    let keep = runs.len().saturating_sub(50);
+    let runs = runs.split_off(keep);
+    let mut root = Json::obj();
+    root.set("bench", Json::Str("perf_hotpath".to_string()));
+    root.set("schema", Json::Num(1.0));
+    root.set("runs", Json::Arr(runs));
+    std::fs::write(path, root.pretty() + "\n")
 }
 
 fn cmd_artifacts(args: &[String]) -> i32 {

@@ -20,7 +20,7 @@ use super::noise::NoiseModel;
 use super::ptc::Ptc;
 use super::unitary::ReckMesh;
 use crate::linalg::{
-    gemm_acc_slices, gemm_at_b_acc_band, sigma_grad_block_slices, svd_kxk, Mat, PANEL_COLS,
+    gemm_acc_slices, gemm_at_b_acc_band, sigma_grad_block_slices, svd_kxk, Mat,
 };
 use crate::util::pool::{self, Scratch, SendPtr, ThreadPool};
 use crate::util::Rng;
@@ -184,7 +184,7 @@ impl PtcMesh {
         let pptr = SendPtr(self.ptcs.as_mut_ptr());
         // Realization work per block ≈ O(k³) with a large constant (phase
         // synthesis); gate tiny meshes to the inline path.
-        let blocks = if n > 1 && 8 * n * k * k * k >= pool::PAR_MIN_WORK {
+        let blocks = if n > 1 && 8 * n * k * k * k >= pool::par_min_work() {
             pool.parallel_map(n, |i| {
                 // Safety: each index realizes exactly one distinct PTC.
                 let ptc = unsafe { &mut *pptr.0.add(i) };
@@ -280,8 +280,9 @@ impl PtcMesh {
     /// straight from the activation into the GEMM packing buffers. Within a
     /// SIMD dispatch level the result — and the `MeshStats` accounting — is
     /// bitwise identical to `forward_masked` on the materialized matrix;
-    /// panels have fixed width ([`PANEL_COLS`]), so results are also
-    /// thread-count-invariant.
+    /// the panel width comes from the autotuner profile (never from the
+    /// pool width — `linalg::tune::panel_cols`), and any width yields the
+    /// same bits, so results are also thread-count-invariant.
     pub fn forward_packed_on<P>(
         &mut self,
         pool: &ThreadPool,
@@ -300,12 +301,13 @@ impl PtcMesh {
             let cache = self.w_cache.as_ref().unwrap();
             let rows = self.rows;
             let yptr = SendPtr(y.data.as_mut_ptr());
-            let panels = total_cols.div_ceil(PANEL_COLS);
+            let panel_cols = crate::linalg::tune::panel_cols();
+            let panels = total_cols.div_ceil(panel_cols);
             // One task per column panel; each panel packs its X tile, runs
             // the full P×Q block loop over it, and owns its Y columns.
             pool.parallel_for_sized(panels, 2 * p * q * k * k * total_cols, |ti| {
-                let c0 = ti * PANEL_COLS;
-                let c1 = (c0 + PANEL_COLS).min(total_cols);
+                let c0 = ti * panel_cols;
+                let c1 = (c0 + panel_cols).min(total_cols);
                 let wpan = c1 - c0;
                 let mut xbuf = Scratch::take(q * k * wpan);
                 pack(c0, c1, &mut xbuf);

@@ -31,7 +31,7 @@
 use super::mesh::{gather_cols_padded, padded_panel, MeshStats, PtcMesh};
 use super::noise::NoiseModel;
 use super::ptc::Ptc;
-use crate::linalg::{gemm_acc_slices, gemm_at_b_acc_band, sigma_grad_block_slices, Mat, PANEL_COLS};
+use crate::linalg::{gemm_acc_slices, gemm_at_b_acc_band, sigma_grad_block_slices, Mat};
 use crate::util::json::Json;
 use crate::util::pool::{self, Scratch, SendPtr, ThreadPool};
 use crate::util::Rng;
@@ -465,10 +465,14 @@ impl ShardedMesh {
                 self.shards.iter().map(|s| s.mesh.cached_blocks()).collect();
             let rows = self.rows;
             let yptr = SendPtr(y.data.as_mut_ptr());
-            let panels = total_cols.div_ceil(PANEL_COLS);
+            // Same tuned width as the unsharded path — the cross-shard
+            // equivalence suite pins the two paths bitwise, so they must
+            // always agree on the panel partition (any shared width works).
+            let panel_cols = crate::linalg::tune::panel_cols();
+            let panels = total_cols.div_ceil(panel_cols);
             pool.parallel_for_sized(panels, 2 * p * q * k * k * total_cols, |ti| {
-                let c0 = ti * PANEL_COLS;
-                let c1 = (c0 + PANEL_COLS).min(total_cols);
+                let c0 = ti * panel_cols;
+                let c1 = (c0 + panel_cols).min(total_cols);
                 let wpan = c1 - c0;
                 let mut xbuf = Scratch::take(q * k * wpan);
                 pack(c0, c1, &mut xbuf);

@@ -31,8 +31,28 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Below this many "flop-equivalents" of total work, `parallel_for_sized`
-/// runs inline — waking the pool costs more than it saves.
+/// runs inline — waking the pool costs more than it saves. This is the
+/// compiled-in default; the live threshold is [`par_min_work`], which the
+/// autotuner profile (`linalg::tune`) may override per host.
 pub const PAR_MIN_WORK: usize = 32_768;
+
+/// Live inline-work threshold. Process-global (not per-pool) so every gate
+/// in the crate sees one value: path selection — serial vs pooled — is then
+/// a pure function of the problem size, and since both paths are bitwise
+/// identical by construction, tuning this knob can never change numerics.
+static PAR_MIN_WORK_RT: AtomicUsize = AtomicUsize::new(PAR_MIN_WORK);
+
+/// The active inline-work threshold (default [`PAR_MIN_WORK`], possibly
+/// overridden by the autotuner profile via [`set_par_min_work`]).
+pub fn par_min_work() -> usize {
+    PAR_MIN_WORK_RT.load(Ordering::Relaxed)
+}
+
+/// Override the inline-work threshold (autotuner profile load). Clamped to
+/// ≥ 1; call before the hot paths start for a consistent process-wide view.
+pub fn set_par_min_work(v: usize) {
+    PAR_MIN_WORK_RT.store(v.max(1), Ordering::Relaxed);
+}
 
 thread_local! {
     /// True while this thread is a pool worker or is inside a parallel
@@ -161,10 +181,10 @@ impl ThreadPool {
     }
 
     /// `parallel_for` with a work-size gate: if the region's total work
-    /// (in rough flop-equivalents) is below [`PAR_MIN_WORK`], run inline —
+    /// (in rough flop-equivalents) is below [`par_min_work`], run inline —
     /// tiny meshes should not pay pool wakeup latency.
     pub fn parallel_for_sized<F: Fn(usize) + Sync>(&self, n: usize, total_work: usize, f: F) {
-        if total_work < PAR_MIN_WORK || self.threads <= 1 {
+        if total_work < par_min_work() || self.threads <= 1 {
             for i in 0..n {
                 f(i);
             }

@@ -1,10 +1,11 @@
 //! Fused-conv equivalence suite: the packed-panel conv path (patch tiles
 //! extracted straight into the GEMM packing buffers, no `[Cin·K², B·H'·W']`
 //! intermediate) must be numerically indistinguishable from the eager
-//! im2col + GEMM reference — bitwise at a pinned scalar dispatch level
-//! across stride/padding/batch edge cases, within 1e-5 relative when the
-//! AVX2+FMA kernels are pinned instead, and bitwise thread-count-invariant
-//! at every level (panels have fixed width, never derived from the pool).
+//! im2col + GEMM reference — bitwise at every pinned dispatch level in the
+//! kernel lattice (scalar, scalar-fma, avx2, avx512, neon — whichever this
+//! host can run) across stride/padding/batch edge cases, within 1e-5 of
+//! the scalar reference across levels, and bitwise thread-count-invariant
+//! (panel widths come from the autotuner profile, never from the pool).
 
 use l2ight::linalg::{
     col2im, col2im_pooled_on, conv2d_forward_packed_at, im2col, im2col_pooled_on, matmul,
@@ -76,26 +77,28 @@ fn fused_equals_eager_bitwise_under_scalar_edge_cases() {
 }
 
 #[test]
-fn fused_matches_eager_under_avx2_and_scalar_within_tolerance() {
-    if !simd::avx2_available() {
-        return;
-    }
+fn fused_matches_eager_at_every_available_level_within_tolerance() {
+    // The full kernel-family matrix. Within a level, fused == eager
+    // bitwise (same per-element accumulation order — the dispatch level,
+    // not the execution strategy, owns the numerics); across levels the
+    // FMA contraction moves numerics at the ulp scale only.
+    let levels: Vec<SimdLevel> =
+        SimdLevel::ALL.iter().copied().filter(|l| l.available()).collect();
     let pool = ThreadPool::new(3);
     let mut rng = Rng::new(0xa572);
     for sh in edge_shapes() {
         let (input, w) = random_case(&sh, &mut rng);
-        // Within the avx2 level, fused == eager bitwise (same per-element
-        // accumulation order — the dispatch level, not the execution
-        // strategy, owns the numerics).
-        let eager_v = eager_forward_at(SimdLevel::Avx2, &w, &input, &sh);
-        let fused_v = conv2d_forward_packed_at(SimdLevel::Avx2, &pool, &w, &input, &sh);
-        assert_close(&fused_v.data, &eager_v.data, 0.0, 0.0)
-            .unwrap_or_else(|e| panic!("avx2 fused != avx2 eager for {sh:?}: {e}"));
-        // Across levels the FMA contraction moves numerics at the ulp
-        // scale only.
         let eager_s = eager_forward_at(SimdLevel::Scalar, &w, &input, &sh);
-        assert_close(&fused_v.data, &eager_s.data, 1e-5, 1e-5)
-            .unwrap_or_else(|e| panic!("avx2 fused vs scalar eager for {sh:?}: {e}"));
+        for &level in &levels {
+            let eager_v = eager_forward_at(level, &w, &input, &sh);
+            let fused_v = conv2d_forward_packed_at(level, &pool, &w, &input, &sh);
+            assert_close(&fused_v.data, &eager_v.data, 0.0, 0.0).unwrap_or_else(|e| {
+                panic!("{} fused != {} eager for {sh:?}: {e}", level.name(), level.name())
+            });
+            assert_close(&fused_v.data, &eager_s.data, 1e-5, 1e-5).unwrap_or_else(|e| {
+                panic!("{} fused vs scalar eager for {sh:?}: {e}", level.name())
+            });
+        }
     }
 }
 

@@ -12,6 +12,11 @@
 //! state), and every hot path walks the logical block grid in unsharded
 //! order through the owner table — the kernel-call sequence is identical,
 //! so within a SIMD dispatch level the floats are too.
+//!
+//! The level axis itself comes from CI: the shard-quick job re-runs this
+//! suite once per kernel family (`L2IGHT_SIMD=scalar`, `scalar-fma`, and
+//! the host `auto` level), and `ci_env_leg_pins_the_level_it_names` below
+//! fails the leg if the pin silently fell back to a different family.
 
 use l2ight::coordinator::{load_model_state, save_model_state};
 use l2ight::linalg::Mat;
@@ -451,6 +456,28 @@ fn pm_stage_is_shard_count_invariant() {
         assert_eq!(r.trace, r_ref.trace);
         assert_eq!(sm.to_dense().data, reference.to_dense().data);
         assert_eq!(sm.rel_error(&target), reference.rel_error(&target));
+    }
+}
+
+#[test]
+fn ci_env_leg_pins_the_level_it_names() {
+    // Every bitwise claim above is scoped to one dispatch level, so the CI
+    // legs that set L2IGHT_SIMD must actually run the family they name.
+    use l2ight::linalg::{simd, SimdLevel};
+    let Ok(raw) = std::env::var("L2IGHT_SIMD") else { return };
+    let t = raw.trim();
+    if t.is_empty() || t.eq_ignore_ascii_case("auto") {
+        return;
+    }
+    match SimdLevel::parse(t) {
+        Some(level) if level.available() => assert_eq!(
+            simd::active(),
+            level,
+            "L2IGHT_SIMD={t} leg is not running the {} kernels",
+            level.name()
+        ),
+        Some(_) => assert_eq!(simd::active(), SimdLevel::Scalar, "unavailable pin must fall back"),
+        None => panic!("CI leg exports unknown L2IGHT_SIMD={t:?} — fix the strategy matrix"),
     }
 }
 

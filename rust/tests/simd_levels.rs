@@ -1,0 +1,189 @@
+//! SIMD level-lattice acceptance suite (ISSUE 9): every kernel family the
+//! dispatch seam exposes — scalar, scalar-fma, avx2, avx512, neon — must
+//!
+//!   1. match the scalar reference within 1e-5 on the perf_hotpath GEMM
+//!      ladder shapes (FMA contraction moves numerics at the ulp scale
+//!      only),
+//!   2. be bitwise self-consistent across thread counts, cache-blocking
+//!      choices, and column-panel partitions (the §Blocking rules contract
+//!      in `gemm.rs`: the dispatch level owns the numerics, the execution
+//!      strategy never does),
+//!   3. round-trip its name through `SimdLevel::parse` (reports, bench
+//!      JSON, `L2IGHT_SIMD`, CI strategy matrices), and
+//!   4. honor a CI env leg: when `L2IGHT_SIMD` pins an available level,
+//!      `simd::active()` must actually be that level, so a typo'd matrix
+//!      entry can never silently test the wrong family.
+//!
+//! The autotuner's disk profile is exercised end to end too: save → load →
+//! the dispatch helpers serve the tuned blocking.
+
+use l2ight::linalg::{
+    conv2d_forward_packed_at, conv2d_forward_packed_with, matmul_acc_with_blocking,
+    matmul_into_at, simd, tune, Conv2dShape, GemmBlocking, Mat, SimdLevel,
+};
+use l2ight::util::pool::ThreadPool;
+use l2ight::util::prop::assert_close;
+use l2ight::util::Rng;
+
+/// Every level this host can execute, scalar included.
+fn available_levels() -> Vec<SimdLevel> {
+    SimdLevel::ALL.iter().copied().filter(|l| l.available()).collect()
+}
+
+/// Ladder-flavored GEMM shapes: one square acceptance size plus ragged
+/// dims that exercise tails in every kernel family.
+const GEMM_SHAPES: [(usize, usize, usize); 4] =
+    [(64, 64, 64), (96, 128, 80), (33, 47, 29), (128, 256, 96)];
+
+#[test]
+fn every_available_level_matches_scalar_on_gemm_ladder_shapes() {
+    let mut rng = Rng::new(0x51d0);
+    for &(m, k, n) in &GEMM_SHAPES {
+        let a = Mat::randn(m, k, 0.7, &mut rng);
+        let b = Mat::randn(k, n, 0.7, &mut rng);
+        let mut want = Mat::zeros(m, n);
+        matmul_into_at(SimdLevel::Scalar, &a, &b, &mut want);
+        for level in available_levels() {
+            let mut got = Mat::zeros(m, n);
+            matmul_into_at(level, &a, &b, &mut got);
+            assert_close(&got.data, &want.data, 1e-5, 1e-5).unwrap_or_else(|e| {
+                panic!("{} vs scalar diverged on {m}x{k}x{n}: {e}", level.name())
+            });
+        }
+    }
+}
+
+#[test]
+fn every_available_level_is_bitwise_blocking_invariant() {
+    // Any blocking on the determinism-safe grid — including pathological
+    // tiny tiles — must reproduce the un-blocked dispatch result bit for
+    // bit, at every level. This is the tentpole contract that lets the
+    // autotuner pick per-host tile sizes without a numerics review.
+    let blockings = [
+        GemmBlocking { mc: 8, kc: 8, nc: 16 },
+        GemmBlocking { mc: 16, kc: 32, nc: 48 },
+        GemmBlocking { mc: 64, kc: 256, nc: 256 },
+        GemmBlocking::default(),
+    ];
+    let mut rng = Rng::new(0xb10c);
+    let (m, k, n) = (70, 90, 110);
+    let a = Mat::randn(m, k, 0.6, &mut rng);
+    let b = Mat::randn(k, n, 0.6, &mut rng);
+    for level in available_levels() {
+        let mut want = Mat::zeros(m, n);
+        matmul_into_at(level, &a, &b, &mut want);
+        for blk in blockings {
+            let mut got = Mat::zeros(m, n);
+            matmul_acc_with_blocking(level, blk, &a, &b, &mut got);
+            assert_eq!(
+                got.data,
+                want.data,
+                "{} blocked (mc={} kc={} nc={}) != direct",
+                level.name(),
+                blk.mc,
+                blk.kc,
+                blk.nc
+            );
+        }
+    }
+}
+
+#[test]
+fn every_available_level_is_panel_and_thread_invariant_on_fused_conv() {
+    // The packed-panel conv path: any column-panel width × any pool width
+    // is the same bitstream within a level (panels are pure column splits
+    // of an A·B product — §Blocking rules).
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(5);
+    let sh = Conv2dShape {
+        batch: 3,
+        in_ch: 4,
+        in_h: 9,
+        in_w: 7,
+        out_ch: 6,
+        kernel: 3,
+        stride: 1,
+        padding: 1,
+    };
+    let mut rng = Rng::new(0xfa57);
+    let input: Vec<f32> =
+        (0..sh.batch * sh.in_ch * sh.in_h * sh.in_w).map(|_| rng.normal() as f32).collect();
+    let w = Mat::randn(sh.out_ch, sh.patch_rows(), 0.7, &mut rng);
+    for level in available_levels() {
+        let want = conv2d_forward_packed_at(level, &serial, &w, &input, &sh);
+        for panel_cols in [8usize, 33, 64, 128, 4096] {
+            for pool in [&serial, &wide] {
+                let got = conv2d_forward_packed_with(level, pool, panel_cols, &w, &input, &sh);
+                assert_eq!(
+                    got.data,
+                    want.data,
+                    "{} panel_cols={panel_cols} threads={} diverged",
+                    level.name(),
+                    pool.threads()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn level_names_round_trip_and_unknowns_are_rejected() {
+    for level in SimdLevel::ALL {
+        assert_eq!(SimdLevel::parse(level.name()), Some(level), "{}", level.name());
+    }
+    // Alias + normalization.
+    assert_eq!(SimdLevel::parse("scalar_fma"), Some(SimdLevel::ScalarFma));
+    assert_eq!(SimdLevel::parse("  AVX512 "), Some(SimdLevel::Avx512));
+    // `auto` is a dispatch policy, not a level; junk is rejected (active()
+    // turns both into warn-and-fallback, never a silent wrong family).
+    assert_eq!(SimdLevel::parse("auto"), None);
+    assert_eq!(SimdLevel::parse("avx1024"), None);
+    assert_eq!(SimdLevel::parse(""), None);
+}
+
+#[test]
+fn ci_env_leg_pins_the_level_it_names() {
+    // Arms the CI strategy matrices: when a leg exports L2IGHT_SIMD=<level>
+    // and the runner supports it, the whole test process must actually run
+    // that family. An unavailable pin documents scalar fallback instead.
+    let Ok(raw) = std::env::var("L2IGHT_SIMD") else { return };
+    let t = raw.trim();
+    if t.is_empty() || t.eq_ignore_ascii_case("auto") {
+        return;
+    }
+    match SimdLevel::parse(t) {
+        Some(level) if level.available() => assert_eq!(
+            simd::active(),
+            level,
+            "L2IGHT_SIMD={t} leg is not running the {} kernels",
+            level.name()
+        ),
+        Some(_) => assert_eq!(simd::active(), SimdLevel::Scalar, "unavailable pin must fall back"),
+        None => panic!("CI leg exports unknown L2IGHT_SIMD={t:?} — fix the strategy matrix"),
+    }
+}
+
+#[test]
+fn tuned_profile_round_trips_through_disk_and_dispatch_helpers() {
+    // save → load → identical profile; helpers always serve a valid
+    // blocking whether or not a level was tuned.
+    let mut p = tune::Profile::default();
+    p.set_level(
+        SimdLevel::Scalar,
+        tune::LevelTuning {
+            blocking: GemmBlocking { mc: 16, kc: 32, nc: 48 },
+            panel_cols: 96,
+        },
+    );
+    let path = std::env::temp_dir()
+        .join(format!("l2ight_tune_roundtrip_{}.json", std::process::id()));
+    tune::save_profile(&p, &path).unwrap();
+    let q = tune::load_profile(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(q.level(SimdLevel::Scalar), p.level(SimdLevel::Scalar));
+    assert_eq!(q.level(SimdLevel::Avx512), None, "untuned level must stay unset");
+    for level in SimdLevel::ALL {
+        assert!(tune::gemm_blocking(level).is_valid(), "{}", level.name());
+        assert!(tune::panel_cols_for(level) >= 8, "{}", level.name());
+    }
+}
