@@ -49,6 +49,7 @@ fn main() {
                 seed: 17,
                 robustness: None,
                 sharding: None,
+                variation: None,
             };
             let mut sink = MetricSink::memory();
             let s = run_job(&cfg, &mut sink);

@@ -133,6 +133,7 @@ fn bench_model(arch: ModelArch) {
         seed: 0x7ab2,
         robustness: None,
         sharding: None,
+        variation: None,
     };
     // Same 16x16 side for the driver-built datasets: rebuild by hand.
     let mut sink = MetricSink::memory();

@@ -29,6 +29,12 @@ pub struct ZoTrainReport {
     pub best_test_acc: f32,
     /// Loss after each epoch.
     pub loss_trace: Vec<f32>,
+    /// Test accuracy after each epoch (the evals the loop already runs —
+    /// recording them adds no queries).
+    pub epoch_test_acc: Vec<f32>,
+    /// Cumulative query count at the end of each epoch; feeds the
+    /// queries-to-target budget-parity metric.
+    pub epoch_queries: Vec<u64>,
     /// Total forward queries issued (each is one full-model inference).
     pub queries: u64,
     /// Hardware cost: queries × per-batch forward cost.
@@ -237,6 +243,8 @@ pub fn flops_train(
         lr *= 0.98;
         report.loss_trace.push(epoch_loss / batches.max(1) as f32);
         let acc = test_set.evaluate(model, cfg.batch);
+        report.epoch_test_acc.push(acc);
+        report.epoch_queries.push(report.queries);
         report.best_test_acc = report.best_test_acc.max(acc);
         report.final_test_acc = acc;
     }
@@ -292,6 +300,8 @@ pub fn mixedtrn_train(
         step = (step * 0.95).max(1e-3);
         report.loss_trace.push(epoch_loss / batches.max(1) as f32);
         let acc = test_set.evaluate(model, cfg.batch);
+        report.epoch_test_acc.push(acc);
+        report.epoch_queries.push(report.queries);
         report.best_test_acc = report.best_test_acc.max(acc);
         report.final_test_acc = acc;
     }
@@ -464,6 +474,23 @@ mod tests {
             "MixedTrn loss did not drop: {:?}",
             r.loss_trace
         );
+    }
+
+    #[test]
+    fn zo_reports_carry_per_epoch_traces() {
+        let (mut model, tr, te) = tiny_setup();
+        let cfg = ZoTrainConfig { epochs: 3, batch: 16, ..Default::default() };
+        let r = flops_train(&mut model, &tr, &te, &cfg);
+        assert_eq!(r.epoch_test_acc.len(), 3);
+        assert_eq!(r.epoch_queries.len(), 3);
+        // Cumulative queries are nondecreasing and end at the total.
+        for w in r.epoch_queries.windows(2) {
+            assert!(w[1] >= w[0], "epoch queries must be cumulative: {:?}", r.epoch_queries);
+        }
+        assert_eq!(*r.epoch_queries.last().unwrap(), r.queries);
+        assert_eq!(*r.epoch_test_acc.last().unwrap(), r.final_test_acc);
+        let best = r.epoch_test_acc.iter().cloned().fold(0.0f32, f32::max);
+        assert_eq!(best, r.best_test_acc);
     }
 
     #[test]

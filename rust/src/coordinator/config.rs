@@ -9,7 +9,7 @@
 use crate::data::DatasetKind;
 use crate::nn::ModelArch;
 use crate::photonics::{NoiseModel, ShardingConfig};
-use crate::robustness::RobustnessConfig;
+use crate::robustness::{RobustnessConfig, VariationConfig};
 use crate::util::json::Json;
 
 /// Which training protocol to run.
@@ -87,6 +87,9 @@ pub struct JobConfig {
     /// Multi-chiplet sharding of every photonic layer; `None` (and
     /// `shards <= 1` at build time) keeps the single-mesh engine.
     pub sharding: Option<ShardingConfig>,
+    /// Process-variation chip instance + WDM sweep; `None` keeps every
+    /// existing metric and config dump bitwise-unchanged.
+    pub variation: Option<VariationConfig>,
 }
 
 impl Default for JobConfig {
@@ -110,6 +113,7 @@ impl Default for JobConfig {
             seed: 42,
             robustness: None,
             sharding: None,
+            variation: None,
         }
     }
 }
@@ -160,6 +164,9 @@ impl JobConfig {
         if let Some(sc) = &self.sharding {
             o.set("sharding", sc.to_json());
         }
+        if let Some(vc) = &self.variation {
+            o.set("variation", vc.to_json());
+        }
         o
     }
 
@@ -209,6 +216,7 @@ impl JobConfig {
             seed: num("seed", d.seed as f64) as u64,
             robustness: j.get("robustness").and_then(RobustnessConfig::from_json),
             sharding: j.get("sharding").and_then(ShardingConfig::from_json),
+            variation: j.get("variation").and_then(VariationConfig::from_json),
         })
     }
 }
@@ -241,6 +249,13 @@ mod tests {
                 shards: 4,
                 policy: crate::photonics::ShardPolicy::Grid,
             }),
+            variation: Some(VariationConfig {
+                gamma_std: 0.01,
+                coupler_std: 0.002,
+                loss_db_std: 0.05,
+                wdm_max_drift: 0.02,
+                sample: 3,
+            }),
         };
         let j = cfg.to_json();
         let back = JobConfig::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
@@ -254,6 +269,7 @@ mod tests {
         assert_eq!(back.seed, cfg.seed);
         assert_eq!(back.robustness, cfg.robustness);
         assert_eq!(back.sharding, cfg.sharding);
+        assert_eq!(back.variation, cfg.variation);
     }
 
     #[test]
@@ -270,6 +286,14 @@ mod tests {
         assert!(!cfg.to_json().dump().contains("sharding"));
         let back = JobConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.sharding, None);
+    }
+
+    #[test]
+    fn variation_key_absent_when_disabled() {
+        let cfg = JobConfig::default();
+        assert!(!cfg.to_json().dump().contains("variation"));
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.variation, None);
     }
 
     #[test]

@@ -20,8 +20,10 @@ use crate::coordinator::config::{JobConfig, Protocol};
 use crate::coordinator::metrics::MetricSink;
 use crate::data::{Augment, Dataset, DatasetKind, SynthSpec};
 use crate::nn::{build_model, EngineKind};
+use crate::photonics::dispersion::WdmSummary;
 use crate::profiler::CostBreakdown;
-use crate::robustness::{LifecycleReport, LifecycleRuntime};
+use crate::robustness::variation::analyze_wdm;
+use crate::robustness::{apply_variation, LifecycleReport, LifecycleRuntime, VariationOutcome};
 use crate::stages::ic::{calibrate_model, IcConfig};
 use crate::stages::pm::{copy_aux_params, map_model, PmConfig};
 use crate::stages::sl::{train, train_with_lifecycle, OptKind, SlConfig, SlReport};
@@ -42,6 +44,10 @@ pub fn job_seed(base: u64, index: u64) -> u64 {
     z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
     z ^ (z >> 31)
 }
+
+/// Fraction of a run's best test accuracy that defines the "queries to
+/// target" budget-parity metric (`JobSummary::zo_to_target_queries`).
+pub const ZO_TARGET_FRACTION: f32 = 0.9;
 
 /// Outcome of one job.
 #[derive(Clone, Debug)]
@@ -68,6 +74,15 @@ pub struct JobSummary {
     pub sl: Option<SlReport>,
     /// Lifecycle outcome when a `RobustnessConfig` supervised the run.
     pub lifecycle: Option<LifecycleReport>,
+    /// Process-variation outcome when `cfg.variation` perturbed devices.
+    pub variation: Option<VariationOutcome>,
+    /// Post-training WDM dispersion sweep when `cfg.variation` asked for it.
+    pub wdm: Option<WdmSummary>,
+    /// ZO hardware queries spent to reach `ZO_TARGET_FRACTION`·best_acc:
+    /// calibration queries (IC+PM) for L2ight, 0 for the calibration-free
+    /// scratch protocols, and the first target-reaching epoch's cumulative
+    /// queries for the ZO baselines (`None` if the trace never gets there).
+    pub zo_to_target_queries: Option<u64>,
     /// Stages the protocol skipped (e.g. `"pretrain"` when
     /// `pretrain_epochs == 0`; baselines skip `"pretrain"/"ic"/"pm"`).
     pub skipped_stages: Vec<&'static str>,
@@ -100,6 +115,18 @@ fn classes_of(ds: &Dataset) -> usize {
 
 fn scaled_zo(iters: usize, budget: f32) -> usize {
     ((iters as f32 * budget).round() as usize).max(4)
+}
+
+/// Cumulative ZO queries at the first epoch whose test accuracy reaches
+/// `ZO_TARGET_FRACTION`·best; `None` when no epoch in the trace got there
+/// (degenerate runs — e.g. zero epochs).
+fn zo_queries_to_target(r: &baselines::ZoTrainReport) -> Option<u64> {
+    let target = ZO_TARGET_FRACTION * r.best_test_acc;
+    r.epoch_test_acc
+        .iter()
+        .zip(&r.epoch_queries)
+        .find(|(&a, _)| a >= target)
+        .map(|(_, &q)| q)
 }
 
 fn ic_config(cfg: &JobConfig) -> IcConfig {
@@ -190,6 +217,22 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
         _ => EngineKind::Photonic { k: cfg.k, noise: cfg.noise },
     };
     let mut model = build_model(cfg.arch, kind, classes, cfg.width, &mut model_rng);
+    // Fabrication-time process variation is realized before any stage runs:
+    // the sampled chip instance is what IC/PM calibrate against and what
+    // lifecycle drift/faults compose on top of (variation-first overlays).
+    let variation = cfg
+        .variation
+        .filter(|v| v.has_variation())
+        .map(|v| apply_variation(&mut model, &v, cfg.seed));
+    if let Some(out) = &variation {
+        sink.emit_nums(
+            "variation_applied",
+            &[
+                ("power_penalty_db", out.power_penalty_db),
+                ("blocks", out.blocks as f64),
+            ],
+        );
+    }
     let (trainable, total) = model.param_counts();
     sink.emit(
         "job_start",
@@ -214,6 +257,9 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
         zo_queries: 0,
         sl: None,
         lifecycle: None,
+        variation,
+        wdm: None,
+        zo_to_target_queries: None,
         skipped_stages: Vec::new(),
         stage_secs: Vec::new(),
     };
@@ -266,6 +312,10 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
                 ],
             );
             mark_stage(&mut summary, &mut clock, "pm");
+            // L2ight reaches target accuracy at deployment: the mapped model
+            // is already trained, so its ZO bill is exactly the calibration
+            // (IC+PM) queries spent so far.
+            summary.zo_to_target_queries = Some(summary.zo_queries);
             // Stage 3: sparse subspace learning (fine-tune).
             let sl_cfg = baselines::l2ight_sl_config(
                 cfg.alpha_w,
@@ -291,6 +341,9 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
         }
         Protocol::L2ightSlScratch | Protocol::Rad | Protocol::SwatU => {
             summary.skipped_stages.extend(["pretrain", "ic", "pm"]);
+            // Calibration-free first-order protocols spend no ZO queries to
+            // reach their accuracy — the budget-parity metric is zero.
+            summary.zo_to_target_queries = Some(0);
             let base = base_sl(cfg, false);
             let sl_cfg = match cfg.protocol {
                 Protocol::L2ightSlScratch => {
@@ -343,8 +396,27 @@ pub fn run_job(cfg: &JobConfig, sink: &mut MetricSink) -> JobSummary {
             summary.best_acc = r.best_test_acc;
             summary.cost = r.cost;
             summary.zo_queries = r.queries;
+            summary.zo_to_target_queries = zo_queries_to_target(&r);
             mark_stage(&mut summary, &mut clock, "zo");
         }
+    }
+
+    // Post-training WDM wavelength sweep (read-only dispersion analysis of
+    // the deployed programmed phases).
+    if let Some(v) = cfg.variation.filter(|v| v.wdm_max_drift > 0.0) {
+        let w = analyze_wdm(&mut model, v.wdm_max_drift);
+        sink.emit_nums(
+            "wdm_done",
+            &[
+                ("max_drift", w.max_drift),
+                ("blocks", w.blocks as f64),
+                ("worst_rel_err", w.worst_rel_err),
+                ("mean_rel_err", w.mean_rel_err),
+                ("worst_mse", w.worst_mse),
+            ],
+        );
+        summary.wdm = Some(w);
+        mark_stage(&mut summary, &mut clock, "wdm");
     }
 
     sink.emit_nums(
@@ -386,6 +458,7 @@ mod tests {
             seed: 3,
             robustness: None,
             sharding: None,
+            variation: None,
         }
     }
 
@@ -493,6 +566,86 @@ mod tests {
         assert_eq!(drep.recoveries, 0);
         assert_eq!(drep.recovery_queries, 0);
         assert!(drep.trigger_step.is_some());
+    }
+
+    #[test]
+    fn variation_and_wdm_flow_through_the_driver() {
+        use crate::robustness::VariationConfig;
+        let mut sink = MetricSink::memory();
+        let base = {
+            let mut c = tiny_cfg(Protocol::L2ightSlScratch);
+            c.epochs = 2;
+            c
+        };
+        let plain = run_job(&base, &mut sink);
+        assert!(plain.variation.is_none());
+        assert!(plain.wdm.is_none());
+
+        let mut varied = base.clone();
+        varied.variation = Some(VariationConfig {
+            gamma_std: 0.01,
+            coupler_std: 0.01,
+            loss_db_std: 0.05,
+            wdm_max_drift: 0.02,
+            sample: 1,
+        });
+        let s = run_job(&varied, &mut sink);
+        let out = s.variation.expect("variation outcome");
+        assert!(out.blocks > 0);
+        assert!(out.power_penalty_db > 0.0);
+        let w = s.wdm.expect("wdm summary");
+        assert!(w.blocks > 0);
+        assert!(w.worst_rel_err > 0.0);
+        assert!(sink.last("variation_applied").is_some());
+        assert!(sink.last("wdm_done").is_some());
+        assert!(s.stage_secs.iter().any(|(n, _)| *n == "wdm"));
+
+        // Same config + seed ⇒ identical outcome: the Monte-Carlo sample is
+        // a pure function of (seed, sample index).
+        let s2 = run_job(&varied, &mut sink);
+        assert_eq!(s.final_acc, s2.final_acc);
+        assert_eq!(s.variation, s2.variation);
+        assert_eq!(s.wdm, s2.wdm);
+
+        // A different sample index is a different fabricated chip.
+        let mut other = varied.clone();
+        other.variation.as_mut().unwrap().sample = 2;
+        let s3 = run_job(&other, &mut sink);
+        assert_ne!(s.variation, s3.variation);
+
+        // WDM-only config: sweep reported, training metrics untouched.
+        let mut wdm_only = base.clone();
+        wdm_only.variation =
+            Some(VariationConfig { wdm_max_drift: 0.02, ..Default::default() });
+        let sw = run_job(&wdm_only, &mut sink);
+        assert!(sw.variation.is_none(), "wdm-only must not perturb devices");
+        assert!(sw.wdm.is_some());
+        assert_eq!(sw.final_acc, plain.final_acc);
+        assert_eq!(sw.cost, plain.cost);
+        assert_eq!(sw.zo_queries, plain.zo_queries);
+    }
+
+    #[test]
+    fn zo_to_target_queries_is_protocol_aware() {
+        // L2ight: the calibration bill — positive and at most the total.
+        let mut sink = MetricSink::memory();
+        let s = run_job(&tiny_cfg(Protocol::L2ight), &mut sink);
+        let q = s.zo_to_target_queries.expect("l2ight reports calibration queries");
+        assert!(q > 0 && q <= s.zo_queries, "calib {q} vs total {}", s.zo_queries);
+
+        // Calibration-free scratch protocol: zero by definition.
+        let mut cfg = tiny_cfg(Protocol::Rad);
+        cfg.epochs = 1;
+        assert_eq!(run_job(&cfg, &mut sink).zo_to_target_queries, Some(0));
+
+        // ZO baseline: cumulative queries at the first epoch reaching
+        // 0.9×its own best — always reached (the best epoch qualifies).
+        let mut cfg = tiny_cfg(Protocol::MixedTrn);
+        cfg.epochs = 2;
+        cfg.n_train = 32;
+        let s = run_job(&cfg, &mut sink);
+        let q = s.zo_to_target_queries.expect("trace must reach 0.9×its own best");
+        assert!(q > 0 && q <= s.zo_queries);
     }
 
     #[test]

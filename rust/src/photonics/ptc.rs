@@ -57,6 +57,32 @@ impl PhaseOverlay {
             phases[idx] = val;
         }
     }
+
+    /// Compose two overlays: `self` acts first, `later` second. Affine
+    /// composition: gain = g₁·g₂, delta = d₁·g₂ + d₂; `self`'s stuck values
+    /// pass through `later`'s affine map, and `later`'s stuck entries win
+    /// because `apply` forces stuck values in order. The composition is a
+    /// pure function of the two overlays (deterministic — the contract the
+    /// robustness subsystem needs) and agrees with sequential application
+    /// up to one f64 rounding. Used to layer lifecycle drift/faults on top
+    /// of a static process-variation overlay.
+    pub fn then(&self, later: &PhaseOverlay) -> PhaseOverlay {
+        let m = self.delta.len();
+        debug_assert_eq!(m, later.delta.len());
+        let mut gain = vec![1.0; m];
+        let mut delta = vec![0.0; m];
+        for i in 0..m {
+            gain[i] = self.gain[i] * later.gain[i];
+            delta[i] = self.delta[i] * later.gain[i] + later.delta[i];
+        }
+        let mut stuck: Vec<(usize, f64)> = self
+            .stuck
+            .iter()
+            .map(|&(idx, val)| (idx, val * later.gain[idx] + later.delta[idx]))
+            .collect();
+        stuck.extend(later.stuck.iter().copied());
+        PhaseOverlay { delta, gain, stuck }
+    }
 }
 
 /// One photonic tensor core.
@@ -443,6 +469,49 @@ mod tests {
         ptc.set_overlays(None, None);
         let cleared = ptc.realized_matrix();
         assert_close(&before.data, &cleared.data, 0.0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn overlay_composition_matches_sequential_apply() {
+        let mut rng = Rng::new(11);
+        let m = 12;
+        let mut a = PhaseOverlay::identity(m);
+        let mut b = PhaseOverlay::identity(m);
+        for i in 0..m {
+            a.gain[i] = 1.0 + 0.1 * rng.normal();
+            a.delta[i] = 0.05 * rng.normal();
+            b.gain[i] = 1.0 + 0.1 * rng.normal();
+            b.delta[i] = 0.05 * rng.normal();
+        }
+        a.stuck.push((3, 0.9));
+        b.stuck.push((7, -0.4));
+        // b also re-freezes an index a froze: later overlay must win.
+        b.stuck.push((3, 0.1));
+
+        let phases: Vec<f64> = (0..m).map(|i| 0.2 * i as f64 - 1.0).collect();
+        let mut sequential = phases.clone();
+        a.apply(&mut sequential);
+        b.apply(&mut sequential);
+        let mut composed = phases;
+        a.then(&b).apply(&mut composed);
+        for (i, (s, c)) in sequential.iter().zip(&composed).enumerate() {
+            // Affine composition agrees with sequential apply up to one
+            // f64 rounding; stuck indices are forced, hence exact.
+            assert!((s - c).abs() <= 1e-12, "index {i}: sequential {s} vs composed {c}");
+        }
+        assert_eq!(sequential[3], composed[3], "later stuck entry must win exactly");
+        assert_eq!(sequential[7], composed[7]);
+
+        // Composing with identity on either side is a no-op.
+        let id = PhaseOverlay::identity(m);
+        let mut left = vec![0.3; m];
+        let mut right = vec![0.3; m];
+        id.then(&a).apply(&mut left);
+        a.then(&id).apply(&mut right);
+        let mut want = vec![0.3; m];
+        a.apply(&mut want);
+        assert_eq!(left, want);
+        assert_eq!(right, want);
     }
 
     #[test]

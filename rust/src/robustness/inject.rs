@@ -138,6 +138,36 @@ pub struct FaultSpec {
     pub kind: FaultKind,
 }
 
+impl FaultSpec {
+    /// Parse a CLI fault list: comma-separated `kind@step` with kinds
+    /// `stuck` | `dead` (e.g. `stuck@8,dead@12`). Every malformed token is
+    /// a hard error carrying the accepted grammar — unknown kinds, missing
+    /// or non-numeric steps, and empty tokens are never silently dropped.
+    pub fn parse_list(spec: &str) -> Result<Vec<FaultSpec>, String> {
+        const GRAMMAR: &str =
+            "expected comma-separated kind@step with kind one of stuck|dead \
+             and step a non-negative integer (e.g. --faults stuck@8,dead@12)";
+        let mut out = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(format!("empty token in fault spec {spec:?}: {GRAMMAR}"));
+            }
+            let (kind, step) = part
+                .split_once('@')
+                .ok_or_else(|| format!("bad fault token {part:?} (no '@'): {GRAMMAR}"))?;
+            let kind = FaultKind::parse(kind.trim())
+                .ok_or_else(|| format!("unknown fault kind {kind:?} in {part:?}: {GRAMMAR}"))?;
+            let step: u64 = step
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad fault step {step:?} in {part:?}: {GRAMMAR}"))?;
+            out.push(FaultSpec { step, kind });
+        }
+        Ok(out)
+    }
+}
+
 /// A resolved fault: concrete placement of a `FaultSpec`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct FaultEvent {
@@ -204,6 +234,22 @@ impl FaultPlan {
 mod tests {
     use super::*;
     use crate::util::prop::quickcheck;
+
+    #[test]
+    fn fault_list_parses_grammar_and_rejects_junk_loudly() {
+        let specs = FaultSpec::parse_list("stuck@8, dead@12").unwrap();
+        assert_eq!(
+            specs,
+            vec![
+                FaultSpec { step: 8, kind: FaultKind::StuckPhase },
+                FaultSpec { step: 12, kind: FaultKind::DeadMzi },
+            ]
+        );
+        for bad in ["stuck", "gremlin@3", "stuck@x", "stuck@-1", "stuck@3,,dead@4", ""] {
+            let err = FaultSpec::parse_list(bad).unwrap_err();
+            assert!(err.contains("stuck|dead"), "{bad:?} error lacks grammar: {err}");
+        }
+    }
 
     #[test]
     fn prop_drift_split_advance_is_bitwise_identical() {

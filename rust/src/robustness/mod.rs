@@ -21,12 +21,24 @@
 //! drives the runtime via `stages::sl::train_with_lifecycle`. With the
 //! config absent every existing metric is bitwise-unchanged — the hooks are
 //! `Option` checks and no RNG stream is touched.
+//!
+//! Static fabrication-time variation lives next door:
+//!
+//! * [`variation`] — seed-derived Monte-Carlo process-variation sampler
+//!   (per-device γ, coupler splitting ratio, insertion loss) installed as a
+//!   base `PhaseOverlay` that lifecycle drift/faults compose on top of.
+//! * [`yield_est`] — N-sample yield estimation (pass-rate under
+//!   accuracy/power constraints, per-metric mean/std/worst-case).
 
 pub mod inject;
+pub mod variation;
 pub mod watchdog;
+pub mod yield_est;
 
 pub use inject::{DriftConfig, DriftProcess, FaultKind, FaultPlan, FaultSpec};
+pub use variation::{analyze_wdm, apply_variation, VariationConfig, VariationOutcome};
 pub use watchdog::{LifecycleReport, LifecycleRuntime, WatchdogConfig};
+pub use yield_est::{estimate_yield, YieldConstraints, YieldReport, YieldStat};
 
 use crate::util::json::Json;
 

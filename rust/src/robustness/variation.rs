@@ -1,0 +1,395 @@
+//! Deterministic Monte-Carlo process-variation sampling (Appendix A.3's
+//! static fabrication errors, promoted from fixed noise knobs to a seeded
+//! per-chip-instance sampler).
+//!
+//! Each Monte-Carlo *sample* is one fabricated chip instance: per-device
+//! draws of phase-shifter γ error (multiplicative), directional-coupler
+//! splitting-ratio error (first-order equivalent to an additive phase
+//! offset of twice the ratio deviation), and insertion loss. The phase-
+//! domain effects are injected at realization time through the `Ptc`
+//! `PhaseOverlay` seam — the same seam the lifecycle subsystem uses — so
+//! a variation sample perturbs the realized unitaries exactly once,
+//! survives re-programming, and composes with drift/fault overlays via
+//! `PhaseOverlay::then`. Insertion loss is amplitude-domain and cannot be
+//! expressed through a (unitary) phase overlay; lossy devices are instead
+//! tracked as a worst-tile optical power penalty that feeds the yield
+//! estimator's power constraint.
+//!
+//! Determinism contract: every draw comes from a fresh
+//! `Rng::with_stream(seed ⊕ tag ⊕ mix(sample), 2·block | which)` keyed by
+//! the *logical* block index in model traversal order — a pure function of
+//! (config, seed), independent of thread count, SIMD level, and shard
+//! count (sharded meshes are visited through the logical-order iterator).
+
+use crate::nn::{Model, ProjEngine};
+use crate::photonics::dispersion::{self, DispersionModel, DispersionReport, WdmSummary};
+use crate::photonics::ptc::{PhaseOverlay, Ptc};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// Stream tag for variation draws (disjoint from the lifecycle tags).
+const VARIATION_TAG: u64 = 0xfab5eed;
+
+/// SplitMix64 increment, used to spread the sample index across the seed.
+const SAMPLE_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// One process-variation scenario: per-device perturbation scales plus the
+/// Monte-Carlo sample index selecting a chip instance. All-zero scales with
+/// `wdm_max_drift == 0` is "disabled" and must be bitwise-neutral.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct VariationConfig {
+    /// Std of the extra multiplicative phase-shifter γ error (1 + N(0,σ)).
+    pub gamma_std: f64,
+    /// Std of the coupler splitting-ratio error; maps to an additive phase
+    /// offset of 2× the draw (first-order MZI equivalence).
+    pub coupler_std: f64,
+    /// Std of per-device insertion loss in dB (draws are folded to |·|;
+    /// loss is amplitude-domain, tracked as a power penalty, not a phase).
+    pub loss_db_std: f64,
+    /// WDM wavelength-sweep span for post-training dispersion analysis
+    /// (`DispersionModel::max_drift`); 0 disables the sweep.
+    pub wdm_max_drift: f64,
+    /// Monte-Carlo chip-instance index (each sample is a different chip).
+    pub sample: u64,
+}
+
+impl VariationConfig {
+    /// Whether the config does anything at all (overlay or WDM sweep).
+    pub fn active(&self) -> bool {
+        self.has_variation() || self.wdm_max_drift > 0.0
+    }
+
+    /// Whether any per-device draw has nonzero scale (i.e. an overlay is
+    /// actually installed).
+    pub fn has_variation(&self) -> bool {
+        self.gamma_std > 0.0 || self.coupler_std > 0.0 || self.loss_db_std > 0.0
+    }
+
+    /// Whether this is a pure WDM-sweep row (no device perturbation).
+    pub fn is_wdm_only(&self) -> bool {
+        self.wdm_max_drift > 0.0 && !self.has_variation()
+    }
+
+    /// Parse a CLI spec: comma-separated `key=value` with keys
+    /// `sigma` (shorthand: sets gamma+coupler+loss), `gamma`, `coupler`,
+    /// `loss`, `wdm`, `sample`. Unknown or malformed tokens are a hard
+    /// error carrying the accepted grammar — never silently dropped.
+    pub fn parse_spec(spec: &str) -> Result<VariationConfig, String> {
+        const GRAMMAR: &str = "expected comma-separated key=value with keys \
+             sigma=<f64> (shorthand for gamma+coupler+loss), gamma=<f64>, \
+             coupler=<f64>, loss=<f64 dB>, wdm=<f64>, sample=<u64> \
+             (e.g. --variation sigma=0.01,sample=3)";
+        let mut cfg = VariationConfig::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(format!("empty token in variation spec {spec:?}: {GRAMMAR}"));
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad variation token {part:?} (no '='): {GRAMMAR}"))?;
+            let bad = |what: &str| format!("bad {what} value {val:?} in {part:?}: {GRAMMAR}");
+            let num = |what: &str| -> Result<f64, String> {
+                let v: f64 = val.trim().parse().map_err(|_| bad(what))?;
+                if !v.is_finite() || v < 0.0 {
+                    return Err(bad(what));
+                }
+                Ok(v)
+            };
+            match key.trim() {
+                "sigma" => {
+                    let s = num("sigma")?;
+                    cfg.gamma_std = s;
+                    cfg.coupler_std = s;
+                    cfg.loss_db_std = s;
+                }
+                "gamma" => cfg.gamma_std = num("gamma")?,
+                "coupler" => cfg.coupler_std = num("coupler")?,
+                "loss" => cfg.loss_db_std = num("loss")?,
+                "wdm" => cfg.wdm_max_drift = num("wdm")?,
+                "sample" => cfg.sample = val.trim().parse().map_err(|_| bad("sample"))?,
+                other => {
+                    return Err(format!(
+                        "unknown variation key {other:?} in {part:?}: {GRAMMAR}"
+                    ));
+                }
+            }
+        }
+        if !cfg.active() {
+            return Err(format!(
+                "variation spec {spec:?} enables nothing (all scales zero): {GRAMMAR}"
+            ));
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("gamma_std", Json::Num(self.gamma_std));
+        o.set("coupler_std", Json::Num(self.coupler_std));
+        o.set("loss_db_std", Json::Num(self.loss_db_std));
+        o.set("wdm_max_drift", Json::Num(self.wdm_max_drift));
+        o.set("sample", Json::Num(self.sample as f64));
+        o
+    }
+
+    /// Parse from a config-dump object; `None` when absent or malformed.
+    pub fn from_json(j: &Json) -> Option<VariationConfig> {
+        j.as_obj()?;
+        let num = |k: &str, d: f64| j.get(k).and_then(|v| v.as_f64()).unwrap_or(d);
+        Some(VariationConfig {
+            gamma_std: num("gamma_std", 0.0),
+            coupler_std: num("coupler_std", 0.0),
+            loss_db_std: num("loss_db_std", 0.0),
+            wdm_max_drift: num("wdm_max_drift", 0.0),
+            sample: num("sample", 0.0) as u64,
+        })
+    }
+}
+
+/// What `apply_variation` did to the model: block count and the worst-tile
+/// optical power penalty (the yield estimator's power-constraint input).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct VariationOutcome {
+    /// Worst per-block insertion-loss penalty along a k-mode Reck path, dB.
+    pub power_penalty_db: f64,
+    /// Photonic blocks perturbed.
+    pub blocks: usize,
+}
+
+/// Draw one mesh's overlay: per-device (γ gain, coupler phase, loss) in
+/// fixed device order from a stream keyed by (sample, logical block, U/V).
+/// Returns the overlay plus the mean per-device insertion loss in dB.
+fn sample_mesh(cfg: &VariationConfig, seed: u64, stream: u64, m: usize) -> (PhaseOverlay, f64) {
+    let mixed = seed ^ VARIATION_TAG ^ cfg.sample.wrapping_mul(SAMPLE_MIX);
+    let mut rng = Rng::with_stream(mixed, stream);
+    let mut ov = PhaseOverlay::identity(m);
+    let mut loss_sum = 0.0f64;
+    for i in 0..m {
+        ov.gain[i] = 1.0 + cfg.gamma_std * rng.normal();
+        ov.delta[i] = 2.0 * cfg.coupler_std * rng.normal();
+        loss_sum += (cfg.loss_db_std * rng.normal()).abs();
+    }
+    (ov, if m > 0 { loss_sum / m as f64 } else { 0.0 })
+}
+
+/// Install one block's variation overlays (composing over any overlay that
+/// is already present, variation-first) and return its path power penalty.
+fn install_block(cfg: &VariationConfig, seed: u64, block: u64, ptc: &mut Ptc) -> f64 {
+    let m = ptc.n_phases() / 2;
+    let (var_u, u_db) = sample_mesh(cfg, seed, 2 * block, m);
+    let (var_v, v_db) = sample_mesh(cfg, seed, 2 * block + 1, m);
+    let (cur_u, cur_v) = {
+        let (u, v) = ptc.overlays();
+        (u.cloned(), v.cloned())
+    };
+    let u = match cur_u {
+        Some(later) => var_u.then(&later),
+        None => var_u,
+    };
+    let v = match cur_v {
+        Some(later) => var_v.then(&later),
+        None => var_v,
+    };
+    ptc.set_overlays(Some(u), Some(v));
+    // Longest Reck path traverses 2k−3 MZIs per mesh; light crosses both
+    // the U and the V* mesh of the tile.
+    let depth = (2 * ptc.k).saturating_sub(3).max(1) as f64;
+    (u_db + v_db) * depth
+}
+
+/// Sample chip instance `cfg.sample` and install its overlays on every
+/// photonic block of the model, in logical block order (bitwise-identical
+/// at any shard count). Serial scalar f64 throughout — thread- and
+/// SIMD-level-neutral by construction.
+pub fn apply_variation(model: &mut Model, cfg: &VariationConfig, seed: u64) -> VariationOutcome {
+    if !cfg.has_variation() {
+        return VariationOutcome::default();
+    }
+    let mut block = 0u64;
+    let mut worst = 0.0f64;
+    model.for_each_layer(|l| match l.engine_mut() {
+        Some(ProjEngine::Photonic { mesh, .. }) => {
+            for ptc in mesh.ptcs.iter_mut() {
+                worst = worst.max(install_block(cfg, seed, block, ptc));
+                block += 1;
+            }
+            mesh.invalidate();
+        }
+        Some(ProjEngine::PhotonicSharded { mesh, .. }) => {
+            mesh.for_each_ptc_logical_mut(|ptc| {
+                worst = worst.max(install_block(cfg, seed, block, ptc));
+                block += 1;
+            });
+        }
+        _ => {}
+    });
+    VariationOutcome { power_penalty_db: worst, blocks: block as usize }
+}
+
+/// Post-training WDM sweep: run the dispersion analysis over every photonic
+/// block in logical order and fold the per-block reports into one
+/// [`WdmSummary`]. Reads programmed phases only — the model's realized
+/// state is untouched (sharded caches may recompute, bitwise-identically).
+pub fn analyze_wdm(model: &mut Model, max_drift: f64) -> WdmSummary {
+    let dm = DispersionModel { max_drift };
+    let mut reports: Vec<DispersionReport> = Vec::new();
+    model.for_each_layer(|l| match l.engine_mut() {
+        Some(ProjEngine::Photonic { mesh, .. }) => {
+            for ptc in mesh.ptcs.iter() {
+                reports.push(dispersion::analyze(ptc, dm));
+            }
+        }
+        Some(ProjEngine::PhotonicSharded { mesh, .. }) => {
+            mesh.for_each_ptc_logical_mut(|ptc| reports.push(dispersion::analyze(ptc, dm)));
+        }
+        _ => {}
+    });
+    WdmSummary::from_reports(max_drift, &reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{build_model, Act, EngineKind, ModelArch};
+    use crate::photonics::NoiseModel;
+    use crate::util::prop::assert_close;
+
+    fn model(kind: EngineKind) -> Model {
+        let mut rng = Rng::new(77);
+        build_model(ModelArch::MlpVowel, kind, 4, 0.5, &mut rng)
+    }
+
+    fn sigma(s: f64) -> VariationConfig {
+        VariationConfig { gamma_std: s, coupler_std: s, loss_db_std: s, ..Default::default() }
+    }
+
+    #[test]
+    fn parse_spec_accepts_grammar_and_rejects_junk() {
+        let v = VariationConfig::parse_spec("sigma=0.01,sample=3").unwrap();
+        assert_eq!(v.gamma_std, 0.01);
+        assert_eq!(v.coupler_std, 0.01);
+        assert_eq!(v.loss_db_std, 0.01);
+        assert_eq!(v.sample, 3);
+        let v = VariationConfig::parse_spec("gamma=0.02,wdm=0.005").unwrap();
+        assert_eq!(v.gamma_std, 0.02);
+        assert_eq!(v.coupler_std, 0.0);
+        assert_eq!(v.wdm_max_drift, 0.005);
+        for bad in [
+            "sigma",           // no '='
+            "sigma=zebra",     // not a number
+            "sigma=-0.1",      // negative scale
+            "chaos=0.1",       // unknown key
+            "sigma=0.1,,",     // empty token
+            "sample=2",        // enables nothing
+            "",                // empty spec
+        ] {
+            let err = VariationConfig::parse_spec(bad).unwrap_err();
+            assert!(err.contains("sigma=<f64>"), "{bad:?} error lacks grammar: {err}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_and_absent_is_none() {
+        let v = VariationConfig {
+            gamma_std: 0.01,
+            coupler_std: 0.002,
+            loss_db_std: 0.1,
+            wdm_max_drift: 0.02,
+            sample: 9,
+        };
+        let back = VariationConfig::from_json(&v.to_json()).unwrap();
+        assert_eq!(v, back);
+        assert!(VariationConfig::from_json(&Json::Num(1.0)).is_none());
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_sample_indexed() {
+        let (a, la) = sample_mesh(&sigma(0.01), 42, 3, 16);
+        let (b, lb) = sample_mesh(&sigma(0.01), 42, 3, 16);
+        assert_eq!(a, b, "same (seed, sample, stream) must redraw identically");
+        assert_eq!(la, lb);
+        let (c, _) = sample_mesh(&sigma(0.01), 42, 4, 16);
+        assert_ne!(a, c, "different stream must differ");
+        let mut other = sigma(0.01);
+        other.sample = 1;
+        let (d, _) = sample_mesh(&other, 42, 3, 16);
+        assert_ne!(a, d, "different sample index must be a different chip");
+    }
+
+    #[test]
+    fn variation_perturbs_forward_and_is_shard_invariant() {
+        let x = crate::linalg::Mat::randn(8, 3, 1.0, &mut Rng::new(1));
+        let act = Act::from_features(x, 3);
+        let kinds = [
+            EngineKind::Photonic { k: 4, noise: NoiseModel::quant_only(8) },
+            EngineKind::PhotonicSharded {
+                k: 4,
+                noise: NoiseModel::quant_only(8),
+                shards: 2,
+                policy: crate::photonics::ShardPolicy::Row,
+            },
+        ];
+        let mut outs = Vec::new();
+        for kind in kinds {
+            let mut m = model(kind);
+            let clean = m.forward(&act, false);
+            let out = apply_variation(&mut m, &sigma(0.02), 42);
+            assert!(out.blocks > 0);
+            assert!(out.power_penalty_db > 0.0);
+            let varied = m.forward(&act, false);
+            let diff: f32 = clean
+                .mat
+                .data
+                .iter()
+                .zip(&varied.mat.data)
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            assert!(diff > 1e-4, "variation had no effect on the forward pass");
+            outs.push((out, varied.mat.data.clone()));
+        }
+        // Same chip instance at shard counts 1 and 2: bitwise-equal forward.
+        assert_eq!(outs[0].0, outs[1].0, "power penalty must be shard-count-invariant");
+        assert_close(&outs[0].1, &outs[1].1, 0.0, 0.0).unwrap();
+    }
+
+    #[test]
+    fn wdm_sweep_is_shard_invariant_and_read_only() {
+        let x = crate::linalg::Mat::randn(8, 3, 1.0, &mut Rng::new(1));
+        let act = Act::from_features(x, 3);
+        let kinds = [
+            EngineKind::Photonic { k: 4, noise: NoiseModel::quant_only(8) },
+            EngineKind::PhotonicSharded {
+                k: 4,
+                noise: NoiseModel::quant_only(8),
+                shards: 2,
+                policy: crate::photonics::ShardPolicy::Row,
+            },
+        ];
+        let mut summaries = Vec::new();
+        for kind in kinds {
+            let mut m = model(kind);
+            let before = m.forward(&act, false);
+            let s = analyze_wdm(&mut m, 0.02);
+            assert!(s.blocks > 0);
+            assert!(s.worst_rel_err > 0.0, "a programmed mesh must show some dispersion");
+            assert!(s.mean_rel_err <= s.worst_rel_err);
+            let after = m.forward(&act, false);
+            assert_close(&before.mat.data, &after.mat.data, 0.0, 0.0).unwrap();
+            summaries.push(s);
+        }
+        assert_eq!(summaries[0], summaries[1], "WDM summary must be shard-count-invariant");
+    }
+
+    #[test]
+    fn disabled_variation_is_bitwise_neutral() {
+        let x = crate::linalg::Mat::randn(8, 3, 1.0, &mut Rng::new(1));
+        let act = Act::from_features(x, 3);
+        let mut m = model(EngineKind::Photonic { k: 4, noise: NoiseModel::quant_only(8) });
+        let before = m.forward(&act, false);
+        let out = apply_variation(&mut m, &VariationConfig::default(), 42);
+        assert_eq!(out, VariationOutcome::default());
+        let after = m.forward(&act, false);
+        assert_close(&before.mat.data, &after.mat.data, 0.0, 0.0).unwrap();
+    }
+}

@@ -104,6 +104,12 @@ struct BlockState {
     /// |realized U| captured at deployment (post-IC/PM), the probe reference.
     ref_u_abs: Vec<f32>,
     ref_v_abs: Vec<f32>,
+    /// Overlays already installed at deployment (e.g. a process-variation
+    /// chip instance). Lifecycle overlays compose on top of these instead
+    /// of overwriting them; `None` keeps the historical install path
+    /// bitwise-unchanged.
+    base_u: Option<PhaseOverlay>,
+    base_v: Option<PhaseOverlay>,
     drift_u: Option<DriftProcess>,
     drift_v: Option<DriftProcess>,
     dead: bool,
@@ -228,6 +234,10 @@ impl LifecycleRuntime {
                 let (u, v) = ptc.realized_uv();
                 let ref_u_abs = u.data.iter().map(|a| a.abs()).collect();
                 let ref_v_abs = v.data.iter().map(|a| a.abs()).collect();
+                let (base_u, base_v) = {
+                    let (bu, bv) = ptc.overlays();
+                    (bu.cloned(), bv.cloned())
+                };
                 let (drift_u, drift_v) = match cfg.drift {
                     Some(dc) => (
                         Some(DriftProcess::new(dc, seed, 2 * gi as u64, m)),
@@ -242,6 +252,8 @@ impl LifecycleRuntime {
                     k,
                     ref_u_abs,
                     ref_v_abs,
+                    base_u,
+                    base_v,
                     drift_u,
                     drift_v,
                     dead: false,
@@ -304,7 +316,18 @@ impl LifecycleRuntime {
                 };
                 u_ov.stuck = plan.stuck_at(gi, false, t);
                 v_ov.stuck = plan.stuck_at(gi, true, t);
-                mesh.ptcs[blk.local].set_overlays(Some(u_ov), Some(v_ov));
+                // Lifecycle acts on top of whatever was installed at
+                // deployment (process variation); without a base this is
+                // the historical direct install, bitwise-unchanged.
+                let u_inst = match &blk.base_u {
+                    Some(b) => b.then(&u_ov),
+                    None => u_ov,
+                };
+                let v_inst = match &blk.base_v {
+                    Some(b) => b.then(&v_ov),
+                    None => v_ov,
+                };
+                mesh.ptcs[blk.local].set_overlays(Some(u_inst), Some(v_inst));
                 touched = true;
             }
             if touched {
@@ -537,6 +560,46 @@ mod tests {
         assert_eq!(rep.trigger_step, Some(2));
         assert_eq!(rep.recoveries, 0);
         assert_eq!(rep.recovery_queries, 0);
+    }
+
+    #[test]
+    fn lifecycle_composes_over_variation_base_overlay() {
+        use crate::robustness::variation::{apply_variation, VariationConfig};
+        let mut model = tiny_photonic_model();
+        let vcfg = VariationConfig {
+            gamma_std: 0.01,
+            coupler_std: 0.01,
+            loss_db_std: 0.01,
+            ..Default::default()
+        };
+        apply_variation(&mut model, &vcfg, 42);
+        let mut base_gains: Vec<Vec<f64>> = Vec::new();
+        for_each_photonic(&mut model, |_, mesh, _| {
+            for ptc in mesh.ptcs.iter() {
+                base_gains.push(ptc.overlays().0.expect("variation installed").gain.clone());
+            }
+        });
+
+        // Faults only, no drift: the lifecycle overlay is affine-identity
+        // plus stuck entries, so the composed gain must still be exactly
+        // the variation gain after the fault step installs overlays.
+        let mut rt = LifecycleRuntime::new(&cfg(false, true, None), &mut model, 42);
+        for _ in 0..3 {
+            rt.begin_step(&mut model);
+        }
+        let mut seen = 0usize;
+        let mut stuck_seen = 0usize;
+        for_each_photonic(&mut model, |_, mesh, _| {
+            for ptc in mesh.ptcs.iter() {
+                let (u, v) = ptc.overlays();
+                let u = u.expect("overlay dropped by lifecycle install");
+                assert_eq!(u.gain, base_gains[seen], "variation gain lost in composition");
+                stuck_seen += u.stuck.len() + v.map_or(0, |o| o.stuck.len());
+                seen += 1;
+            }
+        });
+        assert_eq!(seen, base_gains.len());
+        assert!(stuck_seen >= 1, "the step-2 fault never landed in a composed overlay");
     }
 
     #[test]

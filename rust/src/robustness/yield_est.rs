@@ -1,0 +1,302 @@
+//! Monte-Carlo yield estimation over process-variation samples.
+//!
+//! The template is SNIPPETS.md snippet 2's `OptimizationConstraints` /
+//! `yield_estimate`: run N chip instances of one configuration, check each
+//! against accuracy and optical-power constraints, and report the
+//! pass-rate plus per-metric mean/std/worst-case. Each sample is a full
+//! `run_job` with `variation.sample = i` — the whole L2ight flow on that
+//! chip instance — so the yield number answers the deployment question
+//! "what fraction of fabricated chips does this protocol rescue?".
+//!
+//! Determinism: samples fan out over the shared pool with `parallel_map`
+//! (results in sample order), each sample is a pure function of its
+//! config, and all aggregation is sequential scalar f64 — so the report
+//! is bitwise-identical at any thread count and shard count within a
+//! SIMD level (pinned by `tests/variation_determinism.rs`).
+
+use super::variation::VariationConfig;
+use crate::coordinator::config::JobConfig;
+use crate::coordinator::driver::run_job;
+use crate::coordinator::metrics::MetricSink;
+use crate::profiler::CostBreakdown;
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+
+/// Pass/fail constraints a chip instance must meet to count toward yield.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct YieldConstraints {
+    /// Minimum final test accuracy.
+    pub min_acc: f64,
+    /// Maximum worst-tile optical power penalty, dB.
+    pub max_power_penalty_db: f64,
+}
+
+impl Default for YieldConstraints {
+    fn default() -> Self {
+        YieldConstraints { min_acc: 0.25, max_power_penalty_db: 3.0 }
+    }
+}
+
+/// Mean / population-std / worst-case of one metric across samples.
+/// "Worst" is metric-directional: lowest accuracy, highest penalty.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct YieldStat {
+    pub mean: f64,
+    pub std: f64,
+    pub worst: f64,
+}
+
+/// Whether larger values of a metric are worse (penalties, query counts)
+/// or better (accuracies).
+enum Worst {
+    Min,
+    Max,
+}
+
+fn stat(values: &[f64], dir: Worst) -> YieldStat {
+    if values.is_empty() {
+        return YieldStat::default();
+    }
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    let worst = values
+        .iter()
+        .copied()
+        .fold(values[0], |a, b| match dir {
+            Worst::Min => a.min(b),
+            Worst::Max => a.max(b),
+        });
+    YieldStat { mean, std: var.sqrt(), worst }
+}
+
+impl YieldStat {
+    fn to_json(self) -> Json {
+        let mut o = Json::obj();
+        o.set("mean", Json::Num(self.mean));
+        o.set("std", Json::Num(self.std));
+        o.set("worst", Json::Num(self.worst));
+        o
+    }
+}
+
+/// One chip instance's outcome.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleOutcome {
+    pub sample: u64,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    pub power_penalty_db: f64,
+    /// ZO queries spent when the run first reached its accuracy target
+    /// (`None`: never reached — see `driver::ZO_TARGET_FRACTION`).
+    pub zo_to_target_queries: Option<u64>,
+    pub pass: bool,
+}
+
+/// The full yield report for one configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct YieldReport {
+    pub samples: usize,
+    pub passed: usize,
+    /// passed / samples.
+    pub pass_rate: f64,
+    pub constraints: YieldConstraints,
+    pub final_acc: YieldStat,
+    pub best_acc: YieldStat,
+    pub power_penalty_db: YieldStat,
+    /// Samples whose run reached the ZO accuracy target.
+    pub zo_target_reached: usize,
+    /// Stats over `zo_to_target_queries` of the samples that reached it.
+    pub zo_to_target_queries: Option<YieldStat>,
+    /// Total measured hardware cost across every sample, folded together.
+    pub cost: CostBreakdown,
+    pub per_sample: Vec<SampleOutcome>,
+}
+
+impl YieldReport {
+    /// Deterministic JSON (BTreeMap key order + canonical float formatting).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("schema", Json::Num(1.0));
+        o.set("samples", Json::Num(self.samples as f64));
+        o.set("passed", Json::Num(self.passed as f64));
+        o.set("pass_rate", Json::Num(self.pass_rate));
+        let mut cons = Json::obj();
+        cons.set("min_acc", Json::Num(self.constraints.min_acc));
+        cons.set("max_power_penalty_db", Json::Num(self.constraints.max_power_penalty_db));
+        o.set("constraints", cons);
+        o.set("final_acc", self.final_acc.to_json());
+        o.set("best_acc", self.best_acc.to_json());
+        o.set("power_penalty_db", self.power_penalty_db.to_json());
+        o.set("zo_target_reached", Json::Num(self.zo_target_reached as f64));
+        o.set(
+            "zo_to_target_queries",
+            match self.zo_to_target_queries {
+                Some(s) => s.to_json(),
+                None => Json::Null,
+            },
+        );
+        let mut cost = Json::obj();
+        cost.set("fwd_energy", Json::Num(self.cost.fwd_energy));
+        cost.set("wgrad_energy", Json::Num(self.cost.wgrad_energy));
+        cost.set("fbk_energy", Json::Num(self.cost.fbk_energy));
+        cost.set("fwd_steps", Json::Num(self.cost.fwd_steps));
+        cost.set("wgrad_steps", Json::Num(self.cost.wgrad_steps));
+        cost.set("fbk_steps", Json::Num(self.cost.fbk_steps));
+        o.set("cost", cost);
+        let rows: Vec<Json> = self
+            .per_sample
+            .iter()
+            .map(|s| {
+                let mut r = Json::obj();
+                r.set("sample", Json::Num(s.sample as f64));
+                r.set("final_acc", Json::Num(s.final_acc));
+                r.set("best_acc", Json::Num(s.best_acc));
+                r.set("power_penalty_db", Json::Num(s.power_penalty_db));
+                r.set(
+                    "zo_to_target_queries",
+                    match s.zo_to_target_queries {
+                        Some(q) => Json::Num(q as f64),
+                        None => Json::Null,
+                    },
+                );
+                r.set("pass", Json::Bool(s.pass));
+                r
+            })
+            .collect();
+        o.set("per_sample", Json::Arr(rows));
+        o
+    }
+}
+
+/// Run `samples` chip instances of `base` (its `variation` must be active;
+/// sample indices 0..N override `variation.sample`) and fold the outcomes
+/// into a yield report.
+pub fn estimate_yield(
+    base: &JobConfig,
+    constraints: &YieldConstraints,
+    samples: usize,
+    pool: &ThreadPool,
+) -> YieldReport {
+    let var = base.variation.unwrap_or_default();
+    let outs = pool.parallel_map(samples, |i| {
+        let mut cfg = base.clone();
+        cfg.variation = Some(VariationConfig { sample: i as u64, ..var });
+        let mut sink = MetricSink::memory();
+        run_job(&cfg, &mut sink)
+    });
+
+    let mut per_sample = Vec::with_capacity(samples);
+    let mut cost = CostBreakdown::default();
+    let (mut finals, mut bests, mut pens) = (Vec::new(), Vec::new(), Vec::new());
+    let mut zo_vals = Vec::new();
+    let mut passed = 0usize;
+    for (i, s) in outs.iter().enumerate() {
+        let penalty = s.variation.map(|v| v.power_penalty_db).unwrap_or(0.0);
+        let pass = (s.final_acc as f64) >= constraints.min_acc
+            && penalty <= constraints.max_power_penalty_db;
+        passed += pass as usize;
+        cost.add(&s.cost);
+        finals.push(s.final_acc as f64);
+        bests.push(s.best_acc as f64);
+        pens.push(penalty);
+        if let Some(q) = s.zo_to_target_queries {
+            zo_vals.push(q as f64);
+        }
+        per_sample.push(SampleOutcome {
+            sample: i as u64,
+            final_acc: s.final_acc as f64,
+            best_acc: s.best_acc as f64,
+            power_penalty_db: penalty,
+            zo_to_target_queries: s.zo_to_target_queries,
+            pass,
+        });
+    }
+    YieldReport {
+        samples,
+        passed,
+        pass_rate: if samples > 0 { passed as f64 / samples as f64 } else { 0.0 },
+        constraints: *constraints,
+        final_acc: stat(&finals, Worst::Min),
+        best_acc: stat(&bests, Worst::Min),
+        power_penalty_db: stat(&pens, Worst::Max),
+        zo_target_reached: zo_vals.len(),
+        zo_to_target_queries: if zo_vals.is_empty() {
+            None
+        } else {
+            Some(stat(&zo_vals, Worst::Max))
+        },
+        cost,
+        per_sample,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Protocol;
+    use crate::data::DatasetKind;
+    use crate::nn::ModelArch;
+    use crate::photonics::NoiseModel;
+
+    fn tiny_cfg() -> JobConfig {
+        JobConfig {
+            arch: ModelArch::MlpVowel,
+            dataset: DatasetKind::VowelLike,
+            protocol: Protocol::L2ightSlScratch,
+            k: 4,
+            noise: NoiseModel::quant_only(8),
+            width: 0.5,
+            n_train: 48,
+            n_test: 24,
+            pretrain_epochs: 0,
+            epochs: 1,
+            batch: 16,
+            alpha_w: 0.6,
+            alpha_c: 1.0,
+            alpha_d: 0.0,
+            zo_budget: 0.1,
+            seed: 42,
+            robustness: None,
+            sharding: None,
+            variation: Some(VariationConfig {
+                gamma_std: 0.01,
+                coupler_std: 0.01,
+                loss_db_std: 0.01,
+                ..Default::default()
+            }),
+        }
+    }
+
+    #[test]
+    fn stats_and_pass_rate_are_sane() {
+        let pool = ThreadPool::new(2);
+        let rep = estimate_yield(&tiny_cfg(), &YieldConstraints::default(), 3, &pool);
+        assert_eq!(rep.samples, 3);
+        assert_eq!(rep.per_sample.len(), 3);
+        assert!((0.0..=1.0).contains(&rep.pass_rate));
+        assert_eq!(rep.passed, rep.per_sample.iter().filter(|s| s.pass).count());
+        assert!(rep.power_penalty_db.worst >= rep.power_penalty_db.mean);
+        assert!(rep.final_acc.worst <= rep.final_acc.mean);
+        assert!(rep.cost.total_energy() > 0.0, "sample cost not folded in");
+        // Samples are distinct chips: the penalty spread is nonzero.
+        assert!(rep.power_penalty_db.std > 0.0, "samples did not vary");
+    }
+
+    #[test]
+    fn report_is_deterministic_across_pool_sizes() {
+        let a = estimate_yield(&tiny_cfg(), &YieldConstraints::default(), 2, &ThreadPool::new(1));
+        let b = estimate_yield(&tiny_cfg(), &YieldConstraints::default(), 2, &ThreadPool::new(4));
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+    }
+
+    #[test]
+    fn stat_helper_directions() {
+        let s = stat(&[1.0, 2.0, 3.0], Worst::Min);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.worst, 1.0);
+        let s = stat(&[1.0, 2.0, 3.0], Worst::Max);
+        assert_eq!(s.worst, 3.0);
+        assert_eq!(stat(&[], Worst::Min), YieldStat::default());
+    }
+}

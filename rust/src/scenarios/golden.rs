@@ -65,6 +65,47 @@ impl Tolerances {
     }
 }
 
+/// Forward-compatibility exemptions for scenario families added *after*
+/// the checked-in golden was last blessed. An armed gate with exemptions
+/// still holds every blessed row/metric to its tolerance, but tolerates
+/// (a) report rows whose name starts with an exempted family prefix that
+/// the golden has never seen, and (b) metric keys that exist only on the
+/// report side. It never excuses the reverse direction — a golden row or
+/// metric that disappears from the report stays a failure.
+#[derive(Clone, Debug, Default)]
+pub struct Exemptions {
+    /// Row-name prefixes of families newer than the golden.
+    pub new_row_prefixes: Vec<String>,
+    /// Dotted metric-path prefixes newer than the golden.
+    pub new_metric_keys: Vec<String>,
+}
+
+impl Exemptions {
+    /// The standing exemption list for this revision: the families and
+    /// metric keys added since the last bless. Shrink it back to empty when
+    /// the goldens are re-blessed with the new rows included.
+    pub fn current() -> Exemptions {
+        Exemptions {
+            new_row_prefixes: vec!["variation/".into(), "wdm/".into()],
+            new_metric_keys: vec![
+                "zo_to_target_queries".into(),
+                "variation.".into(),
+                "wdm.".into(),
+            ],
+        }
+    }
+
+    fn row_is_new(&self, name: &str) -> bool {
+        self.new_row_prefixes.iter().any(|p| name.starts_with(p.as_str()))
+    }
+
+    fn metric_is_new(&self, key: &str) -> bool {
+        self.new_metric_keys
+            .iter()
+            .any(|p| key == p.trim_end_matches('.') || key.starts_with(p.as_str()))
+    }
+}
+
 /// One discrepancy between a report and its golden.
 #[derive(Clone, Debug)]
 pub struct GoldenDiff {
@@ -123,7 +164,14 @@ fn fmt_opt(v: Option<f64>) -> String {
     }
 }
 
-fn diff_row(name: &str, got: &Json, want: &Json, tol: &Tolerances, out: &mut Vec<GoldenDiff>) {
+fn diff_row(
+    name: &str,
+    got: &Json,
+    want: &Json,
+    tol: &Tolerances,
+    ex: &Exemptions,
+    out: &mut Vec<GoldenDiff>,
+) {
     // Config drift makes every golden number meaningless — compare the
     // canonical (sorted-key) dumps exactly.
     let gc = got.get("config").map(|c| c.dump()).unwrap_or_default();
@@ -168,6 +216,12 @@ fn diff_row(name: &str, got: &Json, want: &Json, tol: &Tolerances, out: &mut Vec
             }
             (Some(None), Some(None)) => {}
             (g, w) => {
+                // A key the golden has never seen is excusable when it is
+                // on the standing new-metric exemption list (awaiting a
+                // re-bless); a key that *vanished* from the report never is.
+                if w.is_none() && g.is_some() && ex.metric_is_new(key) {
+                    continue;
+                }
                 out.push(GoldenDiff {
                     row: name.to_string(),
                     metric: key.clone(),
@@ -184,8 +238,20 @@ fn diff_row(name: &str, got: &Json, want: &Json, tol: &Tolerances, out: &mut Vec
     }
 }
 
-/// Compare a fresh report (`got`) against a golden (`want`).
+/// Compare a fresh report (`got`) against a golden (`want`) with no
+/// exemptions — every row and metric key must be known to the golden.
 pub fn diff_reports(got: &Json, want: &Json, tol: &Tolerances) -> GoldenOutcome {
+    diff_reports_with(got, want, tol, &Exemptions::default())
+}
+
+/// Compare with a standing [`Exemptions`] list for not-yet-blessed
+/// families (see `Exemptions::current`).
+pub fn diff_reports_with(
+    got: &Json,
+    want: &Json,
+    tol: &Tolerances,
+    ex: &Exemptions,
+) -> GoldenOutcome {
     if want.get("placeholder").and_then(|v| v.as_bool()) == Some(true) {
         return GoldenOutcome::Unblessed;
     }
@@ -222,11 +288,14 @@ pub fn diff_reports(got: &Json, want: &Json, tol: &Tolerances) -> GoldenOutcome 
                 want: "present".to_string(),
                 detail: "golden row missing from report".to_string(),
             }),
-            Some(grow) => diff_row(name, grow, wrow, tol, &mut diffs),
+            Some(grow) => diff_row(name, grow, wrow, tol, ex, &mut diffs),
         }
     }
     for name in gmap.keys() {
         if !wmap.contains_key(name) {
+            if ex.row_is_new(name) {
+                continue;
+            }
             diffs.push(GoldenDiff {
                 row: name.clone(),
                 metric: "row".to_string(),
@@ -375,6 +444,54 @@ mod tests {
         assert!(matches!(
             diff_reports(&got, &gold, &Tolerances::gate()),
             GoldenOutcome::Unblessed
+        ));
+    }
+
+    #[test]
+    fn exemptions_tolerate_new_families_but_not_regressions() {
+        let ex = Exemptions::current();
+        let want = report(&[("l2ight/r1", &[("final_acc", Some(0.5))])]);
+        // A new variation/ row plus a new metric key on a blessed row: both
+        // excused under the standing exemptions, both fatal without them.
+        let got = report(&[
+            ("l2ight/r1", &[("final_acc", Some(0.5)), ("zo_to_target_queries", Some(9.0))]),
+            ("variation/r2", &[("final_acc", Some(0.4))]),
+            ("wdm/r3", &[("final_acc", Some(0.4))]),
+        ]);
+        assert!(matches!(
+            diff_reports_with(&got, &want, &Tolerances::gate(), &ex),
+            GoldenOutcome::Match { .. }
+        ));
+        match diff_reports(&got, &want, &Tolerances::gate()) {
+            GoldenOutcome::Mismatch(ds) => assert_eq!(ds.len(), 3),
+            other => panic!("expected mismatch without exemptions, got {other:?}"),
+        }
+        // Exemptions never excuse the reverse direction: a blessed row or
+        // metric vanishing from the report stays a failure.
+        let missing_row = report(&[("l2ight/r1", &[("final_acc", Some(0.5))])]);
+        let want_two = report(&[
+            ("l2ight/r1", &[("final_acc", Some(0.5))]),
+            ("variation/r2", &[("final_acc", Some(0.4))]),
+        ]);
+        assert!(matches!(
+            diff_reports_with(&missing_row, &want_two, &Tolerances::gate(), &ex),
+            GoldenOutcome::Mismatch(_)
+        ));
+        let lost_metric = report(&[("l2ight/r1", &[("final_acc", Some(0.5))])]);
+        let want_metric = report(&[(
+            "l2ight/r1",
+            &[("final_acc", Some(0.5)), ("zo_to_target_queries", Some(9.0))],
+        )]);
+        assert!(matches!(
+            diff_reports_with(&lost_metric, &want_metric, &Tolerances::gate(), &ex),
+            GoldenOutcome::Mismatch(_)
+        ));
+        // An exempted-family row the golden *does* know is still compared.
+        let drifted = report(&[("variation/r2", &[("final_acc", Some(0.9))])]);
+        let want_var = report(&[("variation/r2", &[("final_acc", Some(0.4))])]);
+        assert!(matches!(
+            diff_reports_with(&drifted, &want_var, &Tolerances::gate(), &ex),
+            GoldenOutcome::Mismatch(_)
         ));
     }
 

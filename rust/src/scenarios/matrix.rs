@@ -24,7 +24,7 @@ use crate::coordinator::driver::job_seed;
 use crate::data::DatasetKind;
 use crate::nn::ModelArch;
 use crate::photonics::{NoiseModel, ShardPolicy, ShardingConfig};
-use crate::robustness::RobustnessConfig;
+use crate::robustness::{RobustnessConfig, VariationConfig};
 
 /// Which slice of the scenario space to enumerate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,6 +115,29 @@ fn row_name(cfg: &JobConfig) -> String {
             sc.shards,
         );
     }
+    // Variation rows: `wdm/` for pure wavelength sweeps, `variation/` for
+    // perturbed-chip rows. The protocol rides as a *suffix* (no trailing
+    // slash), so the CI's `l2ight/`-style protocol filters skip them.
+    if let Some(vc) = &cfg.variation {
+        if vc.is_wdm_only() {
+            return format!(
+                "wdm/{}/{}/{}/d{}",
+                cfg.arch.name(),
+                cfg.dataset.name(),
+                noise_tag(&cfg.noise),
+                vc.wdm_max_drift,
+            );
+        }
+        return format!(
+            "variation/{}/{}/{}/s{}-x{}-{}",
+            cfg.arch.name(),
+            cfg.dataset.name(),
+            noise_tag(&cfg.noise),
+            vc.gamma_std,
+            vc.sample,
+            cfg.protocol.name(),
+        );
+    }
     format!(
         "{}/{}/{}/{}/aw{}-ac{}-ad{}",
         cfg.protocol.name(),
@@ -149,6 +172,18 @@ fn quick_base() -> JobConfig {
         seed: 0, // assigned by expand()
         robustness: None,
         sharding: None,
+        variation: None,
+    }
+}
+
+/// A uniform-σ chip-instance config (the CLI's `sigma=` shorthand).
+fn sigma_variation(sigma: f64, sample: u64) -> VariationConfig {
+    VariationConfig {
+        gamma_std: sigma,
+        coupler_std: sigma,
+        loss_db_std: sigma,
+        wdm_max_drift: 0.0,
+        sample,
     }
 }
 
@@ -173,6 +208,7 @@ fn full_base() -> JobConfig {
         seed: 0,
         robustness: None,
         sharding: None,
+        variation: None,
     }
 }
 
@@ -244,6 +280,27 @@ fn quick_rows() -> Vec<JobConfig> {
     {
         let mut c = base.clone();
         c.sharding = Some(ShardingConfig { shards, policy });
+        rows.push(c);
+    }
+    // Variation axis: σ sweep × protocol on perturbed chip instances, plus a
+    // second Monte-Carlo sample at the mid σ. Appended after everything
+    // above so the seeds of every pre-existing row are untouched.
+    for (sigma, sample, proto) in [
+        (0.002, 0, Protocol::L2ight),
+        (0.01, 0, Protocol::L2ight),
+        (0.01, 1, Protocol::L2ight),
+        (0.01, 0, Protocol::L2ightSlScratch),
+    ] {
+        let mut c = base.clone();
+        c.protocol = proto;
+        c.variation = Some(sigma_variation(sigma, sample));
+        rows.push(c);
+    }
+    // WDM axis: pure wavelength sweeps (no device perturbation) at two
+    // dispersion spans — the paper's conservative 2% and a tighter 0.5%.
+    for drift in [0.005, 0.02] {
+        let mut c = base.clone();
+        c.variation = Some(VariationConfig { wdm_max_drift: drift, ..Default::default() });
         rows.push(c);
     }
     rows
@@ -327,6 +384,25 @@ fn full_rows() -> Vec<JobConfig> {
         c.sharding = Some(ShardingConfig { shards, policy });
         rows.push(c);
     }
+    // Variation σ-ladder × protocol at paper scale (appended after the
+    // shard rows; see quick_rows for the seed-stability rule).
+    for sigma in [0.002, 0.005, 0.01, 0.02] {
+        let mut c = base.clone();
+        c.variation = Some(sigma_variation(sigma, 0));
+        rows.push(c);
+    }
+    for (sample, proto) in [(1, Protocol::L2ight), (0, Protocol::L2ightSlScratch)] {
+        let mut c = base.clone();
+        c.protocol = proto;
+        c.variation = Some(sigma_variation(0.01, sample));
+        rows.push(c);
+    }
+    // WDM dispersion ladder at paper scale (k = 9, the paper's setting).
+    for drift in [0.005, 0.01, 0.02] {
+        let mut c = base.clone();
+        c.variation = Some(VariationConfig { wdm_max_drift: drift, ..Default::default() });
+        rows.push(c);
+    }
     rows
 }
 
@@ -389,6 +465,54 @@ mod tests {
                 rows.iter().any(|r| r.name.starts_with("shard/") && r.name.ends_with(tag)),
                 "shard corner {tag} missing"
             );
+        }
+        // The variation family appears: σ sweep, a second MC sample, and a
+        // second protocol; the WDM family appears at both spans.
+        for tag in ["s0.002-x0-l2ight", "s0.01-x0-l2ight", "s0.01-x1-l2ight", "s0.01-x0-l2ight-sl"]
+        {
+            assert!(
+                rows.iter().any(|r| r.name.starts_with("variation/") && r.name.ends_with(tag)),
+                "variation corner {tag} missing"
+            );
+        }
+        for tag in ["d0.005", "d0.02"] {
+            assert!(
+                rows.iter().any(|r| r.name.starts_with("wdm/") && r.name.ends_with(tag)),
+                "wdm corner {tag} missing"
+            );
+        }
+    }
+
+    #[test]
+    fn variation_rows_do_not_collide_with_other_families() {
+        let rows = expand(&MatrixSpec::new(Tier::Quick));
+        let varied: Vec<_> = rows
+            .iter()
+            .filter(|r| r.name.starts_with("variation/") || r.name.starts_with("wdm/"))
+            .collect();
+        assert!(!varied.is_empty());
+        for r in &varied {
+            let vc = r.cfg.variation.expect("variation row lost its config");
+            assert!(vc.active(), "{}: inactive variation config", r.name);
+            assert_eq!(
+                r.name.starts_with("wdm/"),
+                vc.is_wdm_only(),
+                "{}: family/confg mismatch",
+                r.name
+            );
+            // Invisible to the CI's protocol/lifecycle/shard substring
+            // filters (protocol names ride as suffixes without a slash).
+            for f in ["l2ight/", "rad/", "flops/", "swat-u/", "mixedtrn/", "lifecycle/", "shard/"]
+            {
+                assert!(!r.name.contains(f), "{} matches filter {f}", r.name);
+            }
+        }
+        // And conversely: no other family carries a variation config.
+        for r in rows
+            .iter()
+            .filter(|r| !r.name.starts_with("variation/") && !r.name.starts_with("wdm/"))
+        {
+            assert!(r.cfg.variation.is_none(), "{}: unexpected variation config", r.name);
         }
     }
 

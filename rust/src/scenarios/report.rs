@@ -101,6 +101,39 @@ fn metrics_json(r: &RowResult) -> Json {
             }
         },
     );
+    // ZO budget-parity metric: queries to reach 0.9×best accuracy. The key
+    // contains "queries" so the golden gate holds it exactly.
+    m.set("zo_to_target_queries", opt_num(s.zo_to_target_queries.map(|q| q as f64)));
+    // Process-variation outcome (variation rows): the per-row deterministic
+    // slice only — full N-sample yield statistics live in `l2ight yield`.
+    m.set(
+        "variation",
+        match &s.variation {
+            None => Json::Null,
+            Some(v) => {
+                let mut vj = Json::obj();
+                vj.set("power_penalty_db", Json::Num(v.power_penalty_db))
+                    .set("blocks", Json::Num(v.blocks as f64));
+                vj
+            }
+        },
+    );
+    // WDM dispersion sweep (wdm/ rows and any variation row that asked).
+    m.set(
+        "wdm",
+        match &s.wdm {
+            None => Json::Null,
+            Some(w) => {
+                let mut wj = Json::obj();
+                wj.set("max_drift", Json::Num(w.max_drift))
+                    .set("blocks", Json::Num(w.blocks as f64))
+                    .set("worst_rel_err", Json::Num(w.worst_rel_err))
+                    .set("mean_rel_err", Json::Num(w.mean_rel_err))
+                    .set("worst_mse", Json::Num(w.worst_mse));
+                wj
+            }
+        },
+    );
     m
 }
 
@@ -175,6 +208,9 @@ mod tests {
                 zo_queries: 7,
                 sl: None,
                 lifecycle: None,
+                variation: None,
+                wdm: None,
+                zo_to_target_queries: Some(7),
                 skipped_stages: Vec::new(),
                 stage_secs: vec![("ic", 0.25)],
             },
@@ -198,6 +234,11 @@ mod tests {
         assert!(m.get("cost").unwrap().get("fwd_energy").is_some());
         // Lifecycle is null (presence golden-checked) on non-robustness rows.
         assert_eq!(m.get("lifecycle"), Some(&Json::Null));
+        // Variation/WDM are null on clean-chip rows; the budget-parity
+        // metric is a number when the protocol defines it.
+        assert_eq!(m.get("variation"), Some(&Json::Null));
+        assert_eq!(m.get("wdm"), Some(&Json::Null));
+        assert_eq!(m.get("zo_to_target_queries").unwrap().as_f64(), Some(7.0));
         assert_eq!(rows[0].get("skipped_stages").unwrap().as_arr().unwrap().len(), 0);
         assert_eq!(rows[0].get("stage_secs").unwrap().get("ic").unwrap().as_f64(), Some(0.25));
     }

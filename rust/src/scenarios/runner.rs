@@ -70,6 +70,7 @@ mod tests {
                 seed,
                 robustness: None,
                 sharding: None,
+                variation: None,
             },
         }
     }

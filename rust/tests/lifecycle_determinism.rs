@@ -160,6 +160,7 @@ fn lifecycle_cfg() -> JobConfig {
         seed: 1234,
         robustness: Some(RobustnessConfig::lifecycle_row(true, true)),
         sharding: None,
+        variation: None,
     }
 }
 

@@ -33,6 +33,7 @@ fn tiny_cfg(protocol: Protocol) -> JobConfig {
         seed: 11,
         robustness: None,
         sharding: None,
+        variation: None,
     }
 }
 

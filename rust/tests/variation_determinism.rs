@@ -1,0 +1,140 @@
+//! Process-variation determinism: the Monte-Carlo chip sampler and the
+//! yield estimator must be pure functions of (seed, sample index) —
+//! bitwise identical at every thread count and shard count, and bitwise
+//! *absent* when disabled. Extends the `lifecycle_determinism` patterns
+//! to the fabrication-time variation layer.
+
+use l2ight::coordinator::{run_job, JobConfig, MetricSink, Protocol};
+use l2ight::data::DatasetKind;
+use l2ight::nn::ModelArch;
+use l2ight::photonics::{NoiseModel, ShardPolicy, ShardingConfig};
+use l2ight::robustness::{estimate_yield, VariationConfig, YieldConstraints};
+use l2ight::util::pool::ThreadPool;
+
+fn varied_cfg() -> JobConfig {
+    JobConfig {
+        arch: ModelArch::MlpVowel,
+        dataset: DatasetKind::VowelLike,
+        protocol: Protocol::L2ight,
+        k: 4,
+        noise: NoiseModel::quant_only(8),
+        width: 0.5,
+        n_train: 96,
+        n_test: 48,
+        pretrain_epochs: 2,
+        epochs: 2,
+        batch: 16,
+        alpha_w: 0.6,
+        alpha_c: 1.0,
+        alpha_d: 0.0,
+        zo_budget: 0.1,
+        seed: 4242,
+        robustness: None,
+        sharding: None,
+        variation: Some(VariationConfig {
+            gamma_std: 0.01,
+            coupler_std: 0.005,
+            loss_db_std: 0.05,
+            wdm_max_drift: 0.01,
+            sample: 0,
+        }),
+    }
+}
+
+#[test]
+fn yield_report_is_bitwise_identical_across_thread_counts() {
+    // The estimator fans samples out over the pool; the report (including
+    // per-sample rows and fold order) must not depend on how many workers
+    // ran them.
+    let cfg = varied_cfg();
+    let constraints = YieldConstraints::default();
+    let serial = ThreadPool::new(1);
+    let wide = ThreadPool::new(4);
+    let a = estimate_yield(&cfg, &constraints, 4, &serial);
+    let b = estimate_yield(&cfg, &constraints, 4, &wide);
+    assert_eq!(
+        a.to_json().dump(),
+        b.to_json().dump(),
+        "yield report must be bitwise thread-count-invariant"
+    );
+    // And re-running the same configuration reproduces it exactly.
+    let c = estimate_yield(&cfg, &constraints, 4, &wide);
+    assert_eq!(b.to_json().dump(), c.to_json().dump());
+}
+
+#[test]
+fn varied_job_is_bitwise_identical_across_shard_counts() {
+    // Variation sampling walks the logical block grid in unsharded order,
+    // so the same chip instance materializes no matter how the mesh is
+    // carved into chiplets — every deterministic metric must agree.
+    let shardings = [
+        None,
+        Some(ShardingConfig { shards: 2, policy: ShardPolicy::Row }),
+        Some(ShardingConfig { shards: 4, policy: ShardPolicy::Grid }),
+    ];
+    let mut outs = Vec::new();
+    for sharding in shardings {
+        let mut cfg = varied_cfg();
+        cfg.sharding = sharding;
+        let mut sink = MetricSink::memory();
+        outs.push(run_job(&cfg, &mut sink));
+    }
+    let base = &outs[0];
+    let v0 = base.variation.expect("variation outcome on varied job");
+    let w0 = base.wdm.expect("wdm summary when wdm_max_drift > 0");
+    for (i, s) in outs.iter().enumerate().skip(1) {
+        assert_eq!(base.final_acc, s.final_acc, "final_acc diverged at sharding #{i}");
+        assert_eq!(base.best_acc, s.best_acc, "best_acc diverged at sharding #{i}");
+        assert_eq!(base.zo_queries, s.zo_queries, "zo_queries diverged at sharding #{i}");
+        assert_eq!(
+            base.cost.total_energy(),
+            s.cost.total_energy(),
+            "energy diverged at sharding #{i}"
+        );
+        assert_eq!(Some(v0), s.variation, "variation outcome diverged at sharding #{i}");
+        assert_eq!(Some(w0), s.wdm, "wdm summary diverged at sharding #{i}");
+    }
+}
+
+#[test]
+fn disabled_variation_is_bitwise_neutral() {
+    // variation: Some(inactive) and variation: None must produce identical
+    // metrics — realization may not touch any RNG stream or overlay.
+    let mut plain_cfg = varied_cfg();
+    plain_cfg.variation = None;
+    let mut inactive_cfg = plain_cfg.clone();
+    inactive_cfg.variation = Some(VariationConfig::default());
+    let mut s1 = MetricSink::memory();
+    let mut s2 = MetricSink::memory();
+    let plain = run_job(&plain_cfg, &mut s1);
+    let inactive = run_job(&inactive_cfg, &mut s2);
+    assert_eq!(plain.final_acc, inactive.final_acc);
+    assert_eq!(plain.best_acc, inactive.best_acc);
+    assert_eq!(plain.zo_queries, inactive.zo_queries);
+    assert_eq!(plain.cost.total_energy(), inactive.cost.total_energy());
+    assert!(inactive.variation.is_none(), "inactive config must not emit an outcome");
+    assert!(inactive.wdm.is_none(), "no wdm sweep without a requested drift");
+}
+
+#[test]
+fn distinct_samples_are_distinct_chips_with_shared_seed() {
+    // `sample` indexes independent chip instances under one seed: sample 0
+    // twice must agree bitwise, sample 1 must differ somewhere observable.
+    let cfg = varied_cfg();
+    let again = cfg.clone();
+    let mut other = cfg.clone();
+    other.variation = cfg.variation.map(|v| VariationConfig { sample: 1, ..v });
+    let mut s1 = MetricSink::memory();
+    let mut s2 = MetricSink::memory();
+    let mut s3 = MetricSink::memory();
+    let a = run_job(&cfg, &mut s1);
+    let b = run_job(&again, &mut s2);
+    let c = run_job(&other, &mut s3);
+    assert_eq!(a.variation, b.variation);
+    assert_eq!(a.final_acc, b.final_acc);
+    assert_ne!(
+        (a.variation, a.final_acc, a.cost.total_energy()),
+        (c.variation, c.final_acc, c.cost.total_energy()),
+        "a different sample index must realize a different chip"
+    );
+}
